@@ -1,0 +1,162 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E2E): exercises every
+//! layer of the stack on a real small workload and reports the paper's
+//! headline metric.
+//!
+//! Pipeline:
+//!   1. generate + condition the dataset (standardize, Q3.4 quantize),
+//!   2. train all six classifiers from scratch,
+//!   3. Algorithm-1 split → FoG, FoG_opt threshold search,
+//!   4. classify the test set through
+//!        a. the software evaluator (Algorithm 2),
+//!        b. the cycle-level μarch ring simulator,
+//!        c. the threaded serving coordinator (PJRT backend when the
+//!           artifact matches, else native),
+//!      and assert all three agree,
+//!   5. print the Table-1 row + energy ratios for this dataset.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_pipeline`
+
+use fog::coordinator::{Backend, FogServer, ServerConfig};
+use fog::data::synthetic::DatasetProfile;
+use fog::energy::blocks::{AreaBlocks, EnergyBlocks};
+use fog::energy::model::ClassifierKind;
+use fog::experiments::suite::{evaluate_suite, select_fog, train_suite};
+use fog::fog::FogParams;
+use fog::uarch::{RingConfig, RingSim};
+use fog::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let name = args.get_or("dataset", "penbase");
+    let profile = DatasetProfile::by_name(name).expect("unknown dataset");
+    let seed = args.get_u64("seed", 42);
+
+    println!("=== E2E pipeline on '{}' ({} features, {} classes) ===", profile.name, profile.n_features, profile.n_classes);
+
+    // --- 1+2: data + all classifiers ---
+    println!("\n[1/5] training all classifiers ...");
+    let suite = train_suite(&profile, seed);
+
+    // --- 3: FoG design flow ---
+    println!("[2/5] FoG topology + threshold selection ...");
+    let sel = select_fog(&suite, seed, 0.01);
+    println!(
+        "  selected topology {}x{}, FoG_opt threshold {:.2} (accuracy {:.1}%, {:.2} avg hops)",
+        sel.topology.0,
+        sel.topology.1,
+        sel.opt.threshold,
+        sel.opt.accuracy * 100.0,
+        sel.opt.avg_hops
+    );
+
+    // --- 4a: software Algorithm 2 ---
+    println!("[3/5] software eval / μarch sim / serving coordinator ...");
+    let params = FogParams {
+        threshold: sel.opt.threshold,
+        max_hops: sel.fog.n_groves(),
+        seed,
+    };
+    let sw = sel.fog.evaluate(&suite.data.test.x, &params);
+
+    // --- 4b: cycle-level ring simulation ---
+    let mut sim = RingSim::new(
+        &sel.fog,
+        RingConfig { threshold: sel.opt.threshold, seed, ..Default::default() },
+    );
+    sim.load_batch(&suite.data.test.x);
+    let sim_out = sim.run().to_vec();
+
+    // --- 4c: serving coordinator ---
+    let artifacts = fog::runtime::artifacts::default_dir();
+    let manifest_ok = artifacts.join("manifest.json").exists();
+    let backend = if manifest_ok {
+        match fog::runtime::Manifest::load(&artifacts) {
+            Ok(m)
+                if m.find_grove_step(
+                    sel.topology.1,
+                    sel.fog.depth,
+                    profile.n_features,
+                    profile.n_classes,
+                )
+                .is_some() =>
+            {
+                println!("  serving backend: PJRT");
+                Backend::Pjrt { artifacts_dir: artifacts }
+            }
+            _ => {
+                println!("  serving backend: native (no artifact for {}x{} d={})", sel.topology.0, sel.topology.1, sel.fog.depth);
+                Backend::Native
+            }
+        }
+    } else {
+        println!("  serving backend: native (artifacts missing)");
+        Backend::Native
+    };
+    let mut server = FogServer::start(
+        &sel.fog,
+        &ServerConfig {
+            threshold: sel.opt.threshold,
+            seed,
+            backend,
+            ..Default::default()
+        },
+    )
+    .expect("server");
+    let t0 = std::time::Instant::now();
+    let responses = server.classify(&suite.data.test.x);
+    let wall = t0.elapsed();
+
+    // --- agreement checks across the three paths ---
+    let mut mismatches = 0;
+    for ((o, s), r) in sim_out.iter().zip(&sw.outcomes).zip(&responses) {
+        if o.label != s.label || r.label != s.label || o.hops != s.hops || r.hops != s.hops {
+            mismatches += 1;
+        }
+    }
+    println!(
+        "[4/5] agreement: sw==sim==serving on {}/{} inputs ({} mismatches)",
+        sim_out.len() - mismatches,
+        sim_out.len(),
+        mismatches
+    );
+    assert_eq!(mismatches, 0, "evaluation paths disagree");
+
+    let lat = FogServer::latency_summary(&responses);
+    println!(
+        "  serving: {:.0} req/s, p50 {:.0}µs p99 {:.0}µs | sim: {:.1} cycles/input avg, {:.1}% PE util",
+        responses.len() as f64 / wall.as_secs_f64(),
+        lat.p50_us,
+        lat.p99_us,
+        sim.stats.avg_latency_cycles(),
+        sim.stats.avg_utilization() * 100.0
+    );
+    server.shutdown();
+
+    // --- 5: headline metrics ---
+    println!("[5/5] Table-1 row for '{}':", profile.name);
+    let rows = evaluate_suite(&suite, seed);
+    println!(
+        "  {:<10}{:>11}{:>15}{:>13}{:>11}",
+        "clf", "accuracy%", "energy nJ", "latency ns", "area mm2"
+    );
+    for row in &rows {
+        println!(
+            "  {:<10}{:>11.1}{:>15.2}{:>13.1}{:>11.2}",
+            row.kind.label(),
+            row.accuracy * 100.0,
+            row.report.energy_nj,
+            row.report.latency_ns,
+            row.report.area_mm2
+        );
+    }
+    let get = |k: ClassifierKind| rows.iter().find(|r| r.kind == k).unwrap();
+    let _ = (EnergyBlocks::default(), AreaBlocks::default());
+    println!(
+        "\nheadline: RF/FoG_opt = {:.2}x | CNN/FoG_opt = {:.1}x | SVM_rbf/FoG_opt = {:.1}x | FoG_opt/SVM_lr = {:.1}x",
+        get(ClassifierKind::RandomForest).report.energy_nj / get(ClassifierKind::FogOpt).report.energy_nj,
+        get(ClassifierKind::Cnn).report.energy_nj / get(ClassifierKind::FogOpt).report.energy_nj,
+        get(ClassifierKind::SvmRbf).report.energy_nj / get(ClassifierKind::FogOpt).report.energy_nj,
+        get(ClassifierKind::FogOpt).report.energy_nj / get(ClassifierKind::SvmLinear).report.energy_nj,
+    );
+    println!("=== E2E pipeline complete ===");
+}

@@ -1,0 +1,62 @@
+//! Run-time energy/accuracy tuning (the paper's Figure 5 story): sweep
+//! the confidence threshold on a fixed 8×2 FoG and watch EDP fall by an
+//! order of magnitude before accuracy gives way.
+//!
+//! Run: `cargo run --release --example energy_tuning [-- --dataset penbase]`
+
+use fog::data::synthetic::DatasetProfile;
+use fog::energy::blocks::{AreaBlocks, EnergyBlocks};
+use fog::energy::model::{fog_cost, rf_cost, ClassifierKind};
+use fog::experiments::suite::{fog_stats, rf_stats, train_suite};
+use fog::fog::tuner::{accuracy_optimal_threshold, threshold_sweep};
+use fog::fog::FieldOfGroves;
+use fog::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let name = args.get_or("dataset", "penbase");
+    let profile = DatasetProfile::by_name(name).expect("unknown dataset");
+    eprintln!("training suite on {} ...", profile.name);
+    let suite = train_suite(&profile, 42);
+
+    let eb = EnergyBlocks::default();
+    let ab = AreaBlocks::default();
+    let rf_report = rf_cost(&rf_stats(&suite), &eb, &ab);
+
+    let fog = FieldOfGroves::from_forest_shuffled(&suite.rf, 2, Some(42)); // 8x2
+    let grid = fog::fog::tuner::default_grid();
+    let sweep = threshold_sweep(&fog, &suite.data.test, &grid, 42);
+    let opt = accuracy_optimal_threshold(&sweep, 0.01);
+
+    println!("== {} @ 8x2: threshold tuning ==", profile.name);
+    println!(
+        "{:<12}{:>12}{:>12}{:>14}{:>16}{:>12}",
+        "threshold", "accuracy%", "avg hops", "energy (nJ)", "EDP (nJ*ns)", "vs RF"
+    );
+    for p in &sweep {
+        let stats = fog_stats(&fog, p.avg_hops, ClassifierKind::FogOpt);
+        let rep = fog_cost(&stats, &eb, &ab);
+        let marker = if (p.threshold - opt.threshold).abs() < 1e-6 { "  <== FoG_opt" } else { "" };
+        println!(
+            "{:<12.2}{:>12.1}{:>12.2}{:>14.2}{:>16.1}{:>11.2}x{}",
+            p.threshold,
+            p.accuracy * 100.0,
+            p.avg_hops,
+            rep.energy_nj,
+            rep.edp(),
+            rf_report.energy_nj / rep.energy_nj,
+            marker
+        );
+    }
+    println!(
+        "\nconventional RF reference: {:.2} nJ, {:.1} ns, {:.2} mm²",
+        rf_report.energy_nj, rf_report.latency_ns, rf_report.area_mm2
+    );
+    println!(
+        "FoG_opt at threshold {:.2}: accuracy {:.1}% using {:.2}/{} groves on average",
+        opt.threshold,
+        opt.accuracy * 100.0,
+        opt.avg_hops,
+        fog.n_groves()
+    );
+}

@@ -1,0 +1,90 @@
+//! Serving demo: the FoG ring as a classification service, with the
+//! AOT-compiled PJRT backend when artifacts are available (falling back
+//! to the native backend otherwise). Reports latency percentiles and
+//! throughput — the serving-side view of the accelerator.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_fog`
+
+use fog::coordinator::{Backend, FogServer, ServerConfig};
+use fog::data::normalize::{quantize_split, standardize};
+use fog::data::synthetic::{generate, DatasetProfile};
+use fog::dt::TreeParams;
+use fog::forest::{ForestParams, RandomForest};
+use fog::fog::FieldOfGroves;
+use fog::util::cli::Args;
+use std::time::Duration;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    // demo profile matches the grove_step_demo artifact (t=4, d=6, f=8, c=3)
+    let profile = DatasetProfile::by_name(args.get_or("dataset", "demo")).expect("dataset");
+    eprintln!("training {} ...", profile.name);
+    let mut data = generate(&profile, 42);
+    standardize(&mut data);
+    quantize_split(&mut data.train);
+    quantize_split(&mut data.test);
+    // Depth 6 so the trained trees bind to the demo artifact (t=4, d=6).
+    let params = ForestParams {
+        n_trees: 16,
+        tree: TreeParams { max_depth: 6, min_samples_leaf: 2, ..Default::default() },
+        bootstrap: true,
+    };
+    let rf = RandomForest::fit(&data.train, &params, 42);
+    let per_grove = 4;
+    let mut fog = FieldOfGroves::from_forest_shuffled(&rf, per_grove, Some(42));
+
+    // Try PJRT: repad trees to the artifact depth (demo artifact = 6).
+    let artifacts = fog::runtime::artifacts::default_dir();
+    let want_depth = 6usize;
+    let pjrt_ok = artifacts.join("manifest.json").exists() && fog.depth <= want_depth;
+    let backend = if pjrt_ok && profile.name == "demo" {
+        for g in &mut fog.groves {
+            for t in &mut g.trees {
+                *t = t.repad(want_depth);
+            }
+        }
+        fog.depth = want_depth;
+        println!("backend: PJRT (artifacts at {})", artifacts.display());
+        Backend::Pjrt { artifacts_dir: artifacts }
+    } else {
+        println!("backend: native (no matching artifacts — run `make artifacts`)");
+        Backend::Native
+    };
+
+    let cfg = ServerConfig {
+        threshold: args.get_f64("threshold", 0.3) as f32,
+        batch_size: args.get_usize("batch", 16),
+        batch_timeout: Duration::from_micros(args.get_u64("batch-timeout-us", 200)),
+        seed: 42,
+        backend,
+        ..Default::default()
+    };
+    let mut server = FogServer::start(&fog, &cfg).expect("server");
+
+    // Warm-up round (PJRT compilation happens at start; first batch pays
+    // buffer setup), then the measured run.
+    let _ = server.classify(&data.test.x);
+    let rounds = args.get_usize("rounds", 5);
+    let t0 = std::time::Instant::now();
+    let mut responses = Vec::new();
+    for _ in 0..rounds {
+        responses = server.classify(&data.test.x);
+    }
+    let wall = t0.elapsed();
+    let n_total = responses.len() * rounds;
+
+    let preds: Vec<usize> = responses.iter().map(|r| r.label).collect();
+    let acc = fog::util::stats::accuracy(&preds, &data.test.y);
+    let lat = FogServer::latency_summary(&responses);
+    let snap = server.metrics().snapshot();
+    println!("requests    : {n_total} ({} per round x {rounds})", responses.len());
+    println!("accuracy    : {:.1}%", acc * 100.0);
+    println!("avg hops    : {:.2} of {} groves", snap.avg_hops(), fog.n_groves());
+    println!("avg batch   : {:.1}", snap.avg_batch_size());
+    println!("throughput  : {:.0} req/s", n_total as f64 / wall.as_secs_f64());
+    println!(
+        "latency     : p50 {:.0}µs  p95 {:.0}µs  p99 {:.0}µs  mean {:.0}µs",
+        lat.p50_us, lat.p95_us, lat.p99_us, lat.mean_us
+    );
+    server.shutdown();
+}

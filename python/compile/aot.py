@@ -1,0 +1,165 @@
+"""AOT lowering: JAX/Pallas → HLO *text* artifacts for the rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (what the published `xla` 0.1.6 crate links) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md and aot_recipe).
+
+Outputs:
+  artifacts/<name>.hlo.txt   one per (function, shape) pair
+  artifacts/manifest.json    shapes + input order, read by rust `runtime`
+
+Run `python -m compile.aot --out-dir ../artifacts` from python/ (the
+Makefile's `artifacts` target). Python runs ONCE at build time; the rust
+binary is self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# ---------------------------------------------------------------------------
+# Shape sets: (t, depth, f, c, b) per dataset profile, mirroring
+# rust data::synthetic::DatasetProfile::paper_suite() and the FoG
+# topologies selected by the experiments (8x2 ⇒ t=2 trees per grove).
+# ---------------------------------------------------------------------------
+
+DEFAULT_SHAPES = [
+    # name-fragment, trees/grove, depth, features, classes, batch
+    ("demo", 4, 6, 8, 3, 32),
+    ("penbase", 2, 8, 16, 10, 32),   # 8x2 topology
+    ("penbase4", 4, 8, 16, 10, 32),  # 4x4 topology (e2e default)
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe route)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def grove_specs(t, depth, f, c, b):
+    n_int = (1 << depth) - 1
+    n_leaves = 1 << depth
+    return dict(
+        feat=spec((t, n_int), jnp.int32),
+        thr=spec((t, n_int)),
+        leaf=spec((t, n_leaves, c)),
+        x=spec((b, f)),
+        prob_sum=spec((b, c)),
+        hops=spec((b,)),
+    )
+
+
+def lower_artifact(fn, arg_specs, name, out_dir, manifest, meta):
+    lowered = jax.jit(fn).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as fh:
+        fh.write(text)
+    manifest[name] = dict(file=f"{name}.hlo.txt", **meta)
+    print(f"  {name}: {len(text)} chars")
+
+
+def build_all(out_dir: str, shapes) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    for tag, t, depth, f, c, b in shapes:
+        g = grove_specs(t, depth, f, c, b)
+        shape_meta = dict(t=t, depth=depth, n_features=f, n_classes=c, batch=b)
+
+        # Full Algorithm-2 hop: the serving path's executable.
+        lower_artifact(
+            model.grove_step,
+            [g["feat"], g["thr"], g["leaf"], g["x"], g["prob_sum"], g["hops"]],
+            f"grove_step_{tag}",
+            out_dir,
+            manifest,
+            dict(
+                kind="grove_step",
+                inputs=["feat", "thr", "leaf", "x", "prob_sum", "hops"],
+                outputs=["new_sum", "norm", "conf"],
+                **shape_meta,
+            ),
+        )
+        # Plain grove probabilities: parity tests + quickstart.
+        lower_artifact(
+            model.grove_proba,
+            [g["feat"], g["thr"], g["leaf"], g["x"]],
+            f"grove_proba_{tag}",
+            out_dir,
+            manifest,
+            dict(
+                kind="grove_proba",
+                inputs=["feat", "thr", "leaf", "x"],
+                outputs=["proba"],
+                **shape_meta,
+            ),
+        )
+        # Standalone confidence kernel.
+        lower_artifact(
+            model.confidence,
+            [spec((b, c))],
+            f"maxdiff_{tag}",
+            out_dir,
+            manifest,
+            dict(kind="maxdiff", inputs=["prob"], outputs=["conf"], **shape_meta),
+        )
+
+    # GEMM-shaped smoke artifact (runtime multi-input coverage).
+    lower_artifact(
+        model.mlp_forward,
+        [spec((8, 16)), spec((16,)), spec((16, 3)), spec((3,)), spec((4, 8))],
+        "mlp_smoke",
+        out_dir,
+        manifest,
+        dict(
+            kind="mlp",
+            inputs=["w1", "b1", "w2", "b2", "x"],
+            outputs=["logits"],
+            t=0, depth=0, n_features=8, n_classes=3, batch=4,
+        ),
+    )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1, sort_keys=True)
+    print(f"wrote {len(manifest)} artifacts to {out_dir}")
+
+
+def parse_shape(s: str):
+    """`tag:t,d,f,c,b` → tuple."""
+    tag, nums = s.split(":")
+    t, d, f, c, b = (int(v) for v in nums.split(","))
+    return (tag, t, d, f, c, b)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--shape",
+        action="append",
+        default=[],
+        help="extra artifact shape as tag:t,d,f,c,b (repeatable)",
+    )
+    args = ap.parse_args()
+    shapes = list(DEFAULT_SHAPES) + [parse_shape(s) for s in args.shape]
+    build_all(args.out_dir, shapes)
+
+
+if __name__ == "__main__":
+    main()

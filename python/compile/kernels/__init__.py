@@ -1,0 +1,1 @@
+"""Pallas kernels (L1) for the FoG accelerator compile path."""

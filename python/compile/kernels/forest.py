@@ -1,0 +1,109 @@
+"""Pallas kernel: batched grove traversal (the FoG PE hot-spot).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's ASIC
+walks one node per tree per 3 cycles with a comparator; the TPU analog is
+**level-synchronous arithmetic indexing** — one vectorized gather+compare
+per level across the whole batch tile, with the grove's node tables
+resident in VMEM (they are KBs). BlockSpec tiles the batch dimension;
+tree tables are broadcast to every tile (index_map returns block 0).
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom call
+the CPU PJRT plugin cannot execute (see /opt/xla-example/README.md); the
+interpret path lowers to plain HLO, which is what `aot.py` ships to the
+rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch tile: multiple of 8 keeps the VPU lanes full on real hardware and
+# divides every batch aot.py emits.
+DEFAULT_TILE_B = 32
+
+
+def _grove_kernel(feat_ref, thr_ref, leaf_ref, x_ref, o_ref, *, depth: int):
+    """One batch tile: traverse every tree level-synchronously.
+
+    Refs (VMEM blocks):
+      feat_ref: i32[t, n_int]      thr_ref: f32[t, n_int]
+      leaf_ref: f32[t, n_leaves, c]
+      x_ref:    f32[tile_b, f]     o_ref:   f32[tile_b, c]
+    """
+    feat = feat_ref[...]
+    thr = thr_ref[...]
+    leaf = leaf_ref[...]
+    x = x_ref[...]
+    t, n_int = feat.shape
+    tile_b = x.shape[0]
+    c = leaf.shape[2]
+
+    def one_tree(tree, acc):
+        idx = jnp.zeros((tile_b,), dtype=jnp.int32)
+        # Unrolled level loop: `depth` is static, so this lowers to a
+        # fixed chain of gathers/compares — one VPU step per level, the
+        # level-synchronous schedule described in DESIGN.md.
+        for _level in range(depth):
+            f_idx = feat[tree, idx]                      # gather [tile_b]
+            xv = jnp.take_along_axis(x, f_idx[:, None], axis=1)[:, 0]
+            node_thr = thr[tree, idx]
+            idx = 2 * idx + 1 + (xv > node_thr).astype(jnp.int32)
+        leaf_idx = idx - n_int
+        return acc + leaf[tree, leaf_idx, :]             # gather [tile_b, c]
+
+    acc = jax.lax.fori_loop(
+        0, t, one_tree, jnp.zeros((tile_b, c), dtype=jnp.float32)
+    )
+    o_ref[...] = acc / t
+
+
+def grove_predict_proba(feat, thr, leaf, x, *, tile_b: int = DEFAULT_TILE_B):
+    """Grove-averaged class probabilities via the Pallas kernel.
+
+    Args:
+      feat: i32[t, 2^d - 1],  thr: f32[t, 2^d - 1]
+      leaf: f32[t, 2^d, c],   x: f32[b, f]  (b divisible by tile_b)
+    Returns:
+      f32[b, c]
+    """
+    t, n_int = feat.shape
+    depth = (n_int + 1).bit_length() - 1
+    assert (1 << depth) - 1 == n_int, f"n_int {n_int} not 2^d-1"
+    b, f = x.shape
+    c = leaf.shape[2]
+    tile_b = min(tile_b, b)
+    assert b % tile_b == 0, f"batch {b} not divisible by tile {tile_b}"
+
+    kernel = functools.partial(_grove_kernel, depth=depth)
+    grid = (b // tile_b,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # Tree tables: broadcast to every tile (block index fixed at 0).
+            pl.BlockSpec((t, n_int), lambda i: (0, 0)),
+            pl.BlockSpec((t, n_int), lambda i: (0, 0)),
+            pl.BlockSpec((t, 1 << depth, c), lambda i: (0, 0, 0)),
+            # Batch: tiled along the grid.
+            pl.BlockSpec((tile_b, f), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
+        interpret=True,
+    )(feat, thr, leaf, x)
+
+
+def vmem_bytes(t: int, depth: int, c: int, f: int, tile_b: int = DEFAULT_TILE_B) -> int:
+    """VMEM footprint of one kernel invocation (perf accounting):
+    node tables + leaf tables + one batch tile in/out."""
+    n_int = (1 << depth) - 1
+    n_leaves = 1 << depth
+    return (
+        t * n_int * 4        # feat (i32)
+        + t * n_int * 4      # thr (f32)
+        + t * n_leaves * c * 4  # leaf
+        + tile_b * f * 4     # x tile
+        + tile_b * c * 4     # out tile
+    )

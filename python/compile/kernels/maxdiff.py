@@ -1,0 +1,38 @@
+"""Pallas kernel: MaxDiff confidence (Algorithm 2, lines 16-19).
+
+Top-2 difference per probability row without a sort: find the max, mask
+exactly that lane (the paper's TwoMaximumValues returns equal values for
+duplicated maxima, and masking a single lane reproduces that), take the
+max again. Two VPU reductions per row — the same two-comparator cascade
+the ASIC uses.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _maxdiff_kernel(prob_ref, o_ref):
+    prob = prob_ref[...]                    # [tile_b, c]
+    tile_b, c = prob.shape
+    m1 = jnp.max(prob, axis=1)              # [tile_b]
+    arg = jnp.argmax(prob, axis=1)          # first maximal lane
+    lane = jax.lax.broadcasted_iota(jnp.int32, (tile_b, c), 1)
+    masked = jnp.where(lane == arg[:, None], -jnp.inf, prob)
+    m2 = jnp.max(masked, axis=1)
+    o_ref[...] = jnp.abs(m1 - m2)
+
+
+def maxdiff(prob, *, tile_b: int = 32):
+    """Confidence per row of ``prob: f32[b, c]`` → ``f32[b]``."""
+    b, c = prob.shape
+    tile_b = min(tile_b, b)
+    assert b % tile_b == 0, f"batch {b} not divisible by tile {tile_b}"
+    return pl.pallas_call(
+        _maxdiff_kernel,
+        grid=(b // tile_b,),
+        in_specs=[pl.BlockSpec((tile_b, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(prob)

@@ -1,0 +1,71 @@
+"""Pure-jnp reference oracle for the Pallas kernels.
+
+Everything here is straight-line jax.numpy with no pallas involvement —
+the ground truth the kernels are validated against (pytest + hypothesis),
+and the shape/semantics documentation for the rust side.
+
+Forest encoding (shared with rust `dt::flat::FlatTree`):
+  feat : i32[t, 2^d - 1]   split feature per internal node (level order)
+  thr  : f32[t, 2^d - 1]   split threshold; +inf on dead nodes => route left
+  leaf : f32[t, 2^d, c]    per-leaf class distribution
+Traversal: ``next = 2*i + 1 + (x[feat[i]] > thr[i])`` for d levels;
+leaf index is ``i - (2^d - 1)``. The grove output is the average of its
+trees' leaf distributions (Algorithm 2 accumulates one probability-mass
+unit per grove).
+"""
+
+import jax.numpy as jnp
+
+
+def grove_predict_proba_ref(feat, thr, leaf, x):
+    """Grove-averaged class probabilities.
+
+    Args:
+      feat: i32[t, n_int]
+      thr:  f32[t, n_int]
+      leaf: f32[t, n_leaves, c]
+      x:    f32[b, f]
+    Returns:
+      f32[b, c]
+    """
+    t, n_int = feat.shape
+    depth = (n_int + 1).bit_length() - 1
+    b = x.shape[0]
+    acc = jnp.zeros((b, leaf.shape[2]), dtype=jnp.float32)
+    for tree in range(t):
+        idx = jnp.zeros((b,), dtype=jnp.int32)
+        for _level in range(depth):
+            f_idx = feat[tree, idx]                      # [b]
+            xv = jnp.take_along_axis(x, f_idx[:, None], axis=1)[:, 0]
+            go_right = (xv > thr[tree, idx]).astype(jnp.int32)
+            idx = 2 * idx + 1 + go_right
+        leaf_idx = idx - n_int
+        acc = acc + leaf[tree, leaf_idx, :]
+    return acc / t
+
+
+def maxdiff_ref(prob):
+    """Confidence = difference of the two largest values per row.
+
+    Args:
+      prob: f32[b, c]
+    Returns:
+      f32[b]
+    """
+    top2 = jnp.sort(prob, axis=1)[:, -2:]
+    return jnp.abs(top2[:, 1] - top2[:, 0])
+
+
+def fog_step_ref(feat, thr, leaf, x, prob_sum, hops):
+    """One Algorithm-2 hop: add this grove's estimate, return the new sum,
+    the normalized distribution and its confidence.
+
+    Args:
+      prob_sum: f32[b, c] running sum (one mass unit per grove so far)
+      hops:     number of groves contributed *after* this one (>= 1)
+    Returns:
+      (new_sum f32[b,c], norm f32[b,c], conf f32[b])
+    """
+    new_sum = prob_sum + grove_predict_proba_ref(feat, thr, leaf, x)
+    norm = new_sum / hops
+    return new_sum, norm, maxdiff_ref(norm)

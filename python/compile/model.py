@@ -1,0 +1,56 @@
+"""L2 — the JAX compute graph the rust coordinator executes via PJRT.
+
+The model is the FoG *grove step*: given a grove's flattened trees and a
+batch of inputs (plus the running probability sums and hop counts of
+Algorithm 2), produce updated sums, normalized distributions and MaxDiff
+confidences in one fused HLO module. The rust L3 ring makes the
+routing/stopping decisions; this graph is pure data-parallel compute, so
+python never appears on the request path.
+
+Everything lowers through the Pallas kernels in `kernels/` (interpret
+mode → plain HLO; see kernels/forest.py for the TPU-adaptation notes).
+"""
+
+import jax.numpy as jnp
+
+from .kernels.forest import grove_predict_proba
+from .kernels.maxdiff import maxdiff
+
+
+def grove_step(feat, thr, leaf, x, prob_sum, hops):
+    """One Algorithm-2 hop for a batch.
+
+    Args:
+      feat: i32[t, 2^d - 1]     grove node features
+      thr:  f32[t, 2^d - 1]     grove node thresholds
+      leaf: f32[t, 2^d, c]      grove leaf distributions
+      x:    f32[b, f]           input batch
+      prob_sum: f32[b, c]       running sums (zeros for fresh inputs)
+      hops: f32[b]              groves contributed *including* this one
+    Returns:
+      (new_sum f32[b,c], norm f32[b,c], conf f32[b])
+    """
+    grove_p = grove_predict_proba(feat, thr, leaf, x)
+    new_sum = prob_sum + grove_p
+    norm = new_sum / hops[:, None]
+    conf = maxdiff(norm)
+    return new_sum, norm, conf
+
+
+def grove_proba(feat, thr, leaf, x):
+    """Single-grove probabilities (the quickstart/parity artifact)."""
+    return (grove_predict_proba(feat, thr, leaf, x),)
+
+
+def confidence(prob):
+    """Standalone MaxDiff artifact."""
+    return (maxdiff(prob),)
+
+
+def mlp_forward(w1, b1, w2, b2, x):
+    """Reference 1-hidden-layer MLP forward (AOT-lowering smoke test for
+    a GEMM-shaped graph; the paper's MLP baseline runs natively in rust,
+    this artifact exists to prove the runtime handles multi-input GEMM
+    HLO)."""
+    h = jnp.maximum(x @ w1 + b1, 0.0)
+    return (h @ w2 + b2,)

@@ -1,0 +1,149 @@
+"""L1 kernel correctness: Pallas vs the pure-jnp oracle, swept over random
+shapes and inputs with hypothesis, plus a hand-built numpy cross-check
+that is independent of jax entirely."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.forest import grove_predict_proba, vmem_bytes
+from compile.kernels.maxdiff import maxdiff
+from compile.kernels.ref import (
+    fog_step_ref,
+    grove_predict_proba_ref,
+    maxdiff_ref,
+)
+
+
+def random_grove(rng, t, depth, f, c):
+    """Random flattened trees in the shared encoding (some dead nodes)."""
+    n_int = (1 << depth) - 1
+    n_leaves = 1 << depth
+    feat = rng.integers(0, f, size=(t, n_int)).astype(np.int32)
+    thr = rng.normal(size=(t, n_int)).astype(np.float32)
+    # Sprinkle dead nodes: +inf threshold routes left, as rust pads.
+    dead = rng.random(size=(t, n_int)) < 0.2
+    thr[dead] = np.float32(1e38)
+    leaf = rng.random(size=(t, n_leaves, c)).astype(np.float32)
+    leaf /= leaf.sum(axis=2, keepdims=True)
+    return feat, thr, leaf
+
+
+def numpy_traverse(feat, thr, leaf, x):
+    """jax-free oracle: per-sample pointer chase, the rust semantics."""
+    t, n_int = feat.shape
+    depth = (n_int + 1).bit_length() - 1
+    b = x.shape[0]
+    out = np.zeros((b, leaf.shape[2]), dtype=np.float64)
+    for s in range(b):
+        for tree in range(t):
+            i = 0
+            for _ in range(depth):
+                go_right = x[s, feat[tree, i]] > thr[tree, i]
+                i = 2 * i + 1 + int(go_right)
+            out[s] += leaf[tree, i - n_int]
+    return (out / t).astype(np.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.integers(1, 6),
+    depth=st.integers(1, 6),
+    f=st.integers(2, 24),
+    c=st.integers(2, 8),
+    b=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas_matches_ref_and_numpy(t, depth, f, c, b, seed):
+    rng = np.random.default_rng(seed)
+    feat, thr, leaf = random_grove(rng, t, depth, f, c)
+    x = rng.normal(size=(b, f)).astype(np.float32)
+
+    got = np.asarray(grove_predict_proba(feat, thr, leaf, x, tile_b=min(b, 8)))
+    want_ref = np.asarray(grove_predict_proba_ref(feat, thr, leaf, x))
+    want_np = numpy_traverse(feat, thr, leaf, x)
+
+    np.testing.assert_allclose(got, want_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got, want_np, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([4, 8, 32]),
+    c=st.integers(2, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_maxdiff_matches_ref(b, c, seed):
+    rng = np.random.default_rng(seed)
+    prob = rng.random(size=(b, c)).astype(np.float32)
+    got = np.asarray(maxdiff(prob, tile_b=min(b, 8)))
+    want = np.asarray(maxdiff_ref(prob))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_maxdiff_paper_example():
+    # §3.2.2 worked example: {0.32,0.35,0.33} → 0.02; {0.3,0.4,0.3} → 0.1.
+    prob = np.array(
+        [[0.32, 0.35, 0.33], [0.3, 0.4, 0.3]], dtype=np.float32
+    )
+    got = np.asarray(maxdiff(prob, tile_b=2))
+    np.testing.assert_allclose(got, [0.02, 0.1], atol=1e-6)
+
+
+def test_maxdiff_duplicate_maxima_zero():
+    prob = np.array([[0.4, 0.4, 0.2]], dtype=np.float32)
+    got = np.asarray(maxdiff(prob, tile_b=1))
+    np.testing.assert_allclose(got, [0.0], atol=1e-7)
+
+
+def test_probabilities_normalized():
+    rng = np.random.default_rng(7)
+    feat, thr, leaf = random_grove(rng, 4, 5, 10, 6)
+    x = rng.normal(size=(16, 10)).astype(np.float32)
+    p = np.asarray(grove_predict_proba(feat, thr, leaf, x, tile_b=8))
+    np.testing.assert_allclose(p.sum(axis=1), np.ones(16), rtol=1e-5)
+    assert (p >= 0).all()
+
+
+def test_dead_nodes_route_left():
+    # A depth-2 tree whose right subtree is dead: feat 0 everywhere,
+    # root threshold 0, dead thresholds +inf.
+    feat = np.zeros((1, 3), dtype=np.int32)
+    thr = np.array([[0.0, 1e38, 1e38]], dtype=np.float32)
+    leaf = np.zeros((1, 4, 2), dtype=np.float32)
+    leaf[0, 0] = [1, 0]  # left-left
+    leaf[0, 2] = [0, 1]  # right-left
+    x = np.array([[-1.0], [1.0]], dtype=np.float32)
+    p = np.asarray(grove_predict_proba(feat, thr, leaf, x, tile_b=2))
+    np.testing.assert_allclose(p, [[1, 0], [0, 1]], atol=1e-7)
+
+
+def test_fog_step_two_hops_normalization():
+    rng = np.random.default_rng(11)
+    feat1, thr1, leaf1 = random_grove(rng, 2, 4, 6, 3)
+    feat2, thr2, leaf2 = random_grove(rng, 2, 4, 6, 3)
+    x = rng.normal(size=(8, 6)).astype(np.float32)
+    zero = jnp.zeros((8, 3), dtype=jnp.float32)
+    s1, n1, c1 = fog_step_ref(feat1, thr1, leaf1, x, zero, 1.0)
+    s2, n2, c2 = fog_step_ref(feat2, thr2, leaf2, x, s1, 2.0)
+    # Normalized dist after 2 hops = average of the two grove estimates.
+    g1 = grove_predict_proba_ref(feat1, thr1, leaf1, x)
+    g2 = grove_predict_proba_ref(feat2, thr2, leaf2, x)
+    np.testing.assert_allclose(np.asarray(n2), np.asarray((g1 + g2) / 2), rtol=1e-5)
+    assert np.asarray(c2).shape == (8,)
+
+
+def test_vmem_accounting():
+    assert vmem_bytes(2, 8, 10, 16) == (
+        2 * 255 * 4 + 2 * 255 * 4 + 2 * 256 * 10 * 4 + 32 * 16 * 4 + 32 * 10 * 4
+    )
+
+
+def test_batch_not_divisible_raises():
+    rng = np.random.default_rng(3)
+    feat, thr, leaf = random_grove(rng, 1, 2, 4, 2)
+    x = rng.normal(size=(6, 4)).astype(np.float32)
+    with pytest.raises(AssertionError):
+        grove_predict_proba(feat, thr, leaf, x, tile_b=4)

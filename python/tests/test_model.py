@@ -1,0 +1,82 @@
+"""L2 model tests: the fused grove_step graph agrees with composing its
+pieces, hop normalization is exact, and the kernels behave across the
+shapes aot.py actually emits."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import grove_predict_proba_ref, maxdiff_ref
+
+from tests.test_kernel import random_grove
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    t=st.integers(1, 4),
+    depth=st.integers(1, 5),
+    f=st.integers(2, 16),
+    c=st.integers(2, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_grove_step_equals_composition(t, depth, f, c, seed):
+    rng = np.random.default_rng(seed)
+    feat, thr, leaf = random_grove(rng, t, depth, f, c)
+    b = 8
+    x = rng.normal(size=(b, f)).astype(np.float32)
+    prob_sum = rng.random(size=(b, c)).astype(np.float32)
+    hops = np.full((b,), 3.0, dtype=np.float32)
+
+    new_sum, norm, conf = jax.jit(model.grove_step)(feat, thr, leaf, x, prob_sum, hops)
+
+    grove_p = grove_predict_proba_ref(feat, thr, leaf, x)
+    want_sum = prob_sum + np.asarray(grove_p)
+    want_norm = want_sum / 3.0
+    np.testing.assert_allclose(np.asarray(new_sum), want_sum, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(norm), want_norm, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(conf), np.asarray(maxdiff_ref(want_norm)), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_grove_step_first_hop_normalization():
+    rng = np.random.default_rng(3)
+    feat, thr, leaf = random_grove(rng, 2, 3, 5, 4)
+    x = rng.normal(size=(8, 5)).astype(np.float32)
+    zero = jnp.zeros((8, 4), jnp.float32)
+    one = jnp.ones((8,), jnp.float32)
+    _, norm, _ = jax.jit(model.grove_step)(feat, thr, leaf, x, zero, one)
+    # First hop: normalized == the grove's own distribution, sums to 1.
+    np.testing.assert_allclose(np.asarray(norm).sum(axis=1), np.ones(8), rtol=1e-5)
+
+
+def test_aot_shape_set_runs():
+    # Every DEFAULT_SHAPES entry must trace+run under jit (catches shape
+    # regressions before the rust side ever sees an artifact).
+    from compile import aot
+
+    for tag, t, depth, f, c, b in aot.DEFAULT_SHAPES:
+        rng = np.random.default_rng(hash(tag) % 2**31)
+        n_int = (1 << depth) - 1
+        feat = rng.integers(0, f, size=(t, n_int)).astype(np.int32)
+        thr = rng.normal(size=(t, n_int)).astype(np.float32)
+        leaf = rng.random(size=(t, 1 << depth, c)).astype(np.float32)
+        x = rng.normal(size=(b, f)).astype(np.float32)
+        out = jax.jit(model.grove_proba)(feat, thr, leaf, x)[0]
+        assert out.shape == (b, c), f"{tag}: {out.shape}"
+
+
+def test_mlp_forward_shapes():
+    rng = np.random.default_rng(5)
+    w1 = rng.normal(size=(8, 16)).astype(np.float32)
+    b1 = np.zeros(16, np.float32)
+    w2 = rng.normal(size=(16, 3)).astype(np.float32)
+    b2 = np.zeros(3, np.float32)
+    x = rng.normal(size=(4, 8)).astype(np.float32)
+    (logits,) = jax.jit(model.mlp_forward)(w1, b1, w2, b2, x)
+    assert logits.shape == (4, 3)
+    # ReLU hidden: logits must differ from the affine-only path.
+    lin = x @ w1 @ w2
+    assert not np.allclose(np.asarray(logits), lin)

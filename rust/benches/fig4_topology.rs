@@ -1,0 +1,25 @@
+//! Figure-4 regeneration bench: topology sweep (accuracy & EDP vs
+//! groves × trees/grove). Times the sweep and prints the series.
+//!
+//! FOG_BENCH_FAST=1 uses the demo profile only.
+
+use fog::data::synthetic::DatasetProfile;
+use fog::experiments::fig4;
+use fog::experiments::suite::train_suite;
+use fog::util::bench::Bencher;
+
+fn main() {
+    let fast = std::env::var("FOG_BENCH_FAST").is_ok();
+    let name = if fast { "demo" } else { "penbase" };
+    let profile = DatasetProfile::by_name(name).unwrap();
+    let suite = train_suite(&profile, 42);
+
+    let mut b = Bencher::default();
+    b.bench(&format!("fig4_topology_sweep_{name}"), 5, || {
+        let pts = fig4::run_dataset(&suite, 42);
+        assert_eq!(pts.len(), 5); // factorizations of 16
+    });
+
+    let pts = fig4::run_dataset(&suite, 42);
+    fig4::print_series(&[(name.to_string(), pts)]);
+}

@@ -1,0 +1,35 @@
+//! Figure-5 regeneration bench: threshold sweep (run-time tunability)
+//! for the 8×2 and 4×4 topologies. Times the sweep and prints both
+//! series.
+//!
+//! FOG_BENCH_FAST=1 uses the demo profile only.
+
+use fog::data::synthetic::DatasetProfile;
+use fog::experiments::fig5;
+use fog::experiments::suite::train_suite;
+use fog::util::bench::Bencher;
+
+fn main() {
+    let fast = std::env::var("FOG_BENCH_FAST").is_ok();
+    let name = if fast { "demo" } else { "penbase" };
+    let profile = DatasetProfile::by_name(name).unwrap();
+    let suite = train_suite(&profile, 42);
+    let grid = fog::fog::tuner::default_grid();
+
+    let mut b = Bencher::default();
+    for topo in [(8usize, 2usize), (4, 4)] {
+        b.bench(
+            &format!("fig5_threshold_sweep_{name}_{}x{}", topo.0, topo.1),
+            grid.len(),
+            || {
+                let pts = fig5::run_dataset(&suite, topo, &grid, 42).unwrap();
+                assert_eq!(pts.len(), grid.len());
+            },
+        );
+    }
+
+    for topo in [(8usize, 2usize), (4, 4)] {
+        let pts = fig5::run_dataset(&suite, topo, &grid, 42).unwrap();
+        fig5::print_series(topo, &[(name.to_string(), pts)]);
+    }
+}

@@ -1,0 +1,62 @@
+//! Hot-path micro-benchmarks: the inner loops the perf pass optimizes.
+//! (criterion is unavailable offline; `util::bench` is the harness.)
+//!
+//! Run: `cargo bench --bench hotpath` (FOG_BENCH_FAST=1 for a smoke run)
+
+use fog::data::synthetic::{generate, DatasetProfile};
+use fog::fog::confidence::max_diff;
+use fog::fog::{FieldOfGroves, FogParams};
+use fog::forest::{ForestParams, RandomForest, VoteMode};
+use fog::uarch::{RingConfig, RingSim};
+use fog::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::default();
+    let ds = generate(&DatasetProfile::by_name("penbase").unwrap(), 42);
+    let rf = RandomForest::fit(&ds.train, &ForestParams::default(), 1);
+    let fog = FieldOfGroves::from_forest(&rf, 2); // 8x2
+    let n = ds.test.len();
+
+    // Single flat-tree traversal (the PE inner loop).
+    let tree = &fog.groves[0].trees[0];
+    let x0 = ds.test.row(0);
+    b.bench("flat_tree_traversal", 1, || {
+        black_box(tree.predict_proba(black_box(x0)));
+    });
+
+    // One grove evaluation (one hop's compute).
+    let grove = &fog.groves[0];
+    let mut acc = vec![0.0f32; grove.n_classes];
+    b.bench("grove_eval_single", 1, || {
+        acc.iter_mut().for_each(|a| *a = 0.0);
+        grove.accumulate_proba(black_box(x0), &mut acc);
+        black_box(&acc);
+    });
+
+    // MaxDiff confidence.
+    let prob = vec![0.09f32, 0.11, 0.1, 0.12, 0.1, 0.08, 0.1, 0.1, 0.1, 0.1];
+    b.bench("maxdiff_confidence", 1, || {
+        black_box(max_diff(black_box(&prob)));
+    });
+
+    // Full Algorithm-2 batch evaluation (threaded).
+    let params = FogParams { threshold: 0.3, max_hops: 8, seed: 1 };
+    b.bench("fog_evaluate_batch", n, || {
+        black_box(fog.evaluate(black_box(&ds.test.x), &params));
+    });
+
+    // Conventional RF for comparison.
+    b.bench("rf_majority_batch", n, || {
+        black_box(rf.accuracy(&ds.test, VoteMode::Majority));
+    });
+
+    // Cycle-level ring simulation (per simulated input).
+    b.bench("uarch_ring_sim_batch", n, || {
+        let mut sim = RingSim::new(
+            &fog,
+            RingConfig { threshold: 0.3, seed: 1, ..Default::default() },
+        );
+        sim.load_batch(&ds.test.x);
+        black_box(sim.run().len());
+    });
+}

@@ -1,0 +1,40 @@
+//! Table-1 regeneration bench: times the end-to-end experiment (train
+//! every classifier + evaluate accuracy/energy) per dataset, then prints
+//! the table rows themselves — `cargo bench --bench table1` regenerates
+//! the paper's Table 1 on the synthetic profiles.
+//!
+//! FOG_BENCH_FAST=1 restricts to the demo profile.
+
+use fog::data::synthetic::DatasetProfile;
+use fog::experiments::table1;
+use fog::util::bench::Bencher;
+
+fn main() {
+    let fast = std::env::var("FOG_BENCH_FAST").is_ok();
+    let profiles: Vec<DatasetProfile> = if fast {
+        vec![DatasetProfile::demo()]
+    } else {
+        // penbase + segmentation keep the bench under a minute; the full
+        // five-dataset run is `cargo run --release -- table1`.
+        ["penbase", "segmentation"]
+            .iter()
+            .map(|n| DatasetProfile::by_name(n).unwrap())
+            .collect()
+    };
+
+    let mut b = Bencher::default();
+    // One timed iteration per dataset (training dominates; min_time keeps
+    // the sample count small automatically).
+    for p in &profiles {
+        let profile = p.clone();
+        b.bench(&format!("table1_suite_{}", p.name), 1, || {
+            let results = table1::run(std::slice::from_ref(&profile), 42);
+            assert_eq!(results[0].rows.len(), 7);
+        });
+    }
+
+    // And regenerate the actual table for the benched profiles.
+    let results = table1::run(&profiles, 42);
+    table1::print_table(&results);
+    table1::print_headline(&results);
+}

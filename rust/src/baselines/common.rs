@@ -1,0 +1,60 @@
+//! Shared classifier interface: every baseline predicts labels and
+//! reports the PPA cost of one hardware classification through the
+//! energy-model layer.
+
+use crate::data::Split;
+use crate::energy::blocks::{AreaBlocks, EnergyBlocks};
+use crate::energy::model::CostReport;
+use crate::util::threadpool::par_map;
+
+/// A trained classifier with a hardware cost model.
+pub trait Classifier: Sync {
+    /// Predict the label of one sample.
+    fn predict(&self, x: &[f32]) -> usize;
+
+    /// Hardware PPA of one classification on this trained model.
+    fn cost_report(&self, eb: &EnergyBlocks, ab: &AreaBlocks) -> CostReport;
+
+    /// Human-readable name.
+    fn name(&self) -> &'static str;
+
+    /// Batch accuracy (parallel).
+    fn accuracy(&self, split: &Split) -> f64 {
+        let preds = par_map(split.len(), |i| self.predict(split.row(i)));
+        crate::util::stats::accuracy(&preds, &split.y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::model::ClassifierKind;
+
+    struct Constant(usize);
+    impl Classifier for Constant {
+        fn predict(&self, _x: &[f32]) -> usize {
+            self.0
+        }
+        fn cost_report(&self, _eb: &EnergyBlocks, _ab: &AreaBlocks) -> CostReport {
+            CostReport {
+                kind: ClassifierKind::Mlp,
+                energy_nj: 1.0,
+                latency_ns: 1.0,
+                area_mm2: 1.0,
+            }
+        }
+        fn name(&self) -> &'static str {
+            "const"
+        }
+    }
+
+    #[test]
+    fn default_accuracy_impl() {
+        let mut s = Split::new(1, 2);
+        s.push(&[0.0], 1);
+        s.push(&[0.0], 1);
+        s.push(&[0.0], 0);
+        let c = Constant(1);
+        assert!((c.accuracy(&s) - 2.0 / 3.0).abs() < 1e-9);
+    }
+}

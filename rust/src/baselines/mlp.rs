@@ -1,0 +1,225 @@
+//! Multilayer perceptron: dense layers, ReLU hidden activations, softmax
+//! cross-entropy output, mini-batch SGD with momentum. Trained from
+//! scratch on the [`crate::util::matrix`] substrate.
+
+use super::common::Classifier;
+use crate::data::Split;
+use crate::energy::blocks::{AreaBlocks, EnergyBlocks};
+use crate::energy::model::{mlp_cost, CostReport};
+use crate::util::matrix::{softmax_rows, Matrix};
+use crate::util::rng::Rng;
+
+/// Training hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct MlpParams {
+    /// Hidden-layer widths (e.g. `[128]` for one hidden layer).
+    pub hidden: Vec<usize>,
+    pub epochs: usize,
+    pub batch_size: usize,
+    pub lr: f32,
+    pub momentum: f32,
+}
+
+impl Default for MlpParams {
+    fn default() -> Self {
+        MlpParams { hidden: vec![64], epochs: 30, batch_size: 32, lr: 0.05, momentum: 0.9 }
+    }
+}
+
+struct Layer {
+    w: Matrix, // [in, out]
+    b: Vec<f32>,
+    vw: Matrix,
+    vb: Vec<f32>,
+}
+
+/// A trained MLP.
+pub struct Mlp {
+    layers: Vec<Layer>,
+    pub dims: Vec<usize>,
+}
+
+impl Mlp {
+    pub fn fit(data: &Split, params: &MlpParams, seed: u64) -> Mlp {
+        let mut dims = vec![data.n_features];
+        dims.extend_from_slice(&params.hidden);
+        dims.push(data.n_classes);
+        let mut rng = Rng::new(seed);
+        let mut layers: Vec<Layer> = dims
+            .windows(2)
+            .map(|w| {
+                let std = (2.0 / w[0] as f32).sqrt(); // He init
+                Layer {
+                    w: Matrix::randn(w[0], w[1], std, &mut rng),
+                    b: vec![0.0; w[1]],
+                    vw: Matrix::zeros(w[0], w[1]),
+                    vb: vec![0.0; w[1]],
+                }
+            })
+            .collect();
+
+        let n = data.len();
+        let mut order: Vec<usize> = (0..n).collect();
+        for _epoch in 0..params.epochs {
+            rng.shuffle(&mut order);
+            for chunk in order.chunks(params.batch_size) {
+                let bs = chunk.len();
+                // Assemble batch.
+                let mut x = Matrix::zeros(bs, data.n_features);
+                for (r, &i) in chunk.iter().enumerate() {
+                    x.row_mut(r).copy_from_slice(data.row(i));
+                }
+                // Forward, keeping activations.
+                let mut acts = vec![x];
+                for (li, layer) in layers.iter().enumerate() {
+                    let mut z = acts[li].matmul(&layer.w);
+                    z.add_row_vector(&layer.b);
+                    if li + 1 < layers.len() {
+                        z.map_inplace(|v| v.max(0.0)); // ReLU
+                    }
+                    acts.push(z);
+                }
+                // Softmax + CE gradient at the output.
+                let mut probs = acts.last().unwrap().clone();
+                softmax_rows(&mut probs);
+                let mut delta = probs;
+                for (r, &i) in chunk.iter().enumerate() {
+                    let t = data.y[i];
+                    delta.set(r, t, delta.get(r, t) - 1.0);
+                }
+                delta.scale(1.0 / bs as f32);
+                // Backward.
+                for li in (0..layers.len()).rev() {
+                    let grad_w = acts[li].matmul_at(&delta);
+                    let grad_b: Vec<f32> = (0..delta.cols)
+                        .map(|c| (0..delta.rows).map(|r| delta.get(r, c)).sum())
+                        .collect();
+                    let next_delta = if li > 0 {
+                        let mut d = delta.matmul_bt(&layers[li].w);
+                        // ReLU mask of the *input* activation of this layer.
+                        for (dv, &av) in d.data.iter_mut().zip(&acts[li].data) {
+                            if av <= 0.0 {
+                                *dv = 0.0;
+                            }
+                        }
+                        Some(d)
+                    } else {
+                        None
+                    };
+                    // Momentum SGD.
+                    let layer = &mut layers[li];
+                    layer.vw.scale(params.momentum);
+                    layer.vw.axpy(-params.lr, &grad_w);
+                    let vw = layer.vw.clone();
+                    layer.w.axpy(1.0, &vw);
+                    for ((vb, gb), b) in
+                        layer.vb.iter_mut().zip(&grad_b).zip(layer.b.iter_mut())
+                    {
+                        *vb = params.momentum * *vb - params.lr * gb;
+                        *b += *vb;
+                    }
+                    if let Some(d) = next_delta {
+                        delta = d;
+                    }
+                }
+            }
+        }
+        Mlp { layers, dims }
+    }
+
+    /// Forward pass for one sample (no allocation beyond the activations).
+    pub fn scores(&self, x: &[f32]) -> Vec<f32> {
+        let mut a = x.to_vec();
+        for (li, layer) in self.layers.iter().enumerate() {
+            let mut z = vec![0.0f32; layer.w.cols];
+            for (i, &av) in a.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let wrow = layer.w.row(i);
+                for (zv, &wv) in z.iter_mut().zip(wrow) {
+                    *zv += av * wv;
+                }
+            }
+            for (zv, &bv) in z.iter_mut().zip(&layer.b) {
+                *zv += bv;
+            }
+            if li + 1 < self.layers.len() {
+                z.iter_mut().for_each(|v| *v = v.max(0.0));
+            }
+            a = z;
+        }
+        a
+    }
+}
+
+impl Classifier for Mlp {
+    fn predict(&self, x: &[f32]) -> usize {
+        crate::util::argmax(&self.scores(x))
+    }
+
+    fn cost_report(&self, eb: &EnergyBlocks, ab: &AreaBlocks) -> CostReport {
+        mlp_cost(&self.dims, eb, ab)
+    }
+
+    fn name(&self) -> &'static str {
+        "MLP"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetProfile};
+
+    #[test]
+    fn learns_xor() {
+        // XOR: impossible for linear models, easy for one hidden layer.
+        let mut s = Split::new(2, 2);
+        let mut rng = Rng::new(1);
+        for _ in 0..400 {
+            let a = rng.gen_range(2);
+            let b = rng.gen_range(2);
+            let y = a ^ b;
+            s.push(
+                &[
+                    a as f32 * 2.0 - 1.0 + rng.gen_normal() * 0.15,
+                    b as f32 * 2.0 - 1.0 + rng.gen_normal() * 0.15,
+                ],
+                y,
+            );
+        }
+        let params = MlpParams { hidden: vec![16], epochs: 60, ..Default::default() };
+        let mlp = Mlp::fit(&s, &params, 2);
+        assert!(mlp.accuracy(&s) > 0.95, "acc {}", mlp.accuracy(&s));
+    }
+
+    #[test]
+    fn beats_chance_on_demo() {
+        let ds = generate(&DatasetProfile::demo(), 161);
+        let mlp = Mlp::fit(&ds.train, &MlpParams::default(), 3);
+        let acc = mlp.accuracy(&ds.test);
+        assert!(acc > 0.6, "acc {acc}");
+    }
+
+    #[test]
+    fn dims_recorded() {
+        let ds = generate(&DatasetProfile::demo(), 162);
+        let params = MlpParams { hidden: vec![32, 16], epochs: 2, ..Default::default() };
+        let mlp = Mlp::fit(&ds.train, &params, 4);
+        assert_eq!(mlp.dims, vec![8, 32, 16, 3]);
+        let r = mlp.cost_report(&EnergyBlocks::default(), &AreaBlocks::default());
+        assert!(r.energy_nj > 0.0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let ds = generate(&DatasetProfile::demo(), 163);
+        let params = MlpParams { epochs: 3, ..Default::default() };
+        let a = Mlp::fit(&ds.train, &params, 9);
+        let b = Mlp::fit(&ds.train, &params, 9);
+        for i in 0..20 {
+            assert_eq!(a.predict(ds.test.row(i)), b.predict(ds.test.row(i)));
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Baseline classifiers the paper compares against (§4.1): linear SVM,
+//! RBF-kernel SVM, multilayer perceptron, and a small CNN — all trained
+//! from scratch (the environment has no ML libraries) and all reporting
+//! the op-count statistics the energy models consume.
+
+pub mod cnn;
+pub mod common;
+pub mod mlp;
+pub mod svm_linear;
+pub mod svm_rbf;
+
+pub use cnn::Cnn;
+pub use common::Classifier;
+pub use mlp::Mlp;
+pub use svm_linear::LinearSvm;
+pub use svm_rbf::RbfSvm;

@@ -1,0 +1,158 @@
+//! Linear SVM (the paper's SVM_lr) trained with Pegasos — stochastic
+//! sub-gradient descent on the hinge loss with 1/(λt) step sizes
+//! (Shalev-Shwartz et al.) — in a one-vs-rest arrangement for
+//! multiclass.
+//!
+//! The paper's Table 1 shows SVM_lr as the cheapest classifier (a single
+//! `c × f` GEMV) but the least accurate on every dataset — our synthetic
+//! profiles are deliberately not linearly separable, so the same gap
+//! emerges from training rather than being hard-coded.
+
+use super::common::Classifier;
+use crate::data::Split;
+use crate::energy::blocks::{AreaBlocks, EnergyBlocks};
+use crate::energy::model::{svm_linear_cost, CostReport};
+use crate::util::matrix::dot;
+use crate::util::rng::Rng;
+
+/// Training hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct LinearSvmParams {
+    /// Regularization λ.
+    pub lambda: f32,
+    /// Pegasos epochs over the training set.
+    pub epochs: usize,
+}
+
+impl Default for LinearSvmParams {
+    fn default() -> Self {
+        LinearSvmParams { lambda: 1e-4, epochs: 12 }
+    }
+}
+
+/// One-vs-rest linear SVM: weight matrix `[n_classes, n_features]` + bias.
+#[derive(Clone, Debug)]
+pub struct LinearSvm {
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub n_features: usize,
+    pub n_classes: usize,
+}
+
+impl LinearSvm {
+    /// Train with Pegasos, one binary problem per class.
+    pub fn fit(data: &Split, params: &LinearSvmParams, seed: u64) -> LinearSvm {
+        let f = data.n_features;
+        let c = data.n_classes;
+        let n = data.len();
+        let mut w = vec![0.0f32; c * f];
+        let mut b = vec![0.0f32; c];
+        let lambda = params.lambda;
+
+        // All classes share the same sample order per epoch (cache-friendly
+        // single pass updating every class's weight vector).
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut t: f32 = 1.0;
+        for _epoch in 0..params.epochs {
+            rng.shuffle(&mut order);
+            for &i in &order {
+                let x = data.row(i);
+                let eta = 1.0 / (lambda * t);
+                for class in 0..c {
+                    let y = if data.y[i] == class { 1.0f32 } else { -1.0 };
+                    let wc = &mut w[class * f..(class + 1) * f];
+                    let margin = y * (dot(wc, x) + b[class]);
+                    // w ← (1 − ηλ)w  [+ ηy·x if margin < 1]
+                    let shrink = 1.0 - eta * lambda;
+                    for v in wc.iter_mut() {
+                        *v *= shrink;
+                    }
+                    if margin < 1.0 {
+                        let step = eta * y / n as f32 * n as f32; // ηy
+                        for (v, &xi) in wc.iter_mut().zip(x) {
+                            *v += step * xi;
+                        }
+                        b[class] += step * 0.1; // unregularized slow bias
+                    }
+                }
+                t += 1.0;
+            }
+        }
+        LinearSvm { w, b, n_features: f, n_classes: c }
+    }
+
+    /// Per-class decision scores.
+    pub fn scores(&self, x: &[f32]) -> Vec<f32> {
+        (0..self.n_classes)
+            .map(|c| dot(&self.w[c * self.n_features..(c + 1) * self.n_features], x) + self.b[c])
+            .collect()
+    }
+}
+
+impl Classifier for LinearSvm {
+    fn predict(&self, x: &[f32]) -> usize {
+        crate::util::argmax(&self.scores(x))
+    }
+
+    fn cost_report(&self, eb: &EnergyBlocks, ab: &AreaBlocks) -> CostReport {
+        svm_linear_cost(self.n_features, self.n_classes, eb, ab)
+    }
+
+    fn name(&self) -> &'static str {
+        "SVM_lr"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetProfile};
+
+    #[test]
+    fn separable_problem_high_accuracy() {
+        // Linearly separable 2-class data: Pegasos should nail it.
+        let mut s = Split::new(2, 2);
+        let mut rng = Rng::new(1);
+        for i in 0..400 {
+            let y = i % 2;
+            let off = if y == 0 { -2.0 } else { 2.0 };
+            s.push(&[off + rng.gen_normal() * 0.3, rng.gen_normal()], y);
+        }
+        let svm = LinearSvm::fit(&s, &LinearSvmParams::default(), 2);
+        assert!(svm.accuracy(&s) > 0.97, "acc {}", svm.accuracy(&s));
+    }
+
+    #[test]
+    fn multimodal_data_hurts_linear() {
+        // The synthetic profiles are multi-cluster: linear SVM should be
+        // well below a random forest (this is the paper's SVM_lr column).
+        let ds = generate(&DatasetProfile::demo(), 141);
+        let svm = LinearSvm::fit(&ds.train, &LinearSvmParams::default(), 3);
+        let rf = crate::forest::RandomForest::fit(
+            &ds.train,
+            &crate::forest::ForestParams::small(),
+            3,
+        );
+        let svm_acc = svm.accuracy(&ds.test);
+        let rf_acc = rf.accuracy(&ds.test, crate::forest::VoteMode::Majority);
+        assert!(svm_acc > 1.0 / 3.0, "better than chance: {svm_acc}");
+        assert!(rf_acc > svm_acc - 0.05, "rf {rf_acc} vs linear {svm_acc}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let ds = generate(&DatasetProfile::demo(), 142);
+        let a = LinearSvm::fit(&ds.train, &LinearSvmParams::default(), 7);
+        let b = LinearSvm::fit(&ds.train, &LinearSvmParams::default(), 7);
+        assert_eq!(a.w, b.w);
+    }
+
+    #[test]
+    fn cost_report_shape() {
+        let ds = generate(&DatasetProfile::demo(), 143);
+        let svm = LinearSvm::fit(&ds.train, &LinearSvmParams::default(), 8);
+        let r = svm.cost_report(&EnergyBlocks::default(), &AreaBlocks::default());
+        assert!(r.energy_nj > 0.0 && r.area_mm2 > 0.0);
+    }
+}

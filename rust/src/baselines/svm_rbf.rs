@@ -1,0 +1,271 @@
+//! RBF-kernel SVM (the paper's SVM_rbf), implemented as a least-squares
+//! SVM (LS-SVM): solve `(K + λI) A = Y` for dual coefficients over a
+//! bounded support set, predict `argmax_c Σ_j A[j,c] · k(x_j, x)`.
+//!
+//! LS-SVM keeps **every** training point in the support set — which is
+//! exactly why kernel SVMs are the energy hogs of Table 1: each
+//! classification streams `n_sv × n_features` bytes of support vectors
+//! through the distance datapath. The support set is subsampled to
+//! [`RbfSvmParams::max_support`] for tractability (stratified, so class
+//! balance survives).
+
+use super::common::Classifier;
+use crate::data::Split;
+use crate::energy::blocks::{AreaBlocks, EnergyBlocks};
+use crate::energy::model::{svm_rbf_cost, CostReport};
+use crate::util::matrix::sq_dist;
+use crate::util::rng::Rng;
+
+/// Training hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct RbfSvmParams {
+    /// Kernel width γ in `exp(-γ‖x−x'‖²)`; 0 = auto (1 / (f · var)).
+    pub gamma: f32,
+    /// Ridge λ on the kernel diagonal.
+    pub lambda: f32,
+    /// Max support vectors (training subsample).
+    pub max_support: usize,
+}
+
+impl Default for RbfSvmParams {
+    fn default() -> Self {
+        RbfSvmParams { gamma: 0.0, lambda: 1e-3, max_support: 800 }
+    }
+}
+
+/// Trained LS-SVM with RBF kernel.
+#[derive(Clone, Debug)]
+pub struct RbfSvm {
+    /// Support vectors, row-major `[n_sv, f]`.
+    pub sv: Vec<f32>,
+    /// Dual coefficients `[n_sv, c]`.
+    pub alpha: Vec<f32>,
+    pub gamma: f32,
+    pub n_sv: usize,
+    pub n_features: usize,
+    pub n_classes: usize,
+}
+
+impl RbfSvm {
+    pub fn fit(data: &Split, params: &RbfSvmParams, seed: u64) -> RbfSvm {
+        let f = data.n_features;
+        let c = data.n_classes;
+        // Stratified subsample to max_support.
+        let idx = stratified_subsample(data, params.max_support, seed);
+        let m = idx.len();
+        let mut sv = Vec::with_capacity(m * f);
+        for &i in &idx {
+            sv.extend_from_slice(data.row(i));
+        }
+        // Auto kernel width: 1 / (f · mean feature variance) — standard
+        // "scale" heuristic.
+        let gamma = if params.gamma > 0.0 {
+            params.gamma
+        } else {
+            let var = feature_variance(&sv, m, f).max(1e-6);
+            1.0 / (f as f32 * var)
+        };
+
+        // Gram matrix K + λI.
+        let mut k = vec![0.0f64; m * m];
+        for i in 0..m {
+            k[i * m + i] = 1.0 + params.lambda as f64;
+            for j in (i + 1)..m {
+                let d = sq_dist(&sv[i * f..(i + 1) * f], &sv[j * f..(j + 1) * f]);
+                let v = (-gamma * d).exp() as f64;
+                k[i * m + j] = v;
+                k[j * m + i] = v;
+            }
+        }
+        // One-hot targets (±1 encoding improves conditioning of argmax).
+        let mut y = vec![0.0f64; m * c];
+        for (row, &i) in idx.iter().enumerate() {
+            for class in 0..c {
+                y[row * c + class] = if data.y[i] == class { 1.0 } else { -1.0 / (c as f64 - 1.0).max(1.0) };
+            }
+        }
+        // Solve (K+λI) A = Y via Cholesky.
+        let chol = cholesky(&mut k, m);
+        assert!(chol, "kernel matrix not PD — raise lambda");
+        let alpha64 = cholesky_solve_multi(&k, m, &y, c);
+        let alpha: Vec<f32> = alpha64.iter().map(|&v| v as f32).collect();
+
+        RbfSvm { sv, alpha, gamma, n_sv: m, n_features: f, n_classes: c }
+    }
+
+    /// Per-class kernel scores.
+    pub fn scores(&self, x: &[f32]) -> Vec<f32> {
+        let f = self.n_features;
+        let c = self.n_classes;
+        let mut out = vec![0.0f32; c];
+        for j in 0..self.n_sv {
+            let d = sq_dist(&self.sv[j * f..(j + 1) * f], x);
+            let kv = (-self.gamma * d).exp();
+            if kv < 1e-12 {
+                continue;
+            }
+            let a = &self.alpha[j * c..(j + 1) * c];
+            for (o, &av) in out.iter_mut().zip(a) {
+                *o += kv * av;
+            }
+        }
+        out
+    }
+}
+
+impl Classifier for RbfSvm {
+    fn predict(&self, x: &[f32]) -> usize {
+        crate::util::argmax(&self.scores(x))
+    }
+
+    fn cost_report(&self, eb: &EnergyBlocks, ab: &AreaBlocks) -> CostReport {
+        svm_rbf_cost(self.n_sv, self.n_features, self.n_classes, eb, ab)
+    }
+
+    fn name(&self) -> &'static str {
+        "SVM_rbf"
+    }
+}
+
+fn stratified_subsample(data: &Split, max: usize, seed: u64) -> Vec<usize> {
+    if data.len() <= max {
+        return (0..data.len()).collect();
+    }
+    let mut rng = Rng::new(seed ^ 0x5BF0);
+    let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); data.n_classes];
+    for (i, &y) in data.y.iter().enumerate() {
+        buckets[y].push(i);
+    }
+    let per_class = max / data.n_classes.max(1);
+    let mut out = Vec::new();
+    for bucket in buckets.iter_mut() {
+        rng.shuffle(bucket);
+        out.extend_from_slice(&bucket[..per_class.min(bucket.len())]);
+    }
+    out.sort_unstable();
+    out
+}
+
+fn feature_variance(x: &[f32], n: usize, f: usize) -> f32 {
+    let mut mean = vec![0.0f32; f];
+    for row in x.chunks(f) {
+        for (m, &v) in mean.iter_mut().zip(row) {
+            *m += v;
+        }
+    }
+    mean.iter_mut().for_each(|m| *m /= n as f32);
+    let mut var = 0.0f32;
+    for row in x.chunks(f) {
+        for (j, &v) in row.iter().enumerate() {
+            let d = v - mean[j];
+            var += d * d;
+        }
+    }
+    var / (n * f) as f32
+}
+
+/// In-place Cholesky `K = L·Lᵀ` (lower triangle stored in `k`). Returns
+/// false if the matrix is not positive definite.
+fn cholesky(k: &mut [f64], m: usize) -> bool {
+    for i in 0..m {
+        for j in 0..=i {
+            let mut s = k[i * m + j];
+            for p in 0..j {
+                s -= k[i * m + p] * k[j * m + p];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return false;
+                }
+                k[i * m + i] = s.sqrt();
+            } else {
+                k[i * m + j] = s / k[j * m + j];
+            }
+        }
+    }
+    true
+}
+
+/// Solve `L·Lᵀ·A = Y` for multi-column `Y` `[m, c]`.
+fn cholesky_solve_multi(l: &[f64], m: usize, y: &[f64], c: usize) -> Vec<f64> {
+    let mut a = y.to_vec();
+    // Forward: L z = y (column-wise over c RHS).
+    for i in 0..m {
+        for col in 0..c {
+            let mut s = a[i * c + col];
+            for p in 0..i {
+                s -= l[i * m + p] * a[p * c + col];
+            }
+            a[i * c + col] = s / l[i * m + i];
+        }
+    }
+    // Backward: Lᵀ a = z.
+    for i in (0..m).rev() {
+        for col in 0..c {
+            let mut s = a[i * c + col];
+            for p in (i + 1)..m {
+                s -= l[p * m + i] * a[p * c + col];
+            }
+            a[i * c + col] = s / l[i * m + i];
+        }
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetProfile};
+
+    #[test]
+    fn cholesky_solves_identity() {
+        let mut k = vec![0.0f64; 9];
+        for i in 0..3 {
+            k[i * 3 + i] = 4.0;
+        }
+        assert!(cholesky(&mut k, 3));
+        let y = vec![4.0f64, 8.0, 12.0];
+        let a = cholesky_solve_multi(&k, 3, &y, 1);
+        for (i, &v) in a.iter().enumerate() {
+            assert!((v - (i as f64 + 1.0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut k = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(!cholesky(&mut k, 2));
+    }
+
+    #[test]
+    fn rbf_beats_linear_on_multimodal() {
+        let ds = generate(&DatasetProfile::demo(), 151);
+        let rbf = RbfSvm::fit(&ds.train, &RbfSvmParams::default(), 1);
+        let lin = crate::baselines::LinearSvm::fit(
+            &ds.train,
+            &crate::baselines::svm_linear::LinearSvmParams::default(),
+            1,
+        );
+        let rbf_acc = rbf.accuracy(&ds.test);
+        let lin_acc = lin.accuracy(&ds.test);
+        assert!(rbf_acc > 0.7, "rbf acc {rbf_acc}");
+        assert!(rbf_acc >= lin_acc - 0.02, "rbf {rbf_acc} vs linear {lin_acc}");
+    }
+
+    #[test]
+    fn support_bounded() {
+        let ds = generate(&DatasetProfile::demo(), 152);
+        let params = RbfSvmParams { max_support: 60, ..Default::default() };
+        let rbf = RbfSvm::fit(&ds.train, &params, 2);
+        assert!(rbf.n_sv <= 60);
+        assert!(rbf.accuracy(&ds.test) > 0.5);
+    }
+
+    #[test]
+    fn train_accuracy_high() {
+        let ds = generate(&DatasetProfile::demo(), 153);
+        let rbf = RbfSvm::fit(&ds.train, &RbfSvmParams::default(), 3);
+        // LS-SVM interpolates well on its own support set.
+        assert!(rbf.accuracy(&ds.train) > 0.85);
+    }
+}

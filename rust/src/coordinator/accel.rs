@@ -1,0 +1,174 @@
+//! The accelerator proxy: one dedicated thread owning every PJRT
+//! executable (PJRT handles are thread-affine in the `xla` crate), fed
+//! by grove workers through a channel — the software analogue of "one
+//! accelerator, many queues".
+
+use crate::dt::export::{sanitize_inf, FlatBundle};
+use crate::fog::FieldOfGroves;
+use crate::runtime::{GroveStepExec, Manifest, Runtime, StepOutput};
+use std::path::PathBuf;
+use std::sync::mpsc;
+
+/// One batched grove-step evaluation request.
+pub struct AccelRequest {
+    pub grove_idx: usize,
+    pub x: Vec<f32>,
+    pub prob_sum: Vec<f32>,
+    pub hops: Vec<f32>,
+    pub reply: mpsc::Sender<anyhow::Result<StepOutput>>,
+}
+
+/// Cloneable handle to the accelerator thread.
+#[derive(Clone)]
+pub struct AccelHandle {
+    tx: mpsc::Sender<AccelRequest>,
+}
+
+impl AccelHandle {
+    /// Synchronous round trip: evaluate one batch on `grove_idx`.
+    pub fn step(
+        &self,
+        grove_idx: usize,
+        x: Vec<f32>,
+        prob_sum: Vec<f32>,
+        hops: Vec<f32>,
+    ) -> anyhow::Result<StepOutput> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(AccelRequest { grove_idx, x, prob_sum, hops, reply })
+            .map_err(|_| anyhow::anyhow!("accelerator thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("accelerator dropped reply"))?
+    }
+}
+
+/// Spawn the accelerator thread for `fog`, loading `grove_step` artifacts
+/// from `artifacts_dir`. Fails fast (before returning) if the artifacts
+/// are missing or shape-incompatible.
+pub fn spawn(fog: &FieldOfGroves, artifacts_dir: PathBuf) -> anyhow::Result<AccelHandle> {
+    // Snapshot the grove bundles (the thread owns its own copy).
+    let bundles: Vec<FlatBundle> = fog
+        .groves
+        .iter()
+        .map(|g| {
+            let mut b = FlatBundle::new(g.trees.clone());
+            sanitize_inf(&mut b);
+            b
+        })
+        .collect();
+    let (t, depth, f, c) = (
+        fog.groves[0].n_trees(),
+        fog.depth,
+        fog.n_features,
+        fog.n_classes,
+    );
+
+    let (tx, rx) = mpsc::channel::<AccelRequest>();
+    let (init_tx, init_rx) = mpsc::channel::<anyhow::Result<()>>();
+
+    std::thread::Builder::new()
+        .name("fog-accel".into())
+        .spawn(move || {
+            // Everything PJRT stays on this thread.
+            let init = (|| -> anyhow::Result<Vec<GroveStepExec>> {
+                let rt = Runtime::cpu()?;
+                let manifest = Manifest::load(&artifacts_dir)?;
+                let meta = manifest
+                    .find_grove_step(t, depth, f, c)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "no grove_step artifact for t={t} depth={depth} f={f} c={c}; \
+                             run: make artifacts SHAPES=ring:{t},{depth},{f},{c},32"
+                        )
+                    })?
+                    .clone();
+                bundles
+                    .iter()
+                    .map(|b| GroveStepExec::new(&rt, &manifest, &meta, b))
+                    .collect()
+            })();
+            match init {
+                Err(e) => {
+                    let _ = init_tx.send(Err(e));
+                }
+                Ok(execs) => {
+                    let _ = init_tx.send(Ok(()));
+                    while let Ok(req) = rx.recv() {
+                        let result =
+                            execs[req.grove_idx].step(&req.x, &req.prob_sum, &req.hops);
+                        let _ = req.reply.send(result);
+                    }
+                }
+            }
+        })
+        .expect("spawn accel thread");
+
+    init_rx
+        .recv()
+        .map_err(|_| anyhow::anyhow!("accelerator thread died during init"))??;
+    Ok(AccelHandle { tx })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetProfile};
+    use crate::forest::{ForestParams, RandomForest};
+    use crate::runtime::artifacts::default_dir;
+
+    #[test]
+    fn spawn_fails_cleanly_without_artifacts() {
+        let ds = generate(&DatasetProfile::demo(), 191);
+        let rf = RandomForest::fit(&ds.train, &ForestParams::small(), 1);
+        let fog = crate::fog::FieldOfGroves::from_forest(&rf, 4);
+        let r = spawn(&fog, PathBuf::from("/nonexistent/artifacts"));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn accel_step_matches_native() {
+        let dir = default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping accel test: run `make artifacts`");
+            return;
+        }
+        // Build a fog matching the demo artifact (t=4, depth 6, f=8, c=3).
+        let ds = generate(&DatasetProfile::demo(), 192);
+        let params = ForestParams {
+            n_trees: 8,
+            tree: crate::dt::TreeParams { max_depth: 6, ..Default::default() },
+            bootstrap: true,
+        };
+        let rf = RandomForest::fit(&ds.train, &params, 2);
+        let mut fog = crate::fog::FieldOfGroves::from_forest(&rf, 4);
+        if fog.depth != 6 {
+            // Forest happened to train shallower/deeper: repad to 6 only
+            // when shallower; skip otherwise (artifact is depth-6).
+            if fog.depth > 6 {
+                eprintln!("skipping: trained depth {} > artifact 6", fog.depth);
+                return;
+            }
+            for g in &mut fog.groves {
+                for t in &mut g.trees {
+                    *t = t.repad(6);
+                }
+            }
+            fog.depth = 6;
+        }
+        let handle = spawn(&fog, dir).unwrap();
+        let n = 8usize;
+        let out = handle
+            .step(
+                0,
+                ds.test.x[..n * 8].to_vec(),
+                vec![0.0; n * 3],
+                vec![1.0; n],
+            )
+            .unwrap();
+        for i in 0..n {
+            let native = fog.groves[0].predict_proba(ds.test.row(i));
+            for (a, b) in out.norm[i * 3..(i + 1) * 3].iter().zip(&native) {
+                assert!((a - b).abs() < 1e-4);
+            }
+        }
+    }
+}

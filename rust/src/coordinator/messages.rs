@@ -1,0 +1,74 @@
+//! Message types flowing through the serving ring.
+
+use std::time::Instant;
+
+/// A classification request from a client.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub features: Vec<f32>,
+}
+
+/// A completed classification.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub label: usize,
+    /// Normalized probability distribution at stop time.
+    pub prob: Vec<f32>,
+    /// Groves that contributed.
+    pub hops: usize,
+    /// Wall-clock service latency.
+    pub latency_us: u64,
+}
+
+/// Ring channel message: work, or a shutdown sentinel. The sentinel is
+/// needed because ring workers hold `Sender`s to each other, so the
+/// channels never disconnect on their own — the server broadcasts
+/// `Shutdown` to every worker at teardown.
+#[derive(Clone, Debug)]
+pub enum Msg {
+    Work(WorkItem),
+    Shutdown,
+}
+
+/// An in-flight item moving around the ring (the Γ-word of the hardware:
+/// hops + payload + probability array).
+#[derive(Clone, Debug)]
+pub struct WorkItem {
+    pub id: u64,
+    pub features: Vec<f32>,
+    /// Running probability *sum* (one mass unit per grove so far).
+    pub prob_sum: Vec<f32>,
+    pub hops: u32,
+    pub injected: Instant,
+    /// Last normalized distribution (scratch reused between hop and
+    /// response to avoid recomputation).
+    pub scratch_norm: Vec<f32>,
+}
+
+impl WorkItem {
+    pub fn fresh(req: Request, n_classes: usize) -> WorkItem {
+        WorkItem {
+            id: req.id,
+            features: req.features,
+            prob_sum: vec![0.0; n_classes],
+            hops: 0,
+            injected: Instant::now(),
+            scratch_norm: Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_item_zeroed() {
+        let w = WorkItem::fresh(Request { id: 7, features: vec![1.0, 2.0] }, 3);
+        assert_eq!(w.id, 7);
+        assert_eq!(w.prob_sum, vec![0.0; 3]);
+        assert_eq!(w.hops, 0);
+    }
+}

@@ -1,0 +1,112 @@
+//! Serving metrics: lock-free counters updated by workers, plus a
+//! latency reservoir the collector fills (reservoirs need no locks on
+//! the hot path because only the collector thread touches them).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared atomic counters.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub hops_total: AtomicU64,
+    pub forwards: AtomicU64,
+    /// Batches evaluated (per-backend batching effectiveness).
+    pub batches: AtomicU64,
+    /// Items evaluated (≥ responses; includes re-circulated items).
+    pub evals: AtomicU64,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            responses: self.responses.load(Ordering::Relaxed),
+            hops_total: self.hops_total.load(Ordering::Relaxed),
+            forwards: self.forwards.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            evals: self.evals.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub responses: u64,
+    pub hops_total: u64,
+    pub forwards: u64,
+    pub batches: u64,
+    pub evals: u64,
+}
+
+impl MetricsSnapshot {
+    pub fn avg_hops(&self) -> f64 {
+        if self.responses == 0 {
+            0.0
+        } else {
+            self.hops_total as f64 / self.responses as f64
+        }
+    }
+
+    pub fn avg_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.evals as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Latency summary computed from response records.
+#[derive(Clone, Debug)]
+pub struct LatencySummary {
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub mean_us: f64,
+}
+
+impl LatencySummary {
+    pub fn from_us(mut samples: Vec<f64>) -> LatencySummary {
+        if samples.is_empty() {
+            return LatencySummary { p50_us: 0.0, p95_us: 0.0, p99_us: 0.0, mean_us: 0.0 };
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        LatencySummary {
+            p50_us: crate::util::stats::percentile(&samples, 50.0),
+            p95_us: crate::util::stats::percentile(&samples, 95.0),
+            p99_us: crate::util::stats::percentile(&samples, 99.0),
+            mean_us: crate::util::stats::mean(&samples),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_and_averages() {
+        let m = Metrics::default();
+        m.requests.fetch_add(10, Ordering::Relaxed);
+        m.responses.fetch_add(10, Ordering::Relaxed);
+        m.hops_total.fetch_add(25, Ordering::Relaxed);
+        m.batches.fetch_add(5, Ordering::Relaxed);
+        m.evals.fetch_add(20, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.avg_hops(), 2.5);
+        assert_eq!(s.avg_batch_size(), 4.0);
+    }
+
+    #[test]
+    fn latency_summary() {
+        let s = LatencySummary::from_us((1..=100).map(|i| i as f64).collect());
+        assert!((s.p50_us - 50.5).abs() < 1.0);
+        assert!(s.p95_us > s.p50_us);
+        assert!(s.p99_us >= s.p95_us);
+        let empty = LatencySummary::from_us(vec![]);
+        assert_eq!(empty.mean_us, 0.0);
+    }
+}

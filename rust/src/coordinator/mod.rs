@@ -1,0 +1,28 @@
+//! The serving coordinator: a threaded front-end that turns the FoG ring
+//! into a classification service — the L3 "system" layer of the stack.
+//!
+//! Topology mirrors the hardware (Figure 3): one worker thread per grove,
+//! connected in a ring by bounded channels (the data queues); an injector
+//! that routes fresh requests to a random grove (Algorithm 2 line 3); and
+//! a collector that returns responses to callers. Confidence gating and
+//! hop forwarding are identical to the μarch simulator; this layer adds
+//! dynamic batching, backpressure and metrics — what a deployment around
+//! the accelerator would need.
+//!
+//! Two evaluation backends:
+//! * **Native** — each worker walks its grove's flat trees directly
+//!   (pure rust hot path).
+//! * **Pjrt** — workers forward batches to a dedicated accelerator
+//!   thread owning the AOT-compiled `grove_step` executables (PJRT
+//!   handles are thread-affine). Python is never involved at runtime.
+
+pub mod accel;
+pub mod messages;
+pub mod metrics;
+pub mod router;
+pub mod server;
+pub mod worker;
+
+pub use messages::{Request, Response};
+pub use metrics::Metrics;
+pub use server::{Backend, FogServer, ServerConfig};

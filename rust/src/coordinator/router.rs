@@ -1,0 +1,134 @@
+//! Request routing policies for the serving front-end.
+//!
+//! Algorithm 2 starts each input at a *random* grove "to avoid bias"
+//! (line 3) — that is the paper-faithful default and the one every parity
+//! test uses. A deployment may prefer other policies; this module
+//! provides the standard three and measures their load-balance effect
+//! (used by the `ablate` experiment).
+
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Start-grove selection policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Per-input deterministic random stream (Algorithm 2 line 3).
+    Random,
+    /// Strict rotation.
+    RoundRobin,
+    /// Fewest in-flight items (greedy least-loaded).
+    LeastLoaded,
+}
+
+/// Router state shared with the injection loop.
+pub struct Router {
+    policy: RouterPolicy,
+    n_groves: usize,
+    seed: u64,
+    rr_next: AtomicU64,
+    /// In-flight per grove (maintained by the caller on inject/complete).
+    pub in_flight: Vec<AtomicU64>,
+}
+
+impl Router {
+    pub fn new(policy: RouterPolicy, n_groves: usize, seed: u64) -> Router {
+        Router {
+            policy,
+            n_groves,
+            seed,
+            rr_next: AtomicU64::new(0),
+            in_flight: (0..n_groves).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Pick the start grove for input `index`.
+    pub fn route(&self, index: u64) -> usize {
+        match self.policy {
+            RouterPolicy::Random => {
+                let mut rng =
+                    Rng::new(self.seed ^ index.wrapping_mul(0x9E3779B97F4A7C15));
+                rng.gen_range(self.n_groves)
+            }
+            RouterPolicy::RoundRobin => {
+                (self.rr_next.fetch_add(1, Ordering::Relaxed) % self.n_groves as u64) as usize
+            }
+            RouterPolicy::LeastLoaded => self
+                .in_flight
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, c)| c.load(Ordering::Relaxed))
+                .map(|(i, _)| i)
+                .unwrap_or(0),
+        }
+    }
+
+    pub fn note_injected(&self, grove: usize) {
+        self.in_flight[grove].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_completed(&self, grove: usize) {
+        self.in_flight[grove].fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Load-imbalance metric: max/mean of a per-grove assignment count.
+    pub fn imbalance(counts: &[u64]) -> f64 {
+        if counts.is_empty() {
+            return 0.0;
+        }
+        let max = *counts.iter().max().unwrap() as f64;
+        let mean = counts.iter().sum::<u64>() as f64 / counts.len() as f64;
+        if mean == 0.0 {
+            0.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_is_uniform() {
+        let r = Router::new(RouterPolicy::RoundRobin, 4, 0);
+        let mut counts = vec![0u64; 4];
+        for i in 0..400 {
+            counts[r.route(i)] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 100), "{counts:?}");
+        assert!((Router::imbalance(&counts) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn random_matches_algorithm2_stream() {
+        // Must be the exact stream evaluate()/RingSim/FogServer use.
+        let r = Router::new(RouterPolicy::Random, 8, 42);
+        for i in 0..50u64 {
+            let mut rng = Rng::new(42 ^ i.wrapping_mul(0x9E3779B97F4A7C15));
+            assert_eq!(r.route(i), rng.gen_range(8));
+        }
+    }
+
+    #[test]
+    fn random_is_roughly_balanced() {
+        let r = Router::new(RouterPolicy::Random, 8, 7);
+        let mut counts = vec![0u64; 8];
+        for i in 0..8000 {
+            counts[r.route(i)] += 1;
+        }
+        assert!(Router::imbalance(&counts) < 1.15, "{counts:?}");
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle() {
+        let r = Router::new(RouterPolicy::LeastLoaded, 3, 0);
+        r.note_injected(0);
+        r.note_injected(0);
+        r.note_injected(1);
+        assert_eq!(r.route(0), 2);
+        r.note_completed(0);
+        r.note_completed(0);
+        assert_eq!(r.route(1), 0);
+    }
+}

@@ -1,0 +1,300 @@
+//! The FoG server: spins up the grove-worker ring, routes requests to
+//! random starting groves, collects responses, and enforces an in-flight
+//! cap (the injection-side backpressure that keeps the ring
+//! deadlock-free — ring-internal channels are unbounded, so forwarding
+//! never blocks; total memory is bounded by the cap).
+
+use super::accel;
+use super::messages::{Msg, Request, Response, WorkItem};
+use super::metrics::{LatencySummary, Metrics};
+use super::worker::{run_worker, EvalBackend, WorkerConfig};
+use crate::fog::FieldOfGroves;
+use crate::util::rng::Rng;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Evaluation backend selection.
+#[derive(Clone, Debug)]
+pub enum Backend {
+    /// Pure-rust tree walks inside each worker.
+    Native,
+    /// AOT-compiled PJRT executables behind the accelerator thread.
+    Pjrt { artifacts_dir: PathBuf },
+}
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub threshold: f32,
+    pub max_hops: usize,
+    pub batch_size: usize,
+    pub batch_timeout: Duration,
+    /// Max requests in flight before `classify` waits for completions.
+    pub max_in_flight: usize,
+    pub seed: u64,
+    pub backend: Backend,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            threshold: 0.3,
+            max_hops: usize::MAX,
+            batch_size: 16,
+            batch_timeout: Duration::from_micros(200),
+            max_in_flight: 256,
+            seed: 0,
+            backend: Backend::Native,
+        }
+    }
+}
+
+/// A running FoG classification service.
+pub struct FogServer {
+    grove_txs: Vec<Sender<Msg>>,
+    resp_rx: Receiver<Response>,
+    metrics: Arc<Metrics>,
+    n_groves: usize,
+    n_classes: usize,
+    n_features: usize,
+    seed: u64,
+    max_in_flight: usize,
+    next_id: u64,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl FogServer {
+    /// Start workers for every grove of `fog`.
+    pub fn start(fog: &FieldOfGroves, cfg: &ServerConfig) -> anyhow::Result<FogServer> {
+        let n = fog.n_groves();
+        anyhow::ensure!(n > 0, "empty fog");
+        let metrics = Arc::new(Metrics::default());
+        let (resp_tx, resp_rx) = channel::<Response>();
+
+        let accel_handle = match &cfg.backend {
+            Backend::Native => None,
+            Backend::Pjrt { artifacts_dir } => {
+                Some(accel::spawn(fog, artifacts_dir.clone())?)
+            }
+        };
+
+        // Ring channels.
+        let mut txs = Vec::with_capacity(n);
+        let mut rxs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel::<Msg>();
+            txs.push(tx);
+            rxs.push(Some(rx));
+        }
+        let wcfg = WorkerConfig {
+            threshold: cfg.threshold,
+            max_hops: cfg.max_hops.clamp(1, n),
+            batch_size: cfg.batch_size.max(1),
+            batch_timeout: cfg.batch_timeout,
+        };
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let rx = rxs[i].take().unwrap();
+            let next = txs[(i + 1) % n].clone();
+            let responses = resp_tx.clone();
+            let m = Arc::clone(&metrics);
+            let grove = fog.groves[i].clone();
+            let backend = match &accel_handle {
+                None => EvalBackend::Native(grove),
+                Some(h) => EvalBackend::Accel {
+                    handle: h.clone(),
+                    grove,
+                    grove_idx: i,
+                },
+            };
+            let wc = wcfg.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("fog-grove-{i}"))
+                    .spawn(move || run_worker(backend, rx, next, responses, m, wc))
+                    .expect("spawn worker"),
+            );
+        }
+        Ok(FogServer {
+            grove_txs: txs,
+            resp_rx,
+            metrics,
+            n_groves: n,
+            n_classes: fog.n_classes,
+            n_features: fog.n_features,
+            seed: cfg.seed,
+            max_in_flight: cfg.max_in_flight.max(1),
+            next_id: 0,
+            workers,
+        })
+    }
+
+    /// Classify a row-major batch; returns responses sorted by input
+    /// order. Blocks until every input is answered.
+    pub fn classify(&mut self, x: &[f32]) -> Vec<Response> {
+        let f = self.n_features;
+        assert_eq!(x.len() % f, 0, "ragged batch");
+        let n = x.len() / f;
+        let base_id = self.next_id;
+        self.next_id += n as u64;
+
+        let mut responses: Vec<Option<Response>> = vec![None; n];
+        let mut injected = 0usize;
+        let mut completed = 0usize;
+        while completed < n {
+            // Inject while under the in-flight cap.
+            while injected < n && injected - completed < self.max_in_flight {
+                let id = base_id + injected as u64;
+                // Same per-input stream as Algorithm 2 / the μarch sim.
+                let mut rng =
+                    Rng::new(self.seed ^ (injected as u64).wrapping_mul(0x9E3779B97F4A7C15));
+                let start = rng.gen_range(self.n_groves);
+                let req = Request {
+                    id,
+                    features: x[injected * f..(injected + 1) * f].to_vec(),
+                };
+                self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                let item = WorkItem::fresh(req, self.n_classes);
+                self.grove_txs[start].send(Msg::Work(item)).expect("ring alive");
+                injected += 1;
+            }
+            // Collect one response.
+            let resp = self.resp_rx.recv().expect("workers alive");
+            let idx = (resp.id - base_id) as usize;
+            responses[idx] = Some(resp);
+            completed += 1;
+        }
+        responses.into_iter().map(|r| r.unwrap()).collect()
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Latency summary over a slice of responses.
+    pub fn latency_summary(responses: &[Response]) -> LatencySummary {
+        LatencySummary::from_us(responses.iter().map(|r| r.latency_us as f64).collect())
+    }
+
+    /// Tear down the ring: broadcast the shutdown sentinel (ring workers
+    /// hold senders to each other, so plain channel disconnection never
+    /// happens), then join.
+    pub fn shutdown(self) {
+        for tx in &self.grove_txs {
+            let _ = tx.send(Msg::Shutdown);
+        }
+        drop(self.grove_txs);
+        drop(self.resp_rx);
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetProfile};
+    use crate::fog::FogParams;
+    use crate::forest::{ForestParams, RandomForest};
+
+    fn setup() -> (FieldOfGroves, crate::data::Dataset) {
+        let ds = generate(&DatasetProfile::demo(), 201);
+        let rf = RandomForest::fit(&ds.train, &ForestParams::default(), 1);
+        (FieldOfGroves::from_forest(&rf, 4), ds)
+    }
+
+    #[test]
+    fn serving_matches_algorithm2() {
+        let (fog, ds) = setup();
+        let threshold = 0.35;
+        let seed = 23;
+        let sw = fog.evaluate(
+            &ds.test.x,
+            &FogParams { threshold, max_hops: fog.n_groves(), seed },
+        );
+        let cfg = ServerConfig { threshold, seed, ..Default::default() };
+        let mut server = FogServer::start(&fog, &cfg).unwrap();
+        let responses = server.classify(&ds.test.x);
+        assert_eq!(responses.len(), ds.test.len());
+        for (r, s) in responses.iter().zip(&sw.outcomes) {
+            assert_eq!(r.label, s.label, "id {}", r.id);
+            assert_eq!(r.hops, s.hops);
+        }
+        let snap = server.metrics().snapshot();
+        assert_eq!(snap.responses as usize, ds.test.len());
+        assert_eq!(snap.forwards, snap.hops_total - snap.responses);
+        server.shutdown();
+    }
+
+    #[test]
+    fn multiple_batches_share_server() {
+        let (fog, ds) = setup();
+        let cfg = ServerConfig { threshold: 0.5, seed: 1, ..Default::default() };
+        let mut server = FogServer::start(&fog, &cfg).unwrap();
+        let f = fog.n_features;
+        let r1 = server.classify(&ds.test.x[..10 * f]);
+        let r2 = server.classify(&ds.test.x[10 * f..20 * f]);
+        assert_eq!(r1.len(), 10);
+        assert_eq!(r2.len(), 10);
+        // ids are globally unique and ordered per batch
+        assert!(r1.iter().enumerate().all(|(i, r)| r.id == i as u64));
+        assert!(r2.iter().enumerate().all(|(i, r)| r.id == 10 + i as u64));
+        server.shutdown();
+    }
+
+    #[test]
+    fn small_in_flight_cap_still_completes() {
+        let (fog, ds) = setup();
+        let cfg = ServerConfig {
+            threshold: 0.8,
+            max_in_flight: 2,
+            seed: 3,
+            ..Default::default()
+        };
+        let mut server = FogServer::start(&fog, &cfg).unwrap();
+        let responses = server.classify(&ds.test.x);
+        assert_eq!(responses.len(), ds.test.len());
+        server.shutdown();
+    }
+
+    #[test]
+    fn batching_takes_effect() {
+        let (fog, ds) = setup();
+        let cfg = ServerConfig {
+            threshold: 1.01, // force full circulation → lots of traffic
+            batch_size: 32,
+            batch_timeout: Duration::from_millis(2),
+            seed: 4,
+            ..Default::default()
+        };
+        let mut server = FogServer::start(&fog, &cfg).unwrap();
+        server.classify(&ds.test.x);
+        let snap = server.metrics().snapshot();
+        assert!(
+            snap.avg_batch_size() > 1.5,
+            "expected batching, got {}",
+            snap.avg_batch_size()
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn accuracy_matches_offline_eval() {
+        let (fog, ds) = setup();
+        let cfg = ServerConfig { threshold: 0.4, seed: 5, ..Default::default() };
+        let mut server = FogServer::start(&fog, &cfg).unwrap();
+        let responses = server.classify(&ds.test.x);
+        let preds: Vec<usize> = responses.iter().map(|r| r.label).collect();
+        let acc = crate::util::stats::accuracy(&preds, &ds.test.y);
+        let sw = fog.evaluate(
+            &ds.test.x,
+            &FogParams { threshold: 0.4, max_hops: fog.n_groves(), seed: 5 },
+        );
+        assert!((acc - sw.accuracy(&ds.test.y)).abs() < 1e-9);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,157 @@
+//! Grove worker: one thread per grove, draining its queue in dynamic
+//! batches, gating on confidence, forwarding the unconfident to the next
+//! grove (the software twin of the hardware tile in `uarch::ring`).
+
+use super::accel::AccelHandle;
+use super::messages::{Msg, Response};
+use super::metrics::Metrics;
+use crate::fog::confidence::max_diff;
+use crate::fog::Grove;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// How a worker evaluates its grove.
+pub enum EvalBackend {
+    /// Walk the flat trees directly in this thread.
+    Native(Grove),
+    /// Ship batches to the PJRT accelerator thread.
+    Accel { handle: AccelHandle, grove: Grove, grove_idx: usize },
+}
+
+impl EvalBackend {
+    fn n_classes(&self) -> usize {
+        match self {
+            EvalBackend::Native(g) => g.n_classes,
+            EvalBackend::Accel { grove, .. } => grove.n_classes,
+        }
+    }
+}
+
+/// Worker configuration.
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    pub threshold: f32,
+    pub max_hops: usize,
+    /// Max items per evaluation batch.
+    pub batch_size: usize,
+    /// How long to wait for more items once one is in hand.
+    pub batch_timeout: Duration,
+}
+
+/// Worker main loop. Exits when the inbound channel disconnects.
+#[allow(clippy::too_many_arguments)]
+pub fn run_worker(
+    backend: EvalBackend,
+    rx: Receiver<Msg>,
+    next: Sender<Msg>,
+    responses: Sender<Response>,
+    metrics: Arc<Metrics>,
+    cfg: WorkerConfig,
+) {
+    let n_classes = backend.n_classes();
+    loop {
+        // Block for the first item.
+        let first = match rx.recv() {
+            Ok(Msg::Work(item)) => item,
+            Ok(Msg::Shutdown) | Err(_) => return, // server shut down
+        };
+        // Opportunistically batch more items.
+        let mut batch = vec![first];
+        while batch.len() < cfg.batch_size {
+            match rx.recv_timeout(cfg.batch_timeout) {
+                Ok(Msg::Work(item)) => batch.push(item),
+                Ok(Msg::Shutdown) => return,
+                Err(_) => break,
+            }
+        }
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        metrics.evals.fetch_add(batch.len() as u64, Ordering::Relaxed);
+
+        // Evaluate the batch.
+        let confs: Vec<f32> = match &backend {
+            EvalBackend::Native(grove) => batch
+                .iter_mut()
+                .map(|item| {
+                    grove.accumulate_proba(&item.features, &mut item.prob_sum);
+                    item.hops += 1;
+                    let inv = 1.0 / item.hops as f32;
+                    let norm: Vec<f32> =
+                        item.prob_sum.iter().map(|p| p * inv).collect();
+                    let c = max_diff(&norm);
+                    item.scratch_norm = norm;
+                    c
+                })
+                .collect(),
+            EvalBackend::Accel { handle, grove_idx, grove } => {
+                let n = batch.len();
+                let f = grove.n_features;
+                let mut x = Vec::with_capacity(n * f);
+                let mut prob = Vec::with_capacity(n * n_classes);
+                let mut hops = Vec::with_capacity(n);
+                for item in &batch {
+                    x.extend_from_slice(&item.features);
+                    prob.extend_from_slice(&item.prob_sum);
+                    hops.push((item.hops + 1) as f32);
+                }
+                match handle.step(*grove_idx, x, prob, hops) {
+                    Ok(out) => {
+                        for (i, item) in batch.iter_mut().enumerate() {
+                            item.hops += 1;
+                            item.prob_sum
+                                .copy_from_slice(&out.new_sum[i * n_classes..(i + 1) * n_classes]);
+                            item.scratch_norm =
+                                out.norm[i * n_classes..(i + 1) * n_classes].to_vec();
+                        }
+                        out.conf
+                    }
+                    Err(e) => {
+                        eprintln!("accel error: {e}; falling back to native");
+                        batch
+                            .iter_mut()
+                            .map(|item| {
+                                grove.accumulate_proba(&item.features, &mut item.prob_sum);
+                                item.hops += 1;
+                                let inv = 1.0 / item.hops as f32;
+                                let norm: Vec<f32> =
+                                    item.prob_sum.iter().map(|p| p * inv).collect();
+                                let c = max_diff(&norm);
+                                item.scratch_norm = norm;
+                                c
+                            })
+                            .collect()
+                    }
+                }
+            }
+        };
+
+        // Route each item: respond or forward.
+        for (item, conf) in batch.into_iter().zip(confs) {
+            let done = conf >= cfg.threshold || item.hops as usize >= cfg.max_hops;
+            if done {
+                let label = crate::util::argmax(&item.scratch_norm);
+                metrics.responses.fetch_add(1, Ordering::Relaxed);
+                metrics.hops_total.fetch_add(item.hops as u64, Ordering::Relaxed);
+                let _ = responses.send(Response {
+                    id: item.id,
+                    label,
+                    prob: item.scratch_norm,
+                    hops: item.hops as usize,
+                    latency_us: item.injected.elapsed().as_micros() as u64,
+                });
+            } else {
+                metrics.forwards.fetch_add(1, Ordering::Relaxed);
+                if next.send(Msg::Work(item)).is_err() {
+                    return; // ring torn down
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Worker behaviour is covered end-to-end in `server.rs` tests (the
+    // worker loop needs the full ring plumbing to exercise).
+}

@@ -1,0 +1,135 @@
+//! CSV loader for real UCI datasets.
+//!
+//! When the actual UCI files are available (no network in the default build
+//! environment), drop them under a directory and load with
+//! [`load_csv`] — the synthetic profiles are then bypassed unchanged.
+//! Format: one sample per line, comma-separated floats, label last (the
+//! UCI convention for ISOLET/Pendigits/Letter); `label_first` flips it.
+
+use super::Split;
+use std::collections::BTreeMap;
+use std::io::BufRead;
+use std::path::Path;
+
+/// Options for CSV parsing.
+#[derive(Clone, Debug)]
+pub struct CsvOptions {
+    /// Label in column 0 instead of the last column.
+    pub label_first: bool,
+    /// Skip this many header lines.
+    pub skip_lines: usize,
+    /// Field separator.
+    pub sep: char,
+}
+
+impl Default for CsvOptions {
+    fn default() -> Self {
+        CsvOptions { label_first: false, skip_lines: 0, sep: ',' }
+    }
+}
+
+/// Load a labelled CSV into a [`Split`]. Labels may be arbitrary tokens
+/// (e.g. `A`..`Z` for Letter); they are mapped to dense class ids in order
+/// of first appearance, sorted for determinism at the end.
+pub fn load_csv(path: &Path, opts: &CsvOptions) -> anyhow::Result<Split> {
+    let file = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?;
+    let reader = std::io::BufReader::new(file);
+
+    let mut rows: Vec<(Vec<f32>, String)> = Vec::new();
+    let mut n_features = None;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        if lineno < opts.skip_lines || line.trim().is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(opts.sep).map(|f| f.trim()).collect();
+        if fields.len() < 2 {
+            anyhow::bail!("line {}: need >= 2 fields", lineno + 1);
+        }
+        let (label, feats) = if opts.label_first {
+            (fields[0].to_string(), &fields[1..])
+        } else {
+            (fields[fields.len() - 1].to_string(), &fields[..fields.len() - 1])
+        };
+        let parsed: Result<Vec<f32>, _> = feats.iter().map(|f| f.parse::<f32>()).collect();
+        let parsed =
+            parsed.map_err(|e| anyhow::anyhow!("line {}: bad feature: {e}", lineno + 1))?;
+        match n_features {
+            None => n_features = Some(parsed.len()),
+            Some(n) if n != parsed.len() => {
+                anyhow::bail!("line {}: {} features, expected {n}", lineno + 1, parsed.len())
+            }
+            _ => {}
+        }
+        rows.push((parsed, label));
+    }
+    anyhow::ensure!(!rows.is_empty(), "empty csv {}", path.display());
+
+    // Dense, deterministic label ids (sorted lexicographically).
+    let mut labels: Vec<&String> = rows.iter().map(|(_, l)| l).collect();
+    labels.sort();
+    labels.dedup();
+    let label_map: BTreeMap<&String, usize> =
+        labels.iter().enumerate().map(|(i, l)| (*l, i)).collect();
+
+    let n_features = n_features.unwrap();
+    let mut split = Split::new(n_features, label_map.len());
+    for (feats, label) in &rows {
+        split.push(feats, label_map[label]);
+    }
+    Ok(split)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_tmp(content: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("fog_csv_test_{}.csv", std::process::id()));
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(content.as_bytes()).unwrap();
+        path
+    }
+
+    #[test]
+    fn loads_label_last() {
+        let p = write_tmp("1.0,2.0,A\n3.0,4.0,B\n5.0,6.0,A\n");
+        let s = load_csv(&p, &CsvOptions::default()).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.n_features, 2);
+        assert_eq!(s.n_classes, 2);
+        assert_eq!(s.y, vec![0, 1, 0]); // A=0, B=1 sorted
+        assert_eq!(s.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn loads_label_first() {
+        let p = write_tmp("7,0.5,0.25\n3,1.5,1.25\n");
+        let s = load_csv(
+            &p,
+            &CsvOptions { label_first: true, ..Default::default() },
+        )
+        .unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(s.n_features, 2);
+        assert_eq!(s.y, vec![1, 0]); // "3" < "7"
+    }
+
+    #[test]
+    fn rejects_ragged() {
+        let p = write_tmp("1,2,A\n1,2,3,B\n");
+        let r = load_csv(&p, &CsvOptions::default());
+        std::fs::remove_file(&p).ok();
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        let r = load_csv(Path::new("/nonexistent/x.csv"), &CsvOptions::default());
+        assert!(r.is_err());
+    }
+}

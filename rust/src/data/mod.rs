@@ -1,0 +1,119 @@
+//! Datasets: core containers, synthetic UCI-profile generators, a CSV
+//! loader for real UCI data, splits and normalization.
+//!
+//! The paper evaluates on five UCI datasets (ISOLET, Pendigits, MNIST,
+//! Letter, Segmentation). The build environment has no network access, so
+//! [`synthetic`] provides deterministic generators matched to each
+//! dataset's (features, classes, sizes) with controlled class-boundary
+//! nonlinearity; [`csv`] loads the real files unchanged when present
+//! (drop them under `data/` and pass `--data-dir`).
+
+pub mod csv;
+pub mod normalize;
+pub mod split;
+pub mod synthetic;
+
+/// A labelled design matrix: `x` is row-major `[n, d]`, `y` are class ids.
+#[derive(Clone, Debug)]
+pub struct Split {
+    pub x: Vec<f32>,
+    pub y: Vec<usize>,
+    pub n_features: usize,
+    pub n_classes: usize,
+}
+
+impl Split {
+    pub fn new(n_features: usize, n_classes: usize) -> Self {
+        Split { x: Vec::new(), y: Vec::new(), n_features, n_classes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Row accessor.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.n_features..(i + 1) * self.n_features]
+    }
+
+    pub fn push(&mut self, features: &[f32], label: usize) {
+        assert_eq!(features.len(), self.n_features);
+        assert!(label < self.n_classes, "label {label} >= n_classes {}", self.n_classes);
+        self.x.extend_from_slice(features);
+        self.y.push(label);
+    }
+
+    /// Subset by row indices (bootstrap / CV folds).
+    pub fn subset(&self, idx: &[usize]) -> Split {
+        let mut out = Split::new(self.n_features, self.n_classes);
+        for &i in idx {
+            out.push(self.row(i), self.y[i]);
+        }
+        out
+    }
+
+    /// Class frequencies (used by stratified split and gini root checks).
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_classes];
+        for &y in &self.y {
+            counts[y] += 1;
+        }
+        counts
+    }
+}
+
+/// A train/test pair plus provenance.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub train: Split,
+    pub test: Split,
+}
+
+impl Dataset {
+    pub fn n_features(&self) -> usize {
+        self.train.n_features
+    }
+    pub fn n_classes(&self) -> usize {
+        self.train.n_classes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_push_and_row() {
+        let mut s = Split::new(3, 2);
+        s.push(&[1.0, 2.0, 3.0], 0);
+        s.push(&[4.0, 5.0, 6.0], 1);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(s.class_counts(), vec![1, 1]);
+    }
+
+    #[test]
+    fn subset_selects_rows() {
+        let mut s = Split::new(1, 3);
+        for i in 0..5 {
+            s.push(&[i as f32], i % 3);
+        }
+        let sub = s.subset(&[4, 0]);
+        assert_eq!(sub.len(), 2);
+        assert_eq!(sub.row(0), &[4.0]);
+        assert_eq!(sub.y, vec![1, 0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn push_bad_label_panics() {
+        let mut s = Split::new(1, 2);
+        s.push(&[0.0], 5);
+    }
+}

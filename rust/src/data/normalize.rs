@@ -1,0 +1,137 @@
+//! Feature normalization: z-score parameters are estimated on the training
+//! split and applied to both splits (no test-set leakage). The hardware
+//! path quantizes normalized features to fixed point; [`quantize_q`]
+//! mirrors the accelerator's byte-addressable input format (paper §3.2.2:
+//! one byte per feature in the data queue).
+
+use super::{Dataset, Split};
+
+/// Per-feature affine normalization parameters.
+#[derive(Clone, Debug)]
+pub struct Standardizer {
+    pub mean: Vec<f32>,
+    pub inv_std: Vec<f32>,
+}
+
+impl Standardizer {
+    /// Estimate mean/std per feature from a split.
+    pub fn fit(split: &Split) -> Standardizer {
+        let d = split.n_features;
+        let n = split.len().max(1);
+        let mut mean = vec![0.0f32; d];
+        for i in 0..split.len() {
+            for (m, &x) in mean.iter_mut().zip(split.row(i)) {
+                *m += x;
+            }
+        }
+        mean.iter_mut().for_each(|m| *m /= n as f32);
+        let mut var = vec![0.0f32; d];
+        for i in 0..split.len() {
+            for (j, &x) in split.row(i).iter().enumerate() {
+                let dif = x - mean[j];
+                var[j] += dif * dif;
+            }
+        }
+        let inv_std = var
+            .iter()
+            .map(|&v| {
+                let s = (v / n as f32).sqrt();
+                if s > 1e-6 {
+                    1.0 / s
+                } else {
+                    1.0 // constant feature: leave centred only
+                }
+            })
+            .collect();
+        Standardizer { mean, inv_std }
+    }
+
+    /// Apply in place.
+    pub fn transform(&self, split: &mut Split) {
+        let d = split.n_features;
+        assert_eq!(d, self.mean.len());
+        for row in split.x.chunks_mut(d) {
+            for (j, x) in row.iter_mut().enumerate() {
+                *x = (*x - self.mean[j]) * self.inv_std[j];
+            }
+        }
+    }
+}
+
+/// Standardize a whole dataset using train statistics only.
+pub fn standardize(ds: &mut Dataset) -> Standardizer {
+    let st = Standardizer::fit(&ds.train);
+    st.transform(&mut ds.train);
+    st.transform(&mut ds.test);
+    st
+}
+
+/// Quantize a normalized feature value to a signed Q3.4 byte, the format
+/// the grove data queue stores (one byte per feature, paper §3.2.2). The
+/// returned value is the *dequantized* f32 so software and the μarch
+/// simulator see exactly the precision the hardware would.
+pub fn quantize_q(x: f32) -> f32 {
+    const SCALE: f32 = 16.0; // 4 fractional bits
+    let q = (x * SCALE).round().clamp(-128.0, 127.0);
+    q / SCALE
+}
+
+/// Quantize an entire split in place (hardware input conditioning).
+pub fn quantize_split(split: &mut Split) {
+    for x in &mut split.x {
+        *x = quantize_q(*x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetProfile};
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let mut ds = generate(&DatasetProfile::demo(), 11);
+        standardize(&mut ds);
+        let d = ds.train.n_features;
+        let n = ds.train.len() as f32;
+        for j in 0..d {
+            let mut s = 0.0f32;
+            let mut s2 = 0.0f32;
+            for i in 0..ds.train.len() {
+                let x = ds.train.row(i)[j];
+                s += x;
+                s2 += x * x;
+            }
+            let m = s / n;
+            let v = s2 / n - m * m;
+            assert!(m.abs() < 1e-3, "mean {m}");
+            assert!((v - 1.0).abs() < 1e-2, "var {v}");
+        }
+    }
+
+    #[test]
+    fn constant_feature_no_nan() {
+        let mut s = Split::new(2, 2);
+        s.push(&[5.0, 1.0], 0);
+        s.push(&[5.0, 2.0], 1);
+        let st = Standardizer::fit(&s);
+        st.transform(&mut s);
+        assert!(s.x.iter().all(|x| x.is_finite()));
+        assert_eq!(s.row(0)[0], 0.0); // centred constant
+    }
+
+    #[test]
+    fn quantize_properties() {
+        assert_eq!(quantize_q(0.0), 0.0);
+        // representable exactly at 1/16 steps
+        assert_eq!(quantize_q(0.25), 0.25);
+        // clamps
+        assert_eq!(quantize_q(100.0), 127.0 / 16.0);
+        assert_eq!(quantize_q(-100.0), -8.0);
+        // rounding error bounded by half a step
+        for i in -50..50 {
+            let x = i as f32 * 0.037;
+            assert!((quantize_q(x) - x).abs() <= 0.5 / 16.0 + 1e-6);
+        }
+    }
+}

@@ -1,0 +1,103 @@
+//! Train/validation splitting utilities (stratified, deterministic).
+//!
+//! The paper's budgeted training selects design points on cross-validation
+//! data (§4.1 step 2); these helpers carve validation folds out of the
+//! training split without touching the test set.
+
+use super::Split;
+use crate::util::rng::Rng;
+
+/// Stratified split of `s` into `(train, holdout)` where the holdout gets
+/// `holdout_frac` of each class (rounded down, at least 1 where possible).
+pub fn stratified_holdout(s: &Split, holdout_frac: f64, seed: u64) -> (Split, Split) {
+    assert!((0.0..1.0).contains(&holdout_frac));
+    let mut rng = Rng::new(seed);
+    // Bucket indices by class, shuffle each bucket.
+    let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); s.n_classes];
+    for (i, &y) in s.y.iter().enumerate() {
+        buckets[y].push(i);
+    }
+    let mut train_idx = Vec::new();
+    let mut hold_idx = Vec::new();
+    for bucket in buckets.iter_mut() {
+        rng.shuffle(bucket);
+        let k = ((bucket.len() as f64) * holdout_frac).floor() as usize;
+        let k = if bucket.len() > 1 { k.max(1).min(bucket.len() - 1) } else { 0 };
+        hold_idx.extend_from_slice(&bucket[..k]);
+        train_idx.extend_from_slice(&bucket[k..]);
+    }
+    // Deterministic order.
+    train_idx.sort_unstable();
+    hold_idx.sort_unstable();
+    (s.subset(&train_idx), s.subset(&hold_idx))
+}
+
+/// `k`-fold cross-validation index sets: returns `k` (train, val) pairs.
+pub fn kfold(s: &Split, k: usize, seed: u64) -> Vec<(Split, Split)> {
+    assert!(k >= 2, "kfold needs k >= 2");
+    let mut rng = Rng::new(seed);
+    let mut idx: Vec<usize> = (0..s.len()).collect();
+    rng.shuffle(&mut idx);
+    let fold_size = s.len().div_ceil(k);
+    let mut out = Vec::with_capacity(k);
+    for f in 0..k {
+        let lo = f * fold_size;
+        let hi = ((f + 1) * fold_size).min(s.len());
+        if lo >= hi {
+            break;
+        }
+        let val: Vec<usize> = idx[lo..hi].to_vec();
+        let train: Vec<usize> =
+            idx[..lo].iter().chain(idx[hi..].iter()).copied().collect();
+        out.push((s.subset(&train), s.subset(&val)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetProfile};
+
+    #[test]
+    fn holdout_partitions() {
+        let ds = generate(&DatasetProfile::demo(), 20);
+        let n = ds.train.len();
+        let (tr, ho) = stratified_holdout(&ds.train, 0.25, 1);
+        assert_eq!(tr.len() + ho.len(), n);
+        assert!(ho.len() > 0 && tr.len() > 0);
+    }
+
+    #[test]
+    fn holdout_stratified() {
+        let ds = generate(&DatasetProfile::demo(), 21);
+        let (_, ho) = stratified_holdout(&ds.train, 0.3, 2);
+        let counts = ho.class_counts();
+        // demo has 3 balanced classes: holdout should contain each class.
+        assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(max - min <= 2, "{counts:?}");
+    }
+
+    #[test]
+    fn holdout_deterministic() {
+        let ds = generate(&DatasetProfile::demo(), 22);
+        let (a1, b1) = stratified_holdout(&ds.train, 0.2, 7);
+        let (a2, b2) = stratified_holdout(&ds.train, 0.2, 7);
+        assert_eq!(a1.y, a2.y);
+        assert_eq!(b1.x, b2.x);
+    }
+
+    #[test]
+    fn kfold_covers_everything_once() {
+        let ds = generate(&DatasetProfile::demo(), 23);
+        let folds = kfold(&ds.train, 5, 3);
+        assert_eq!(folds.len(), 5);
+        let total_val: usize = folds.iter().map(|(_, v)| v.len()).sum();
+        assert_eq!(total_val, ds.train.len());
+        for (tr, va) in &folds {
+            assert_eq!(tr.len() + va.len(), ds.train.len());
+        }
+    }
+}

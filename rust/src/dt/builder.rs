@@ -1,0 +1,404 @@
+//! CART training: greedy recursive partitioning with gini or entropy
+//! impurity, random feature subsampling per node (the "random" in random
+//! forest), and optional per-feature acquisition costs for budgeted
+//! training (the paper trains with the feature-budgeted RF of [11]).
+
+use super::tree::{DecisionTree, Node};
+use crate::data::Split;
+use crate::util::rng::Rng;
+
+/// Impurity criterion for split selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Criterion {
+    Gini,
+    Entropy,
+}
+
+/// Training hyper-parameters for a single tree.
+#[derive(Clone, Debug)]
+pub struct TreeParams {
+    pub max_depth: usize,
+    pub min_samples_split: usize,
+    pub min_samples_leaf: usize,
+    /// Features examined per node; 0 = sqrt(n_features) (RF default).
+    pub max_features: usize,
+    pub criterion: Criterion,
+    /// Per-feature acquisition cost (empty = free). A candidate split on a
+    /// feature not yet used along the current path is penalized by
+    /// `cost_weight * feature_cost[f]` — the mechanism of budgeted RF [11].
+    pub feature_cost: Vec<f32>,
+    pub cost_weight: f32,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        TreeParams {
+            max_depth: 8,
+            min_samples_split: 2,
+            min_samples_leaf: 1,
+            max_features: 0,
+            criterion: Criterion::Gini,
+            feature_cost: Vec::new(),
+            cost_weight: 0.0,
+        }
+    }
+}
+
+impl TreeParams {
+    fn mtry(&self, n_features: usize) -> usize {
+        if self.max_features == 0 {
+            ((n_features as f64).sqrt().ceil() as usize).clamp(1, n_features)
+        } else {
+            self.max_features.min(n_features)
+        }
+    }
+}
+
+fn impurity(counts: &[usize], total: usize, criterion: Criterion) -> f64 {
+    if total == 0 {
+        return 0.0;
+    }
+    let t = total as f64;
+    match criterion {
+        Criterion::Gini => {
+            let mut g = 1.0;
+            for &c in counts {
+                let p = c as f64 / t;
+                g -= p * p;
+            }
+            g
+        }
+        Criterion::Entropy => {
+            let mut h = 0.0;
+            for &c in counts {
+                if c > 0 {
+                    let p = c as f64 / t;
+                    h -= p * p.log2();
+                }
+            }
+            h
+        }
+    }
+}
+
+struct BestSplit {
+    feature: usize,
+    threshold: f32,
+    gain: f64,
+}
+
+/// Work item: node index in the output vec + the sample indices reaching it.
+struct WorkItem {
+    node_idx: usize,
+    samples: Vec<usize>,
+    depth: usize,
+    /// Features already paid for along this path (budgeted training).
+    path_features: Vec<usize>,
+}
+
+/// Train a CART tree on `data` restricted to `samples` (bootstrap indices;
+/// pass `0..n` for the full set).
+pub fn fit_tree(data: &Split, samples: &[usize], params: &TreeParams, rng: &mut Rng) -> DecisionTree {
+    assert!(!samples.is_empty(), "fit_tree: no samples");
+    let n_classes = data.n_classes;
+    let mut nodes: Vec<Node> = Vec::new();
+    nodes.push(Node { feature: u32::MAX, threshold: 0.0, left: 0, dist: vec![] });
+
+    let mut max_depth_seen = 0usize;
+    let mut stack = vec![WorkItem {
+        node_idx: 0,
+        samples: samples.to_vec(),
+        depth: 0,
+        path_features: Vec::new(),
+    }];
+
+    // Reusable scratch for split search.
+    let mut order: Vec<(f32, usize)> = Vec::new();
+
+    while let Some(item) = stack.pop() {
+        max_depth_seen = max_depth_seen.max(item.depth);
+        let counts = class_counts(data, &item.samples, n_classes);
+        let total = item.samples.len();
+        let node_impurity = impurity(&counts, total, params.criterion);
+
+        let make_leaf = item.depth >= params.max_depth
+            || total < params.min_samples_split
+            || node_impurity <= 1e-12;
+
+        let best = if make_leaf {
+            None
+        } else {
+            find_best_split(data, &item.samples, &counts, params, rng, &mut order, &item.path_features)
+        };
+
+        match best {
+            None => {
+                nodes[item.node_idx] = Node {
+                    feature: u32::MAX,
+                    threshold: 0.0,
+                    left: 0,
+                    dist: to_dist(&counts, total),
+                };
+            }
+            Some(b) => {
+                // Partition samples.
+                let mut left_samples = Vec::with_capacity(total / 2);
+                let mut right_samples = Vec::with_capacity(total / 2);
+                for &s in &item.samples {
+                    if data.row(s)[b.feature] <= b.threshold {
+                        left_samples.push(s);
+                    } else {
+                        right_samples.push(s);
+                    }
+                }
+                debug_assert!(!left_samples.is_empty() && !right_samples.is_empty());
+                let left_idx = nodes.len();
+                nodes.push(Node { feature: u32::MAX, threshold: 0.0, left: 0, dist: vec![] });
+                nodes.push(Node { feature: u32::MAX, threshold: 0.0, left: 0, dist: vec![] });
+                nodes[item.node_idx] = Node {
+                    feature: b.feature as u32,
+                    threshold: b.threshold,
+                    left: left_idx as u32,
+                    dist: vec![],
+                };
+                let mut path = item.path_features.clone();
+                if !path.contains(&b.feature) {
+                    path.push(b.feature);
+                }
+                stack.push(WorkItem {
+                    node_idx: left_idx,
+                    samples: left_samples,
+                    depth: item.depth + 1,
+                    path_features: path.clone(),
+                });
+                stack.push(WorkItem {
+                    node_idx: left_idx + 1,
+                    samples: right_samples,
+                    depth: item.depth + 1,
+                    path_features: path,
+                });
+            }
+        }
+    }
+
+    let tree = DecisionTree {
+        nodes,
+        n_features: data.n_features,
+        n_classes,
+        depth: max_depth_seen,
+    };
+    debug_assert!(tree.validate().is_ok(), "{:?}", tree.validate());
+    tree
+}
+
+fn class_counts(data: &Split, samples: &[usize], n_classes: usize) -> Vec<usize> {
+    let mut counts = vec![0usize; n_classes];
+    for &s in samples {
+        counts[data.y[s]] += 1;
+    }
+    counts
+}
+
+fn to_dist(counts: &[usize], total: usize) -> Vec<f32> {
+    let t = total.max(1) as f32;
+    counts.iter().map(|&c| c as f32 / t).collect()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn find_best_split(
+    data: &Split,
+    samples: &[usize],
+    parent_counts: &[usize],
+    params: &TreeParams,
+    rng: &mut Rng,
+    order: &mut Vec<(f32, usize)>,
+    path_features: &[usize],
+) -> Option<BestSplit> {
+    let n_classes = data.n_classes;
+    let total = samples.len();
+    let parent_imp = impurity(parent_counts, total, params.criterion);
+    let mtry = params.mtry(data.n_features);
+    let candidates = rng.sample_indices(data.n_features, mtry);
+
+    let mut best: Option<BestSplit> = None;
+    let mut left_counts = vec![0usize; n_classes];
+
+    for &f in &candidates {
+        // Sort samples by feature value.
+        order.clear();
+        order.extend(samples.iter().map(|&s| (data.row(s)[f], data.y[s])));
+        order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        if order[0].0 == order[total - 1].0 {
+            continue; // constant feature in this node
+        }
+        // Budgeted-training penalty for acquiring a new feature.
+        let penalty = if params.cost_weight > 0.0
+            && !params.feature_cost.is_empty()
+            && !path_features.contains(&f)
+        {
+            (params.cost_weight * params.feature_cost[f]) as f64
+        } else {
+            0.0
+        };
+
+        left_counts.iter_mut().for_each(|c| *c = 0);
+        let mut n_left = 0usize;
+        for w in 0..total - 1 {
+            left_counts[order[w].1] += 1;
+            n_left += 1;
+            // Only split between distinct values.
+            if order[w].0 == order[w + 1].0 {
+                continue;
+            }
+            let n_right = total - n_left;
+            if n_left < params.min_samples_leaf || n_right < params.min_samples_leaf {
+                continue;
+            }
+            let mut right_counts_imp = 0.0;
+            // impurity of right side from parent - left
+            let mut right_counts = [0usize; 64];
+            let use_stack = n_classes <= 64;
+            let imp_l = impurity(&left_counts, n_left, params.criterion);
+            let imp_r = if use_stack {
+                for c in 0..n_classes {
+                    right_counts[c] = parent_counts[c] - left_counts[c];
+                }
+                impurity(&right_counts[..n_classes], n_right, params.criterion)
+            } else {
+                let rc: Vec<usize> =
+                    parent_counts.iter().zip(&left_counts).map(|(p, l)| p - l).collect();
+                right_counts_imp = impurity(&rc, n_right, params.criterion);
+                right_counts_imp
+            };
+            let _ = right_counts_imp;
+            let wl = n_left as f64 / total as f64;
+            let gain = parent_imp - wl * imp_l - (1.0 - wl) * imp_r - penalty;
+            if gain > best.as_ref().map(|b| b.gain).unwrap_or(1e-9) {
+                // Midpoint threshold, robust to fp: guaranteed to separate
+                // the two sorted values.
+                let thr = 0.5 * (order[w].0 + order[w + 1].0);
+                let thr = if thr > order[w].0 { thr } else { order[w].0 };
+                best = Some(BestSplit { feature: f, threshold: thr, gain });
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetProfile};
+
+    fn all_idx(n: usize) -> Vec<usize> {
+        (0..n).collect()
+    }
+
+    #[test]
+    fn perfectly_separable_reaches_zero_error() {
+        // Two clouds far apart on feature 0.
+        let mut s = Split::new(2, 2);
+        let mut rng = Rng::new(1);
+        for i in 0..100 {
+            let y = i % 2;
+            let x0 = if y == 0 { -5.0 } else { 5.0 };
+            s.push(&[x0 + rng.gen_normal() * 0.1, rng.gen_normal()], y);
+        }
+        let t = fit_tree(&s, &all_idx(100), &TreeParams::default(), &mut rng);
+        for i in 0..100 {
+            assert_eq!(t.predict(s.row(i)), s.y[i]);
+        }
+        assert!(t.depth <= 3, "depth {}", t.depth);
+    }
+
+    #[test]
+    fn respects_max_depth() {
+        let ds = generate(&DatasetProfile::demo(), 31);
+        let mut rng = Rng::new(2);
+        let params = TreeParams { max_depth: 3, ..Default::default() };
+        let t = fit_tree(&ds.train, &all_idx(ds.train.len()), &params, &mut rng);
+        assert!(t.depth <= 3);
+        assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn respects_min_samples_leaf() {
+        let ds = generate(&DatasetProfile::demo(), 32);
+        let mut rng = Rng::new(3);
+        let params = TreeParams { min_samples_leaf: 20, max_depth: 12, ..Default::default() };
+        let t = fit_tree(&ds.train, &all_idx(ds.train.len()), &params, &mut rng);
+        // Count samples per leaf by rerouting train data.
+        let mut leaf_counts = std::collections::HashMap::new();
+        for i in 0..ds.train.len() {
+            let mut idx = 0usize;
+            loop {
+                let n = &t.nodes[idx];
+                if n.is_leaf() {
+                    *leaf_counts.entry(idx).or_insert(0usize) += 1;
+                    break;
+                }
+                idx = if ds.train.row(i)[n.feature as usize] <= n.threshold {
+                    n.left as usize
+                } else {
+                    n.left as usize + 1
+                };
+            }
+        }
+        for (_, &c) in leaf_counts.iter() {
+            assert!(c >= 20, "leaf with {c} samples");
+        }
+    }
+
+    #[test]
+    fn entropy_also_works() {
+        let ds = generate(&DatasetProfile::demo(), 33);
+        let mut rng = Rng::new(4);
+        let params = TreeParams { criterion: Criterion::Entropy, ..Default::default() };
+        let t = fit_tree(&ds.train, &all_idx(ds.train.len()), &params, &mut rng);
+        assert!(t.validate().is_ok());
+        // Better than chance on train.
+        let preds: Vec<usize> = (0..ds.train.len()).map(|i| t.predict(ds.train.row(i))).collect();
+        let acc = crate::util::stats::accuracy(&preds, &ds.train.y);
+        assert!(acc > 0.6, "train acc {acc}");
+    }
+
+    #[test]
+    fn feature_cost_discourages_expensive_features() {
+        // Feature 0 and 1 are equally predictive; make feature 0 costly.
+        let mut s = Split::new(2, 2);
+        let mut rng = Rng::new(5);
+        for i in 0..200 {
+            let y = i % 2;
+            let v = if y == 0 { -3.0 } else { 3.0 };
+            s.push(&[v + rng.gen_normal() * 0.5, v + rng.gen_normal() * 0.5], y);
+        }
+        let params = TreeParams {
+            max_depth: 1,
+            max_features: 2,
+            feature_cost: vec![10.0, 0.0],
+            cost_weight: 0.04,
+            ..Default::default()
+        };
+        let mut used0 = 0;
+        for seed in 0..10 {
+            let mut r = Rng::new(seed);
+            let t = fit_tree(&s, &(0..200).collect::<Vec<_>>(), &params, &mut r);
+            if t.used_features().contains(&0) {
+                used0 += 1;
+            }
+        }
+        assert!(used0 <= 2, "expensive feature chosen {used0}/10 times");
+    }
+
+    #[test]
+    fn single_class_becomes_leaf() {
+        let mut s = Split::new(2, 3);
+        for _ in 0..10 {
+            s.push(&[1.0, 2.0], 1);
+        }
+        let mut rng = Rng::new(6);
+        let t = fit_tree(&s, &all_idx(10), &TreeParams::default(), &mut rng);
+        assert_eq!(t.n_nodes(), 1);
+        assert_eq!(t.predict(&[0.0, 0.0]), 1);
+    }
+}

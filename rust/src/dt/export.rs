@@ -1,0 +1,203 @@
+//! Serialization of flattened forests.
+//!
+//! The JSON bundle written here is the interchange format between the rust
+//! coordinator and the build-time python path: `aot.py` reads the same
+//! shapes when lowering the Pallas kernel, and the runtime feeds these
+//! arrays as PJRT literals into the compiled executable. The format is
+//! deliberately dumb — three arrays per tree — so both sides agree
+//! trivially.
+
+use super::flat::FlatTree;
+use crate::util::json::{parse, Json};
+use std::path::Path;
+
+/// A bundle of equally-shaped flat trees (a grove or a whole forest).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlatBundle {
+    pub depth: usize,
+    pub n_features: usize,
+    pub n_classes: usize,
+    pub trees: Vec<FlatTree>,
+}
+
+impl FlatBundle {
+    pub fn new(trees: Vec<FlatTree>) -> FlatBundle {
+        assert!(!trees.is_empty());
+        let d = trees[0].depth;
+        let f = trees[0].n_features;
+        let c = trees[0].n_classes;
+        for t in &trees {
+            assert_eq!((t.depth, t.n_features, t.n_classes), (d, f, c), "inhomogeneous bundle");
+        }
+        FlatBundle { depth: d, n_features: f, n_classes: c, trees }
+    }
+
+    /// Stacked tensors in the layout the PJRT executable expects:
+    /// `feat i32[t, 2^d-1]`, `thr f32[t, 2^d-1]`, `leaf f32[t, 2^d, c]`.
+    pub fn stacked(&self) -> (Vec<i32>, Vec<f32>, Vec<f32>) {
+        let mut feat = Vec::new();
+        let mut thr = Vec::new();
+        let mut leaf = Vec::new();
+        for t in &self.trees {
+            feat.extend_from_slice(&t.feat);
+            thr.extend_from_slice(&t.thr);
+            leaf.extend_from_slice(&t.leaf);
+        }
+        (feat, thr, leaf)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("depth", Json::Num(self.depth as f64)),
+            ("n_features", Json::Num(self.n_features as f64)),
+            ("n_classes", Json::Num(self.n_classes as f64)),
+            ("n_trees", Json::Num(self.trees.len() as f64)),
+            (
+                "trees",
+                Json::Arr(
+                    self.trees
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("feat", Json::arr_i64(&t.feat.iter().map(|&v| v as i64).collect::<Vec<_>>())),
+                                ("thr", Json::arr_f32(&t.thr)),
+                                ("leaf", Json::arr_f32(&t.leaf)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<FlatBundle> {
+        let depth = v.get("depth").as_usize().ok_or_else(|| anyhow::anyhow!("missing depth"))?;
+        let n_features =
+            v.get("n_features").as_usize().ok_or_else(|| anyhow::anyhow!("missing n_features"))?;
+        let n_classes =
+            v.get("n_classes").as_usize().ok_or_else(|| anyhow::anyhow!("missing n_classes"))?;
+        let trees_json =
+            v.get("trees").as_arr().ok_or_else(|| anyhow::anyhow!("missing trees"))?;
+        let mut trees = Vec::with_capacity(trees_json.len());
+        for tj in trees_json {
+            let feat: Vec<i32> = tj
+                .get("feat")
+                .to_i64_vec()
+                .ok_or_else(|| anyhow::anyhow!("missing feat"))?
+                .into_iter()
+                .map(|v| v as i32)
+                .collect();
+            let thr = tj.get("thr").to_f32_vec().ok_or_else(|| anyhow::anyhow!("missing thr"))?;
+            let leaf = tj.get("leaf").to_f32_vec().ok_or_else(|| anyhow::anyhow!("missing leaf"))?;
+            anyhow::ensure!(feat.len() == (1 << depth) - 1, "feat len");
+            anyhow::ensure!(thr.len() == (1 << depth) - 1, "thr len");
+            anyhow::ensure!(leaf.len() == (1 << depth) * n_classes, "leaf len");
+            trees.push(FlatTree { depth, n_features, n_classes, feat, thr, leaf });
+        }
+        anyhow::ensure!(!trees.is_empty(), "empty bundle");
+        Ok(FlatBundle { depth, n_features, n_classes, trees })
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<FlatBundle> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        FlatBundle::from_json(&parse(&text)?)
+    }
+}
+
+/// JSON thresholds round-trip through f64 text; infinity needs special
+/// care. We encode ±inf as ±1e38 sentinels (outside any normalized feature
+/// range, same routing behaviour).
+pub fn sanitize_inf(bundle: &mut FlatBundle) {
+    for t in &mut bundle.trees {
+        for v in &mut t.thr {
+            if v.is_infinite() {
+                *v = if *v > 0.0 { 1e38 } else { -1e38 };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetProfile};
+    use crate::dt::builder::{fit_tree, TreeParams};
+    use crate::util::rng::Rng;
+
+    fn bundle() -> FlatBundle {
+        let ds = generate(&DatasetProfile::demo(), 51);
+        let mut rng = Rng::new(11);
+        let idx: Vec<usize> = (0..ds.train.len()).collect();
+        let params = TreeParams { max_depth: 4, ..Default::default() };
+        let trees: Vec<FlatTree> = (0..4)
+            .map(|_| FlatTree::from_tree(&fit_tree(&ds.train, &idx, &params, &mut rng), 4))
+            .collect();
+        FlatBundle::new(trees)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut b = bundle();
+        sanitize_inf(&mut b);
+        let j = b.to_json().to_string();
+        let b2 = FlatBundle::from_json(&parse(&j).unwrap()).unwrap();
+        assert_eq!(b, b2);
+    }
+
+    #[test]
+    fn save_load_file() {
+        let mut b = bundle();
+        sanitize_inf(&mut b);
+        let path = std::env::temp_dir().join(format!("fog_bundle_{}.json", std::process::id()));
+        b.save(&path).unwrap();
+        let b2 = FlatBundle::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(b, b2);
+    }
+
+    #[test]
+    fn stacked_shapes() {
+        let b = bundle();
+        let (feat, thr, leaf) = b.stacked();
+        assert_eq!(feat.len(), 4 * 15);
+        assert_eq!(thr.len(), 4 * 15);
+        assert_eq!(leaf.len(), 4 * 16 * b.n_classes);
+    }
+
+    #[test]
+    fn sanitize_preserves_function() {
+        let mut b = bundle();
+        let ds = generate(&DatasetProfile::demo(), 51);
+        let before: Vec<usize> = (0..ds.test.len())
+            .map(|i| b.trees[0].predict(ds.test.row(i)))
+            .collect();
+        sanitize_inf(&mut b);
+        let after: Vec<usize> = (0..ds.test.len())
+            .map(|i| b.trees[0].predict(ds.test.row(i)))
+            .collect();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    #[should_panic]
+    fn inhomogeneous_rejected() {
+        let b = bundle();
+        let mut trees = b.trees.clone();
+        let mut t = trees[0].clone();
+        t.depth = 2;
+        t.feat.truncate(3);
+        t.thr.truncate(3);
+        t.leaf.truncate(4 * t.n_classes);
+        trees.push(t);
+        FlatBundle::new(trees);
+    }
+}

@@ -1,0 +1,12 @@
+//! Decision trees: CART training, sparse in-memory representation,
+//! flattened complete-tree arrays (the layout shared with the Pallas
+//! kernel and the grove micro-architecture), and serialization.
+
+pub mod builder;
+pub mod export;
+pub mod flat;
+pub mod tree;
+
+pub use builder::TreeParams;
+pub use flat::FlatTree;
+pub use tree::DecisionTree;

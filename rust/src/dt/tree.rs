@@ -1,0 +1,194 @@
+//! Sparse binary decision tree: the in-memory product of CART training.
+//!
+//! Nodes live in a flat `Vec` with explicit child indices (no pointers, no
+//! recursion on the prediction path). A node is either an internal split
+//! `x[feature] <= threshold ? left : right` or a leaf holding a class
+//! probability distribution — the paper's FoG evaluation (Algorithm 2)
+//! averages these distributions across groves, in contrast to conventional
+//! RF majority voting over hard labels (§3.2.1).
+
+/// One tree node. `feature == u32::MAX` marks a leaf.
+#[derive(Clone, Debug)]
+pub struct Node {
+    /// Split feature index, or `u32::MAX` for leaves.
+    pub feature: u32,
+    /// Split threshold (`x <= thr` goes left).
+    pub threshold: f32,
+    /// Index of the left child; right child is `left + 1` (children are
+    /// allocated together, which keeps traversal cache-friendly).
+    pub left: u32,
+    /// Leaf class distribution (empty for internal nodes).
+    pub dist: Vec<f32>,
+}
+
+impl Node {
+    #[inline]
+    pub fn is_leaf(&self) -> bool {
+        self.feature == u32::MAX
+    }
+}
+
+/// A trained decision tree.
+#[derive(Clone, Debug)]
+pub struct DecisionTree {
+    pub nodes: Vec<Node>,
+    pub n_features: usize,
+    pub n_classes: usize,
+    /// Maximum root-to-leaf depth (root = depth 0 tree has depth 0).
+    pub depth: usize,
+}
+
+impl DecisionTree {
+    /// Class-probability prediction for one sample. Returns a reference to
+    /// the leaf's distribution — no allocation on the hot path.
+    #[inline]
+    pub fn predict_proba<'a>(&'a self, x: &[f32]) -> &'a [f32] {
+        let mut i = 0usize;
+        loop {
+            let n = &self.nodes[i];
+            if n.is_leaf() {
+                return &n.dist;
+            }
+            i = if x[n.feature as usize] <= n.threshold {
+                n.left as usize
+            } else {
+                n.left as usize + 1
+            };
+        }
+    }
+
+    /// Hard-label prediction.
+    pub fn predict(&self, x: &[f32]) -> usize {
+        crate::util::argmax(self.predict_proba(x))
+    }
+
+    /// Prediction plus the number of comparator operations performed (the
+    /// traversed depth) — the quantity the energy model charges per input.
+    pub fn predict_proba_counted<'a>(&'a self, x: &[f32]) -> (&'a [f32], usize) {
+        let mut i = 0usize;
+        let mut comparisons = 0usize;
+        loop {
+            let n = &self.nodes[i];
+            if n.is_leaf() {
+                return (&n.dist, comparisons);
+            }
+            comparisons += 1;
+            i = if x[n.feature as usize] <= n.threshold {
+                n.left as usize
+            } else {
+                n.left as usize + 1
+            };
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_leaf()).count()
+    }
+
+    /// Set of features actually referenced by splits (budgeted training
+    /// cares about acquisition cost of distinct features).
+    pub fn used_features(&self) -> Vec<usize> {
+        let mut used: Vec<usize> = self
+            .nodes
+            .iter()
+            .filter(|n| !n.is_leaf())
+            .map(|n| n.feature as usize)
+            .collect();
+        used.sort_unstable();
+        used.dedup();
+        used
+    }
+
+    /// Structural invariant check (used by tests and proptests): children
+    /// in bounds, leaves have normalized distributions, acyclic by
+    /// construction (children always have larger indices).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.nodes.is_empty() {
+            return Err("empty tree".into());
+        }
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.is_leaf() {
+                if n.dist.len() != self.n_classes {
+                    return Err(format!("leaf {i}: dist len {}", n.dist.len()));
+                }
+                let s: f32 = n.dist.iter().sum();
+                if (s - 1.0).abs() > 1e-4 {
+                    return Err(format!("leaf {i}: dist sums to {s}"));
+                }
+                if n.dist.iter().any(|&p| !(0.0..=1.0 + 1e-6).contains(&p)) {
+                    return Err(format!("leaf {i}: dist out of range"));
+                }
+            } else {
+                if n.feature as usize >= self.n_features {
+                    return Err(format!("node {i}: feature {} oob", n.feature));
+                }
+                let l = n.left as usize;
+                if l <= i || l + 1 >= self.nodes.len() + 1 && l + 1 > self.nodes.len() {
+                    return Err(format!("node {i}: bad children"));
+                }
+                if l + 1 >= self.nodes.len() + 1 {
+                    return Err(format!("node {i}: child oob"));
+                }
+                if l >= self.nodes.len() || l + 1 >= self.nodes.len() {
+                    return Err(format!("node {i}: child index oob"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-built stump: x[0] <= 0 → class 0, else class 1.
+    fn stump() -> DecisionTree {
+        DecisionTree {
+            nodes: vec![
+                Node { feature: 0, threshold: 0.0, left: 1, dist: vec![] },
+                Node { feature: u32::MAX, threshold: 0.0, left: 0, dist: vec![1.0, 0.0] },
+                Node { feature: u32::MAX, threshold: 0.0, left: 0, dist: vec![0.0, 1.0] },
+            ],
+            n_features: 1,
+            n_classes: 2,
+            depth: 1,
+        }
+    }
+
+    #[test]
+    fn stump_predicts() {
+        let t = stump();
+        assert_eq!(t.predict(&[-1.0]), 0);
+        assert_eq!(t.predict(&[1.0]), 1);
+        assert_eq!(t.predict(&[0.0]), 0); // boundary goes left
+    }
+
+    #[test]
+    fn counted_ops() {
+        let t = stump();
+        let (dist, ops) = t.predict_proba_counted(&[2.0]);
+        assert_eq!(ops, 1);
+        assert_eq!(dist, &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn validate_ok_and_detects_bad_dist() {
+        let mut t = stump();
+        assert!(t.validate().is_ok());
+        t.nodes[1].dist = vec![0.5, 0.4];
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn leaf_count() {
+        let t = stump();
+        assert_eq!(t.n_leaves(), 2);
+        assert_eq!(t.n_nodes(), 3);
+        assert_eq!(t.used_features(), vec![0]);
+    }
+}

@@ -1,0 +1,229 @@
+//! Aladdin-style pre-RTL design-space exploration (paper §4.1 steps 1+3,
+//! citing Shao et al., ISCA'14 [16]).
+//!
+//! Given an *op mix* (how many comparisons, MACs, memory bytes one
+//! classification needs), sweep the micro-architectural knobs — datapath
+//! bitwidth, lane parallelism, pipeline depth — and produce
+//! (energy, delay, area) for each configuration. The energy/area scaling
+//! rules are the standard ones: multiplier energy/area quadratic in
+//! width, adder/comparator linear; parallel lanes multiply area and
+//! divide cycle count; pipelining raises achievable clock (up to the
+//! 1 GHz target) at a register overhead.
+
+use super::blocks::{AreaBlocks, EnergyBlocks};
+use super::edp::{pareto, DesignPoint};
+
+/// Operation mix of one classification, the DSE input.
+#[derive(Clone, Debug, Default)]
+pub struct OpMix {
+    pub comparisons: f64,
+    pub macs: f64,
+    pub sigmoids: f64,
+    pub sram_read_bytes: f64,
+    pub sram_write_bytes: f64,
+    /// Working-set bytes that must be resident (weights, node tables).
+    pub storage_bytes: f64,
+    /// Fraction of ops on the critical path (serial chain), 0..1. Trees
+    /// are almost fully serial per level (≈1); GEMMs are highly parallel
+    /// (≈0 beyond the reduction depth).
+    pub serial_fraction: f64,
+}
+
+/// One swept configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub bitwidth: u32,
+    pub lanes: u32,
+    pub pipeline: u32,
+}
+
+/// A configuration with its evaluated PPA.
+#[derive(Clone, Debug)]
+pub struct Evaluated {
+    pub config: Config,
+    pub point: DesignPoint,
+}
+
+/// The knob grid the paper sweeps ("bitwidth precision, parallelization,
+/// pipelining").
+pub fn knob_grid() -> Vec<Config> {
+    let mut out = Vec::new();
+    for &bitwidth in &[8u32, 16, 32] {
+        for &lanes in &[1u32, 2, 4, 8, 16] {
+            for &pipeline in &[1u32, 2, 4] {
+                out.push(Config { bitwidth, lanes, pipeline });
+            }
+        }
+    }
+    out
+}
+
+/// Evaluate one configuration for one op mix.
+pub fn evaluate(mix: &OpMix, cfg: &Config, eb: &EnergyBlocks, ab: &AreaBlocks) -> DesignPoint {
+    let w = cfg.bitwidth as f64 / 16.0; // scale relative to 16-bit reference
+    // Energy scaling: linear ops linear in width, multipliers quadratic.
+    let comp_pj = eb.comp8_pj * (cfg.bitwidth as f64 / 8.0);
+    let mac_pj = eb.mac16_pj * w * w;
+    let sig_pj = eb.sigmoid_pj * w;
+    // Pipelining adds register energy per op stage.
+    let pipe_pj = eb.reg_pj * (cfg.pipeline as f64 - 1.0) * 0.5;
+
+    let dynamic_nj = (mix.comparisons * (comp_pj + pipe_pj)
+        + mix.macs * (mac_pj + pipe_pj)
+        + mix.sigmoids * sig_pj) * 1e-3
+        + eb.sram_read_nj(mix.sram_read_bytes)
+        + eb.sram_write_nj(mix.sram_write_bytes);
+
+    // Delay: parallel portion divides over lanes; serial portion doesn't.
+    let total_ops = mix.comparisons + mix.macs + mix.sigmoids;
+    let serial_ops = total_ops * mix.serial_fraction;
+    let parallel_ops = total_ops - serial_ops;
+    // Deeper pipelines close timing at higher effective clock until 1 GHz.
+    let clock_scale = (cfg.pipeline as f64).min(2.0) / 2.0; // 1-stage = 0.5 GHz for wide mults
+    let eff_clock = (eb.clock_ghz * clock_scale).min(eb.clock_ghz) * if cfg.bitwidth <= 16 { 2.0 } else { 1.0 };
+    let eff_clock = eff_clock.min(eb.clock_ghz);
+    let cycles = serial_ops + (parallel_ops / cfg.lanes as f64).ceil() + cfg.pipeline as f64;
+    let delay_ns = cycles / eff_clock;
+
+    // Area: lanes multiply compute blocks, storage fixed, pipeline regs.
+    let lane_um2 = ab.comp8_um2 * (cfg.bitwidth as f64 / 8.0)
+        + ab.mac16_um2 * w * w
+        + if mix.sigmoids > 0.0 { ab.sigmoid_um2 * w } else { 0.0 };
+    let area_um2 = lane_um2 * cfg.lanes as f64 * (1.0 + 0.1 * (cfg.pipeline as f64 - 1.0))
+        + mix.storage_bytes * ab.sram_um2_per_byte
+        + ab.control_um2;
+    let area_mm2 = AreaBlocks::um2_to_mm2(area_um2);
+
+    // Accuracy penalty for narrow datapaths (quantization): 8-bit trees are
+    // fine (comparisons), 8-bit GEMMs lose a little. Encoded as a small
+    // relative penalty the caller can fold into model accuracy.
+    let acc = match cfg.bitwidth {
+        8 => {
+            if mix.macs > 0.0 {
+                0.99
+            } else {
+                1.0
+            }
+        }
+        _ => 1.0,
+    };
+
+    DesignPoint {
+        energy_nj: dynamic_nj + eb.leakage_nj(area_mm2, cycles),
+        delay_ns,
+        area_mm2,
+        accuracy: acc,
+    }
+}
+
+/// Sweep the full knob grid and return all evaluated points.
+pub fn sweep(mix: &OpMix, eb: &EnergyBlocks, ab: &AreaBlocks) -> Vec<Evaluated> {
+    knob_grid()
+        .into_iter()
+        .map(|config| Evaluated { config, point: evaluate(mix, &config, eb, ab) })
+        .collect()
+}
+
+/// Pareto-optimal subset of a sweep.
+pub fn pareto_front(evals: &[Evaluated]) -> Vec<Evaluated> {
+    let pts: Vec<DesignPoint> = evals.iter().map(|e| e.point).collect();
+    let front = pareto(&pts);
+    evals
+        .iter()
+        .filter(|e| front.iter().any(|p| *p == e.point))
+        .cloned()
+        .collect()
+}
+
+/// The paper's selection rule: minimum EDP among max-accuracy designs.
+pub fn select_min_edp(evals: &[Evaluated]) -> Evaluated {
+    let best_acc = evals.iter().map(|e| e.point.accuracy).fold(f64::NEG_INFINITY, f64::max);
+    evals
+        .iter()
+        .filter(|e| e.point.accuracy >= best_acc - 1e-9)
+        .min_by(|a, b| a.point.edp().partial_cmp(&b.point.edp()).unwrap())
+        .cloned()
+        .expect("non-empty sweep")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tree_mix() -> OpMix {
+        OpMix {
+            comparisons: 128.0,
+            macs: 0.0,
+            sigmoids: 0.0,
+            sram_read_bytes: 1024.0,
+            sram_write_bytes: 64.0,
+            storage_bytes: 6144.0,
+            serial_fraction: 0.3,
+        }
+    }
+
+    fn gemm_mix() -> OpMix {
+        OpMix {
+            comparisons: 10.0,
+            macs: 100_000.0,
+            sigmoids: 100.0,
+            sram_read_bytes: 100_000.0,
+            sram_write_bytes: 100.0,
+            storage_bytes: 100_000.0,
+            serial_fraction: 0.001,
+        }
+    }
+
+    #[test]
+    fn sweep_covers_grid() {
+        let evals = sweep(&tree_mix(), &EnergyBlocks::default(), &AreaBlocks::default());
+        assert_eq!(evals.len(), 3 * 5 * 3);
+        assert!(evals.iter().all(|e| e.point.energy_nj > 0.0 && e.point.delay_ns > 0.0));
+    }
+
+    #[test]
+    fn more_lanes_faster_bigger() {
+        let eb = EnergyBlocks::default();
+        let ab = AreaBlocks::default();
+        let m = gemm_mix();
+        let slow = evaluate(&m, &Config { bitwidth: 16, lanes: 1, pipeline: 2 }, &eb, &ab);
+        let fast = evaluate(&m, &Config { bitwidth: 16, lanes: 16, pipeline: 2 }, &eb, &ab);
+        assert!(fast.delay_ns < slow.delay_ns);
+        assert!(fast.area_mm2 > slow.area_mm2);
+    }
+
+    #[test]
+    fn wider_datapath_costs_energy() {
+        let eb = EnergyBlocks::default();
+        let ab = AreaBlocks::default();
+        let m = gemm_mix();
+        let narrow = evaluate(&m, &Config { bitwidth: 16, lanes: 4, pipeline: 2 }, &eb, &ab);
+        let wide = evaluate(&m, &Config { bitwidth: 32, lanes: 4, pipeline: 2 }, &eb, &ab);
+        assert!(wide.energy_nj > narrow.energy_nj);
+    }
+
+    #[test]
+    fn pareto_smaller_than_sweep() {
+        let evals = sweep(&gemm_mix(), &EnergyBlocks::default(), &AreaBlocks::default());
+        let front = pareto_front(&evals);
+        assert!(!front.is_empty());
+        assert!(front.len() < evals.len());
+    }
+
+    #[test]
+    fn selection_is_max_accuracy() {
+        let evals = sweep(&gemm_mix(), &EnergyBlocks::default(), &AreaBlocks::default());
+        let sel = select_min_edp(&evals);
+        let best_acc = evals.iter().map(|e| e.point.accuracy).fold(f64::NEG_INFINITY, f64::max);
+        assert!(sel.point.accuracy >= best_acc - 1e-9);
+    }
+
+    #[test]
+    fn tree_mix_prefers_narrow_cheap_designs() {
+        // For a comparator-only workload the selected design should not be
+        // the widest datapath.
+        let evals = sweep(&tree_mix(), &EnergyBlocks::default(), &AreaBlocks::default());
+        let sel = select_min_edp(&evals);
+        assert!(sel.config.bitwidth <= 16, "selected {:?}", sel.config);
+    }
+}

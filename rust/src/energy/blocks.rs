@@ -1,0 +1,170 @@
+//! 40 nm PPA library: per-operation energy (pJ), per-block area (µm²) and
+//! latency (cycles at 1 GHz) for the basic computational blocks every
+//! classifier is built from (paper §4.1 step 1).
+//!
+//! The numbers are anchored to published 40/45 nm measurements (Horowitz,
+//! "Computing's energy problem", ISSCC'14: 32-bit int add ≈ 0.1 pJ, 32-bit
+//! int multiply ≈ 3.1 pJ, 8 KB SRAM read ≈ 10 pJ/word; scaled to the 8/16
+//! bit fixed-point datapaths the paper's accelerator uses, quadratic in
+//! width for multipliers, linear for adders/comparators/memories). Leakage
+//! is charged per mm² per ns, which makes *latency* part of the energy
+//! story exactly as in the paper's EDP-driven design flow.
+
+/// Per-op energies in picojoules, areas in µm², clock in GHz.
+#[derive(Clone, Debug)]
+pub struct EnergyBlocks {
+    /// 8-bit fixed-point comparator (the DT node primitive).
+    pub comp8_pj: f64,
+    /// 16-bit fixed-point adder.
+    pub add16_pj: f64,
+    /// 16-bit fixed-point multiplier.
+    pub mult16_pj: f64,
+    /// 16-bit multiply-accumulate (mult + add, shared routing).
+    pub mac16_pj: f64,
+    /// Sigmoid / exp piecewise-linear LUT evaluation.
+    pub sigmoid_pj: f64,
+    /// SRAM read, per byte (small 4–8 KB banks).
+    pub sram_read_pj_per_byte: f64,
+    /// SRAM write, per byte.
+    pub sram_write_pj_per_byte: f64,
+    /// Register-file access (per 2-byte operand).
+    pub reg_pj: f64,
+    /// One req/ack handshake event between neighbouring groves.
+    pub handshake_pj: f64,
+    /// Static power (leakage + clock network), mW per mm², charged over
+    /// the classification latency for the *active* area.
+    pub leak_mw_per_mm2: f64,
+    /// Clock frequency (the paper fixes 1 GHz for every classifier).
+    pub clock_ghz: f64,
+}
+
+impl Default for EnergyBlocks {
+    fn default() -> Self {
+        EnergyBlocks {
+            comp8_pj: 0.06,
+            add16_pj: 0.06,
+            mult16_pj: 0.4,
+            mac16_pj: 0.45,
+            sigmoid_pj: 0.5,
+            sram_read_pj_per_byte: 0.15,
+            sram_write_pj_per_byte: 0.25,
+            reg_pj: 0.05,
+            handshake_pj: 2.0,
+            leak_mw_per_mm2: 110.0,
+            clock_ghz: 1.0,
+        }
+    }
+}
+
+impl EnergyBlocks {
+    /// Energy of `n` comparator ops, in nJ.
+    pub fn comparisons_nj(&self, n: f64) -> f64 {
+        n * self.comp8_pj * 1e-3
+    }
+
+    /// Energy of `n` MAC ops, in nJ.
+    pub fn macs_nj(&self, n: f64) -> f64 {
+        n * self.mac16_pj * 1e-3
+    }
+
+    /// Energy of reading `bytes` from SRAM, in nJ.
+    pub fn sram_read_nj(&self, bytes: f64) -> f64 {
+        bytes * self.sram_read_pj_per_byte * 1e-3
+    }
+
+    /// Energy of writing `bytes` to SRAM, in nJ.
+    pub fn sram_write_nj(&self, bytes: f64) -> f64 {
+        bytes * self.sram_write_pj_per_byte * 1e-3
+    }
+
+    /// Leakage energy in nJ for `area_mm2` over `cycles` at the block clock.
+    pub fn leakage_nj(&self, area_mm2: f64, cycles: f64) -> f64 {
+        // mW * ns = pJ; convert to nJ.
+        let ns = cycles / self.clock_ghz;
+        self.leak_mw_per_mm2 * area_mm2 * ns * 1e-3
+    }
+
+    /// Latency in ns for a cycle count.
+    pub fn cycles_to_ns(&self, cycles: f64) -> f64 {
+        cycles / self.clock_ghz
+    }
+}
+
+/// Area of the basic blocks, µm² at 40 nm (synthesized standard-cell
+/// estimates; SRAM from bit-cell area × overhead).
+#[derive(Clone, Debug)]
+pub struct AreaBlocks {
+    pub comp8_um2: f64,
+    pub add16_um2: f64,
+    pub mult16_um2: f64,
+    pub mac16_um2: f64,
+    pub sigmoid_um2: f64,
+    /// Per byte of SRAM.
+    pub sram_um2_per_byte: f64,
+    /// Per byte of register storage.
+    pub reg_um2_per_byte: f64,
+    /// Fixed per-unit control overhead (FSMs, decoders).
+    pub control_um2: f64,
+}
+
+impl Default for AreaBlocks {
+    fn default() -> Self {
+        AreaBlocks {
+            comp8_um2: 60.0,
+            add16_um2: 120.0,
+            mult16_um2: 1_600.0,
+            mac16_um2: 1_900.0,
+            sigmoid_um2: 900.0,
+            sram_um2_per_byte: 2.4,
+            reg_um2_per_byte: 18.0,
+            control_um2: 6_000.0,
+        }
+    }
+}
+
+impl AreaBlocks {
+    pub fn um2_to_mm2(um2: f64) -> f64 {
+        um2 * 1e-6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_conversions() {
+        let b = EnergyBlocks::default();
+        // 1000 comparisons at 0.06 pJ = 0.06 nJ.
+        assert!((b.comparisons_nj(1000.0) - 0.06).abs() < 1e-9);
+        // mult dominates add (standard at these widths).
+        assert!(b.mult16_pj > 5.0 * b.add16_pj);
+        // MAC ≈ mult + add.
+        assert!(b.mac16_pj >= b.mult16_pj);
+    }
+
+    #[test]
+    fn leakage_scales_with_area_and_time() {
+        let b = EnergyBlocks::default();
+        let e1 = b.leakage_nj(1.0, 100.0);
+        let e2 = b.leakage_nj(2.0, 100.0);
+        let e3 = b.leakage_nj(1.0, 200.0);
+        assert!((e2 - 2.0 * e1).abs() < 1e-12);
+        assert!((e3 - 2.0 * e1).abs() < 1e-12);
+        // 1 mm² for 100 ns at 110 mW = 11 nJ.
+        assert!((e1 - 11.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn area_conversion() {
+        assert_eq!(AreaBlocks::um2_to_mm2(1e6), 1.0);
+    }
+
+    #[test]
+    fn comparator_cheapest_block() {
+        let b = EnergyBlocks::default();
+        assert!(b.comp8_pj <= b.add16_pj);
+        assert!(b.comp8_pj < b.mac16_pj / 5.0);
+        assert!(b.comp8_pj < b.sigmoid_pj);
+    }
+}

@@ -1,0 +1,102 @@
+//! Energy-delay-product helpers. The paper designs every classifier for
+//! minimum EDP at maximum accuracy (§4.1) and uses EDP as the budget
+//! metric during training (step 2).
+
+/// EDP in nJ·ns.
+#[inline]
+pub fn edp(energy_nj: f64, delay_ns: f64) -> f64 {
+    energy_nj * delay_ns
+}
+
+/// A point in (energy, delay, area, accuracy) design space.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DesignPoint {
+    pub energy_nj: f64,
+    pub delay_ns: f64,
+    pub area_mm2: f64,
+    pub accuracy: f64,
+}
+
+impl DesignPoint {
+    pub fn edp(&self) -> f64 {
+        edp(self.energy_nj, self.delay_ns)
+    }
+
+    /// `self` dominates `other` when it is no worse in energy, delay and
+    /// area, and strictly better in at least one (accuracy ties broken
+    /// separately by the caller).
+    pub fn dominates(&self, other: &DesignPoint) -> bool {
+        let no_worse = self.energy_nj <= other.energy_nj
+            && self.delay_ns <= other.delay_ns
+            && self.area_mm2 <= other.area_mm2;
+        let better = self.energy_nj < other.energy_nj
+            || self.delay_ns < other.delay_ns
+            || self.area_mm2 < other.area_mm2;
+        no_worse && better
+    }
+}
+
+/// Pareto frontier (non-dominated subset), preserving input order.
+pub fn pareto(points: &[DesignPoint]) -> Vec<DesignPoint> {
+    points
+        .iter()
+        .filter(|p| !points.iter().any(|q| q.dominates(p)))
+        .copied()
+        .collect()
+}
+
+/// Minimum-EDP point among designs whose accuracy is within `tol` of the
+/// best accuracy — the paper's "minimum EDP at maximum accuracy" rule.
+pub fn min_edp_at_max_accuracy(points: &[DesignPoint], tol: f64) -> Option<DesignPoint> {
+    let best_acc = points.iter().map(|p| p.accuracy).fold(f64::NEG_INFINITY, f64::max);
+    points
+        .iter()
+        .filter(|p| p.accuracy >= best_acc - tol)
+        .min_by(|a, b| a.edp().partial_cmp(&b.edp()).unwrap())
+        .copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(e: f64, d: f64, a: f64, acc: f64) -> DesignPoint {
+        DesignPoint { energy_nj: e, delay_ns: d, area_mm2: a, accuracy: acc }
+    }
+
+    #[test]
+    fn dominance() {
+        assert!(p(1.0, 1.0, 1.0, 0.9).dominates(&p(2.0, 2.0, 2.0, 0.9)));
+        assert!(!p(1.0, 3.0, 1.0, 0.9).dominates(&p(2.0, 2.0, 2.0, 0.9)));
+        assert!(!p(1.0, 1.0, 1.0, 0.9).dominates(&p(1.0, 1.0, 1.0, 0.9)));
+    }
+
+    #[test]
+    fn pareto_filters_dominated() {
+        let pts = vec![
+            p(1.0, 4.0, 1.0, 0.9),
+            p(2.0, 2.0, 1.0, 0.9),
+            p(4.0, 1.0, 1.0, 0.9),
+            p(3.0, 3.0, 1.0, 0.9), // dominated by (2,2)
+        ];
+        let front = pareto(&pts);
+        assert_eq!(front.len(), 3);
+        assert!(!front.contains(&pts[3]));
+    }
+
+    #[test]
+    fn min_edp_respects_accuracy() {
+        let pts = vec![
+            p(1.0, 1.0, 1.0, 0.5),  // cheap but inaccurate
+            p(10.0, 2.0, 1.0, 0.95),
+            p(8.0, 2.0, 1.0, 0.94), // within 0.02 of best, cheaper EDP
+        ];
+        let best = min_edp_at_max_accuracy(&pts, 0.02).unwrap();
+        assert_eq!(best.energy_nj, 8.0);
+    }
+
+    #[test]
+    fn edp_multiplies() {
+        assert_eq!(edp(3.0, 4.0), 12.0);
+    }
+}

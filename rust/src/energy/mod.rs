@@ -1,0 +1,26 @@
+//! Energy/PPA modelling — the substrate replacing the paper's
+//! Aladdin + Cadence + Synopsys 40 nm flow.
+//!
+//! * [`blocks`] — per-operation energy/area/delay of the basic
+//!   computational blocks (comparator, adder, multiplier, MAC, sigmoid
+//!   LUT, SRAM, registers) at 40 nm / 1 GHz.
+//! * [`aladdin`] — a pre-RTL design-space explorer in the spirit of
+//!   Aladdin [16]: sweeps bitwidth / parallelism / pipelining for an op
+//!   mix and extracts the Pareto frontier; used to pick each classifier's
+//!   minimum-EDP datapath (§4.1 steps 1 & 3).
+//! * [`model`] — per-classifier energy models: op counts measured from
+//!   the *trained* classifiers (tree depths actually traversed, support
+//!   vector counts, layer shapes) × block energies + leakage × latency.
+//! * [`edp`] — energy-delay-product helpers.
+//!
+//! Absolute nJ values are calibrated to land in the paper's ranges (their
+//! testbed is a synthesized ASIC we don't have); the *ratios* between
+//! classifiers — the claims of Table 1 — emerge from op-count structure.
+
+pub mod aladdin;
+pub mod blocks;
+pub mod edp;
+pub mod model;
+
+pub use blocks::EnergyBlocks;
+pub use model::{ClassifierKind, CostReport};

@@ -1,0 +1,441 @@
+//! Per-classifier energy/latency/area models (regenerates Table 1's
+//! bottom half and area row).
+//!
+//! Each model charges, per classification:
+//!
+//! 1. **dynamic compute** — op counts measured from the *trained*
+//!    classifier (actual traversed depths, actual support-vector counts,
+//!    actual layer shapes) × per-op block energies;
+//! 2. **memory traffic** — node-table/weight/feature bytes moved, with a
+//!    32 KB on-chip capacity: working sets beyond it stream at a higher
+//!    per-byte cost (the reason RBF-SVM and CNN blow up on MNIST-sized
+//!    inputs, exactly the effect the paper's Table 1 shows);
+//! 3. **static energy** — (leakage + clock) power × classifier area ×
+//!    classification latency. Idle FoG groves are power-gated, so FoG
+//!    charges only *active* grove area — the mechanism that makes
+//!    FoG_opt cheaper than conventional RF at equal accuracy.
+//!
+//! Latency models: tree traversal is serial per level (fetch node →
+//! compare → next address: [`TREE_CYCLES_PER_LEVEL`] cycles), GEMM
+//! engines run [`GEMM_LANES`] MACs/cycle, queue copies move 4 B/cycle.
+
+use super::blocks::{AreaBlocks, EnergyBlocks};
+
+/// On-chip buffer capacity; larger working sets stream from off-chip.
+pub const ONCHIP_BYTES: f64 = 32.0 * 1024.0;
+/// Energy per byte streamed from off-chip (pJ/B) — LPDDR-class.
+pub const STREAM_PJ_PER_BYTE: f64 = 0.8;
+/// Serial cycles per tree level (SRAM fetch, compare, address update).
+pub const TREE_CYCLES_PER_LEVEL: f64 = 3.0;
+/// MAC lanes of the GEMM-style engines (SVM-RBF / MLP / CNN).
+pub const GEMM_LANES: f64 = 256.0;
+/// MAC lanes of the small linear-SVM engine.
+pub const LINEAR_LANES: f64 = 32.0;
+/// Fixed IO/queue overhead cycles per classification.
+pub const IO_OVERHEAD_CYCLES: f64 = 30.0;
+/// Bytes per tree node entry (weight + feature offset + control).
+pub const NODE_BYTES: f64 = 4.0;
+
+/// Which classifier a report describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClassifierKind {
+    SvmLinear,
+    SvmRbf,
+    Mlp,
+    Cnn,
+    RandomForest,
+    FogMax,
+    FogOpt,
+}
+
+impl ClassifierKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ClassifierKind::SvmLinear => "SVM_lr",
+            ClassifierKind::SvmRbf => "SVM_rbf",
+            ClassifierKind::Mlp => "MLP",
+            ClassifierKind::Cnn => "CNN",
+            ClassifierKind::RandomForest => "RF",
+            ClassifierKind::FogMax => "FoG_max",
+            ClassifierKind::FogOpt => "FoG_opt",
+        }
+    }
+}
+
+/// PPA result for one classifier on one dataset.
+#[derive(Clone, Debug)]
+pub struct CostReport {
+    pub kind: ClassifierKind,
+    pub energy_nj: f64,
+    pub latency_ns: f64,
+    pub area_mm2: f64,
+}
+
+impl CostReport {
+    pub fn edp(&self) -> f64 {
+        self.energy_nj * self.latency_ns
+    }
+}
+
+fn stream_overflow_nj(working_set_bytes: f64) -> f64 {
+    if working_set_bytes > ONCHIP_BYTES {
+        (working_set_bytes - ONCHIP_BYTES) * STREAM_PJ_PER_BYTE * 1e-3
+    } else {
+        0.0
+    }
+}
+
+fn onchip_bytes(working_set_bytes: f64) -> f64 {
+    working_set_bytes.min(ONCHIP_BYTES)
+}
+
+/// Measured statistics of a trained forest.
+#[derive(Clone, Debug)]
+pub struct RfStats {
+    pub n_trees: usize,
+    /// Mean total comparisons per input across all trees (measured).
+    pub avg_comparisons: f64,
+    pub max_depth: usize,
+    pub n_features: usize,
+    pub n_classes: usize,
+    /// Total node-table bytes (reprogrammable FF storage).
+    pub node_storage_bytes: f64,
+}
+
+/// Conventional RF accelerator (paper §3.1): all trees evaluate in
+/// parallel; traversal is serial per level; node weights live in
+/// reprogrammable register storage (§3.2.2 "Reprogrammability").
+pub fn rf_cost(s: &RfStats, eb: &EnergyBlocks, ab: &AreaBlocks) -> CostReport {
+    // --- area ---
+    let tree_logic_um2 = ab.comp8_um2 + ab.add16_um2; // comparator + addr adder
+    let node_storage_um2 = s.node_storage_bytes * ab.reg_um2_per_byte;
+    let input_buf_um2 = (s.n_features as f64) * ab.sram_um2_per_byte * s.n_trees as f64;
+    let vote_um2 = (s.n_classes as f64) * ab.add16_um2;
+    let area_um2 = s.n_trees as f64 * tree_logic_um2
+        + node_storage_um2
+        + input_buf_um2
+        + vote_um2
+        + ab.control_um2 * 2.0;
+    let area_mm2 = AreaBlocks::um2_to_mm2(area_um2);
+
+    // --- latency: trees run in parallel, levels serial ---
+    let cycles = s.max_depth as f64 * TREE_CYCLES_PER_LEVEL + IO_OVERHEAD_CYCLES;
+    let latency_ns = eb.cycles_to_ns(cycles);
+
+    // --- dynamic ---
+    let comp_nj = eb.comparisons_nj(s.avg_comparisons);
+    let node_fetch_nj = eb.sram_read_nj(s.avg_comparisons * NODE_BYTES);
+    let feat_fetch_nj = eb.sram_read_nj(s.avg_comparisons); // 1 B/feature read
+    // Input vector broadcast into every tree's local buffer.
+    let input_load_nj = eb.sram_write_nj(s.n_features as f64 * s.n_trees as f64);
+    let leaf_nj = eb.sram_read_nj(s.n_trees as f64 * s.n_classes as f64);
+    let vote_nj = s.n_trees as f64 * s.n_classes as f64 * eb.add16_pj * 1e-3;
+    let dynamic = comp_nj + node_fetch_nj + feat_fetch_nj + input_load_nj + leaf_nj + vote_nj;
+
+    let energy_nj = dynamic + eb.leakage_nj(area_mm2, cycles);
+    CostReport { kind: ClassifierKind::RandomForest, energy_nj, latency_ns, area_mm2 }
+}
+
+/// Measured statistics of a FoG configuration at a given threshold.
+#[derive(Clone, Debug)]
+pub struct FogStats {
+    pub n_groves: usize,
+    pub trees_per_grove: usize,
+    /// Padded flat-tree depth (every traversal walks exactly this).
+    pub depth: usize,
+    /// Mean groves consulted per input (measured, 1..=n_groves).
+    pub avg_hops: f64,
+    pub n_features: usize,
+    pub n_classes: usize,
+    /// Node-table bytes per grove.
+    pub grove_storage_bytes: f64,
+    pub kind: ClassifierKind,
+}
+
+impl FogStats {
+    /// Queue word length Γ (paper §3.2.2): hops byte + features + id +
+    /// one byte per class of the probability array.
+    pub fn gamma(&self) -> f64 {
+        1.0 + self.n_features as f64 + 1.0 + self.n_classes as f64
+    }
+}
+
+/// FoG accelerator (paper §3.2.2, Figure 3). Dynamic energy scales with
+/// the measured hop count; idle groves are power-gated so static energy
+/// charges active-grove area only. The ring's queue traffic (Γ-byte word
+/// per hop) and req/ack handshakes are charged explicitly.
+pub fn fog_cost(s: &FogStats, eb: &EnergyBlocks, ab: &AreaBlocks) -> CostReport {
+    let gamma = s.gamma();
+
+    // --- area (whole FoG: all groves + queues + IO ring) ---
+    let tree_logic_um2 = ab.comp8_um2 + ab.add16_um2;
+    let grove_um2 = s.trees_per_grove as f64 * tree_logic_um2
+        + s.grove_storage_bytes * ab.reg_um2_per_byte
+        + 6.0 * 1024.0 * ab.sram_um2_per_byte  // 6 kB data queue (paper)
+        + (s.n_classes as f64) * ab.add16_um2   // prob accumulator
+        + ab.control_um2;                        // DQC + handshake + PE ctl
+    let io_um2 = 2.0 * ab.control_um2 + gamma * 8.0 * ab.sram_um2_per_byte;
+    let total_area_um2 = s.n_groves as f64 * grove_um2 + io_um2;
+    let area_mm2 = AreaBlocks::um2_to_mm2(total_area_um2);
+    let grove_area_mm2 = AreaBlocks::um2_to_mm2(grove_um2);
+
+    // --- per-hop work ---
+    let comps_per_hop = (s.trees_per_grove * s.depth) as f64;
+    let hop_dyn_nj = eb.comparisons_nj(comps_per_hop)
+        + eb.sram_read_nj(comps_per_hop * NODE_BYTES)
+        + eb.sram_read_nj(comps_per_hop)
+        + eb.sram_read_nj((s.trees_per_grove * s.n_classes) as f64) // leaves
+        + (s.trees_per_grove * s.n_classes) as f64 * eb.add16_pj * 1e-3 // averaging
+        + eb.sram_read_nj(gamma) + eb.sram_write_nj(gamma); // queue word r/w
+    // Queue copy moves Γ bytes over a 16-byte port, overlapped with the
+    // next input's PE start in hardware; we charge it fully (conservative).
+    let hop_cycles = s.depth as f64 * TREE_CYCLES_PER_LEVEL + gamma / 16.0 + 5.0;
+
+    // --- handshake + inter-grove copy on every forwarded input ---
+    let forwards = (s.avg_hops - 1.0).max(0.0);
+    let forward_nj = forwards * (eb.handshake_pj * 1e-3 + eb.sram_write_nj(gamma));
+
+    // --- totals ---
+    let input_load_nj = eb.sram_write_nj(gamma); // processor → input queue
+    let dynamic = s.avg_hops * hop_dyn_nj + forward_nj + input_load_nj;
+    let cycles = s.avg_hops * hop_cycles + IO_OVERHEAD_CYCLES;
+    let latency_ns = eb.cycles_to_ns(cycles);
+    // Power gating: only the grove processing the input is awake, plus a
+    // 10% ring overhead that can't be gated.
+    let active_area = grove_area_mm2 + 0.1 * area_mm2;
+    let energy_nj = dynamic + eb.leakage_nj(active_area, cycles);
+    CostReport { kind: s.kind, energy_nj, latency_ns, area_mm2 }
+}
+
+/// Linear SVM: `n_classes` dot products over `n_features`.
+pub fn svm_linear_cost(n_features: usize, n_classes: usize, eb: &EnergyBlocks, ab: &AreaBlocks) -> CostReport {
+    let macs = (n_features * n_classes) as f64;
+    let weight_bytes = macs; // 1 B/weight fixed-point
+    let area_um2 = LINEAR_LANES * ab.mac16_um2
+        + onchip_bytes(weight_bytes) * ab.sram_um2_per_byte
+        + ab.control_um2;
+    let area_mm2 = AreaBlocks::um2_to_mm2(area_um2);
+    let cycles = (macs / LINEAR_LANES).ceil() + IO_OVERHEAD_CYCLES;
+    let dynamic = eb.macs_nj(macs)
+        + eb.sram_read_nj(onchip_bytes(weight_bytes))
+        + stream_overflow_nj(weight_bytes)
+        + eb.sram_read_nj(n_features as f64);
+    CostReport {
+        kind: ClassifierKind::SvmLinear,
+        energy_nj: dynamic + eb.leakage_nj(area_mm2, cycles),
+        latency_ns: eb.cycles_to_ns(cycles),
+        area_mm2,
+    }
+}
+
+/// RBF-kernel SVM: `n_sv` squared-distance evaluations + exp LUT + class
+/// accumulation. Support-vector storage beyond on-chip streams per
+/// classification — the dominant term for big datasets (paper: 1020 nJ on
+/// MNIST vs 18 nJ on Pendigits).
+pub fn svm_rbf_cost(n_sv: usize, n_features: usize, n_classes: usize, eb: &EnergyBlocks, ab: &AreaBlocks) -> CostReport {
+    let dist_ops = (n_sv * n_features) as f64; // sub+sq+acc ≈ 1 MAC each
+    let kernel_ops = n_sv as f64; // exp LUT
+    let acc_ops = (n_sv * n_classes) as f64 * 0.0 + n_sv as f64; // coefficient MAC
+    let macs = dist_ops + acc_ops;
+    let sv_bytes = (n_sv * n_features) as f64;
+    let area_um2 = GEMM_LANES * ab.mac16_um2
+        + ab.sigmoid_um2
+        + onchip_bytes(sv_bytes) * ab.sram_um2_per_byte
+        + ab.control_um2;
+    let area_mm2 = AreaBlocks::um2_to_mm2(area_um2);
+    let cycles = (macs / GEMM_LANES).ceil() + kernel_ops + IO_OVERHEAD_CYCLES;
+    let dynamic = eb.macs_nj(macs)
+        + kernel_ops * eb.sigmoid_pj * 1e-3
+        + eb.sram_read_nj(onchip_bytes(sv_bytes))
+        + stream_overflow_nj(sv_bytes)
+        + eb.sram_read_nj(n_features as f64);
+    CostReport {
+        kind: ClassifierKind::SvmRbf,
+        energy_nj: dynamic + eb.leakage_nj(area_mm2, cycles),
+        latency_ns: eb.cycles_to_ns(cycles),
+        area_mm2,
+    }
+}
+
+/// MLP: dense layers with sigmoid/ReLU activations.
+pub fn mlp_cost(layer_dims: &[usize], eb: &EnergyBlocks, ab: &AreaBlocks) -> CostReport {
+    assert!(layer_dims.len() >= 2);
+    let mut macs = 0.0;
+    let mut acts = 0.0;
+    for w in layer_dims.windows(2) {
+        macs += (w[0] * w[1]) as f64;
+        acts += w[1] as f64;
+    }
+    let weight_bytes = macs;
+    let area_um2 = GEMM_LANES * ab.mac16_um2
+        + ab.sigmoid_um2 * 4.0
+        + onchip_bytes(weight_bytes) * ab.sram_um2_per_byte
+        + ab.control_um2;
+    let area_mm2 = AreaBlocks::um2_to_mm2(area_um2);
+    let cycles = (macs / GEMM_LANES).ceil() + acts + IO_OVERHEAD_CYCLES;
+    let dynamic = eb.macs_nj(macs)
+        + acts * eb.sigmoid_pj * 1e-3
+        + eb.sram_read_nj(onchip_bytes(weight_bytes))
+        + stream_overflow_nj(weight_bytes)
+        + eb.sram_read_nj(layer_dims[0] as f64);
+    CostReport {
+        kind: ClassifierKind::Mlp,
+        energy_nj: dynamic + eb.leakage_nj(area_mm2, cycles),
+        latency_ns: eb.cycles_to_ns(cycles),
+        area_mm2,
+    }
+}
+
+/// CNN: caller supplies measured MAC count, weight bytes and activation
+/// traffic (computed by the CNN baseline from its architecture).
+pub fn cnn_cost(macs: f64, weight_bytes: f64, act_bytes: f64, eb: &EnergyBlocks, ab: &AreaBlocks) -> CostReport {
+    let area_um2 = 2.0 * GEMM_LANES * ab.mac16_um2
+        + ab.sigmoid_um2 * 8.0
+        + onchip_bytes(weight_bytes + act_bytes) * ab.sram_um2_per_byte
+        + 2.0 * ab.control_um2;
+    let area_mm2 = AreaBlocks::um2_to_mm2(area_um2);
+    let cycles = (macs / (2.0 * GEMM_LANES)).ceil() + IO_OVERHEAD_CYCLES;
+    let traffic = weight_bytes + act_bytes;
+    let dynamic = eb.macs_nj(macs)
+        + eb.sram_read_nj(onchip_bytes(traffic))
+        + stream_overflow_nj(traffic);
+    CostReport {
+        kind: ClassifierKind::Cnn,
+        energy_nj: dynamic + eb.leakage_nj(area_mm2, cycles),
+        latency_ns: eb.cycles_to_ns(cycles),
+        area_mm2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn eb() -> EnergyBlocks {
+        EnergyBlocks::default()
+    }
+    fn ab() -> AreaBlocks {
+        AreaBlocks::default()
+    }
+
+    fn penbase_rf() -> RfStats {
+        RfStats {
+            n_trees: 16,
+            avg_comparisons: 16.0 * 7.0,
+            max_depth: 8,
+            n_features: 16,
+            n_classes: 10,
+            node_storage_bytes: 16.0 * (255.0 * 4.0 + 256.0 * 10.0),
+        }
+    }
+
+    fn penbase_fog(avg_hops: f64, kind: ClassifierKind) -> FogStats {
+        FogStats {
+            n_groves: 8,
+            trees_per_grove: 2,
+            depth: 8,
+            avg_hops,
+            n_features: 16,
+            n_classes: 10,
+            grove_storage_bytes: 2.0 * (255.0 * 4.0 + 256.0 * 10.0),
+            kind,
+        }
+    }
+
+    #[test]
+    fn fog_opt_cheaper_than_rf() {
+        let rf = rf_cost(&penbase_rf(), &eb(), &ab());
+        let fog = fog_cost(&penbase_fog(2.5, ClassifierKind::FogOpt), &eb(), &ab());
+        assert!(
+            fog.energy_nj < rf.energy_nj,
+            "fog {} rf {}",
+            fog.energy_nj,
+            rf.energy_nj
+        );
+        // Paper: ≈1.5-2.3x advantage at the optimal point.
+        let ratio = rf.energy_nj / fog.energy_nj;
+        assert!(ratio > 1.1 && ratio < 6.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn fog_max_close_to_rf() {
+        let rf = rf_cost(&penbase_rf(), &eb(), &ab());
+        let fog = fog_cost(&penbase_fog(8.0, ClassifierKind::FogMax), &eb(), &ab());
+        let ratio = fog.energy_nj / rf.energy_nj;
+        assert!(ratio > 0.5 && ratio < 2.5, "fog_max/rf = {ratio}");
+    }
+
+    #[test]
+    fn fog_area_larger_than_rf() {
+        // Paper Table 1: FoG 1.9 mm² > RF 1.38 mm² (queues + handshake).
+        let rf = rf_cost(&penbase_rf(), &eb(), &ab());
+        let fog = fog_cost(&penbase_fog(2.5, ClassifierKind::FogOpt), &eb(), &ab());
+        assert!(fog.area_mm2 > rf.area_mm2);
+    }
+
+    #[test]
+    fn svm_linear_cheapest() {
+        let lr = svm_linear_cost(16, 10, &eb(), &ab());
+        let rf = rf_cost(&penbase_rf(), &eb(), &ab());
+        let rbf = svm_rbf_cost(800, 16, 10, &eb(), &ab());
+        assert!(lr.energy_nj < rf.energy_nj);
+        assert!(lr.energy_nj < rbf.energy_nj);
+    }
+
+    #[test]
+    fn rbf_explodes_on_large_features() {
+        // Streaming support vectors: MNIST-sized RBF ≫ Pendigits-sized.
+        let small = svm_rbf_cost(800, 16, 10, &eb(), &ab());
+        let large = svm_rbf_cost(1500, 784, 10, &eb(), &ab());
+        assert!(large.energy_nj > 20.0 * small.energy_nj);
+    }
+
+    #[test]
+    fn cnn_most_expensive() {
+        let cnn = cnn_cost(1.7e6, 120_000.0, 400_000.0, &eb(), &ab());
+        let rf = rf_cost(&penbase_rf(), &eb(), &ab());
+        let mlp = mlp_cost(&[784, 128, 10], &eb(), &ab());
+        assert!(cnn.energy_nj > rf.energy_nj);
+        assert!(cnn.energy_nj > mlp.energy_nj);
+    }
+
+    #[test]
+    fn gamma_matches_paper_example() {
+        // Paper example: 5 features, 3 classes → Γ = 1+5+1+3 = 10.
+        let s = FogStats {
+            n_groves: 4,
+            trees_per_grove: 4,
+            depth: 4,
+            avg_hops: 1.0,
+            n_features: 5,
+            n_classes: 3,
+            grove_storage_bytes: 100.0,
+            kind: ClassifierKind::FogOpt,
+        };
+        assert_eq!(s.gamma(), 10.0);
+    }
+
+    #[test]
+    fn fog_energy_monotone_in_hops() {
+        let e1 = fog_cost(&penbase_fog(1.0, ClassifierKind::FogOpt), &eb(), &ab()).energy_nj;
+        let e2 = fog_cost(&penbase_fog(4.0, ClassifierKind::FogOpt), &eb(), &ab()).energy_nj;
+        let e3 = fog_cost(&penbase_fog(8.0, ClassifierKind::FogMax), &eb(), &ab()).energy_nj;
+        assert!(e1 < e2 && e2 < e3);
+    }
+
+    #[test]
+    fn reports_have_positive_ppa() {
+        for r in [
+            rf_cost(&penbase_rf(), &eb(), &ab()),
+            svm_linear_cost(617, 26, &eb(), &ab()),
+            svm_rbf_cost(1200, 617, 26, &eb(), &ab()),
+            mlp_cost(&[617, 256, 26], &eb(), &ab()),
+            cnn_cost(5e5, 8e4, 2e5, &eb(), &ab()),
+        ] {
+            assert!(r.energy_nj > 0.0);
+            assert!(r.latency_ns > 0.0);
+            assert!(r.area_mm2 > 0.0);
+            assert!(r.edp() > 0.0);
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Ablations on the design choices DESIGN.md calls out:
+//!
+//! * **vote mode** — FoG's probability averaging vs conventional RF
+//!   majority voting (the §3.2.1 contrast);
+//! * **max_hops** — the second run-time knob (the figures only sweep
+//!   `threshold`; this sweeps the hop cap at fixed threshold);
+//! * **grove dropout** — the §3.1 graceful-degradation claim,
+//!   quantified;
+//! * **router policy** — Algorithm 2's random start vs round-robin vs
+//!   least-loaded, measured on ring load imbalance.
+
+use super::suite::{fog_stats, TrainedSuite};
+use crate::coordinator::router::{Router, RouterPolicy};
+use crate::energy::blocks::{AreaBlocks, EnergyBlocks};
+use crate::energy::model::{fog_cost, ClassifierKind};
+use crate::fog::dropout::degradation_curve;
+use crate::fog::{FieldOfGroves, FogParams};
+use crate::forest::VoteMode;
+
+/// Vote-mode ablation result.
+pub struct VoteAblation {
+    pub majority: f64,
+    pub prob_average: f64,
+}
+
+pub fn vote_mode(suite: &TrainedSuite) -> VoteAblation {
+    VoteAblation {
+        majority: suite.rf.accuracy(&suite.data.test, VoteMode::Majority),
+        prob_average: suite.rf.accuracy(&suite.data.test, VoteMode::ProbAverage),
+    }
+}
+
+/// max_hops sweep at fixed threshold.
+pub struct HopPoint {
+    pub max_hops: usize,
+    pub accuracy: f64,
+    pub avg_hops: f64,
+    pub energy_nj: f64,
+}
+
+pub fn max_hops_sweep(
+    suite: &TrainedSuite,
+    fog: &FieldOfGroves,
+    threshold: f32,
+    seed: u64,
+) -> Vec<HopPoint> {
+    let eb = EnergyBlocks::default();
+    let ab = AreaBlocks::default();
+    (1..=fog.n_groves())
+        .map(|max_hops| {
+            let res = fog.evaluate(
+                &suite.data.test.x,
+                &FogParams { threshold, max_hops, seed },
+            );
+            let stats = fog_stats(fog, res.avg_hops(), ClassifierKind::FogOpt);
+            HopPoint {
+                max_hops,
+                accuracy: res.accuracy(&suite.data.test.y),
+                avg_hops: res.avg_hops(),
+                energy_nj: fog_cost(&stats, &eb, &ab).energy_nj,
+            }
+        })
+        .collect()
+}
+
+/// Grove-dropout degradation curve (k disabled groves → accuracy).
+pub fn dropout_curve(
+    suite: &TrainedSuite,
+    fog: &FieldOfGroves,
+    threshold: f32,
+    seed: u64,
+) -> Vec<(usize, f64)> {
+    let params = FogParams { threshold, max_hops: fog.n_groves(), seed };
+    degradation_curve(fog, &suite.data.test.x, &suite.data.test.y, &params, seed)
+}
+
+/// Router policy load imbalance over `n` synthetic injections.
+pub fn router_imbalance(n_groves: usize, n: u64, seed: u64) -> Vec<(RouterPolicy, f64)> {
+    [RouterPolicy::Random, RouterPolicy::RoundRobin, RouterPolicy::LeastLoaded]
+        .into_iter()
+        .map(|policy| {
+            let r = Router::new(policy, n_groves, seed);
+            let mut counts = vec![0u64; n_groves];
+            // Steady-state completion model: keep ~2·n_groves in flight,
+            // retiring the *oldest* injection (FIFO), as the ring does.
+            let mut in_flight = std::collections::VecDeque::new();
+            for i in 0..n {
+                let g = r.route(i);
+                counts[g] += 1;
+                r.note_injected(g);
+                in_flight.push_back(g);
+                if in_flight.len() > 2 * n_groves {
+                    r.note_completed(in_flight.pop_front().unwrap());
+                }
+            }
+            (policy, Router::imbalance(&counts))
+        })
+        .collect()
+}
+
+/// Print all ablations for one trained suite.
+pub fn print_all(suite: &TrainedSuite, seed: u64) {
+    let fog = FieldOfGroves::from_forest_shuffled(&suite.rf, 2, Some(seed)); // 8x2
+
+    println!("== ablation: vote mode (paper §3.2.1 contrast) ==");
+    let v = vote_mode(suite);
+    println!(
+        "  majority vote {:.1}%   probability average {:.1}%   (Δ {:+.1} pts)",
+        v.majority * 100.0,
+        v.prob_average * 100.0,
+        (v.prob_average - v.majority) * 100.0
+    );
+
+    println!("\n== ablation: max_hops cap @ threshold 0.5 (run-time knob #2) ==");
+    println!("  {:<10}{:>12}{:>12}{:>14}", "max_hops", "accuracy%", "avg hops", "energy nJ");
+    for p in max_hops_sweep(suite, &fog, 0.5, seed) {
+        println!(
+            "  {:<10}{:>12.1}{:>12.2}{:>14.2}",
+            p.max_hops,
+            p.accuracy * 100.0,
+            p.avg_hops,
+            p.energy_nj
+        );
+    }
+
+    println!("\n== ablation: grove dropout (graceful degradation, §3.1) ==");
+    println!("  {:<14}{:>12}", "disabled", "accuracy%");
+    for (k, acc) in dropout_curve(suite, &fog, 0.5, seed) {
+        println!("  {:<14}{:>12.1}", format!("{k}/{}", fog.n_groves()), acc * 100.0);
+    }
+
+    println!("\n== ablation: router policy load imbalance (max/mean, 10k injections) ==");
+    for (policy, imb) in router_imbalance(fog.n_groves(), 10_000, seed) {
+        println!("  {policy:?}: {imb:.3}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::DatasetProfile;
+    use crate::experiments::suite::train_suite;
+
+    #[test]
+    fn ablations_run_on_demo() {
+        let suite = train_suite(&DatasetProfile::demo(), 61);
+        let fog = FieldOfGroves::from_forest_shuffled(&suite.rf, 2, Some(61));
+
+        let v = vote_mode(&suite);
+        assert!(v.majority > 0.5 && v.prob_average > 0.5);
+
+        let hops = max_hops_sweep(&suite, &fog, 0.5, 61);
+        assert_eq!(hops.len(), 8);
+        // Energy monotone nondecreasing in the cap; avg_hops too.
+        for w in hops.windows(2) {
+            assert!(w[1].avg_hops + 1e-9 >= w[0].avg_hops);
+            assert!(w[1].energy_nj + 1e-9 >= w[0].energy_nj);
+        }
+        // Cap of 1 = single-grove evaluation.
+        assert!((hops[0].avg_hops - 1.0).abs() < 1e-9);
+
+        let curve = dropout_curve(&suite, &fog, 0.5, 61);
+        assert_eq!(curve.len(), fog.n_groves());
+
+        let imb = router_imbalance(8, 4000, 61);
+        assert_eq!(imb.len(), 3);
+        // Round-robin is perfectly balanced.
+        let rr = imb.iter().find(|(p, _)| *p == RouterPolicy::RoundRobin).unwrap();
+        assert!((rr.1 - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,102 @@
+//! Figure 4 — accuracy and EDP as a function of FoG topology
+//! (number of groves × decision trees per grove) at a fixed total tree
+//! count, per dataset.
+
+use super::suite::{fog_stats, train_suite, TrainedSuite};
+use crate::data::synthetic::DatasetProfile;
+use crate::energy::blocks::{AreaBlocks, EnergyBlocks};
+use crate::energy::model::{fog_cost, ClassifierKind};
+use crate::fog::tuner::{accuracy_optimal_threshold, threshold_sweep};
+use crate::fog::{topology, FieldOfGroves};
+
+/// One topology's operating point.
+#[derive(Clone, Debug)]
+pub struct TopoPoint {
+    pub n_groves: usize,
+    pub trees_per_grove: usize,
+    pub accuracy: f64,
+    pub avg_hops: f64,
+    pub edp_nj_ns: f64,
+    pub energy_nj: f64,
+}
+
+/// Sweep all factorizations of the trained forest for one dataset.
+pub fn run_dataset(suite: &TrainedSuite, seed: u64) -> Vec<TopoPoint> {
+    let eb = EnergyBlocks::default();
+    let ab = AreaBlocks::default();
+    let grid: Vec<f32> = (1..=10).map(|i| i as f32 * 0.1).collect();
+    topology::factorizations(suite.rf.n_trees())
+        .into_iter()
+        .map(|(n_groves, per_grove)| {
+            let fog = FieldOfGroves::from_forest_shuffled(&suite.rf, per_grove, Some(seed));
+            let sweep = threshold_sweep(&fog, &suite.data.test, &grid, seed);
+            let opt = accuracy_optimal_threshold(&sweep, 0.01);
+            let stats = fog_stats(&fog, opt.avg_hops, ClassifierKind::FogOpt);
+            let report = fog_cost(&stats, &eb, &ab);
+            TopoPoint {
+                n_groves,
+                trees_per_grove: per_grove,
+                accuracy: opt.accuracy,
+                avg_hops: opt.avg_hops,
+                edp_nj_ns: report.edp(),
+                energy_nj: report.energy_nj,
+            }
+        })
+        .collect()
+}
+
+/// Run Figure 4 for a set of profiles and print the series.
+pub fn run(profiles: &[DatasetProfile], seed: u64) -> Vec<(String, Vec<TopoPoint>)> {
+    profiles
+        .iter()
+        .map(|p| {
+            eprintln!("[fig4] {} ...", p.name);
+            let suite = train_suite(p, seed);
+            (p.name.to_string(), run_dataset(&suite, seed))
+        })
+        .collect()
+}
+
+pub fn print_series(all: &[(String, Vec<TopoPoint>)]) {
+    println!("== Figure 4: accuracy & EDP vs FoG topology (groves x trees/grove) ==");
+    for (name, points) in all {
+        println!("\n-- {name} --");
+        println!(
+            "{:<10}{:>12}{:>12}{:>16}{:>14}",
+            "topology", "accuracy%", "avg hops", "EDP (nJ*ns)", "energy (nJ)"
+        );
+        for p in points {
+            println!(
+                "{:<10}{:>12.1}{:>12.2}{:>16.1}{:>14.2}",
+                format!("{}x{}", p.n_groves, p.trees_per_grove),
+                p.accuracy * 100.0,
+                p.avg_hops,
+                p.edp_nj_ns,
+                p.energy_nj
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demo_topology_sweep() {
+        let suite = train_suite(&DatasetProfile::demo(), 41);
+        let points = run_dataset(&suite, 41);
+        // 16 trees → 5 factorizations.
+        assert_eq!(points.len(), 5);
+        // Every point positive and hops within bounds.
+        for p in &points {
+            assert!(p.edp_nj_ns > 0.0);
+            assert!(p.avg_hops >= 1.0 && p.avg_hops <= p.n_groves as f64);
+            assert!(p.accuracy > 0.4);
+        }
+        // Accuracy across topologies stays in a sane band (same forest).
+        let max = points.iter().map(|p| p.accuracy).fold(f64::MIN, f64::max);
+        let min = points.iter().map(|p| p.accuracy).fold(f64::MAX, f64::min);
+        assert!(max - min < 0.25, "accuracy spread {max}-{min}");
+    }
+}

@@ -1,0 +1,122 @@
+//! Figure 5 — run-time tuning: accuracy and EDP as a function of the
+//! confidence threshold for fixed topologies (the paper shows 8×2 and
+//! 4×4), across all datasets.
+
+use super::suite::{fog_stats, train_suite, TrainedSuite};
+use crate::data::synthetic::DatasetProfile;
+use crate::energy::blocks::{AreaBlocks, EnergyBlocks};
+use crate::energy::model::{fog_cost, ClassifierKind};
+use crate::fog::tuner::threshold_sweep;
+use crate::fog::FieldOfGroves;
+
+/// One (threshold, accuracy, EDP) point.
+#[derive(Clone, Debug)]
+pub struct ThresholdPoint {
+    pub threshold: f32,
+    pub accuracy: f64,
+    pub avg_hops: f64,
+    pub edp_nj_ns: f64,
+    pub energy_nj: f64,
+}
+
+/// Threshold sweep for one dataset at a fixed topology `(groves, trees)`.
+pub fn run_dataset(
+    suite: &TrainedSuite,
+    topo: (usize, usize),
+    thresholds: &[f32],
+    seed: u64,
+) -> anyhow::Result<Vec<ThresholdPoint>> {
+    anyhow::ensure!(
+        topo.0 * topo.1 == suite.rf.n_trees(),
+        "topology {}x{} != {} trees",
+        topo.0,
+        topo.1,
+        suite.rf.n_trees()
+    );
+    let eb = EnergyBlocks::default();
+    let ab = AreaBlocks::default();
+    let fog = FieldOfGroves::from_forest_shuffled(&suite.rf, topo.1, Some(seed));
+    let sweep = threshold_sweep(&fog, &suite.data.test, thresholds, seed);
+    Ok(sweep
+        .into_iter()
+        .map(|p| {
+            let stats = fog_stats(&fog, p.avg_hops, ClassifierKind::FogOpt);
+            let report = fog_cost(&stats, &eb, &ab);
+            ThresholdPoint {
+                threshold: p.threshold,
+                accuracy: p.accuracy,
+                avg_hops: p.avg_hops,
+                edp_nj_ns: report.edp(),
+                energy_nj: report.energy_nj,
+            }
+        })
+        .collect())
+}
+
+/// Full Figure 5: both topologies over all profiles.
+pub fn run(
+    profiles: &[DatasetProfile],
+    topo: (usize, usize),
+    seed: u64,
+) -> Vec<(String, Vec<ThresholdPoint>)> {
+    let grid = crate::fog::tuner::default_grid();
+    profiles
+        .iter()
+        .map(|p| {
+            eprintln!("[fig5] {} @ {}x{} ...", p.name, topo.0, topo.1);
+            let suite = train_suite(p, seed);
+            let pts = run_dataset(&suite, topo, &grid, seed).expect("topology divides forest");
+            (p.name.to_string(), pts)
+        })
+        .collect()
+}
+
+pub fn print_series(topo: (usize, usize), all: &[(String, Vec<ThresholdPoint>)]) {
+    println!(
+        "== Figure 5: run-time tuning via threshold, topology {}x{} ==",
+        topo.0, topo.1
+    );
+    for (name, points) in all {
+        println!("\n-- {name} --");
+        println!(
+            "{:<12}{:>12}{:>12}{:>16}{:>14}",
+            "threshold", "accuracy%", "avg hops", "EDP (nJ*ns)", "energy (nJ)"
+        );
+        for p in points {
+            println!(
+                "{:<12.2}{:>12.1}{:>12.2}{:>16.1}{:>14.2}",
+                p.threshold,
+                p.accuracy * 100.0,
+                p.avg_hops,
+                p.edp_nj_ns,
+                p.energy_nj
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_sweep_monotone_energy() {
+        let suite = train_suite(&DatasetProfile::demo(), 51);
+        let pts =
+            run_dataset(&suite, (8, 2), &[0.1, 0.3, 0.5, 0.7, 0.9], 51).unwrap();
+        assert_eq!(pts.len(), 5);
+        // Energy/EDP monotone nondecreasing in threshold (more hops).
+        for w in pts.windows(2) {
+            assert!(w[1].energy_nj + 1e-9 >= w[0].energy_nj);
+            assert!(w[1].avg_hops + 1e-9 >= w[0].avg_hops);
+        }
+        // Tunability: high threshold costs strictly more than low.
+        assert!(pts[4].energy_nj > pts[0].energy_nj * 1.2);
+    }
+
+    #[test]
+    fn wrong_topology_rejected() {
+        let suite = train_suite(&DatasetProfile::demo(), 52);
+        assert!(run_dataset(&suite, (3, 4), &[0.5], 52).is_err());
+    }
+}

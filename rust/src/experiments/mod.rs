@@ -1,0 +1,19 @@
+//! Experiment harnesses regenerating every table and figure of the
+//! paper's evaluation (§4):
+//!
+//! * [`suite`]  — shared training/evaluation of all seven classifiers on
+//!   one dataset, with the paper's design flow (budgeted RF training,
+//!   FoG topology selection at minimum EDP, FoG_opt threshold search).
+//! * [`table1`] — Table 1: accuracy (top), energy/classification
+//!   (bottom), area row, and the §1/§5 headline ratios.
+//! * [`fig4`]   — Figure 4: accuracy & EDP vs (groves × trees/grove).
+//! * [`fig5`]   — Figure 5: accuracy & EDP vs confidence threshold for
+//!   the 8×2 and 4×4 topologies.
+//! * [`ablations`] — vote-mode / max_hops / grove-dropout / router-policy
+//!   ablations on the design choices.
+
+pub mod ablations;
+pub mod fig4;
+pub mod fig5;
+pub mod suite;
+pub mod table1;

@@ -1,0 +1,162 @@
+//! Table 1 — accuracy (top), energy per classification in nJ (bottom)
+//! and area (mm²) for SVM-LR/RBF, MLP, CNN, RF, FoG_max, FoG_opt across
+//! the five datasets; plus the §1/§5 headline energy ratios.
+
+use super::suite::{evaluate_suite, train_suite, Row};
+use crate::data::synthetic::DatasetProfile;
+use crate::energy::model::ClassifierKind;
+
+pub const COLUMNS: [ClassifierKind; 7] = [
+    ClassifierKind::SvmLinear,
+    ClassifierKind::SvmRbf,
+    ClassifierKind::Mlp,
+    ClassifierKind::Cnn,
+    ClassifierKind::RandomForest,
+    ClassifierKind::FogMax,
+    ClassifierKind::FogOpt,
+];
+
+/// One dataset's worth of results.
+pub struct DatasetResult {
+    pub name: String,
+    pub rows: Vec<Row>,
+}
+
+impl DatasetResult {
+    pub fn get(&self, kind: ClassifierKind) -> &Row {
+        self.rows.iter().find(|r| r.kind == kind).expect("row")
+    }
+}
+
+/// Run the Table-1 experiment over `profiles`.
+pub fn run(profiles: &[DatasetProfile], seed: u64) -> Vec<DatasetResult> {
+    profiles
+        .iter()
+        .map(|p| {
+            eprintln!("[table1] training suite on {} ...", p.name);
+            let suite = train_suite(p, seed);
+            let rows = evaluate_suite(&suite, seed);
+            DatasetResult { name: p.name.to_string(), rows }
+        })
+        .collect()
+}
+
+/// Geometric-mean energy ratio of `a` over `b` across datasets.
+pub fn energy_ratio(results: &[DatasetResult], a: ClassifierKind, b: ClassifierKind) -> f64 {
+    let mut log_sum = 0.0;
+    for r in results {
+        log_sum += (r.get(a).report.energy_nj / r.get(b).report.energy_nj).ln();
+    }
+    (log_sum / results.len() as f64).exp()
+}
+
+/// Mean accuracy difference (percentage points) of `a` minus `b`.
+pub fn accuracy_gap(results: &[DatasetResult], a: ClassifierKind, b: ClassifierKind) -> f64 {
+    results
+        .iter()
+        .map(|r| (r.get(a).accuracy - r.get(b).accuracy) * 100.0)
+        .sum::<f64>()
+        / results.len() as f64
+}
+
+/// Print the full table in the paper's layout.
+pub fn print_table(results: &[DatasetResult]) {
+    let header = || {
+        print!("{:<14}", "Dataset");
+        for k in COLUMNS {
+            print!("{:>9}", k.label());
+        }
+        println!();
+    };
+    println!("== Table 1 (top): accuracy % ==");
+    header();
+    for r in results {
+        print!("{:<14}", r.name);
+        for k in COLUMNS {
+            print!("{:>9.0}", r.get(k).accuracy * 100.0);
+        }
+        println!();
+    }
+    println!("\n== Table 1 (bottom): energy per classification, nJ ==");
+    header();
+    for r in results {
+        print!("{:<14}", r.name);
+        for k in COLUMNS {
+            let e = r.get(k).report.energy_nj;
+            if e >= 100.0 {
+                print!("{:>9.0}", e);
+            } else {
+                print!("{:>9.1}", e);
+            }
+        }
+        println!();
+    }
+    println!("\n== Table 1: area, mm^2 (mean across datasets) ==");
+    header();
+    print!("{:<14}", "Area");
+    for k in COLUMNS {
+        let mean: f64 =
+            results.iter().map(|r| r.get(k).report.area_mm2).sum::<f64>() / results.len() as f64;
+        print!("{:>9.2}", mean);
+    }
+    println!();
+}
+
+/// Print the headline ratios the abstract/conclusion claims.
+pub fn print_headline(results: &[DatasetResult]) {
+    use ClassifierKind::*;
+    println!("\n== Headline ratios (paper: §1/§5; geometric mean across datasets) ==");
+    let pairs = [
+        (RandomForest, FogOpt, "RF / FoG_opt", "≈1.48x"),
+        (SvmRbf, FogOpt, "SVM_rbf / FoG_opt", "≈24x"),
+        (Mlp, FogOpt, "MLP / FoG_opt", "≈2.5x"),
+        (Cnn, FogOpt, "CNN / FoG_opt", "≈34.7x"),
+        (FogOpt, SvmLinear, "FoG_opt / SVM_lr", "≈6.5-10x"),
+        (SvmRbf, RandomForest, "SVM_rbf / RF", "≈15x"),
+        (Cnn, RandomForest, "CNN / RF", "≈23.5x"),
+    ];
+    for (a, b, label, paper) in pairs {
+        println!(
+            "  {label:<22} measured {:>8.2}x   (paper {paper})",
+            energy_ratio(results, a, b)
+        );
+    }
+    println!(
+        "  FoG_opt accuracy vs SVM_lr: {:+.1} pts (paper ≈ +15-18)",
+        accuracy_gap(results, FogOpt, SvmLinear)
+    );
+    println!(
+        "  FoG_opt accuracy vs RF:     {:+.1} pts (paper ≈ -3.2)",
+        accuracy_gap(results, FogOpt, RandomForest)
+    );
+    println!(
+        "  FoG_opt accuracy vs CNN:    {:+.1} pts (paper ≈ -4)",
+        accuracy_gap(results, FogOpt, ClassifierKind::Cnn)
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demo_table_runs_and_orders() {
+        let results = run(&[DatasetProfile::demo()], 7);
+        assert_eq!(results.len(), 1);
+        let r = &results[0];
+        assert_eq!(r.rows.len(), 7);
+        // Energy ordering that must reproduce: LR < FoG_opt < RF, CNN worst
+        // among the GEMM family.
+        let lr = r.get(ClassifierKind::SvmLinear).report.energy_nj;
+        let fog = r.get(ClassifierKind::FogOpt).report.energy_nj;
+        let rf = r.get(ClassifierKind::RandomForest).report.energy_nj;
+        let cnn = r.get(ClassifierKind::Cnn).report.energy_nj;
+        assert!(lr < fog && fog < rf, "lr {lr} fog {fog} rf {rf}");
+        // On the 8-feature demo profile the CNN is tiny, so the paper's
+        // CNN≫MLP gap only appears at realistic feature counts (covered
+        // by the penbase/mnist runs); here we just require CNN > SVM_lr.
+        assert!(cnn > lr, "cnn {cnn} lr {lr}");
+        // Ratios are finite and positive.
+        assert!(energy_ratio(&results, ClassifierKind::RandomForest, ClassifierKind::FogOpt) > 1.0);
+    }
+}

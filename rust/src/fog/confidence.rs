@@ -1,0 +1,78 @@
+//! `MaxDiff` — the paper's confidence score (Algorithm 2, lines 16–19).
+//!
+//! Confidence of a (normalized) probability array is the difference between
+//! its two largest values: a grove that answers `{0.32, 0.35, 0.33}` is
+//! nearly clueless (0.02), one that answers `{0.9, 0.05, 0.05}` is sure
+//! (0.85). For multi-output classification the paper takes the **minimum**
+//! of the per-output differences ("minimum difference of maximum values",
+//! footnote 1) — the ensemble must be confident about *every* output.
+
+use crate::util::two_max;
+
+/// Confidence of one probability array.
+#[inline]
+pub fn max_diff(prob: &[f32]) -> f32 {
+    let (m1, m2) = two_max(prob);
+    (m1 - m2).abs()
+}
+
+/// Multi-output confidence: minimum `max_diff` across outputs, where
+/// `probs` holds one probability array per output head.
+pub fn max_diff_multi(probs: &[&[f32]]) -> f32 {
+    probs
+        .iter()
+        .map(|p| max_diff(p))
+        .fold(f32::INFINITY, f32::min)
+        .min(f32::MAX)
+}
+
+/// True when the confidence meets the stopping threshold (Algorithm 2,
+/// line 9: `MaxDiff(prob_norm) >= thresh`).
+#[inline]
+pub fn confident(prob: &[f32], threshold: f32) -> bool {
+    max_diff(prob) >= threshold
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_worked_example() {
+        // §3.2.2: G0 returns {0.32, 0.35, 0.33} → confidence 0.02 < 0.1.
+        let g0 = [0.32f32, 0.35, 0.33];
+        assert!((max_diff(&g0) - 0.02).abs() < 1e-6);
+        assert!(!confident(&g0, 0.1));
+        // After averaging with G1: {0.3, 0.4, 0.3} → 0.1 ≥ 0.1 → done.
+        // (f32 rounding makes the diff 0.09999999…, so compare with an
+        // epsilon-adjusted threshold as the fixed-point hardware would.)
+        let avg = [0.3f32, 0.4, 0.3];
+        assert!((max_diff(&avg) - 0.1).abs() < 1e-6);
+        assert!(confident(&avg, 0.1 - 1e-6));
+    }
+
+    #[test]
+    fn certain_distribution() {
+        assert!((max_diff(&[1.0, 0.0, 0.0]) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn uniform_distribution_zero() {
+        assert!(max_diff(&[0.25; 4]) < 1e-6);
+    }
+
+    #[test]
+    fn multi_output_takes_min() {
+        let out_a = [0.9f32, 0.1]; // diff 0.8
+        let out_b = [0.55f32, 0.45]; // diff 0.1
+        let c = max_diff_multi(&[&out_a, &out_b]);
+        assert!((c - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn two_class_edge() {
+        assert!((max_diff(&[0.7, 0.3]) - 0.4).abs() < 1e-6);
+        // single-class degenerate array: confidence 0 (max1 == max2)
+        assert_eq!(max_diff(&[1.0]), 0.0);
+    }
+}

@@ -1,0 +1,155 @@
+//! Grove/tree disabling — the paper's graceful-degradation claim.
+//!
+//! §3.1: "Turning off DT blocks generally leads to a graceful degradation
+//! of accuracy, as the predicted label for a new test example is
+//! independent [per tree], in contrast to CNN and MLP where each node is
+//! connected to many other nodes." This module makes that claim testable:
+//! disable a subset of groves (power-gated tiles) or individual trees and
+//! re-evaluate; the ring simply skips dead groves when forwarding.
+
+use super::eval::{EvalResult, FogParams};
+use super::split::FieldOfGroves;
+use crate::util::rng::Rng;
+
+impl FieldOfGroves {
+    /// A copy of this FoG with the given groves removed (power-gated
+    /// tiles are skipped by the ring; evaluation-wise they simply don't
+    /// exist). Panics if all groves would be disabled.
+    pub fn with_groves_disabled(&self, disabled: &[usize]) -> FieldOfGroves {
+        let groves: Vec<_> = self
+            .groves
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !disabled.contains(i))
+            .map(|(_, g)| g.clone())
+            .collect();
+        assert!(!groves.is_empty(), "all groves disabled");
+        FieldOfGroves {
+            groves,
+            n_features: self.n_features,
+            n_classes: self.n_classes,
+            depth: self.depth,
+        }
+    }
+
+    /// A copy with `fraction` of all trees removed at random (deterministic
+    /// in `seed`); empty groves are dropped. Models random DT-block
+    /// failures rather than whole-tile gating.
+    pub fn with_tree_dropout(&self, fraction: f64, seed: u64) -> FieldOfGroves {
+        assert!((0.0..1.0).contains(&fraction));
+        let mut rng = Rng::new(seed);
+        let total: usize = self.groves.iter().map(|g| g.n_trees()).sum();
+        let drop = ((total as f64) * fraction).round() as usize;
+        let mut kill: Vec<usize> = rng.sample_indices(total, drop.min(total - 1));
+        kill.sort_unstable();
+        let mut groves = Vec::new();
+        let mut idx = 0usize;
+        for g in &self.groves {
+            let trees: Vec<_> = g
+                .trees
+                .iter()
+                .filter(|_| {
+                    let dead = kill.binary_search(&idx).is_ok();
+                    idx += 1;
+                    !dead
+                })
+                .cloned()
+                .collect();
+            if !trees.is_empty() {
+                groves.push(super::grove::Grove::new(trees));
+            }
+        }
+        assert!(!groves.is_empty());
+        FieldOfGroves {
+            groves,
+            n_features: self.n_features,
+            n_classes: self.n_classes,
+            depth: self.depth,
+        }
+    }
+}
+
+/// Accuracy as a function of disabled-grove count (the degradation curve).
+pub fn degradation_curve(
+    fog: &FieldOfGroves,
+    x: &[f32],
+    y: &[usize],
+    params: &FogParams,
+    seed: u64,
+) -> Vec<(usize, f64)> {
+    let mut rng = Rng::new(seed);
+    let n = fog.n_groves();
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut out = Vec::with_capacity(n);
+    for k in 0..n {
+        let disabled = &order[..k];
+        let sub = fog.with_groves_disabled(disabled);
+        let res: EvalResult = sub.evaluate(x, params);
+        out.push((k, res.accuracy(y)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetProfile};
+    use crate::forest::{ForestParams, RandomForest};
+
+    fn setup() -> (FieldOfGroves, crate::data::Dataset) {
+        let ds = generate(&DatasetProfile::demo(), 211);
+        let rf = RandomForest::fit(&ds.train, &ForestParams::default(), 1);
+        (FieldOfGroves::from_forest(&rf, 2), ds) // 8 groves of 2
+    }
+
+    #[test]
+    fn disabling_groves_degrades_gracefully() {
+        let (fog, ds) = setup();
+        let params = FogParams { threshold: 0.5, max_hops: 8, seed: 2 };
+        let curve = degradation_curve(&fog, &ds.test.x, &ds.test.y, &params, 3);
+        assert_eq!(curve.len(), 8);
+        let full = curve[0].1;
+        let half = curve[4].1;
+        // Half the groves gone: accuracy degrades but stays usable — the
+        // paper's "graceful" claim (no cliff to chance level).
+        assert!(full > 0.7, "full acc {full}");
+        assert!(half > full - 0.25, "half {half} vs full {full}");
+        assert!(half > 1.5 / 3.0, "half {half} should beat chance comfortably");
+    }
+
+    #[test]
+    fn tree_dropout_partitions_shrink() {
+        let (fog, _) = setup();
+        let dropped = fog.with_tree_dropout(0.25, 4);
+        let total: usize = dropped.groves.iter().map(|g| g.n_trees()).sum();
+        assert_eq!(total, 12); // 16 * 0.75
+    }
+
+    #[test]
+    fn tree_dropout_accuracy_degrades_smoothly() {
+        let (fog, ds) = setup();
+        let params = FogParams { threshold: 0.5, max_hops: 8, seed: 5 };
+        let full = fog.evaluate(&ds.test.x, &params).accuracy(&ds.test.y);
+        let half = fog
+            .with_tree_dropout(0.5, 6)
+            .evaluate(&ds.test.x, &params)
+            .accuracy(&ds.test.y);
+        assert!(half > full - 0.3, "half {half} vs full {full}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn disabling_everything_panics() {
+        let (fog, _) = setup();
+        fog.with_groves_disabled(&(0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn disabled_grove_set_respected() {
+        let (fog, _) = setup();
+        let sub = fog.with_groves_disabled(&[0, 3, 7]);
+        assert_eq!(sub.n_groves(), 5);
+        sub.validate_partition(10).unwrap(); // 5 groves × 2 trees
+    }
+}

@@ -1,0 +1,250 @@
+//! Algorithm 2 — evaluating the Field of Groves classifier.
+//!
+//! For every input: start at a random grove (avoiding bias), accumulate
+//! grove probability estimates around the ring, and stop as soon as the
+//! normalized distribution's `MaxDiff` confidence reaches the threshold or
+//! `max_hops` groves have contributed. The per-input hop count is the
+//! quantity that makes FoG energy-proportional: easy inputs stop after one
+//! grove.
+
+use super::confidence::max_diff;
+use super::split::FieldOfGroves;
+use crate::util::rng::Rng;
+use crate::util::threadpool::par_map;
+
+/// Run-time tunables (paper §3.2.2 "Run-time Tunability").
+#[derive(Clone, Copy, Debug)]
+pub struct FogParams {
+    /// Stopping threshold `0 < thresh ≤ 1`; `≥ 1` forces full evaluation
+    /// (the paper's FoG_max configuration).
+    pub threshold: f32,
+    /// Upper limit on contributing groves; clamped to `n_groves`.
+    pub max_hops: usize,
+    /// Seed for the random starting grove of each input.
+    pub seed: u64,
+}
+
+impl FogParams {
+    /// FoG_max: threshold at maximum forces every grove to contribute,
+    /// making FoG behave exactly like the underlying RF (§4.2).
+    pub fn fog_max(n_groves: usize) -> FogParams {
+        FogParams { threshold: 1.0 + 1e-6, max_hops: n_groves, seed: 0 }
+    }
+}
+
+/// Per-input evaluation record.
+#[derive(Clone, Debug)]
+pub struct InputOutcome {
+    /// Normalized probability distribution at stop time.
+    pub prob: Vec<f32>,
+    /// Number of groves that contributed (≥ 1).
+    pub hops: usize,
+    /// Predicted label.
+    pub label: usize,
+    /// Confidence at stop time.
+    pub confidence: f32,
+}
+
+/// Batch evaluation result.
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    pub outcomes: Vec<InputOutcome>,
+    pub n_groves: usize,
+}
+
+impl EvalResult {
+    pub fn predictions(&self) -> Vec<usize> {
+        self.outcomes.iter().map(|o| o.label).collect()
+    }
+
+    pub fn accuracy(&self, truth: &[usize]) -> f64 {
+        crate::util::stats::accuracy(&self.predictions(), truth)
+    }
+
+    /// Mean groves consulted per input — proportional to FoG energy.
+    pub fn avg_hops(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            return 0.0;
+        }
+        self.outcomes.iter().map(|o| o.hops as f64).sum::<f64>() / self.outcomes.len() as f64
+    }
+
+    /// Histogram of hop counts (1..=n_groves).
+    pub fn hop_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.n_groves + 1];
+        for o in &self.outcomes {
+            h[o.hops.min(self.n_groves)] += 1;
+        }
+        h
+    }
+}
+
+impl FieldOfGroves {
+    /// Algorithm 2 over a row-major batch `x: [n, n_features]`. The
+    /// paper's `parallel for` is realized with the thread pool; each input
+    /// draws its starting grove from a per-input deterministic stream so
+    /// results are independent of thread scheduling.
+    pub fn evaluate(&self, x: &[f32], params: &FogParams) -> EvalResult {
+        let f = self.n_features;
+        assert_eq!(x.len() % f, 0, "ragged batch");
+        let n = x.len() / f;
+        let n_groves = self.n_groves();
+        let max_hops = params.max_hops.clamp(1, n_groves);
+
+        let outcomes = par_map(n, |i| {
+            let mut rng = Rng::new(params.seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            let start = rng.gen_range(n_groves); // line 3: random start grove
+            self.evaluate_one(&x[i * f..(i + 1) * f], start, params.threshold, max_hops)
+        });
+        EvalResult { outcomes, n_groves }
+    }
+
+    /// Algorithm 2 body for a single input with an explicit start grove.
+    pub fn evaluate_one(
+        &self,
+        x: &[f32],
+        start: usize,
+        threshold: f32,
+        max_hops: usize,
+    ) -> InputOutcome {
+        let n_groves = self.n_groves();
+        let max_hops = max_hops.clamp(1, n_groves);
+        let mut prob = vec![0.0f32; self.n_classes]; // line 4
+        let mut norm = vec![0.0f32; self.n_classes];
+        let mut hops = 0usize;
+        for j in 0..max_hops {
+            let index = (start + j) % n_groves; // line 6
+            self.groves[index].accumulate_proba(x, &mut prob); // line 7
+            hops = j + 1;
+            let inv = 1.0 / hops as f32; // line 8
+            for (nm, &p) in norm.iter_mut().zip(&prob) {
+                *nm = p * inv;
+            }
+            if max_diff(&norm) >= threshold {
+                break; // line 9-10
+            }
+        }
+        let label = crate::util::argmax(&norm);
+        let confidence = max_diff(&norm);
+        InputOutcome { prob: norm, hops, label, confidence }
+    }
+
+    /// Full-forest reference: every grove contributes (what FoG_max
+    /// computes); equals the RF probability average over all trees when
+    /// all groves have equal size.
+    pub fn full_proba(&self, x: &[f32]) -> Vec<f32> {
+        let mut prob = vec![0.0f32; self.n_classes];
+        for g in &self.groves {
+            g.accumulate_proba(x, &mut prob);
+        }
+        let inv = 1.0 / self.n_groves() as f32;
+        prob.iter_mut().for_each(|p| *p *= inv);
+        prob
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetProfile};
+    use crate::forest::{ForestParams, RandomForest, VoteMode};
+
+    fn setup() -> (FieldOfGroves, crate::data::Dataset, RandomForest) {
+        let ds = generate(&DatasetProfile::demo(), 101);
+        let rf = RandomForest::fit(&ds.train, &ForestParams::default(), 1);
+        let fog = FieldOfGroves::from_forest(&rf, 4); // 4x4
+        (fog, ds, rf)
+    }
+
+    #[test]
+    fn threshold_one_visits_all_groves() {
+        let (fog, ds, _) = setup();
+        let params = FogParams::fog_max(fog.n_groves());
+        let res = fog.evaluate(&ds.test.x, &params);
+        assert!(res.outcomes.iter().all(|o| o.hops == fog.n_groves()));
+    }
+
+    #[test]
+    fn fog_max_matches_rf_prob_average() {
+        let (fog, ds, rf) = setup();
+        let params = FogParams::fog_max(fog.n_groves());
+        let res = fog.evaluate(&ds.test.x, &params);
+        for (i, o) in res.outcomes.iter().enumerate().take(50) {
+            let rf_p = rf.predict_proba(ds.test.row(i));
+            for (a, b) in o.prob.iter().zip(&rf_p) {
+                assert!((a - b).abs() < 1e-5, "{:?} vs {:?}", o.prob, rf_p);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_threshold_single_hop() {
+        let (fog, ds, _) = setup();
+        let params = FogParams { threshold: 0.0, max_hops: 4, seed: 2 };
+        let res = fog.evaluate(&ds.test.x, &params);
+        assert!(res.outcomes.iter().all(|o| o.hops == 1));
+        assert!((res.avg_hops() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hops_monotone_in_threshold() {
+        let (fog, ds, _) = setup();
+        let mut last = 0.0;
+        for thr in [0.0f32, 0.2, 0.4, 0.6, 0.8, 1.01] {
+            let params = FogParams { threshold: thr, max_hops: 4, seed: 3 };
+            let res = fog.evaluate(&ds.test.x, &params);
+            let h = res.avg_hops();
+            assert!(h + 1e-9 >= last, "thr {thr}: hops {h} < {last}");
+            last = h;
+        }
+    }
+
+    #[test]
+    fn max_hops_respected() {
+        let (fog, ds, _) = setup();
+        let params = FogParams { threshold: 2.0, max_hops: 2, seed: 4 };
+        let res = fog.evaluate(&ds.test.x, &params);
+        assert!(res.outcomes.iter().all(|o| o.hops <= 2));
+    }
+
+    #[test]
+    fn accuracy_reasonable_and_close_to_rf() {
+        let (fog, ds, rf) = setup();
+        let rf_acc = rf.accuracy(&ds.test, VoteMode::ProbAverage);
+        let params = FogParams { threshold: 0.5, max_hops: 4, seed: 5 };
+        let res = fog.evaluate(&ds.test.x, &params);
+        let fog_acc = res.accuracy(&ds.test.y);
+        assert!(fog_acc > rf_acc - 0.15, "fog {fog_acc} rf {rf_acc}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (fog, ds, _) = setup();
+        let params = FogParams { threshold: 0.3, max_hops: 4, seed: 6 };
+        let a = fog.evaluate(&ds.test.x, &params);
+        let b = fog.evaluate(&ds.test.x, &params);
+        assert_eq!(a.predictions(), b.predictions());
+        assert_eq!(a.avg_hops(), b.avg_hops());
+    }
+
+    #[test]
+    fn hop_histogram_sums_to_n() {
+        let (fog, ds, _) = setup();
+        let params = FogParams { threshold: 0.4, max_hops: 4, seed: 7 };
+        let res = fog.evaluate(&ds.test.x, &params);
+        let h = res.hop_histogram();
+        assert_eq!(h.iter().sum::<usize>(), ds.test.len());
+        assert_eq!(h[0], 0, "no input can take zero hops");
+    }
+
+    #[test]
+    fn probabilities_normalized_at_stop() {
+        let (fog, ds, _) = setup();
+        let params = FogParams { threshold: 0.35, max_hops: 4, seed: 8 };
+        let res = fog.evaluate(&ds.test.x, &params);
+        for o in res.outcomes.iter().take(100) {
+            let s: f32 = o.prob.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "sum {s}");
+        }
+    }
+}

@@ -1,0 +1,131 @@
+//! A grove: a disjoint subset of the forest's trees acting as one
+//! probability estimator (paper §3.2.1). The grove is the unit of
+//! computation in FoG — the PE of one hardware tile evaluates all its
+//! trees on an input and emits the *sum* of leaf distributions (the hop
+//! loop divides by the number of contributing groves, Algorithm 2 line 8;
+//! keeping sums avoids re-scaling on every hop).
+
+use crate::dt::FlatTree;
+
+/// One grove of flattened trees (homogeneous depth).
+#[derive(Clone, Debug)]
+pub struct Grove {
+    pub trees: Vec<FlatTree>,
+    pub n_features: usize,
+    pub n_classes: usize,
+}
+
+impl Grove {
+    pub fn new(trees: Vec<FlatTree>) -> Grove {
+        assert!(!trees.is_empty(), "empty grove");
+        let f = trees[0].n_features;
+        let c = trees[0].n_classes;
+        for t in &trees {
+            assert_eq!((t.n_features, t.n_classes), (f, c));
+        }
+        Grove { trees, n_features: f, n_classes: c }
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+
+    pub fn depth(&self) -> usize {
+        self.trees.iter().map(|t| t.depth).max().unwrap_or(0)
+    }
+
+    /// Add this grove's *averaged* distribution into `acc` (so `acc`
+    /// accumulates one unit of probability mass per grove, and the hop
+    /// loop's `prob / (j+1)` normalization matches Algorithm 2 exactly).
+    #[inline]
+    pub fn accumulate_proba(&self, x: &[f32], acc: &mut [f32]) {
+        debug_assert_eq!(acc.len(), self.n_classes);
+        let inv = 1.0 / self.trees.len() as f32;
+        for t in &self.trees {
+            let leaf = t.predict_proba(x);
+            for (a, &p) in acc.iter_mut().zip(leaf) {
+                *a += p * inv;
+            }
+        }
+    }
+
+    /// This grove's own normalized estimate (fresh buffer).
+    pub fn predict_proba(&self, x: &[f32]) -> Vec<f32> {
+        let mut acc = vec![0.0f32; self.n_classes];
+        self.accumulate_proba(x, &mut acc);
+        acc
+    }
+
+    /// Comparator ops per evaluation: each flat tree walks exactly `depth`
+    /// levels (complete-tree layout), matching the hardware PE whose
+    /// latency is depth-bound (paper §3.2.2 "Processing Element").
+    pub fn ops_per_eval(&self) -> usize {
+        self.trees.iter().map(|t| t.depth).sum()
+    }
+
+    /// Total VMEM bytes for the grove's node tables (perf estimates).
+    pub fn vmem_bytes(&self) -> usize {
+        self.trees.iter().map(|t| t.vmem_bytes()).sum()
+    }
+
+    /// Bytes of *sparse* node storage the hardware would provision: live
+    /// internal nodes (finite threshold) at 6 B each + one byte per
+    /// leaf-class slot of the live leaves (complete-tree padding is a
+    /// kernel-layout artifact, not real storage).
+    pub fn sparse_storage_bytes(&self) -> usize {
+        self.trees
+            .iter()
+            .map(|t| {
+                let live = t.thr.iter().filter(|v| v.is_finite() && **v < 1e37).count();
+                live * 6 + (live + 1) * t.n_classes
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetProfile};
+    use crate::forest::{ForestParams, RandomForest};
+
+    fn grove() -> (Grove, crate::data::Dataset) {
+        let ds = generate(&DatasetProfile::demo(), 81);
+        let rf = RandomForest::fit(&ds.train, &ForestParams::small(), 1);
+        let flats = rf.flatten(rf.max_depth());
+        (Grove::new(flats), ds)
+    }
+
+    #[test]
+    fn proba_normalized() {
+        let (g, ds) = grove();
+        for i in 0..10 {
+            let p = g.predict_proba(ds.test.row(i));
+            let s: f32 = p.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "sum {s}");
+        }
+    }
+
+    #[test]
+    fn accumulate_adds_one_unit() {
+        let (g, ds) = grove();
+        let mut acc = vec![0.0f32; g.n_classes];
+        g.accumulate_proba(ds.test.row(0), &mut acc);
+        g.accumulate_proba(ds.test.row(0), &mut acc);
+        let s: f32 = acc.iter().sum();
+        assert!((s - 2.0).abs() < 1e-4, "two groves add two units, got {s}");
+    }
+
+    #[test]
+    fn ops_metric() {
+        let (g, _) = grove();
+        assert_eq!(g.ops_per_eval(), g.trees.iter().map(|t| t.depth).sum());
+        assert!(g.vmem_bytes() > 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_grove_panics() {
+        Grove::new(vec![]);
+    }
+}

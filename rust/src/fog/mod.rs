@@ -1,0 +1,24 @@
+//! Field of Groves — the paper's contribution.
+//!
+//! * [`grove`] — a grove: a disjoint subset of the forest's trees that
+//!   produces a class-probability estimate.
+//! * [`confidence`] — the `MaxDiff` confidence score (Algorithm 2's
+//!   subroutine, including the multi-output `Min` variant of footnote 1).
+//! * [`split`] — Algorithm 1: split a pre-trained RF into groves.
+//! * [`eval`] — Algorithm 2: confidence-gated hop evaluation.
+//! * [`topology`] — enumerate `a×b` factorizations (Figure 4's axis).
+//! * [`tuner`] — threshold sweeps and the accuracy-optimal operating
+//!   point (the paper's FoG_opt).
+
+pub mod confidence;
+pub mod dropout;
+pub mod eval;
+pub mod grove;
+pub mod multi_output;
+pub mod split;
+pub mod topology;
+pub mod tuner;
+
+pub use eval::{EvalResult, FogParams};
+pub use grove::Grove;
+pub use split::FieldOfGroves;

@@ -1,0 +1,102 @@
+//! Multi-output classification (paper footnote 1 + Algorithm 2's MaxDiff
+//! subroutine note): when a sample carries several label heads, the
+//! stopping confidence is the **minimum** of the per-head MaxDiffs — the
+//! ensemble must be confident about *every* output before releasing the
+//! result ("minimum difference of the maximum values").
+//!
+//! Heads are modelled as disjoint slices of the class axis: a forest
+//! trained on the cartesian label space emits one concatenated
+//! distribution; `OutputLayout` says where each head begins and ends.
+
+use super::confidence::max_diff;
+
+/// Partition of the class axis into output heads.
+#[derive(Clone, Debug)]
+pub struct OutputLayout {
+    /// Head boundaries: head `h` covers `bounds[h]..bounds[h+1]`.
+    bounds: Vec<usize>,
+}
+
+impl OutputLayout {
+    /// Single-head layout over `n_classes` (the default everywhere else).
+    pub fn single(n_classes: usize) -> OutputLayout {
+        OutputLayout { bounds: vec![0, n_classes] }
+    }
+
+    /// Heads of the given sizes.
+    pub fn heads(sizes: &[usize]) -> OutputLayout {
+        assert!(!sizes.is_empty());
+        assert!(sizes.iter().all(|&s| s >= 2), "head needs >= 2 classes");
+        let mut bounds = vec![0usize];
+        for &s in sizes {
+            bounds.push(bounds.last().unwrap() + s);
+        }
+        OutputLayout { bounds }
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    pub fn total_classes(&self) -> usize {
+        *self.bounds.last().unwrap()
+    }
+
+    /// Slice of `prob` for head `h`.
+    pub fn head<'a>(&self, prob: &'a [f32], h: usize) -> &'a [f32] {
+        &prob[self.bounds[h]..self.bounds[h + 1]]
+    }
+
+    /// The paper's multi-output confidence: min over heads of MaxDiff.
+    pub fn confidence(&self, prob: &[f32]) -> f32 {
+        debug_assert_eq!(prob.len(), self.total_classes());
+        (0..self.n_heads())
+            .map(|h| max_diff(self.head(prob, h)))
+            .fold(f32::INFINITY, f32::min)
+    }
+
+    /// Per-head argmax labels.
+    pub fn labels(&self, prob: &[f32]) -> Vec<usize> {
+        (0..self.n_heads())
+            .map(|h| crate::util::argmax(self.head(prob, h)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_head_equals_plain_maxdiff() {
+        let layout = OutputLayout::single(4);
+        let p = [0.1f32, 0.5, 0.3, 0.1];
+        assert!((layout.confidence(&p) - max_diff(&p)).abs() < 1e-7);
+        assert_eq!(layout.labels(&p), vec![1]);
+    }
+
+    #[test]
+    fn min_over_heads() {
+        // Head A confident (0.8 gap), head B not (0.1 gap) → min = 0.1.
+        let layout = OutputLayout::heads(&[2, 3]);
+        let p = [0.9f32, 0.1, 0.4, 0.3, 0.3];
+        assert!((layout.confidence(&p) - 0.1).abs() < 1e-6);
+        assert_eq!(layout.labels(&p), vec![0, 0]);
+    }
+
+    #[test]
+    fn geometry() {
+        let layout = OutputLayout::heads(&[3, 2, 4]);
+        assert_eq!(layout.n_heads(), 3);
+        assert_eq!(layout.total_classes(), 9);
+        let p: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        assert_eq!(layout.head(&p, 1), &[3.0, 4.0]);
+        assert_eq!(layout.head(&p, 2), &[5.0, 6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn single_class_head_rejected() {
+        OutputLayout::heads(&[3, 1]);
+    }
+}

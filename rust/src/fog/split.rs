@@ -1,0 +1,162 @@
+//! Algorithm 1 — constructing the Field of Groves classifier.
+//!
+//! `GCTrain(n, k, X, y)`: pre-train a random forest of `n` estimators,
+//! then `Split(RF, k)`: carve its trees into consecutive groups of `k`
+//! (the paper splits randomly into non-overlapping subsets; since bagged
+//! trees are exchangeable, consecutive grouping after an optional shuffle
+//! is the same distribution — we shuffle for fidelity).
+
+use super::grove::Grove;
+use crate::data::Split as DataSplit;
+use crate::dt::FlatTree;
+use crate::forest::{ForestParams, RandomForest};
+use crate::util::rng::Rng;
+
+/// A field of groves: the forest's trees partitioned into groves arranged
+/// in a ring (grove `i` hands off to grove `(i+1) mod n`).
+#[derive(Clone, Debug)]
+pub struct FieldOfGroves {
+    pub groves: Vec<Grove>,
+    pub n_features: usize,
+    pub n_classes: usize,
+    /// Padded tree depth shared by every flat tree.
+    pub depth: usize,
+}
+
+impl FieldOfGroves {
+    /// Algorithm 1, `GCTrain`: train an RF of `n_trees` and split into
+    /// groves of `grove_size`.
+    pub fn train(
+        data: &DataSplit,
+        params: &ForestParams,
+        grove_size: usize,
+        seed: u64,
+    ) -> FieldOfGroves {
+        let rf = RandomForest::fit(data, params, seed);
+        Self::from_forest_shuffled(&rf, grove_size, Some(seed ^ 0x5EED))
+    }
+
+    /// Algorithm 1, `Split`: consecutive groups of `k` trees from a
+    /// pre-trained forest. Trailing remainder (when `k ∤ n`) forms a
+    /// smaller final grove, matching the `RF.estimators[i..i+k]` slice.
+    pub fn from_forest(rf: &RandomForest, grove_size: usize) -> FieldOfGroves {
+        Self::from_forest_shuffled(rf, grove_size, None)
+    }
+
+    /// `Split` with an optional random shuffle first ("Each grove is
+    /// composed of a random, non-overlapping subset of the trees", §3.2.1).
+    pub fn from_forest_shuffled(
+        rf: &RandomForest,
+        grove_size: usize,
+        shuffle_seed: Option<u64>,
+    ) -> FieldOfGroves {
+        assert!(grove_size > 0, "grove_size = 0");
+        assert!(grove_size <= rf.n_trees(), "grove larger than forest");
+        let depth = rf.max_depth().max(1);
+        let mut flats: Vec<FlatTree> = rf.flatten(depth);
+        if let Some(seed) = shuffle_seed {
+            let mut rng = Rng::new(seed);
+            rng.shuffle(&mut flats);
+        }
+        let mut groves = Vec::new();
+        let mut i = 0;
+        while i < flats.len() {
+            let hi = (i + grove_size).min(flats.len());
+            groves.push(Grove::new(flats[i..hi].to_vec()));
+            i = hi;
+        }
+        FieldOfGroves {
+            groves,
+            n_features: rf.n_features,
+            n_classes: rf.n_classes,
+            depth,
+        }
+    }
+
+    pub fn n_groves(&self) -> usize {
+        self.groves.len()
+    }
+
+    pub fn total_trees(&self) -> usize {
+        self.groves.iter().map(|g| g.n_trees()).sum()
+    }
+
+    /// The `a×b` topology label used throughout the paper (a groves of b
+    /// trees).
+    pub fn topology(&self) -> (usize, usize) {
+        (self.n_groves(), self.groves.first().map(|g| g.n_trees()).unwrap_or(0))
+    }
+
+    /// Partition invariant: every tree appears in exactly one grove and
+    /// the total matches the source forest (used by tests/proptests).
+    pub fn validate_partition(&self, expected_total: usize) -> Result<(), String> {
+        let total = self.total_trees();
+        if total != expected_total {
+            return Err(format!("{total} trees in groves, expected {expected_total}"));
+        }
+        for (i, g) in self.groves.iter().enumerate() {
+            if g.n_trees() == 0 {
+                return Err(format!("grove {i} empty"));
+            }
+            if g.n_features != self.n_features || g.n_classes != self.n_classes {
+                return Err(format!("grove {i} shape mismatch"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetProfile};
+
+    fn forest() -> (RandomForest, crate::data::Dataset) {
+        let ds = generate(&DatasetProfile::demo(), 91);
+        let rf = RandomForest::fit(&ds.train, &ForestParams::default(), 1); // 16 trees
+        (rf, ds)
+    }
+
+    #[test]
+    fn split_is_partition() {
+        let (rf, _) = forest();
+        for k in [1, 2, 4, 8, 16] {
+            let fog = FieldOfGroves::from_forest(&rf, k);
+            assert_eq!(fog.n_groves(), 16 / k);
+            fog.validate_partition(16).unwrap();
+            assert!(fog.groves.iter().all(|g| g.n_trees() == k));
+        }
+    }
+
+    #[test]
+    fn remainder_forms_small_grove() {
+        let (rf, _) = forest();
+        let fog = FieldOfGroves::from_forest(&rf, 5); // 16 = 5+5+5+1
+        assert_eq!(fog.n_groves(), 4);
+        assert_eq!(fog.groves[3].n_trees(), 1);
+        fog.validate_partition(16).unwrap();
+    }
+
+    #[test]
+    fn shuffled_split_still_partitions() {
+        let (rf, _) = forest();
+        let fog = FieldOfGroves::from_forest_shuffled(&rf, 4, Some(9));
+        fog.validate_partition(16).unwrap();
+        assert_eq!(fog.topology(), (4, 4));
+    }
+
+    #[test]
+    fn train_end_to_end() {
+        let ds = generate(&DatasetProfile::demo(), 92);
+        let fog = FieldOfGroves::train(&ds.train, &ForestParams::small(), 2, 3);
+        assert_eq!(fog.topology(), (4, 2));
+        assert_eq!(fog.n_classes, 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_grove_size_panics() {
+        let (rf, _) = forest();
+        FieldOfGroves::from_forest(&rf, 0);
+    }
+}

@@ -1,0 +1,61 @@
+//! FoG topology enumeration — the x-axis of the paper's Figure 4.
+//!
+//! A topology `a×b` is `a` groves of `b` trees; the product is the total
+//! forest size. Figure 4 sweeps all factorizations of a fixed tree count
+//! (the paper's worked example uses 16 trees: 1×16, 2×8, 4×4, 8×2, 16×1)
+//! and reports accuracy and EDP for each.
+
+/// All `(n_groves, trees_per_grove)` factorizations of `n_trees`, sorted
+/// by grove count ascending.
+pub fn factorizations(n_trees: usize) -> Vec<(usize, usize)> {
+    assert!(n_trees > 0);
+    let mut out = Vec::new();
+    for a in 1..=n_trees {
+        if n_trees % a == 0 {
+            out.push((a, n_trees / a));
+        }
+    }
+    out
+}
+
+/// Format a topology as the paper writes it (`8x2`).
+pub fn format_topology(t: (usize, usize)) -> String {
+    format!("{}x{}", t.0, t.1)
+}
+
+/// Parse `8x2` into `(8, 2)`.
+pub fn parse_topology(s: &str) -> Option<(usize, usize)> {
+    let (a, b) = s.split_once('x')?;
+    Some((a.trim().parse().ok()?, b.trim().parse().ok()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sixteen_trees_five_topologies() {
+        let f = factorizations(16);
+        assert_eq!(f, vec![(1, 16), (2, 8), (4, 4), (8, 2), (16, 1)]);
+    }
+
+    #[test]
+    fn prime_count_two_topologies() {
+        assert_eq!(factorizations(7), vec![(1, 7), (7, 1)]);
+    }
+
+    #[test]
+    fn products_match() {
+        for (a, b) in factorizations(24) {
+            assert_eq!(a * b, 24);
+        }
+    }
+
+    #[test]
+    fn format_and_parse_roundtrip() {
+        for t in factorizations(16) {
+            assert_eq!(parse_topology(&format_topology(t)), Some(t));
+        }
+        assert_eq!(parse_topology("bad"), None);
+    }
+}

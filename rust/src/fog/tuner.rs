@@ -1,0 +1,100 @@
+//! Run-time tuning: threshold sweeps and the accuracy-optimal operating
+//! point the paper calls FoG_opt — "a threshold point above which accuracy
+//! does not increase with threshold but below which accuracy decreases
+//! with decrease in threshold" (§4.2).
+
+use super::eval::{EvalResult, FogParams};
+use super::split::FieldOfGroves;
+use crate::data::Split;
+
+/// One point of a threshold sweep.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub threshold: f32,
+    pub accuracy: f64,
+    pub avg_hops: f64,
+}
+
+/// Sweep the confidence threshold over `thresholds` on `split`,
+/// holding `max_hops` at the grove count (the paper's Figure 5 setting).
+pub fn threshold_sweep(
+    fog: &FieldOfGroves,
+    split: &Split,
+    thresholds: &[f32],
+    seed: u64,
+) -> Vec<SweepPoint> {
+    thresholds
+        .iter()
+        .map(|&threshold| {
+            let params = FogParams { threshold, max_hops: fog.n_groves(), seed };
+            let res: EvalResult = fog.evaluate(&split.x, &params);
+            SweepPoint { threshold, accuracy: res.accuracy(&split.y), avg_hops: res.avg_hops() }
+        })
+        .collect()
+}
+
+/// The default threshold grid used by the figures (0.05 .. 1.0).
+pub fn default_grid() -> Vec<f32> {
+    (1..=20).map(|i| i as f32 * 0.05).collect()
+}
+
+/// Find FoG_opt: the smallest threshold whose accuracy is within
+/// `tolerance` of the maximum accuracy over the sweep. Smaller thresholds
+/// mean fewer hops, so this is the cheapest accuracy-preserving point.
+pub fn accuracy_optimal_threshold(sweep: &[SweepPoint], tolerance: f64) -> &SweepPoint {
+    assert!(!sweep.is_empty());
+    let best_acc = sweep.iter().map(|p| p.accuracy).fold(f64::NEG_INFINITY, f64::max);
+    // Sweep points sorted by threshold ascending; pick the first that is
+    // within tolerance of the best.
+    let mut sorted: Vec<&SweepPoint> = sweep.iter().collect();
+    sorted.sort_by(|a, b| a.threshold.partial_cmp(&b.threshold).unwrap());
+    sorted
+        .into_iter()
+        .find(|p| p.accuracy >= best_acc - tolerance)
+        .expect("at least the max point qualifies")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetProfile};
+    use crate::forest::{ForestParams, RandomForest};
+
+    fn setup() -> (FieldOfGroves, crate::data::Dataset) {
+        let ds = generate(&DatasetProfile::demo(), 111);
+        let rf = RandomForest::fit(&ds.train, &ForestParams::default(), 1);
+        (FieldOfGroves::from_forest(&rf, 4), ds)
+    }
+
+    #[test]
+    fn sweep_hops_monotone() {
+        let (fog, ds) = setup();
+        let sweep = threshold_sweep(&fog, &ds.test, &[0.1, 0.3, 0.5, 0.7, 0.9], 1);
+        for w in sweep.windows(2) {
+            assert!(w[1].avg_hops + 1e-9 >= w[0].avg_hops);
+        }
+    }
+
+    #[test]
+    fn opt_is_cheapest_near_best() {
+        let (fog, ds) = setup();
+        let sweep = threshold_sweep(&fog, &ds.test, &default_grid(), 2);
+        let opt = accuracy_optimal_threshold(&sweep, 0.01);
+        let best = sweep.iter().map(|p| p.accuracy).fold(f64::NEG_INFINITY, f64::max);
+        assert!(opt.accuracy >= best - 0.01);
+        // No cheaper qualifying point exists.
+        for p in &sweep {
+            if p.threshold < opt.threshold {
+                assert!(p.accuracy < best - 0.01);
+            }
+        }
+    }
+
+    #[test]
+    fn grid_shape() {
+        let g = default_grid();
+        assert_eq!(g.len(), 20);
+        assert!((g[0] - 0.05).abs() < 1e-6);
+        assert!((g[19] - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,185 @@
+//! Feature-budgeted random forest training — the substrate the paper's
+//! training step builds on (step 2 of §4.1, citing Nan/Wang/Saligrama,
+//! "Feature-Budgeted Random Forest", ICML'15 [11]).
+//!
+//! The idea: each feature has an acquisition cost (for the paper this is
+//! the PPA energy of reading + comparing it); trees are grown to maximize
+//! impurity reduction *per unit cost*, and a validation-measured budget
+//! constraint selects the operating design. We implement the greedy
+//! cost-penalized split rule (see [`crate::dt::builder`]) plus the budget
+//! search loop: grow forests at increasing cost weights, measure
+//! (cost, accuracy) on validation data, and return the best
+//! accuracy design under the budget.
+
+use super::rf::{ForestParams, RandomForest, VoteMode};
+use crate::data::split::stratified_holdout;
+use crate::data::Split;
+
+/// One evaluated design point of the budget sweep.
+#[derive(Clone, Debug)]
+pub struct BudgetPoint {
+    pub cost_weight: f32,
+    /// Mean acquisition cost per prediction on validation data.
+    pub avg_cost: f64,
+    pub val_accuracy: f64,
+}
+
+/// Result of budgeted training.
+pub struct BudgetedForest {
+    pub forest: RandomForest,
+    pub chosen: BudgetPoint,
+    pub sweep: Vec<BudgetPoint>,
+}
+
+/// Mean per-prediction feature-acquisition cost of a forest: every
+/// *distinct* feature read while routing a sample through all trees is
+/// charged once (sensor/feature acquisition semantics of [11]).
+pub fn avg_acquisition_cost(rf: &RandomForest, split: &Split, feature_cost: &[f32]) -> f64 {
+    if split.is_empty() {
+        return 0.0;
+    }
+    let mut total = 0.0f64;
+    let mut seen = vec![false; rf.n_features];
+    for i in 0..split.len() {
+        let x = split.row(i);
+        seen.iter_mut().for_each(|s| *s = false);
+        for tree in &rf.trees {
+            let mut idx = 0usize;
+            loop {
+                let n = &tree.nodes[idx];
+                if n.is_leaf() {
+                    break;
+                }
+                let f = n.feature as usize;
+                if !seen[f] {
+                    seen[f] = true;
+                    total += feature_cost[f] as f64;
+                }
+                idx = if x[f] <= n.threshold { n.left as usize } else { n.left as usize + 1 };
+            }
+        }
+    }
+    total / split.len() as f64
+}
+
+/// Train under a feature-acquisition budget.
+///
+/// * `feature_cost[f]` — cost of acquiring feature `f` (energy units).
+/// * `budget` — maximum admissible `avg_acquisition_cost` on validation.
+///
+/// Sweeps cost weights from 0 (unconstrained RF) upward; returns the
+/// highest-validation-accuracy design whose measured cost fits the budget
+/// (falling back to the cheapest design if none fits — graceful, matching
+/// the paper's "if several designs meet the constraint choose the most
+/// accurate" rule).
+pub fn fit_budgeted(
+    data: &Split,
+    base: &ForestParams,
+    feature_cost: &[f32],
+    budget: f64,
+    seed: u64,
+) -> BudgetedForest {
+    assert_eq!(feature_cost.len(), data.n_features);
+    let (train, val) = stratified_holdout(data, 0.2, seed ^ 0xB0D6E7);
+    let weights = [0.0f32, 0.001, 0.004, 0.016, 0.064, 0.25];
+
+    let mut sweep = Vec::with_capacity(weights.len());
+    let mut candidates: Vec<(BudgetPoint, RandomForest)> = Vec::new();
+    for &w in &weights {
+        let mut params = base.clone();
+        params.tree.feature_cost = feature_cost.to_vec();
+        params.tree.cost_weight = w;
+        let rf = RandomForest::fit(&train, &params, seed);
+        let point = BudgetPoint {
+            cost_weight: w,
+            avg_cost: avg_acquisition_cost(&rf, &val, feature_cost),
+            val_accuracy: rf.accuracy(&val, VoteMode::ProbAverage),
+        };
+        sweep.push(point.clone());
+        candidates.push((point, rf));
+    }
+
+    // Most accurate within budget, else cheapest.
+    let within: Vec<&(BudgetPoint, RandomForest)> =
+        candidates.iter().filter(|(p, _)| p.avg_cost <= budget).collect();
+    let chosen_idx = if !within.is_empty() {
+        let best = within
+            .iter()
+            .max_by(|a, b| a.0.val_accuracy.partial_cmp(&b.0.val_accuracy).unwrap())
+            .unwrap();
+        candidates
+            .iter()
+            .position(|(p, _)| p.cost_weight == best.0.cost_weight)
+            .unwrap()
+    } else {
+        candidates
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| a.0.avg_cost.partial_cmp(&b.0.avg_cost).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()
+    };
+
+    // Refit the chosen design on the full training split.
+    let mut params = base.clone();
+    params.tree.feature_cost = feature_cost.to_vec();
+    params.tree.cost_weight = candidates[chosen_idx].0.cost_weight;
+    let forest = RandomForest::fit(data, &params, seed);
+    BudgetedForest { forest, chosen: candidates[chosen_idx].0.clone(), sweep }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetProfile};
+
+    #[test]
+    fn unconstrained_sweep_point_is_plain_rf() {
+        let ds = generate(&DatasetProfile::demo(), 71);
+        let costs = vec![1.0f32; ds.train.n_features];
+        let b = fit_budgeted(&ds.train, &ForestParams::small(), &costs, f64::INFINITY, 1);
+        assert_eq!(b.sweep[0].cost_weight, 0.0);
+        // With infinite budget the best-accuracy point is chosen.
+        let best_acc =
+            b.sweep.iter().map(|p| p.val_accuracy).fold(f64::NEG_INFINITY, f64::max);
+        assert!((b.chosen.val_accuracy - best_acc).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tight_budget_reduces_cost() {
+        let ds = generate(&DatasetProfile::demo(), 72);
+        let costs = vec![1.0f32; ds.train.n_features];
+        let loose = fit_budgeted(&ds.train, &ForestParams::small(), &costs, f64::INFINITY, 2);
+        // Budget = half of the unconstrained cost.
+        let tight_budget = loose.sweep[0].avg_cost * 0.5;
+        let tight = fit_budgeted(&ds.train, &ForestParams::small(), &costs, tight_budget, 2);
+        assert!(
+            tight.chosen.avg_cost <= loose.chosen.avg_cost + 1e-9,
+            "tight {} loose {}",
+            tight.chosen.avg_cost,
+            loose.chosen.avg_cost
+        );
+    }
+
+    #[test]
+    fn cost_weight_monotone_cost_trend() {
+        let ds = generate(&DatasetProfile::demo(), 73);
+        let costs = vec![1.0f32; ds.train.n_features];
+        let b = fit_budgeted(&ds.train, &ForestParams::small(), &costs, f64::INFINITY, 3);
+        // Strong penalty should not *increase* acquisition cost vs none.
+        let first = b.sweep.first().unwrap().avg_cost;
+        let last = b.sweep.last().unwrap().avg_cost;
+        assert!(last <= first + 1e-6, "first {first} last {last}");
+    }
+
+    #[test]
+    fn acquisition_cost_counts_distinct_features_once() {
+        let ds = generate(&DatasetProfile::demo(), 74);
+        let rf = RandomForest::fit(&ds.train, &ForestParams::small(), 4);
+        let costs = vec![1.0f32; ds.train.n_features];
+        let c = avg_acquisition_cost(&rf, &ds.test, &costs);
+        // Can't exceed the number of features when each costs 1.
+        assert!(c <= ds.train.n_features as f64);
+        assert!(c > 0.0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Random forests: bagged CART ensembles with majority voting (the
+//! conventional design of paper §3.1) plus the feature-budgeted training
+//! mode the paper builds on ([11], Nan/Wang/Saligrama ICML'15).
+
+pub mod budgeted;
+pub mod rf;
+
+pub use rf::{ForestParams, RandomForest, VoteMode};

@@ -1,0 +1,250 @@
+//! Conventional random forest (paper §3.1).
+//!
+//! Bagging + per-node feature subsampling over CART trees. Two aggregation
+//! modes, mirroring the paper's explicit contrast (§3.2.1): conventional RF
+//! puts hard per-tree labels to a **majority vote**, while FoG averages
+//! per-tree **probability distributions** — `VoteMode` selects between
+//! them so the contrast is testable.
+
+use crate::data::Split;
+use crate::dt::builder::{fit_tree, TreeParams};
+use crate::dt::{DecisionTree, FlatTree};
+use crate::util::rng::Rng;
+use crate::util::threadpool::par_map;
+
+/// Aggregation rule across trees.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VoteMode {
+    /// Hard per-tree argmax labels, majority vote (conventional RF).
+    Majority,
+    /// Average of per-tree probability distributions (what FoG groves do).
+    ProbAverage,
+}
+
+/// Forest hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct ForestParams {
+    pub n_trees: usize,
+    pub tree: TreeParams,
+    /// Bootstrap-sample the training set per tree (true = classic bagging).
+    pub bootstrap: bool,
+}
+
+impl Default for ForestParams {
+    fn default() -> Self {
+        ForestParams { n_trees: 16, tree: TreeParams::default(), bootstrap: true }
+    }
+}
+
+impl ForestParams {
+    /// Small fast forest for tests/doc examples.
+    pub fn small() -> Self {
+        ForestParams {
+            n_trees: 8,
+            tree: TreeParams { max_depth: 6, ..Default::default() },
+            bootstrap: true,
+        }
+    }
+}
+
+/// A trained random forest.
+#[derive(Clone, Debug)]
+pub struct RandomForest {
+    pub trees: Vec<DecisionTree>,
+    pub n_features: usize,
+    pub n_classes: usize,
+    pub params: ForestParams,
+}
+
+impl RandomForest {
+    /// Train with bagging; trees are fit in parallel, each from a forked
+    /// deterministic RNG stream, so results are reproducible regardless of
+    /// thread count.
+    pub fn fit(data: &Split, params: &ForestParams, seed: u64) -> RandomForest {
+        assert!(params.n_trees > 0);
+        assert!(!data.is_empty());
+        let mut root = Rng::new(seed);
+        let tree_seeds: Vec<u64> = (0..params.n_trees).map(|_| root.next_u64()).collect();
+        let trees = par_map(params.n_trees, |t| {
+            let mut rng = Rng::new(tree_seeds[t]);
+            let samples: Vec<usize> = if params.bootstrap {
+                rng.bootstrap(data.len())
+            } else {
+                (0..data.len()).collect()
+            };
+            fit_tree(data, &samples, &params.tree, &mut rng)
+        });
+        RandomForest {
+            trees,
+            n_features: data.n_features,
+            n_classes: data.n_classes,
+            params: params.clone(),
+        }
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+
+    /// Maximum tree depth in the forest (determines the flat-pad depth).
+    pub fn max_depth(&self) -> usize {
+        self.trees.iter().map(|t| t.depth).max().unwrap_or(0)
+    }
+
+    /// Averaged class-probability prediction over all trees.
+    pub fn predict_proba(&self, x: &[f32]) -> Vec<f32> {
+        let mut acc = vec![0.0f32; self.n_classes];
+        for t in &self.trees {
+            for (a, &p) in acc.iter_mut().zip(t.predict_proba(x)) {
+                *a += p;
+            }
+        }
+        let inv = 1.0 / self.trees.len() as f32;
+        acc.iter_mut().for_each(|a| *a *= inv);
+        acc
+    }
+
+    /// Predict one sample under the given aggregation mode.
+    pub fn predict_with(&self, x: &[f32], mode: VoteMode) -> usize {
+        match mode {
+            VoteMode::ProbAverage => crate::util::argmax(&self.predict_proba(x)),
+            VoteMode::Majority => {
+                let mut votes = vec![0usize; self.n_classes];
+                for t in &self.trees {
+                    votes[t.predict(x)] += 1;
+                }
+                votes
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, &v)| v)
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            }
+        }
+    }
+
+    /// Majority-vote prediction (the paper's conventional RF).
+    pub fn predict(&self, x: &[f32]) -> usize {
+        self.predict_with(x, VoteMode::Majority)
+    }
+
+    /// Batch accuracy under a vote mode.
+    pub fn accuracy(&self, split: &Split, mode: VoteMode) -> f64 {
+        let preds = par_map(split.len(), |i| self.predict_with(split.row(i), mode));
+        crate::util::stats::accuracy(&preds, &split.y)
+    }
+
+    /// Average comparator ops per input (drives the energy model):
+    /// sum over trees of traversed depth.
+    pub fn avg_comparisons(&self, split: &Split) -> f64 {
+        if split.is_empty() {
+            return 0.0;
+        }
+        let totals = par_map(split.len(), |i| {
+            let mut ops = 0usize;
+            for t in &self.trees {
+                let (_, c) = t.predict_proba_counted(split.row(i));
+                ops += c;
+            }
+            ops
+        });
+        totals.iter().sum::<usize>() as f64 / split.len() as f64
+    }
+
+    /// Flatten every tree to the common padded depth (for the accelerator
+    /// path and for FoG grove export).
+    pub fn flatten(&self, pad_depth: usize) -> Vec<FlatTree> {
+        let d = pad_depth.max(self.max_depth());
+        self.trees.iter().map(|t| FlatTree::from_tree(t, d)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetProfile};
+
+    #[test]
+    fn forest_beats_single_tree() {
+        let ds = generate(&DatasetProfile::demo(), 61);
+        let params = ForestParams::small();
+        let rf = RandomForest::fit(&ds.train, &params, 1);
+        let forest_acc = rf.accuracy(&ds.test, VoteMode::Majority);
+
+        let mut rng = Rng::new(2);
+        let idx: Vec<usize> = (0..ds.train.len()).collect();
+        let single = fit_tree(&ds.train, &idx, &params.tree, &mut rng);
+        let preds: Vec<usize> =
+            (0..ds.test.len()).map(|i| single.predict(ds.test.row(i))).collect();
+        let single_acc = crate::util::stats::accuracy(&preds, &ds.test.y);
+
+        assert!(
+            forest_acc >= single_acc - 0.02,
+            "forest {forest_acc} vs single {single_acc}"
+        );
+        assert!(forest_acc > 0.6, "forest acc {forest_acc}");
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let ds = generate(&DatasetProfile::demo(), 62);
+        let rf1 = RandomForest::fit(&ds.train, &ForestParams::small(), 7);
+        std::env::set_var("FOG_THREADS", "1");
+        let rf2 = RandomForest::fit(&ds.train, &ForestParams::small(), 7);
+        std::env::remove_var("FOG_THREADS");
+        for (a, b) in rf1.trees.iter().zip(&rf2.trees) {
+            assert_eq!(a.nodes.len(), b.nodes.len());
+            for (na, nb) in a.nodes.iter().zip(&b.nodes) {
+                assert_eq!(na.feature, nb.feature);
+                assert_eq!(na.threshold, nb.threshold);
+            }
+        }
+    }
+
+    #[test]
+    fn proba_normalized() {
+        let ds = generate(&DatasetProfile::demo(), 63);
+        let rf = RandomForest::fit(&ds.train, &ForestParams::small(), 3);
+        for i in 0..20.min(ds.test.len()) {
+            let p = rf.predict_proba(ds.test.row(i));
+            let s: f32 = p.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "sum {s}");
+        }
+    }
+
+    #[test]
+    fn vote_modes_mostly_agree() {
+        let ds = generate(&DatasetProfile::demo(), 64);
+        let rf = RandomForest::fit(&ds.train, &ForestParams::small(), 4);
+        let a = rf.accuracy(&ds.test, VoteMode::Majority);
+        let b = rf.accuracy(&ds.test, VoteMode::ProbAverage);
+        assert!((a - b).abs() < 0.1, "majority {a} vs prob-avg {b}");
+    }
+
+    #[test]
+    fn avg_comparisons_bounded_by_depth() {
+        let ds = generate(&DatasetProfile::demo(), 65);
+        let params = ForestParams {
+            n_trees: 4,
+            tree: TreeParams { max_depth: 5, ..Default::default() },
+            bootstrap: true,
+        };
+        let rf = RandomForest::fit(&ds.train, &params, 5);
+        let avg = rf.avg_comparisons(&ds.test);
+        assert!(avg > 0.0);
+        assert!(avg <= (4 * 5) as f64, "avg {avg}");
+    }
+
+    #[test]
+    fn flatten_preserves_predictions() {
+        let ds = generate(&DatasetProfile::demo(), 66);
+        let rf = RandomForest::fit(&ds.train, &ForestParams::small(), 6);
+        let flats = rf.flatten(rf.max_depth());
+        for i in 0..30.min(ds.test.len()) {
+            let x = ds.test.row(i);
+            for (t, f) in rf.trees.iter().zip(&flats) {
+                assert_eq!(t.predict(x), f.predict(x));
+            }
+        }
+    }
+}

@@ -1,0 +1,48 @@
+//! # Field of Groves (FoG) — an energy-efficient random forest
+//!
+//! Full-system reproduction of *"Field of Groves: An Energy-Efficient
+//! Random Forest"* (Takhirov, Wang, Louis, Saligrama, Joshi; 2017).
+//!
+//! The paper proposes splitting a random forest into **groves** (disjoint
+//! subsets of decision trees) arranged in a ring. An input is classified by
+//! one grove; if the confidence (difference between the two largest averaged
+//! class probabilities) is below a threshold, the partial result **hops** to
+//! the next grove. Easy inputs consume one grove's energy; hard inputs more.
+//!
+//! This crate provides, from scratch:
+//!
+//! * [`dt`] — CART decision-tree training and a flattened complete-tree
+//!   representation shared with the JAX/Pallas compile path.
+//! * [`forest`] — bagged random forests (incl. feature-budgeted training).
+//! * [`fog`] — the paper's contribution: grove construction (Algorithm 1)
+//!   and confidence-gated hop evaluation (Algorithm 2).
+//! * [`uarch`] — a cycle-level simulator of the grove micro-architecture
+//!   (data queue with `$fr`/`$bk` pointers, DQC, PE, req/ack handshake).
+//! * [`energy`] — a 40 nm PPA library, an Aladdin-style design-space
+//!   explorer, and per-classifier energy/EDP models.
+//! * [`baselines`] — SVM (linear + RBF), MLP and CNN comparators trained
+//!   from scratch.
+//! * [`data`] — synthetic UCI-profile dataset generators and a CSV loader.
+//! * [`runtime`] — a PJRT client that loads the AOT-compiled (JAX/Pallas)
+//!   grove kernel from `artifacts/*.hlo.txt` and executes it.
+//! * [`coordinator`] — a threaded serving front-end: request router, grove
+//!   ring, batching, metrics.
+//! * [`experiments`] — harnesses regenerating every table/figure of the
+//!   paper's evaluation (Table 1, Figure 4, Figure 5).
+//! * [`util`] — self-contained substrates (PRNG, JSON, thread pool, CLI
+//!   parsing, bench harness) so the crate has no heavyweight dependencies.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod dt;
+pub mod energy;
+pub mod experiments;
+pub mod fog;
+pub mod forest;
+pub mod runtime;
+pub mod uarch;
+pub mod util;
+
+pub use crate::fog::{FieldOfGroves, FogParams};
+pub use crate::forest::{ForestParams, RandomForest};

@@ -1,0 +1,213 @@
+//! `fog` — command-line launcher for the Field-of-Groves reproduction.
+//!
+//! Subcommands map one-to-one onto the paper's evaluation artifacts:
+//!
+//! ```text
+//! fog table1   [--datasets a,b,c] [--seed N]      Table 1 + headline
+//! fog fig4     [--datasets a,b,c] [--seed N]      Figure 4 topology sweep
+//! fog fig5     [--topology 8x2] [--datasets ...]  Figure 5 threshold sweep
+//! fog headline [--seed N]                          just the §1 ratios
+//! fog ablate   [--dataset penbase]                 design-choice ablations
+//! fog sim      [--dataset penbase] [--threshold T] cycle-level μarch sim
+//! fog serve    [--dataset demo] [--backend native|pjrt] serving demo
+//! fog dse      [--workload trees|gemm]             Aladdin-style DSE sweep
+//! ```
+
+use fog::coordinator::{Backend, FogServer, ServerConfig};
+use fog::data::synthetic::DatasetProfile;
+use fog::energy::aladdin;
+use fog::energy::blocks::{AreaBlocks, EnergyBlocks};
+use fog::experiments::{fig4, fig5, suite, table1};
+use fog::fog::FieldOfGroves;
+use fog::uarch::{RingConfig, RingSim};
+use fog::util::cli::Args;
+
+fn profiles_from(args: &Args) -> Vec<DatasetProfile> {
+    match args.get("datasets") {
+        None => DatasetProfile::paper_suite(),
+        Some(spec) => spec
+            .split(',')
+            .map(|name| {
+                DatasetProfile::by_name(name.trim())
+                    .unwrap_or_else(|| panic!("unknown dataset '{name}'"))
+            })
+            .collect(),
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let seed = args.get_u64("seed", 42);
+    match args.subcommand() {
+        Some("table1") => {
+            let results = table1::run(&profiles_from(&args), seed);
+            table1::print_table(&results);
+            table1::print_headline(&results);
+        }
+        Some("headline") => {
+            let results = table1::run(&profiles_from(&args), seed);
+            table1::print_headline(&results);
+        }
+        Some("fig4") => {
+            let all = fig4::run(&profiles_from(&args), seed);
+            fig4::print_series(&all);
+        }
+        Some("fig5") => {
+            let topo = args.get_topology("topology", (8, 2));
+            let all = fig5::run(&profiles_from(&args), topo, seed);
+            fig5::print_series(topo, &all);
+        }
+        Some("ablate") => {
+            let name = args.get_or("dataset", "penbase");
+            let profile = DatasetProfile::by_name(name).expect("unknown dataset");
+            eprintln!("[ablate] training {} ...", profile.name);
+            let s = suite::train_suite(&profile, seed);
+            fog::experiments::ablations::print_all(&s, seed);
+        }
+        Some("sim") => cmd_sim(&args, seed),
+        Some("serve") => cmd_serve(&args, seed),
+        Some("dse") => cmd_dse(&args),
+        _ => {
+            eprintln!(
+                "usage: fog <table1|fig4|fig5|headline|sim|serve|dse> [--flags]\n\
+                 see `rust/src/main.rs` docs for the flag list"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Cycle-level μarch simulation of the grove ring on one dataset.
+fn cmd_sim(args: &Args, seed: u64) {
+    let name = args.get_or("dataset", "penbase");
+    let profile = DatasetProfile::by_name(name).expect("unknown dataset");
+    let threshold = args.get_f64("threshold", 0.3) as f32;
+    let (groves, per_grove) = args.get_topology("topology", (8, 2));
+    eprintln!("[sim] training {} ...", profile.name);
+    let s = suite::train_suite(&profile, seed);
+    assert_eq!(groves * per_grove, s.rf.n_trees(), "topology must factor the forest");
+    let fog = FieldOfGroves::from_forest_shuffled(&s.rf, per_grove, Some(seed));
+    let cfg = RingConfig {
+        threshold,
+        seed,
+        inject_interval: args.get_u64("inject-interval", 8),
+        ..Default::default()
+    };
+    let mut sim = RingSim::new(&fog, cfg);
+    sim.load_batch(&s.data.test.x);
+    let outcomes = sim.run();
+    let preds: Vec<usize> = outcomes.iter().map(|o| o.label).collect();
+    let acc = fog::util::stats::accuracy(&preds, &s.data.test.y);
+    let eb = EnergyBlocks::default();
+    println!("== μarch ring simulation: {} @ {}x{} thr={} ==", name, groves, per_grove, threshold);
+    println!("inputs               : {}", sim.stats.classified);
+    println!("accuracy             : {:.1}%", acc * 100.0);
+    println!("cycles               : {}", sim.stats.cycles);
+    println!("avg hops             : {:.2}", sim.stats.avg_hops());
+    println!("avg latency (cycles) : {:.1}", sim.stats.avg_latency_cycles());
+    println!("throughput           : {:.2} class/kcycle", sim.stats.throughput_per_kcycle());
+    println!("PE utilization       : {:.1}%", sim.stats.avg_utilization() * 100.0);
+    println!("handshakes           : {}", sim.stats.handshakes);
+    println!("stall cycles         : {}", sim.stats.stall_cycles);
+    println!("dynamic energy/input : {:.3} nJ", sim.stats.dynamic_energy_per_input_nj(&eb));
+}
+
+/// Serving demo over the coordinator (native or PJRT backend).
+fn cmd_serve(args: &Args, seed: u64) {
+    let name = args.get_or("dataset", "demo");
+    let profile = DatasetProfile::by_name(name).expect("unknown dataset");
+    eprintln!("[serve] training {} ...", profile.name);
+    let s = suite::train_suite(&profile, seed);
+    let per_grove = args.get_topology("topology", (4, 4)).1;
+    let mut fog = FieldOfGroves::from_forest_shuffled(&s.rf, per_grove, Some(seed));
+    let backend = match args.get_or("backend", "native") {
+        "pjrt" => {
+            // Artifact shapes are padded to fixed depths; repad to match.
+            let depth = args.get_usize("artifact-depth", 6);
+            for g in &mut fog.groves {
+                for t in &mut g.trees {
+                    *t = t.repad(depth.max(t.depth));
+                }
+            }
+            fog.depth = fog.groves.iter().map(|g| g.depth()).max().unwrap();
+            Backend::Pjrt { artifacts_dir: fog::runtime::artifacts::default_dir() }
+        }
+        _ => Backend::Native,
+    };
+    let cfg = ServerConfig {
+        threshold: args.get_f64("threshold", 0.3) as f32,
+        seed,
+        backend,
+        ..Default::default()
+    };
+    let mut server = FogServer::start(&fog, &cfg).expect("server start");
+    let t0 = std::time::Instant::now();
+    let responses = server.classify(&s.data.test.x);
+    let wall = t0.elapsed();
+    let preds: Vec<usize> = responses.iter().map(|r| r.label).collect();
+    let acc = fog::util::stats::accuracy(&preds, &s.data.test.y);
+    let lat = FogServer::latency_summary(&responses);
+    let snap = server.metrics().snapshot();
+    println!("== serving: {} x{} groves, backend={} ==", name, fog.n_groves(), args.get_or("backend", "native"));
+    println!("requests   : {}", snap.requests);
+    println!("accuracy   : {:.1}%", acc * 100.0);
+    println!("avg hops   : {:.2}", snap.avg_hops());
+    println!("batch size : {:.1} avg", snap.avg_batch_size());
+    println!("throughput : {:.0} req/s", responses.len() as f64 / wall.as_secs_f64());
+    println!("latency    : p50 {:.0}µs  p95 {:.0}µs  p99 {:.0}µs", lat.p50_us, lat.p95_us, lat.p99_us);
+    server.shutdown();
+}
+
+/// Aladdin-style design-space exploration printout.
+fn cmd_dse(args: &Args) {
+    let eb = EnergyBlocks::default();
+    let ab = AreaBlocks::default();
+    let mix = match args.get_or("workload", "trees") {
+        "gemm" => aladdin::OpMix {
+            comparisons: 10.0,
+            macs: 100_000.0,
+            sigmoids: 100.0,
+            sram_read_bytes: 100_000.0,
+            sram_write_bytes: 100.0,
+            storage_bytes: 100_000.0,
+            serial_fraction: 0.001,
+        },
+        _ => aladdin::OpMix {
+            comparisons: 128.0,
+            macs: 0.0,
+            sigmoids: 0.0,
+            sram_read_bytes: 1024.0,
+            sram_write_bytes: 64.0,
+            storage_bytes: 6144.0,
+            serial_fraction: 0.3,
+        },
+    };
+    let evals = aladdin::sweep(&mix, &eb, &ab);
+    let front = aladdin::pareto_front(&evals);
+    let sel = aladdin::select_min_edp(&evals);
+    println!("== Aladdin-style DSE ({} configs, {} Pareto-optimal) ==", evals.len(), front.len());
+    println!(
+        "{:>6} {:>6} {:>5} {:>12} {:>10} {:>9} {:>12}",
+        "bits", "lanes", "pipe", "energy nJ", "delay ns", "area mm2", "EDP"
+    );
+    for e in &front {
+        let mark = if e.config.bitwidth == sel.config.bitwidth
+            && e.config.lanes == sel.config.lanes
+            && e.config.pipeline == sel.config.pipeline
+        {
+            " <= min-EDP"
+        } else {
+            ""
+        };
+        println!(
+            "{:>6} {:>6} {:>5} {:>12.3} {:>10.1} {:>9.3} {:>12.1}{mark}",
+            e.config.bitwidth,
+            e.config.lanes,
+            e.config.pipeline,
+            e.point.energy_nj,
+            e.point.delay_ns,
+            e.point.area_mm2,
+            e.point.edp()
+        );
+    }
+}

@@ -1,0 +1,170 @@
+//! The artifact manifest: shape metadata for every HLO module the python
+//! compile path produced (`artifacts/manifest.json`). The rust runtime
+//! validates its inputs against these shapes before touching PJRT, so a
+//! stale artifact directory fails loudly instead of mis-executing.
+
+use crate::util::json::parse;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One artifact's metadata (mirrors aot.py's manifest entries).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub t: usize,
+    pub depth: usize,
+    pub n_features: usize,
+    pub n_classes: usize,
+    pub batch: usize,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+impl ArtifactMeta {
+    pub fn n_internal(&self) -> usize {
+        (1usize << self.depth) - 1
+    }
+    pub fn n_leaves(&self) -> usize {
+        1usize << self.depth
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e} (run `make artifacts`)", path.display()))?;
+        Self::from_json_str(&text, dir)
+    }
+
+    pub fn from_json_str(text: &str, dir: &Path) -> anyhow::Result<Manifest> {
+        let v = parse(text)?;
+        let obj = v.as_obj().ok_or_else(|| anyhow::anyhow!("manifest not an object"))?;
+        let mut entries = BTreeMap::new();
+        for (name, meta) in obj {
+            let strings = |key: &str| -> Vec<String> {
+                meta.get(key)
+                    .as_arr()
+                    .map(|a| a.iter().filter_map(|s| s.as_str().map(String::from)).collect())
+                    .unwrap_or_default()
+            };
+            entries.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    file: meta
+                        .get("file")
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("{name}: missing file"))?
+                        .to_string(),
+                    kind: meta.get("kind").as_str().unwrap_or("unknown").to_string(),
+                    t: meta.get("t").as_usize().unwrap_or(0),
+                    depth: meta.get("depth").as_usize().unwrap_or(0),
+                    n_features: meta.get("n_features").as_usize().unwrap_or(0),
+                    n_classes: meta.get("n_classes").as_usize().unwrap_or(0),
+                    batch: meta.get("batch").as_usize().unwrap_or(0),
+                    inputs: strings("inputs"),
+                    outputs: strings("outputs"),
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<&ArtifactMeta> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// Find the grove_step artifact matching a shape, if any.
+    pub fn find_grove_step(
+        &self,
+        t: usize,
+        depth: usize,
+        n_features: usize,
+        n_classes: usize,
+    ) -> Option<&ArtifactMeta> {
+        self.entries.values().find(|m| {
+            m.kind == "grove_step"
+                && m.t == t
+                && m.depth == depth
+                && m.n_features == n_features
+                && m.n_classes == n_classes
+        })
+    }
+
+    pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+}
+
+/// Default artifact directory: `$FOG_ARTIFACTS` or `artifacts/` relative
+/// to the crate root / current dir.
+pub fn default_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("FOG_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.exists() {
+        return cwd;
+    }
+    // Fall back to the manifest dir relative to CARGO_MANIFEST_DIR (tests).
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "grove_step_x": {"file":"grove_step_x.hlo.txt","kind":"grove_step",
+        "t":2,"depth":8,"n_features":16,"n_classes":10,"batch":32,
+        "inputs":["feat","thr","leaf","x","prob_sum","hops"],
+        "outputs":["new_sum","norm","conf"]},
+      "maxdiff_x": {"file":"maxdiff_x.hlo.txt","kind":"maxdiff",
+        "t":2,"depth":8,"n_features":16,"n_classes":10,"batch":32,
+        "inputs":["prob"],"outputs":["conf"]}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json_str(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let g = m.get("grove_step_x").unwrap();
+        assert_eq!(g.batch, 32);
+        assert_eq!(g.n_internal(), 255);
+        assert_eq!(g.n_leaves(), 256);
+        assert_eq!(g.inputs.len(), 6);
+    }
+
+    #[test]
+    fn find_by_shape() {
+        let m = Manifest::from_json_str(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert!(m.find_grove_step(2, 8, 16, 10).is_some());
+        assert!(m.find_grove_step(2, 8, 16, 11).is_none());
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::from_json_str(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn path_resolution() {
+        let m = Manifest::from_json_str(SAMPLE, Path::new("/x/y")).unwrap();
+        let g = m.get("maxdiff_x").unwrap();
+        assert_eq!(m.path_of(g), PathBuf::from("/x/y/maxdiff_x.hlo.txt"));
+    }
+}

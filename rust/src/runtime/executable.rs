@@ -1,0 +1,266 @@
+//! PJRT execution: compile HLO-text artifacts once, run batches from the
+//! L3 hot path.
+//!
+//! `Runtime` wraps the PJRT CPU client; `GroveStepExec` is the typed
+//! front-end for the `grove_step` artifact (one Algorithm-2 hop for a
+//! whole batch: probabilities, normalized distribution, confidence).
+//! Inputs are validated against the manifest shapes; batches smaller than
+//! the compiled batch size are zero-padded (the compiled shape is static).
+
+use super::artifacts::{ArtifactMeta, Manifest};
+use crate::dt::export::FlatBundle;
+
+/// Owns the PJRT client. NOTE: PJRT handles are thread-affine in the
+/// `xla` crate (raw pointers, no `Send`), so a `Runtime` and everything
+/// loaded from it must stay on the thread that created it — the serving
+/// coordinator therefore runs one dedicated accelerator thread
+/// (`coordinator::accel`).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// PJRT CPU client (the only backend in this environment).
+    pub fn cpu() -> anyhow::Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn compile(&self, path: &std::path::Path) -> anyhow::Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+}
+
+/// Output of one grove step over a batch.
+#[derive(Clone, Debug)]
+pub struct StepOutput {
+    /// Updated probability sums `[b, c]` (row-major).
+    pub new_sum: Vec<f32>,
+    /// Normalized distributions `[b, c]`.
+    pub norm: Vec<f32>,
+    /// MaxDiff confidence `[b]`.
+    pub conf: Vec<f32>,
+}
+
+/// Typed executor for a `grove_step` artifact bound to one grove's trees.
+pub struct GroveStepExec {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+    /// Pre-built tree-table literals for this grove (constant per grove).
+    feat: xla::Literal,
+    thr: xla::Literal,
+    leaf: xla::Literal,
+}
+
+impl GroveStepExec {
+    /// Compile the artifact and bind `bundle` (one grove's flat trees,
+    /// padded to the artifact's (t, depth) if smaller).
+    pub fn new(
+        rt: &Runtime,
+        manifest: &Manifest,
+        meta: &ArtifactMeta,
+        bundle: &FlatBundle,
+    ) -> anyhow::Result<GroveStepExec> {
+        anyhow::ensure!(meta.kind == "grove_step", "artifact kind {}", meta.kind);
+        anyhow::ensure!(
+            bundle.depth == meta.depth,
+            "bundle depth {} != artifact depth {}",
+            bundle.depth,
+            meta.depth
+        );
+        anyhow::ensure!(
+            bundle.n_features == meta.n_features && bundle.n_classes == meta.n_classes,
+            "bundle shape mismatch"
+        );
+        anyhow::ensure!(
+            bundle.trees.len() <= meta.t,
+            "bundle has {} trees, artifact takes {}",
+            bundle.trees.len(),
+            meta.t
+        );
+        // Pad with pass-through trees that predict uniform distributions?
+        // No — padding with *copies* of existing trees would bias the
+        // average; instead require exact t (aot emits the exact topology).
+        anyhow::ensure!(
+            bundle.trees.len() == meta.t,
+            "bundle trees {} != artifact t {} (regenerate artifacts)",
+            bundle.trees.len(),
+            meta.t
+        );
+
+        let (feat_v, thr_v, leaf_v) = bundle.stacked();
+        let n_int = meta.n_internal() as i64;
+        let t = meta.t as i64;
+        let feat = xla::Literal::vec1(&feat_v).reshape(&[t, n_int])?;
+        let thr = xla::Literal::vec1(&thr_v).reshape(&[t, n_int])?;
+        let leaf = xla::Literal::vec1(&leaf_v).reshape(&[
+            t,
+            meta.n_leaves() as i64,
+            meta.n_classes as i64,
+        ])?;
+        let exe = rt.compile(&manifest.path_of(meta))?;
+        Ok(GroveStepExec { exe, meta: meta.clone(), feat, thr, leaf })
+    }
+
+    /// One hop for a batch. `x: [n, f]`, `prob_sum: [n, c]`, `hops[i]` =
+    /// groves contributed including this one. `n` may be ≤ the compiled
+    /// batch; rows beyond `n` are zero-padded and dropped from the output.
+    pub fn step(
+        &self,
+        x: &[f32],
+        prob_sum: &[f32],
+        hops: &[f32],
+    ) -> anyhow::Result<StepOutput> {
+        let f = self.meta.n_features;
+        let c = self.meta.n_classes;
+        let b = self.meta.batch;
+        let n = hops.len();
+        anyhow::ensure!(n > 0 && n <= b, "batch {n} out of range 1..={b}");
+        anyhow::ensure!(x.len() == n * f, "x len {} != {}", x.len(), n * f);
+        anyhow::ensure!(prob_sum.len() == n * c, "prob_sum len");
+
+        // Zero-pad to the compiled batch.
+        let mut xp = vec![0.0f32; b * f];
+        xp[..n * f].copy_from_slice(x);
+        let mut pp = vec![0.0f32; b * c];
+        pp[..n * c].copy_from_slice(prob_sum);
+        let mut hp = vec![1.0f32; b]; // avoid div-by-zero in padding rows
+        hp[..n].copy_from_slice(hops);
+
+        let xl = xla::Literal::vec1(&xp).reshape(&[b as i64, f as i64])?;
+        let pl = xla::Literal::vec1(&pp).reshape(&[b as i64, c as i64])?;
+        let hl = xla::Literal::vec1(&hp).reshape(&[b as i64])?;
+
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[
+                self.feat.clone(),
+                self.thr.clone(),
+                self.leaf.clone(),
+                xl,
+                pl,
+                hl,
+            ])?[0][0]
+            .to_literal_sync()?;
+        let (s, m, cf) = result.to_tuple3()?;
+        let mut new_sum = s.to_vec::<f32>()?;
+        let mut norm = m.to_vec::<f32>()?;
+        let mut conf = cf.to_vec::<f32>()?;
+        new_sum.truncate(n * c);
+        norm.truncate(n * c);
+        conf.truncate(n);
+        Ok(StepOutput { new_sum, norm, conf })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetProfile};
+    use crate::dt::export::sanitize_inf;
+    use crate::fog::FieldOfGroves;
+    use crate::forest::{ForestParams, RandomForest};
+    use crate::runtime::artifacts::default_dir;
+
+    /// Integration tests need `make artifacts` to have run; skip (but
+    /// don't fail) otherwise so `cargo test` works before the first
+    /// artifact build.
+    fn manifest_or_skip() -> Option<Manifest> {
+        let dir = default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts at {} (run `make artifacts`)", dir.display());
+            return None;
+        }
+        Some(Manifest::load(&dir).unwrap())
+    }
+
+    /// Build a demo-shaped FoG matching the `grove_step_demo` artifact:
+    /// t=4 trees per grove, depth 6, f=8, c=3.
+    fn demo_fog() -> (FieldOfGroves, crate::data::Dataset) {
+        let ds = generate(&DatasetProfile::demo(), 181);
+        let params = ForestParams {
+            n_trees: 8,
+            tree: crate::dt::TreeParams { max_depth: 6, ..Default::default() },
+            bootstrap: true,
+        };
+        let rf = RandomForest::fit(&ds.train, &params, 1);
+        let fog = FieldOfGroves::from_forest(&rf, 4); // 2 groves of 4
+        (fog, ds)
+    }
+
+    #[test]
+    fn pjrt_grove_step_matches_native() {
+        let Some(manifest) = manifest_or_skip() else { return };
+        let (fog, ds) = demo_fog();
+        // Force the padded depth to the artifact's depth.
+        let meta = match manifest.find_grove_step(4, 6, 8, 3) {
+            Some(m) => m.clone(),
+            None => {
+                // Trees may be shallower than 6; repad.
+                manifest.get("grove_step_demo").unwrap().clone()
+            }
+        };
+        let rt = Runtime::cpu().unwrap();
+        // Re-pad grove trees to the artifact depth.
+        let grove = &fog.groves[0];
+        let repadded: Vec<crate::dt::FlatTree> = grove
+            .trees
+            .iter()
+            .map(|t| t.repad(meta.depth))
+            .collect();
+        let mut bundle = FlatBundle::new(repadded);
+        sanitize_inf(&mut bundle);
+        let exec = GroveStepExec::new(&rt, &manifest, &meta, &bundle).unwrap();
+
+        let n = 16usize;
+        let x = &ds.test.x[..n * 8];
+        let prob_sum = vec![0.0f32; n * 3];
+        let hops = vec![1.0f32; n];
+        let out = exec.step(x, &prob_sum, &hops).unwrap();
+
+        // Native reference.
+        let native_grove = crate::fog::Grove::new(bundle.trees.clone());
+        for i in 0..n {
+            let native = native_grove.predict_proba(&x[i * 8..(i + 1) * 8]);
+            for (a, b) in out.norm[i * 3..(i + 1) * 3].iter().zip(&native) {
+                assert!((a - b).abs() < 1e-4, "row {i}: pjrt {a} native {b}");
+            }
+            let conf = crate::fog::confidence::max_diff(&native);
+            assert!((out.conf[i] - conf).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn partial_batch_padding() {
+        let Some(manifest) = manifest_or_skip() else { return };
+        let (fog, ds) = demo_fog();
+        let meta = manifest.get("grove_step_demo").unwrap().clone();
+        let rt = Runtime::cpu().unwrap();
+        let repadded: Vec<crate::dt::FlatTree> =
+            fog.groves[0].trees.iter().map(|t| t.repad(meta.depth)).collect();
+        let mut bundle = FlatBundle::new(repadded);
+        sanitize_inf(&mut bundle);
+        let exec = GroveStepExec::new(&rt, &manifest, &meta, &bundle).unwrap();
+        // n=3 ≪ compiled batch 32.
+        let x = &ds.test.x[..3 * 8];
+        let out = exec.step(x, &vec![0.0; 9], &[1.0, 1.0, 1.0]).unwrap();
+        assert_eq!(out.norm.len(), 9);
+        assert_eq!(out.conf.len(), 3);
+        let full = exec
+            .step(&ds.test.x[..16 * 8], &vec![0.0; 48], &vec![1.0; 16])
+            .unwrap();
+        for j in 0..9 {
+            assert!((out.norm[j] - full.norm[j]).abs() < 1e-5);
+        }
+    }
+
+}

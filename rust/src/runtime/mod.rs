@@ -1,0 +1,14 @@
+//! PJRT runtime: load the AOT-compiled (JAX/Pallas) HLO-text artifacts
+//! produced by `python/compile/aot.py` and execute them from rust.
+//!
+//! Python never runs on this path — `make artifacts` is a build step; the
+//! rust binary loads `artifacts/*.hlo.txt` (HLO **text**, the interchange
+//! format that survives the jax≥0.5 ↔ xla_extension 0.5.1 proto-id
+//! mismatch), compiles once per process via the PJRT CPU client, and
+//! executes with concrete inputs.
+
+pub mod artifacts;
+pub mod executable;
+
+pub use artifacts::{ArtifactMeta, Manifest};
+pub use executable::{GroveStepExec, Runtime, StepOutput};

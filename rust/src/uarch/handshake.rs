@@ -1,0 +1,121 @@
+//! The inter-grove handshaking protocol (paper §3.2.2 "Handshaking
+//! Protocol").
+//!
+//! Grove `Gi` raises `req` toward `G(i+1)`; when the neighbour has queue
+//! space it copies the Γ-byte entry and pulses `ack` for one cycle; `Gi`
+//! then drops `req`, completing the handshake. If the neighbour's queue
+//! is full, `req` stays high — backpressure stalls the sender's
+//! forwarding port (but not its PE, which keeps draining its own queue).
+
+/// Sender-side handshake FSM.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum HandshakeState {
+    /// No transfer pending.
+    Idle,
+    /// `req` is high; waiting for the neighbour's `ack`.
+    ReqRaised,
+    /// `ack` seen this cycle; `req` drops next cycle.
+    AckSeen,
+}
+
+/// One directed handshake channel (Gi → Gi+1).
+#[derive(Clone, Debug)]
+pub struct Handshake {
+    pub state: HandshakeState,
+    /// Completed transfers (for energy accounting: one event each).
+    pub transfers: u64,
+    /// Cycles spent stalled with `req` high and no `ack`.
+    pub stall_cycles: u64,
+}
+
+impl Default for Handshake {
+    fn default() -> Self {
+        Handshake { state: HandshakeState::Idle, transfers: 0, stall_cycles: 0 }
+    }
+}
+
+impl Handshake {
+    /// Sender raises `req` (call when a low-confidence entry is ready to
+    /// forward). Only legal from `Idle`.
+    pub fn raise_req(&mut self) {
+        debug_assert_eq!(self.state, HandshakeState::Idle, "req while busy");
+        self.state = HandshakeState::ReqRaised;
+    }
+
+    /// One clock at the receiver: `can_accept` is whether the neighbour
+    /// queue has space. Returns `true` exactly once per transfer, on the
+    /// cycle the copy completes (the `ack` pulse).
+    pub fn clock(&mut self, can_accept: bool) -> bool {
+        match self.state {
+            HandshakeState::Idle => false,
+            HandshakeState::ReqRaised => {
+                if can_accept {
+                    self.state = HandshakeState::AckSeen;
+                    true
+                } else {
+                    self.stall_cycles += 1;
+                    false
+                }
+            }
+            HandshakeState::AckSeen => {
+                // Sender pulls req low; channel returns to idle.
+                self.state = HandshakeState::Idle;
+                self.transfers += 1;
+                false
+            }
+        }
+    }
+
+    pub fn busy(&self) -> bool {
+        self.state != HandshakeState::Idle
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complete_handshake_two_cycles() {
+        let mut h = Handshake::default();
+        h.raise_req();
+        assert!(h.clock(true)); // ack pulse
+        assert!(!h.clock(true)); // req drops, idle again
+        assert_eq!(h.state, HandshakeState::Idle);
+        assert_eq!(h.transfers, 1);
+        assert_eq!(h.stall_cycles, 0);
+    }
+
+    #[test]
+    fn backpressure_stalls() {
+        let mut h = Handshake::default();
+        h.raise_req();
+        assert!(!h.clock(false));
+        assert!(!h.clock(false));
+        assert_eq!(h.stall_cycles, 2);
+        assert!(h.clock(true)); // finally accepted
+        h.clock(true);
+        assert_eq!(h.transfers, 1);
+    }
+
+    #[test]
+    fn no_spurious_acks_when_idle() {
+        let mut h = Handshake::default();
+        for _ in 0..10 {
+            assert!(!h.clock(true));
+        }
+        assert_eq!(h.transfers, 0);
+    }
+
+    #[test]
+    fn busy_reflects_state() {
+        let mut h = Handshake::default();
+        assert!(!h.busy());
+        h.raise_req();
+        assert!(h.busy());
+        h.clock(true);
+        assert!(h.busy()); // ack seen, req not yet dropped
+        h.clock(true);
+        assert!(!h.busy());
+    }
+}

@@ -1,0 +1,26 @@
+//! Cycle-level simulator of the FoG micro-architecture (paper §3.2.2,
+//! Figure 3).
+//!
+//! Each grove tile contains a **data queue** (byte-addressable local
+//! memory with `$fr`/`$bk` pointers managed by the queue controller),
+//! a **processing element** (the grove's decision trees), and a
+//! **handshake** port (`req`/`ack`) to the next grove in the ring. Inputs
+//! arrive from the processor through the accelerator input queue; results
+//! leave through the output queue.
+//!
+//! The simulator is cycle-stepped: every [`ring::RingSim::step`] advances
+//! each tile's FSM by one clock. Functional results (probabilities, hop
+//! counts) are computed with the same [`crate::fog::Grove`] code the
+//! software path uses, so the simulator's *outputs* provably match
+//! Algorithm 2 while its *timing/energy event counts* add the
+//! micro-architectural detail (queue traffic, handshake stalls,
+//! backpressure) the analytical model cannot see.
+
+pub mod handshake;
+pub mod pe;
+pub mod queue;
+pub mod ring;
+pub mod stats;
+
+pub use ring::{RingConfig, RingSim};
+pub use stats::SimStats;

@@ -1,0 +1,110 @@
+//! The grove processing element (paper §3.2.2 "Processing Element").
+//!
+//! "The latency of the PE depends on the number of trees per grove, the
+//! maximum depth of each tree and degree of parallelism." We model
+//! exactly that: trees are grouped onto `parallelism` physical tree
+//! engines; each engine walks one level in [`CYCLES_PER_LEVEL`] cycles
+//! (node fetch → compare → next-address). The functional result is
+//! delegated to the same [`Grove`] the software path uses.
+
+use crate::fog::confidence::max_diff;
+use crate::fog::Grove;
+
+/// Serial cycles per tree level (matches the analytical model's
+/// `TREE_CYCLES_PER_LEVEL`).
+pub const CYCLES_PER_LEVEL: u64 = 3;
+/// Cycles to average the probability array and compute MaxDiff.
+pub const COMBINE_CYCLES: u64 = 4;
+
+/// Timing + functional model of one grove PE.
+#[derive(Clone, Debug)]
+pub struct PeModel {
+    /// Physical tree engines evaluating in parallel.
+    pub parallelism: usize,
+}
+
+impl Default for PeModel {
+    fn default() -> Self {
+        // One engine per tree: all trees in parallel (the paper's FoG
+        // design point; area has already been charged for it).
+        PeModel { parallelism: usize::MAX }
+    }
+}
+
+impl PeModel {
+    /// PE latency in cycles for one input on `grove`.
+    pub fn latency(&self, grove: &Grove) -> u64 {
+        let engines = self.parallelism.min(grove.n_trees()).max(1);
+        let rounds = grove.n_trees().div_ceil(engines) as u64;
+        rounds * grove.depth() as u64 * CYCLES_PER_LEVEL + COMBINE_CYCLES
+    }
+
+    /// Run the grove on an input: accumulate its probability mass into
+    /// `prob_sum` (one unit per grove, Algorithm 2 line 7), and return
+    /// `(confidence, comparator_ops)` after normalizing by `hops`.
+    pub fn evaluate(
+        &self,
+        grove: &Grove,
+        features: &[f32],
+        prob_sum: &mut [f32],
+        hops_after: u8,
+    ) -> (f32, u64) {
+        grove.accumulate_proba(features, prob_sum);
+        let inv = 1.0 / hops_after as f32;
+        let norm: Vec<f32> = prob_sum.iter().map(|p| p * inv).collect();
+        let conf = max_diff(&norm);
+        (conf, grove.ops_per_eval() as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetProfile};
+    use crate::forest::{ForestParams, RandomForest};
+
+    fn grove() -> (Grove, crate::data::Dataset) {
+        let ds = generate(&DatasetProfile::demo(), 121);
+        let rf = RandomForest::fit(&ds.train, &ForestParams::small(), 1);
+        (Grove::new(rf.flatten(rf.max_depth())), ds)
+    }
+
+    #[test]
+    fn latency_scales_with_parallelism() {
+        let (g, _) = grove();
+        let serial = PeModel { parallelism: 1 };
+        let parallel = PeModel::default();
+        assert!(serial.latency(&g) > parallel.latency(&g));
+        // Fully parallel: one round of `depth` levels.
+        assert_eq!(
+            parallel.latency(&g),
+            g.depth() as u64 * CYCLES_PER_LEVEL + COMBINE_CYCLES
+        );
+    }
+
+    #[test]
+    fn evaluate_matches_grove() {
+        let (g, ds) = grove();
+        let pe = PeModel::default();
+        let mut sum = vec![0.0f32; g.n_classes];
+        let (conf, ops) = pe.evaluate(&g, ds.test.row(0), &mut sum, 1);
+        let direct = g.predict_proba(ds.test.row(0));
+        for (a, b) in sum.iter().zip(&direct) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        assert!((conf - max_diff(&direct)).abs() < 1e-6);
+        assert_eq!(ops, g.ops_per_eval() as u64);
+    }
+
+    #[test]
+    fn two_hop_normalization() {
+        let (g, ds) = grove();
+        let pe = PeModel::default();
+        let mut sum = vec![0.0f32; g.n_classes];
+        pe.evaluate(&g, ds.test.row(0), &mut sum, 1);
+        let (conf2, _) = pe.evaluate(&g, ds.test.row(0), &mut sum, 2);
+        // Same grove twice = same normalized distribution as once.
+        let once = g.predict_proba(ds.test.row(0));
+        assert!((conf2 - max_diff(&once)).abs() < 1e-5);
+    }
+}

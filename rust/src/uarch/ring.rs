@@ -1,0 +1,455 @@
+//! The grove ring (paper Figure 3): cycle-stepped simulation of the full
+//! FoG accelerator — input queue, grove tiles (data queue + PE +
+//! handshake), and output queue.
+//!
+//! Functional behaviour is bit-identical to Algorithm 2 (verified by the
+//! `matches_algorithm2` test): the simulator adds *timing* — PE latency,
+//! queue service order, handshake stalls, injection backpressure — and
+//! event counts for energy.
+
+use super::handshake::Handshake;
+use super::pe::PeModel;
+use super::queue::{DataQueue, Entry};
+use super::stats::SimStats;
+use crate::fog::FieldOfGroves;
+use crate::util::rng::Rng;
+
+/// Ring configuration.
+#[derive(Clone, Debug)]
+pub struct RingConfig {
+    /// Confidence stopping threshold (Algorithm 2).
+    pub threshold: f32,
+    /// Maximum contributing groves per input.
+    pub max_hops: usize,
+    /// Data-queue capacity per grove, bytes (paper: 6 kB).
+    pub queue_bytes: usize,
+    /// PE parallelism model.
+    pub pe: PeModel,
+    /// Cycles between processor injections (1 = one input/cycle offered).
+    pub inject_interval: u64,
+    /// Seed for the random starting grove of each input.
+    pub seed: u64,
+    /// Safety limit.
+    pub max_cycles: u64,
+}
+
+impl Default for RingConfig {
+    fn default() -> Self {
+        RingConfig {
+            threshold: 0.3,
+            max_hops: usize::MAX,
+            queue_bytes: 6 * 1024,
+            pe: PeModel::default(),
+            inject_interval: 8,
+            seed: 0,
+            max_cycles: 50_000_000,
+        }
+    }
+}
+
+/// Completed classification record.
+#[derive(Clone, Debug)]
+pub struct SimOutcome {
+    pub id: u32,
+    pub label: usize,
+    pub hops: usize,
+    pub latency_cycles: u64,
+    pub prob: Vec<f32>,
+}
+
+/// Per-tile FSM state.
+enum TileState {
+    Idle,
+    /// PE evaluating `entry`; done when `remaining` hits 0.
+    Busy { remaining: u64, entry: Entry },
+}
+
+struct Tile {
+    queue: DataQueue,
+    state: TileState,
+    /// Entry awaiting transfer to the next grove.
+    outbox: Option<Entry>,
+    handshake: Handshake,
+    busy_cycles: u64,
+}
+
+/// The ring simulator. Owns a reference to the functional FoG model.
+pub struct RingSim<'a> {
+    fog: &'a FieldOfGroves,
+    cfg: RingConfig,
+    tiles: Vec<Tile>,
+    /// (features, injection target) pending injection, plus bookkeeping.
+    pending: std::collections::VecDeque<(u32, Vec<f32>, usize)>,
+    inject_cooldown: u64,
+    /// Injection cycle per input id (dense: ids are 0..n).
+    injected_at: Vec<u64>,
+    pub outcomes: Vec<SimOutcome>,
+    pub stats: SimStats,
+}
+
+impl<'a> RingSim<'a> {
+    pub fn new(fog: &'a FieldOfGroves, cfg: RingConfig) -> RingSim<'a> {
+        let tiles = (0..fog.n_groves())
+            .map(|_| Tile {
+                queue: DataQueue::new(fog.n_features, fog.n_classes, cfg.queue_bytes),
+                state: TileState::Idle,
+                outbox: None,
+                handshake: Handshake::default(),
+                busy_cycles: 0,
+            })
+            .collect();
+        let stats = SimStats { grove_busy_cycles: vec![0; fog.n_groves()], ..Default::default() };
+        RingSim {
+            fog,
+            cfg,
+            tiles,
+            pending: std::collections::VecDeque::new(),
+            inject_cooldown: 0,
+            injected_at: Vec::new(),
+            outcomes: Vec::new(),
+            stats,
+        }
+    }
+
+    /// Queue a batch for injection; start groves are drawn per input from
+    /// the seeded stream (Algorithm 2 line 3).
+    pub fn load_batch(&mut self, x: &[f32]) {
+        let f = self.fog.n_features;
+        assert_eq!(x.len() % f, 0);
+        let n = x.len() / f;
+        self.injected_at.resize(self.injected_at.len() + n, 0);
+        for i in 0..n {
+            let mut rng =
+                Rng::new(self.cfg.seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            let start = rng.gen_range(self.fog.n_groves());
+            self.pending.push_back((i as u32, x[i * f..(i + 1) * f].to_vec(), start));
+        }
+    }
+
+    /// Run until every loaded input is classified (or `max_cycles`).
+    /// Returns outcomes sorted by input id.
+    pub fn run(&mut self) -> &[SimOutcome] {
+        let total = self.pending.len() as u64;
+        while (self.outcomes.len() as u64) < total {
+            assert!(
+                self.stats.cycles < self.cfg.max_cycles,
+                "simulation exceeded {} cycles (deadlock?)",
+                self.cfg.max_cycles
+            );
+            self.step();
+        }
+        self.refresh_queue_counters();
+        self.outcomes.sort_by_key(|o| o.id);
+        &self.outcomes
+    }
+
+    /// Advance one clock.
+    pub fn step(&mut self) {
+        self.stats.cycles += 1;
+        let n = self.tiles.len();
+
+        // Phase 1 — handshake channels: move outbox entries into the next
+        // grove's queue front (priority insertion per the paper).
+        for i in 0..n {
+            if !self.tiles[i].handshake.busy() {
+                continue;
+            }
+            let next = (i + 1) % n;
+            let can_accept = !self.tiles[next].queue.is_full();
+            let ack = self.tiles[i].handshake.clock(can_accept);
+            if ack {
+                let entry = self.tiles[i].outbox.take().expect("ack without outbox");
+                self.tiles[next]
+                    .queue
+                    .push_front(entry)
+                    .unwrap_or_else(|_| panic!("accepted transfer into full queue"));
+                self.stats.handshakes += 1;
+            } else if matches!(
+                self.tiles[i].handshake.state,
+                super::handshake::HandshakeState::ReqRaised
+            ) {
+                self.stats.stall_cycles += 1;
+            }
+        }
+
+        // Phase 2 — PEs.
+        for i in 0..n {
+            let tile = &mut self.tiles[i];
+            match std::mem::replace(&mut tile.state, TileState::Idle) {
+                TileState::Idle => {
+                    // Start the next entry if available — but only when the
+                    // outbox is clear: in hardware the PE stalls while a
+                    // forwarded entry is still waiting for the neighbour's
+                    // ack (it would have nowhere to put a second one).
+                    if tile.outbox.is_none() {
+                        if let Some(entry) = tile.queue.pop_front() {
+                            let lat = self.cfg.pe.latency(&self.fog.groves[i]).max(1);
+                            tile.state = TileState::Busy { remaining: lat, entry };
+                        }
+                    }
+                }
+                TileState::Busy { remaining, entry } => {
+                    tile.busy_cycles += 1;
+                    self.stats.grove_busy_cycles[i] += 1;
+                    if remaining > 1 {
+                        tile.state = TileState::Busy { remaining: remaining - 1, entry };
+                    } else {
+                        // Evaluation completes this cycle.
+                        self.finish_eval(i, entry);
+                    }
+                }
+            }
+        }
+
+        // Phase 3 — processor injection (one offered input per interval).
+        // Bubble flow control: the ring is unidirectional, so a cycle of
+        // full queues + occupied outboxes would deadlock. The injector
+        // guarantees at least one free slot ring-wide ("bubble"), which
+        // circulates backwards and lets forwarded entries always make
+        // progress — the standard deadlock-avoidance rule for rings.
+        if self.inject_cooldown > 0 {
+            self.inject_cooldown -= 1;
+        }
+        if self.inject_cooldown == 0 && self.occupancy() + 2 <= self.total_slots() {
+            if let Some((id, features, start)) = self.pending.pop_front() {
+                let entry = Entry {
+                    id,
+                    hops: 0,
+                    prob: vec![0.0; self.fog.n_classes],
+                    features,
+                };
+                match self.tiles[start].queue.push_back(entry) {
+                    Ok(()) => {
+                        self.injected_at[id as usize] = self.stats.cycles;
+                        self.inject_cooldown = self.cfg.inject_interval;
+                    }
+                    Err(entry) => {
+                        // Target queue full: retry next cycle.
+                        self.pending.push_front((entry.id, entry.features, start));
+                        self.stats.stall_cycles += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    fn finish_eval(&mut self, tile_idx: usize, mut entry: Entry) {
+        let grove = &self.fog.groves[tile_idx];
+        let hops_after = entry.hops + 1;
+        let (conf, ops) =
+            self.cfg.pe.evaluate(grove, &entry.features, &mut entry.prob, hops_after);
+        entry.hops = hops_after;
+        self.stats.comparator_ops += ops;
+
+        let max_hops = self.cfg.max_hops.min(self.fog.n_groves());
+        let done = conf >= self.cfg.threshold || (entry.hops as usize) >= max_hops;
+        if done {
+            let inv = 1.0 / entry.hops as f32;
+            let prob: Vec<f32> = entry.prob.iter().map(|p| p * inv).collect();
+            let label = crate::util::argmax(&prob);
+            let injected =
+                self.injected_at.get(entry.id as usize).copied().unwrap_or(0);
+            self.stats.classified += 1;
+            self.stats.total_hops += entry.hops as u64;
+            self.stats.total_latency_cycles += self.stats.cycles - injected;
+            self.outcomes.push(SimOutcome {
+                id: entry.id,
+                label,
+                hops: entry.hops as usize,
+                latency_cycles: self.stats.cycles - injected,
+                prob,
+            });
+        } else {
+            // Forward to the next grove. If the outbox is occupied (a
+            // previous transfer is still stalled) the PE would stall in
+            // hardware; here the occupancy is at most one entry because
+            // the PE cannot finish another item before we clear it — we
+            // busy-wait by re-queueing at the front (zero-cost retry).
+            debug_assert!(self.tiles[tile_idx].outbox.is_none());
+            self.tiles[tile_idx].outbox = Some(entry);
+            self.tiles[tile_idx].handshake.raise_req();
+        }
+        // Tile returns to Idle; queue traffic counters live inside each
+        // DataQueue and are folded into stats once per run() (§Perf
+        // iteration 2: refreshing per completion was O(tiles) each).
+    }
+
+    /// Human-readable tile state summary (debugging / verbose mode).
+    pub fn debug_state(&self) -> String {
+        let mut s = format!(
+            "cycle={} classified={} pending={} occ={}/{}\n",
+            self.stats.cycles,
+            self.outcomes.len(),
+            self.pending.len(),
+            self.occupancy(),
+            self.total_slots()
+        );
+        for (i, t) in self.tiles.iter().enumerate() {
+            let st = match &t.state {
+                TileState::Idle => "idle".to_string(),
+                TileState::Busy { remaining, entry } => {
+                    format!("busy(rem={remaining},id={})", entry.id)
+                }
+            };
+            s += &format!(
+                "  G{i}: q={}/{} outbox={:?} hs={:?} {st}\n",
+                t.queue.len(),
+                t.queue.capacity_entries(),
+                t.outbox.as_ref().map(|e| e.id),
+                t.handshake.state,
+            );
+        }
+        s
+    }
+
+    /// Entries currently inside the ring: queues, outboxes, **and** PE
+    /// pipelines — an entry being evaluated will need an outbox slot when
+    /// it finishes, so it must count against the bubble invariant.
+    fn occupancy(&self) -> usize {
+        self.tiles
+            .iter()
+            .map(|t| {
+                t.queue.len()
+                    + t.outbox.is_some() as usize
+                    + matches!(t.state, TileState::Busy { .. }) as usize
+            })
+            .sum()
+    }
+
+    /// Total ring storage slots (queue capacities + one outbox per tile;
+    /// the PE pipeline slot is *not* counted as capacity because a
+    /// finishing entry needs the outbox — counting it would allow a state
+    /// with every outbox pre-committed and no bubble).
+    fn total_slots(&self) -> usize {
+        self.tiles
+            .iter()
+            .map(|t| t.queue.capacity_entries() + 1)
+            .sum()
+    }
+
+    fn refresh_queue_counters(&mut self) {
+        self.stats.queue_bytes_read =
+            self.tiles.iter().map(|t| t.queue.bytes_read).sum();
+        self.stats.queue_bytes_written =
+            self.tiles.iter().map(|t| t.queue.bytes_written).sum();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetProfile};
+    use crate::fog::FogParams;
+    use crate::forest::{ForestParams, RandomForest};
+
+    fn setup() -> (FieldOfGroves, crate::data::Dataset) {
+        let ds = generate(&DatasetProfile::demo(), 131);
+        let rf = RandomForest::fit(&ds.train, &ForestParams::default(), 1);
+        (FieldOfGroves::from_forest(&rf, 4), ds)
+    }
+
+    #[test]
+    fn matches_algorithm2() {
+        let (fog, ds) = setup();
+        let threshold = 0.35;
+        let seed = 17;
+        // Software Algorithm 2.
+        let sw = fog.evaluate(
+            &ds.test.x,
+            &FogParams { threshold, max_hops: fog.n_groves(), seed },
+        );
+        // μarch simulation with the same per-input start-grove stream.
+        let cfg = RingConfig { threshold, seed, ..Default::default() };
+        let mut sim = RingSim::new(&fog, cfg);
+        sim.load_batch(&ds.test.x);
+        let outcomes = sim.run().to_vec();
+        assert_eq!(outcomes.len(), ds.test.len());
+        for (o, s) in outcomes.iter().zip(&sw.outcomes) {
+            assert_eq!(o.label, s.label, "id {}", o.id);
+            assert_eq!(o.hops, s.hops, "id {}", o.id);
+            for (a, b) in o.prob.iter().zip(&s.prob) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn stats_consistent() {
+        let (fog, ds) = setup();
+        let cfg = RingConfig { threshold: 0.5, seed: 3, ..Default::default() };
+        let mut sim = RingSim::new(&fog, cfg);
+        sim.load_batch(&ds.test.x);
+        sim.run();
+        assert_eq!(sim.stats.classified as usize, ds.test.len());
+        assert!(sim.stats.avg_hops() >= 1.0);
+        assert!(sim.stats.avg_latency_cycles() > 0.0);
+        assert!(sim.stats.comparator_ops > 0);
+        assert!(sim.stats.queue_bytes_written > 0);
+        assert!(sim.stats.avg_utilization() <= 1.0);
+        // handshakes = total forwards = total hops - classified
+        assert_eq!(
+            sim.stats.handshakes,
+            sim.stats.total_hops - sim.stats.classified
+        );
+    }
+
+    #[test]
+    fn tiny_queue_backpressure_still_completes() {
+        let (fog, ds) = setup();
+        // One-entry queues force handshake stalls.
+        let gamma = 1 + fog.n_features + 1 + fog.n_classes;
+        let cfg = RingConfig {
+            threshold: 0.9,
+            queue_bytes: gamma, // capacity 1
+            inject_interval: 1,
+            seed: 5,
+            ..Default::default()
+        };
+        let mut sim = RingSim::new(&fog, cfg);
+        let n = 40.min(ds.test.len());
+        sim.load_batch(&ds.test.x[..n * fog.n_features]);
+        let outcomes = sim.run();
+        assert_eq!(outcomes.len(), n);
+    }
+
+    #[test]
+    fn zero_threshold_single_hop_everywhere() {
+        let (fog, ds) = setup();
+        let cfg = RingConfig { threshold: 0.0, seed: 7, ..Default::default() };
+        let mut sim = RingSim::new(&fog, cfg);
+        sim.load_batch(&ds.test.x);
+        let outcomes = sim.run();
+        assert!(outcomes.iter().all(|o| o.hops == 1));
+        assert_eq!(sim.stats.handshakes, 0);
+    }
+
+    #[test]
+    fn max_hops_cap_respected() {
+        let (fog, ds) = setup();
+        let cfg = RingConfig { threshold: 2.0, max_hops: 2, seed: 9, ..Default::default() };
+        let mut sim = RingSim::new(&fog, cfg);
+        sim.load_batch(&ds.test.x);
+        let outcomes = sim.run();
+        assert!(outcomes.iter().all(|o| o.hops == 2));
+    }
+
+    #[test]
+    fn faster_injection_higher_utilization() {
+        let (fog, ds) = setup();
+        let run = |interval| {
+            let cfg = RingConfig {
+                threshold: 0.6,
+                inject_interval: interval,
+                seed: 11,
+                ..Default::default()
+            };
+            let mut sim = RingSim::new(&fog, cfg);
+            sim.load_batch(&ds.test.x);
+            sim.run();
+            sim.stats.avg_utilization()
+        };
+        let fast = run(1);
+        let slow = run(64);
+        assert!(fast > slow, "fast {fast} slow {slow}");
+    }
+}

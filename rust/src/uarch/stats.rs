@@ -1,0 +1,114 @@
+//! Event counters collected by the ring simulator, convertible to energy
+//! via the PPA block library — the μarch-level counterpart of the
+//! analytical model in [`crate::energy::model`].
+
+use crate::energy::blocks::EnergyBlocks;
+
+/// Aggregate simulation statistics.
+#[derive(Clone, Debug, Default)]
+pub struct SimStats {
+    pub cycles: u64,
+    pub classified: u64,
+    /// Comparator operations across all PEs.
+    pub comparator_ops: u64,
+    /// Data-queue traffic in bytes (reads + writes tracked separately).
+    pub queue_bytes_read: u64,
+    pub queue_bytes_written: u64,
+    /// Completed inter-grove transfers.
+    pub handshakes: u64,
+    /// Cycles a sender stalled on a full neighbour queue.
+    pub stall_cycles: u64,
+    /// Sum over classified inputs of (completion - injection) cycles.
+    pub total_latency_cycles: u64,
+    /// Sum of hop counts over classified inputs.
+    pub total_hops: u64,
+    /// Per-grove busy cycles (PE actively evaluating).
+    pub grove_busy_cycles: Vec<u64>,
+}
+
+impl SimStats {
+    pub fn avg_latency_cycles(&self) -> f64 {
+        if self.classified == 0 {
+            return 0.0;
+        }
+        self.total_latency_cycles as f64 / self.classified as f64
+    }
+
+    pub fn avg_hops(&self) -> f64 {
+        if self.classified == 0 {
+            return 0.0;
+        }
+        self.total_hops as f64 / self.classified as f64
+    }
+
+    /// Throughput in classifications per 1k cycles.
+    pub fn throughput_per_kcycle(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.classified as f64 * 1000.0 / self.cycles as f64
+    }
+
+    /// Mean PE utilization across groves (busy / total cycles).
+    pub fn avg_utilization(&self) -> f64 {
+        if self.cycles == 0 || self.grove_busy_cycles.is_empty() {
+            return 0.0;
+        }
+        let busy: u64 = self.grove_busy_cycles.iter().sum();
+        busy as f64 / (self.cycles as f64 * self.grove_busy_cycles.len() as f64)
+    }
+
+    /// Dynamic energy (nJ) of the counted events.
+    pub fn dynamic_energy_nj(&self, eb: &EnergyBlocks) -> f64 {
+        eb.comparisons_nj(self.comparator_ops as f64)
+            + eb.sram_read_nj(self.queue_bytes_read as f64)
+            + eb.sram_write_nj(self.queue_bytes_written as f64)
+            + self.handshakes as f64 * eb.handshake_pj * 1e-3
+    }
+
+    /// Dynamic energy per classification (nJ).
+    pub fn dynamic_energy_per_input_nj(&self, eb: &EnergyBlocks) -> f64 {
+        if self.classified == 0 {
+            return 0.0;
+        }
+        self.dynamic_energy_nj(eb) / self.classified as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn averages_handle_zero() {
+        let s = SimStats::default();
+        assert_eq!(s.avg_latency_cycles(), 0.0);
+        assert_eq!(s.avg_hops(), 0.0);
+        assert_eq!(s.throughput_per_kcycle(), 0.0);
+        assert_eq!(s.avg_utilization(), 0.0);
+    }
+
+    #[test]
+    fn energy_accumulates() {
+        let s = SimStats {
+            comparator_ops: 1000,
+            queue_bytes_read: 100,
+            queue_bytes_written: 100,
+            handshakes: 10,
+            ..Default::default()
+        };
+        let e = s.dynamic_energy_nj(&EnergyBlocks::default());
+        assert!(e > 0.0);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let s = SimStats {
+            cycles: 100,
+            grove_busy_cycles: vec![50, 100],
+            ..Default::default()
+        };
+        let u = s.avg_utilization();
+        assert!((u - 0.75).abs() < 1e-9);
+    }
+}

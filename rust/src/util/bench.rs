@@ -1,0 +1,145 @@
+//! Criterion-lite benchmark harness.
+//!
+//! The build environment has no criterion crate, so `cargo bench` targets
+//! (declared `harness = false`) use this module: warmup, fixed-count sample
+//! loop, median/MAD reporting, and a machine-readable one-line-per-bench
+//! output that EXPERIMENTS.md quotes.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement summary.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: usize,
+    pub median_ns: f64,
+    pub mad_ns: f64,
+    pub mean_ns: f64,
+    pub throughput_per_s: Option<f64>,
+}
+
+impl Measurement {
+    pub fn report(&self) {
+        let (val, unit) = humanize_ns(self.median_ns);
+        let (madv, madu) = humanize_ns(self.mad_ns);
+        match self.throughput_per_s {
+            Some(tp) => println!(
+                "bench {:<44} {:>10.3} {}  ±{:.2} {}  ({:.1}/s, n={})",
+                self.name, val, unit, madv, madu, tp, self.samples
+            ),
+            None => println!(
+                "bench {:<44} {:>10.3} {}  ±{:.2} {}  (n={})",
+                self.name, val, unit, madv, madu, self.samples
+            ),
+        }
+    }
+}
+
+fn humanize_ns(ns: f64) -> (f64, &'static str) {
+    if ns < 1e3 {
+        (ns, "ns")
+    } else if ns < 1e6 {
+        (ns / 1e3, "µs")
+    } else if ns < 1e9 {
+        (ns / 1e6, "ms")
+    } else {
+        (ns / 1e9, "s ")
+    }
+}
+
+/// Benchmark runner with warmup and adaptive sample count.
+pub struct Bencher {
+    /// Minimum measured wall time to spend per benchmark.
+    pub min_time: Duration,
+    /// Maximum number of samples to record.
+    pub max_samples: usize,
+    pub results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // FOG_BENCH_FAST=1 shrinks budgets so `cargo bench` smoke runs fast.
+        let fast = std::env::var("FOG_BENCH_FAST").is_ok();
+        Bencher {
+            min_time: if fast { Duration::from_millis(50) } else { Duration::from_millis(400) },
+            max_samples: if fast { 10 } else { 50 },
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    /// Measure `f`, treating one call as one iteration. `items_per_iter`
+    /// (if nonzero) adds a throughput figure (items/s).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, items_per_iter: usize, mut f: F) {
+        // Warmup: one call minimum, until ~10% of budget.
+        let warm_budget = self.min_time / 10;
+        let t0 = Instant::now();
+        loop {
+            f();
+            if t0.elapsed() >= warm_budget {
+                break;
+            }
+        }
+        // Sampling.
+        let mut samples_ns: Vec<f64> = Vec::with_capacity(self.max_samples);
+        let t1 = Instant::now();
+        while samples_ns.len() < self.max_samples
+            && (t1.elapsed() < self.min_time || samples_ns.len() < 5)
+        {
+            let s = Instant::now();
+            f();
+            samples_ns.push(s.elapsed().as_nanos() as f64);
+        }
+        let median = crate::util::stats::median(&samples_ns);
+        let m = Measurement {
+            name: name.to_string(),
+            samples: samples_ns.len(),
+            median_ns: median,
+            mad_ns: crate::util::stats::mad(&samples_ns),
+            mean_ns: crate::util::stats::mean(&samples_ns),
+            throughput_per_s: if items_per_iter > 0 && median > 0.0 {
+                Some(items_per_iter as f64 * 1e9 / median)
+            } else {
+                None
+            },
+        };
+        m.report();
+        self.results.push(m);
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_measurement() {
+        let mut b = Bencher { min_time: Duration::from_millis(5), max_samples: 8, results: vec![] };
+        let mut acc = 0u64;
+        b.bench("noop-ish", 10, || {
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert_eq!(b.results.len(), 1);
+        let m = &b.results[0];
+        assert!(m.samples >= 5);
+        assert!(m.median_ns >= 0.0);
+        assert!(m.throughput_per_s.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn humanize() {
+        assert_eq!(humanize_ns(500.0).1, "ns");
+        assert_eq!(humanize_ns(5e4).1, "µs");
+        assert_eq!(humanize_ns(5e7).1, "ms");
+        assert_eq!(humanize_ns(5e9).1, "s ");
+    }
+}

@@ -1,0 +1,131 @@
+//! Tiny command-line argument parser: subcommand + `--flag value` /
+//! `--flag=value` / boolean `--flag` options, with typed getters.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: a positional subcommand list and a flag map.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // --flag value  |  --flag (boolean)
+                    let is_value = iter
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    if is_value {
+                        let v = iter.next().unwrap();
+                        out.flags.insert(stripped.to_string(), v);
+                    } else {
+                        out.flags.insert(stripped.to_string(), "true".to_string());
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process's own arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Parse an `AxB` topology string (e.g. `8x2` = 8 groves × 2 trees).
+    pub fn get_topology(&self, key: &str, default: (usize, usize)) -> (usize, usize) {
+        self.get(key)
+            .and_then(|s| {
+                let (a, b) = s.split_once('x')?;
+                Some((a.parse().ok()?, b.parse().ok()?))
+            })
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("table1 --dataset mnist --threshold 0.3 --verbose");
+        assert_eq!(a.subcommand(), Some("table1"));
+        assert_eq!(a.get("dataset"), Some("mnist"));
+        assert_eq!(a.get_f64("threshold", 0.0), 0.3);
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("run --n=17 --name=foo");
+        assert_eq!(a.get_usize("n", 0), 17);
+        assert_eq!(a.get("name"), Some("foo"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_f64("missing", 1.5), 1.5);
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert!(!a.get_bool("missing"));
+    }
+
+    #[test]
+    fn topology() {
+        let a = parse("fig5 --topology 8x2");
+        assert_eq!(a.get_topology("topology", (4, 4)), (8, 2));
+        assert_eq!(a.get_topology("nope", (4, 4)), (4, 4));
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // "--lr -0.5": "-0.5" doesn't start with "--", so it is a value.
+        let a = parse("train --lr -0.5");
+        assert_eq!(a.get_f64("lr", 0.0), -0.5);
+    }
+}

@@ -1,0 +1,72 @@
+//! Self-contained substrates: PRNG, JSON, thread pool, CLI parsing, bench
+//! harness and small numeric helpers. The build environment vendors only the
+//! `xla` crate closure, so every utility a production crate would normally
+//! pull from crates.io is implemented here.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod matrix;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+/// Argmax over a float slice; first index wins ties. Empty slices return 0.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
+}
+
+/// The two largest values of a slice, `(max1, max2)` with `max1 >= max2`.
+/// Mirrors the paper's `TwoMaximumValues` subroutine. Slices with fewer than
+/// two elements return the element (or 0.0) twice.
+pub fn two_max(xs: &[f32]) -> (f32, f32) {
+    let mut m1 = f32::NEG_INFINITY;
+    let mut m2 = f32::NEG_INFINITY;
+    for &v in xs {
+        if v > m1 {
+            m2 = m1;
+            m1 = v;
+        } else if v > m2 {
+            m2 = v;
+        }
+    }
+    if !m1.is_finite() {
+        return (0.0, 0.0);
+    }
+    if !m2.is_finite() {
+        return (m1, m1);
+    }
+    (m1, m2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 0.7, 0.2]), 1);
+        assert_eq!(argmax(&[0.5, 0.5]), 0); // first wins ties
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn two_max_basic() {
+        assert_eq!(two_max(&[0.1, 0.7, 0.2]), (0.7, 0.2));
+        assert_eq!(two_max(&[1.0]), (1.0, 1.0));
+        assert_eq!(two_max(&[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn two_max_with_duplicates() {
+        assert_eq!(two_max(&[0.4, 0.4, 0.2]), (0.4, 0.4));
+    }
+}

@@ -1,0 +1,105 @@
+//! Scoped data-parallel helpers built on `std::thread::scope`.
+//!
+//! Algorithm 2 in the paper is a `parallel for` over inputs; the training
+//! loops (per-tree bagging) are embarrassingly parallel too. We provide a
+//! chunked parallel-map rather than a general work-stealing pool — the
+//! workloads here are uniform enough that static chunking is within a few
+//! percent of optimal and keeps the substrate tiny and allocation-free on
+//! the hot path.
+
+/// Number of worker threads to use: respects `FOG_THREADS`, defaults to the
+/// available parallelism, and is clamped to `[1, 64]`.
+pub fn num_threads() -> usize {
+    if let Ok(s) = std::env::var("FOG_THREADS") {
+        if let Ok(n) = s.parse::<usize>() {
+            return n.clamp(1, 64);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(1, 64)
+}
+
+/// Parallel map over `0..n`: calls `f(i)` for every index and collects the
+/// results in order. Falls back to a sequential loop for small `n`.
+pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n < 2 {
+        return (0..n).map(&f).collect();
+    }
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        for (w, slot_chunk) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                let base = w * chunk;
+                for (j, slot) in slot_chunk.iter_mut().enumerate() {
+                    *slot = Some(f(base + j));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("worker panicked")).collect()
+}
+
+/// Parallel for-each over mutable chunks of a slice: splits `data` into
+/// `num_threads()` contiguous chunks and calls `f(chunk_start, chunk)` on
+/// each from its own thread.
+pub fn par_chunks_mut<T, F>(data: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    let workers = num_threads().min(n);
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        for (w, c) in data.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || f(w * chunk, c));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_matches_sequential() {
+        let seq: Vec<usize> = (0..1000).map(|i| i * i).collect();
+        let par = par_map(1000, |i| i * i);
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn par_map_empty_and_one() {
+        assert_eq!(par_map(0, |i| i), Vec::<usize>::new());
+        assert_eq!(par_map(1, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn par_chunks_mut_covers_all() {
+        let mut v = vec![0usize; 503];
+        par_chunks_mut(&mut v, |start, chunk| {
+            for (j, x) in chunk.iter_mut().enumerate() {
+                *x = start + j + 1;
+            }
+        });
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i + 1);
+        }
+    }
+
+    #[test]
+    fn num_threads_positive() {
+        assert!(num_threads() >= 1);
+    }
+}

@@ -1,0 +1,173 @@
+//! Cross-module integration tests: the full train → split → evaluate
+//! pipeline, agreement between the three evaluation paths (software
+//! Algorithm 2, cycle-level μarch simulation, serving coordinator), and
+//! the PJRT artifact path when artifacts are present.
+
+use fog::coordinator::{Backend, FogServer, ServerConfig};
+use fog::data::normalize::{quantize_split, standardize};
+use fog::data::synthetic::{generate, DatasetProfile};
+use fog::dt::TreeParams;
+use fog::fog::{FieldOfGroves, FogParams};
+use fog::forest::{ForestParams, RandomForest, VoteMode};
+use fog::uarch::{RingConfig, RingSim};
+
+fn pipeline() -> (FieldOfGroves, fog::data::Dataset, RandomForest) {
+    let mut ds = generate(&DatasetProfile::demo(), 77);
+    standardize(&mut ds);
+    quantize_split(&mut ds.train);
+    quantize_split(&mut ds.test);
+    let rf = RandomForest::fit(&ds.train, &ForestParams::default(), 7);
+    let fog = FieldOfGroves::from_forest_shuffled(&rf, 4, Some(7));
+    (fog, ds, rf)
+}
+
+#[test]
+fn three_eval_paths_agree() {
+    let (fog, ds, _) = pipeline();
+    let threshold = 0.3f32;
+    let seed = 99u64;
+
+    let sw = fog.evaluate(
+        &ds.test.x,
+        &FogParams { threshold, max_hops: fog.n_groves(), seed },
+    );
+
+    let mut sim = RingSim::new(&fog, RingConfig { threshold, seed, ..Default::default() });
+    sim.load_batch(&ds.test.x);
+    let sim_out = sim.run().to_vec();
+
+    let mut server = FogServer::start(
+        &fog,
+        &ServerConfig { threshold, seed, backend: Backend::Native, ..Default::default() },
+    )
+    .unwrap();
+    let served = server.classify(&ds.test.x);
+    server.shutdown();
+
+    assert_eq!(sw.outcomes.len(), sim_out.len());
+    assert_eq!(sw.outcomes.len(), served.len());
+    for i in 0..sw.outcomes.len() {
+        assert_eq!(sw.outcomes[i].label, sim_out[i].label, "sim label {i}");
+        assert_eq!(sw.outcomes[i].hops, sim_out[i].hops, "sim hops {i}");
+        assert_eq!(sw.outcomes[i].label, served[i].label, "served label {i}");
+        assert_eq!(sw.outcomes[i].hops, served[i].hops, "served hops {i}");
+    }
+}
+
+#[test]
+fn fog_max_equals_rf_prob_average_accuracy() {
+    let (fog, ds, rf) = pipeline();
+    let res = fog.evaluate(&ds.test.x, &FogParams::fog_max(fog.n_groves()));
+    let fog_acc = res.accuracy(&ds.test.y);
+    let rf_acc = rf.accuracy(&ds.test, VoteMode::ProbAverage);
+    assert!((fog_acc - rf_acc).abs() < 1e-9, "fog_max {fog_acc} vs rf {rf_acc}");
+}
+
+#[test]
+fn quantization_cost_is_small() {
+    // The Q3.4 hardware quantization must not destroy accuracy.
+    let mut raw = generate(&DatasetProfile::demo(), 78);
+    standardize(&mut raw);
+    let rf_raw = RandomForest::fit(&raw.train, &ForestParams::default(), 3);
+    let acc_raw = rf_raw.accuracy(&raw.test, VoteMode::Majority);
+
+    let mut quant = raw.clone();
+    quantize_split(&mut quant.train);
+    quantize_split(&mut quant.test);
+    let rf_q = RandomForest::fit(&quant.train, &ForestParams::default(), 3);
+    let acc_q = rf_q.accuracy(&quant.test, VoteMode::Majority);
+    assert!(acc_raw - acc_q < 0.06, "quantization cost {acc_raw} -> {acc_q}");
+}
+
+#[test]
+fn deeper_forest_does_not_collapse() {
+    let mut ds = generate(&DatasetProfile::demo(), 79);
+    standardize(&mut ds);
+    let params = ForestParams {
+        n_trees: 16,
+        tree: TreeParams { max_depth: 12, ..Default::default() },
+        bootstrap: true,
+    };
+    let rf = RandomForest::fit(&ds.train, &params, 4);
+    assert!(rf.accuracy(&ds.test, VoteMode::Majority) > 0.6);
+    let fog = FieldOfGroves::from_forest(&rf, 4);
+    let res = fog.evaluate(&ds.test.x, &FogParams { threshold: 0.3, max_hops: 4, seed: 4 });
+    assert!(res.accuracy(&ds.test.y) > 0.55);
+}
+
+#[test]
+fn pjrt_serving_agrees_with_native_when_artifacts_exist() {
+    let dir = fog::runtime::artifacts::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping PJRT serving test: run `make artifacts`");
+        return;
+    }
+    // Shape the fog to the demo artifact: t=4, depth 6, f=8, c=3.
+    let mut ds = generate(&DatasetProfile::demo(), 80);
+    standardize(&mut ds);
+    quantize_split(&mut ds.train);
+    quantize_split(&mut ds.test);
+    let params = ForestParams {
+        n_trees: 8,
+        tree: TreeParams { max_depth: 6, ..Default::default() },
+        bootstrap: true,
+    };
+    let rf = RandomForest::fit(&ds.train, &params, 5);
+    let mut fog = FieldOfGroves::from_forest_shuffled(&rf, 4, Some(5));
+    if fog.depth > 6 {
+        eprintln!("skipping: trained deeper than artifact");
+        return;
+    }
+    for g in &mut fog.groves {
+        for t in &mut g.trees {
+            *t = t.repad(6);
+        }
+    }
+    fog.depth = 6;
+
+    let run = |backend: Backend| {
+        let mut server = FogServer::start(
+            &fog,
+            &ServerConfig { threshold: 0.3, seed: 11, backend, ..Default::default() },
+        )
+        .unwrap();
+        let out = server.classify(&ds.test.x);
+        server.shutdown();
+        out
+    };
+    let native = run(Backend::Native);
+    let pjrt = run(Backend::Pjrt { artifacts_dir: dir });
+    assert_eq!(native.len(), pjrt.len());
+    let mut label_mismatch = 0;
+    for (a, b) in native.iter().zip(&pjrt) {
+        if a.label != b.label {
+            label_mismatch += 1;
+        }
+        // hops can differ only at f32 confidence boundaries; labels must
+        // agree except at exact probability ties.
+    }
+    assert!(
+        label_mismatch <= native.len() / 50,
+        "labels diverged on {label_mismatch}/{} inputs",
+        native.len()
+    );
+}
+
+#[test]
+fn budgeted_training_pipeline() {
+    let mut ds = generate(&DatasetProfile::demo(), 81);
+    standardize(&mut ds);
+    // Feature costs: make the second half of features expensive.
+    let costs: Vec<f32> = (0..ds.train.n_features)
+        .map(|f| if f >= ds.train.n_features / 2 { 8.0 } else { 1.0 })
+        .collect();
+    let loose =
+        fog::forest::budgeted::fit_budgeted(&ds.train, &ForestParams::small(), &costs, f64::INFINITY, 6);
+    let budget = loose.chosen.avg_cost * 0.6;
+    let tight =
+        fog::forest::budgeted::fit_budgeted(&ds.train, &ForestParams::small(), &costs, budget, 6);
+    assert!(tight.chosen.avg_cost <= loose.chosen.avg_cost + 1e-9);
+    // The tight forest still classifies (graceful degradation).
+    let acc = tight.forest.accuracy(&ds.test, VoteMode::Majority);
+    assert!(acc > 0.5, "budgeted acc {acc}");
+}

@@ -1,0 +1,236 @@
+//! Randomized property tests over the crate's invariants (a proptest
+//! substitute: the offline vendor set has no proptest, so cases are
+//! drawn from the crate's own deterministic PRNG — failures reproduce
+//! exactly from the printed case seed).
+
+use fog::data::synthetic::{generate, DatasetProfile};
+use fog::data::Split;
+use fog::dt::builder::{fit_tree, TreeParams};
+use fog::dt::FlatTree;
+use fog::fog::confidence::max_diff;
+use fog::fog::{FieldOfGroves, FogParams};
+use fog::forest::{ForestParams, RandomForest};
+use fog::uarch::queue::{DataQueue, Entry};
+use fog::util::rng::Rng;
+use fog::util::two_max;
+
+const CASES: usize = 60;
+
+/// Random dataset with random dimensionality.
+fn random_split(rng: &mut Rng) -> Split {
+    let f = 2 + rng.gen_range(10);
+    let c = 2 + rng.gen_range(4);
+    let n = 40 + rng.gen_range(160);
+    let mut s = Split::new(f, c);
+    // Random per-class means so trees have something to find.
+    let means: Vec<Vec<f32>> = (0..c)
+        .map(|_| (0..f).map(|_| rng.gen_normal() * 2.0).collect())
+        .collect();
+    let mut row = vec![0.0f32; f];
+    for i in 0..n {
+        let y = i % c;
+        for (j, r) in row.iter_mut().enumerate() {
+            *r = means[y][j] + rng.gen_normal();
+        }
+        s.push(&row, y);
+    }
+    s
+}
+
+#[test]
+fn prop_two_max_matches_sort() {
+    let mut rng = Rng::new(0xA11CE);
+    for case in 0..CASES {
+        let len = 1 + rng.gen_range(12);
+        let xs: Vec<f32> = (0..len).map(|_| rng.gen_f32()).collect();
+        let (m1, m2) = two_max(&xs);
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        assert_eq!(m1, sorted[0], "case {case}");
+        let want2 = if len > 1 { sorted[1] } else { sorted[0] };
+        assert_eq!(m2, want2, "case {case}: {xs:?}");
+        assert!((max_diff(&xs) - (m1 - m2).abs()) < 1e-6);
+    }
+}
+
+#[test]
+fn prop_tree_valid_and_flat_equivalent() {
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..CASES {
+        let s = random_split(&mut rng);
+        let params = TreeParams {
+            max_depth: 1 + rng.gen_range(7),
+            min_samples_leaf: 1 + rng.gen_range(3),
+            ..Default::default()
+        };
+        let idx: Vec<usize> = (0..s.len()).collect();
+        let tree = fit_tree(&s, &idx, &params, &mut rng);
+        tree.validate().unwrap_or_else(|e| panic!("case {case}: {e}"));
+        assert!(tree.depth <= params.max_depth);
+
+        let flat = FlatTree::from_tree(&tree, tree.depth.max(1));
+        for i in 0..s.len() {
+            let a = tree.predict_proba(s.row(i));
+            let b = flat.predict_proba(s.row(i));
+            for (p, q) in a.iter().zip(b) {
+                assert!((p - q).abs() < 1e-6, "case {case} row {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_grove_split_is_partition() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for case in 0..CASES {
+        let s = random_split(&mut rng);
+        let n_trees = 2 + rng.gen_range(15);
+        let params = ForestParams {
+            n_trees,
+            tree: TreeParams { max_depth: 5, ..Default::default() },
+            bootstrap: true,
+        };
+        let rf = RandomForest::fit(&s, &params, rng.next_u64());
+        let k = 1 + rng.gen_range(n_trees);
+        let fog = FieldOfGroves::from_forest_shuffled(&rf, k, Some(rng.next_u64()));
+        fog.validate_partition(n_trees)
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        assert_eq!(fog.n_groves(), n_trees.div_ceil(k), "case {case}");
+    }
+}
+
+#[test]
+fn prop_hops_bounded_and_probs_normalized() {
+    let mut rng = Rng::new(0xD00D);
+    for case in 0..CASES / 2 {
+        let ds = generate(&DatasetProfile::demo(), rng.next_u64());
+        let rf = RandomForest::fit(&ds.train, &ForestParams::small(), rng.next_u64());
+        let k = 1 + rng.gen_range(rf.n_trees());
+        let fog = FieldOfGroves::from_forest(&rf, k);
+        let max_hops = 1 + rng.gen_range(fog.n_groves());
+        let threshold = rng.gen_f32() * 1.2;
+        let params = FogParams { threshold, max_hops, seed: rng.next_u64() };
+        let res = fog.evaluate(&ds.test.x, &params);
+        for o in &res.outcomes {
+            assert!(o.hops >= 1 && o.hops <= max_hops, "case {case}: hops {}", o.hops);
+            let sum: f32 = o.prob.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-3, "case {case}: prob sum {sum}");
+            // Stopped early ⇒ confident, or the hop budget ran out.
+            if o.hops < max_hops {
+                assert!(
+                    o.confidence >= threshold,
+                    "case {case}: stopped at {} hops with conf {} < thr {threshold}",
+                    o.hops,
+                    o.confidence
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_threshold_monotone_hops() {
+    let mut rng = Rng::new(0xF00);
+    for case in 0..8 {
+        let ds = generate(&DatasetProfile::demo(), rng.next_u64());
+        let rf = RandomForest::fit(&ds.train, &ForestParams::small(), rng.next_u64());
+        let fog = FieldOfGroves::from_forest(&rf, 2);
+        let seed = rng.next_u64();
+        let mut last = 0.0f64;
+        for thr in [0.0f32, 0.25, 0.5, 0.75, 1.0, 1.2] {
+            let res = fog.evaluate(
+                &ds.test.x,
+                &FogParams { threshold: thr, max_hops: fog.n_groves(), seed },
+            );
+            let h = res.avg_hops();
+            assert!(h + 1e-12 >= last, "case {case}: thr {thr} hops {h} < {last}");
+            last = h;
+        }
+    }
+}
+
+#[test]
+fn prop_queue_never_overflows_and_preserves_entries() {
+    let mut rng = Rng::new(0x9A9A);
+    for case in 0..CASES {
+        let f = 1 + rng.gen_range(20);
+        let c = 2 + rng.gen_range(8);
+        let gamma = 1 + f + 1 + c;
+        let cap_entries = 1 + rng.gen_range(6);
+        let mut q = DataQueue::new(f, c, gamma * cap_entries);
+        assert_eq!(q.capacity_entries(), cap_entries, "case {case}");
+        let mut model: std::collections::VecDeque<u32> = Default::default();
+        for op in 0..200 {
+            match rng.gen_range(3) {
+                0 => {
+                    let e = Entry { id: op, hops: 0, features: vec![0.0; f], prob: vec![0.0; c] };
+                    if q.push_back(e).is_ok() {
+                        model.push_back(op);
+                    } else {
+                        assert_eq!(model.len(), cap_entries, "case {case}: spurious full");
+                    }
+                }
+                1 => {
+                    let e = Entry { id: op, hops: 1, features: vec![0.0; f], prob: vec![0.0; c] };
+                    if q.push_front(e).is_ok() {
+                        model.push_front(op);
+                    } else {
+                        assert_eq!(model.len(), cap_entries);
+                    }
+                }
+                _ => {
+                    let got = q.pop_front().map(|e| e.id);
+                    assert_eq!(got, model.pop_front(), "case {case} op {op}");
+                }
+            }
+            q.check_invariants().unwrap();
+        }
+    }
+}
+
+#[test]
+fn prop_repad_any_depth_preserves_function() {
+    let mut rng = Rng::new(0x7AD);
+    for case in 0..CASES / 2 {
+        let s = random_split(&mut rng);
+        let idx: Vec<usize> = (0..s.len()).collect();
+        let params = TreeParams { max_depth: 1 + rng.gen_range(5), ..Default::default() };
+        let tree = fit_tree(&s, &idx, &params, &mut rng);
+        let flat = FlatTree::from_tree(&tree, tree.depth.max(1));
+        let extra = rng.gen_range(4);
+        let padded = flat.repad(flat.depth + extra);
+        for i in 0..s.len().min(40) {
+            assert_eq!(
+                flat.predict(s.row(i)),
+                padded.predict(s.row(i)),
+                "case {case} row {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    use fog::util::json::{parse, Json};
+    let mut rng = Rng::new(0x15EED);
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.gen_range(4) } else { rng.gen_range(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.gen_range(2) == 0),
+            2 => Json::Num((rng.gen_f64() * 2000.0 - 1000.0 * 0.5).round() / 8.0),
+            3 => Json::Str(format!("s{}", rng.gen_range(1000))),
+            4 => Json::Arr((0..rng.gen_range(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.gen_range(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for case in 0..CASES {
+        let v = random_json(&mut rng, 3);
+        let text = v.to_string();
+        let back = parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(v, back, "case {case}");
+    }
+}
