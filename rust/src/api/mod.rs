@@ -1,0 +1,233 @@
+//! `fog::api` — the unified, batch-first classifier interface.
+//!
+//! The paper's headline claim (§4.2, Table 1) is a *comparison*: FoG vs.
+//! RF, SVM_lr, SVM_rbf, MLP and CNN at matched accuracy and measured
+//! energy. This module gives every one of those model families a single
+//! interface so the experiment harnesses, the serving coordinator and the
+//! CLI dispatch through trait objects instead of per-type match arms:
+//!
+//! * [`Classifier`] — a trained model: batch-first probability
+//!   prediction ([`Classifier::predict_proba_batch`] → [`ProbMatrix`]),
+//!   label prediction, accuracy, and a [`CostReport`] hook that feeds the
+//!   energy models (op counts / avg hops measured on a probe split).
+//! * [`Estimator`] — config → trained model: anything that can train a
+//!   [`Classifier`] from a [`Split`] under a seed.
+//! * [`ModelSpec`] — the concrete [`Estimator`]: a builder over every
+//!   model family in the crate, constructible by registry name
+//!   (`"fog_opt" | "fog_max" | "rf" | "rf_prob" | "svm_lr" | "svm_rbf" |
+//!   "mlp" | "cnn"`, see [`REGISTRY`]).
+//!
+//! ```text
+//! let spec  = ModelSpec::for_shape("rf", data.n_features, data.n_classes);
+//! let model = spec.fit(&data.train, 42);          // Box<dyn Classifier>
+//! let probs = model.predict_proba_batch(&data.test.x, data.test.len());
+//! let acc   = model.accuracy(&data.test);
+//! let cost  = model.cost_report(Some(&data.test), &eb, &ab);
+//! ```
+
+pub mod models;
+pub mod spec;
+
+pub use models::{measured_fog_stats, measured_rf_stats, FogModel, RfModel};
+pub use spec::{FogSpec, ModelConfig, ModelSpec, REGISTRY};
+
+use crate::data::Split;
+use crate::energy::blocks::{AreaBlocks, EnergyBlocks};
+use crate::energy::model::{ClassifierKind, CostReport};
+use crate::util::threadpool::par_map;
+
+/// A row-major `[n, n_classes]` matrix of class-probability rows — the
+/// result of one batched prediction.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProbMatrix {
+    data: Vec<f32>,
+    n_classes: usize,
+}
+
+impl ProbMatrix {
+    /// Wrap a row-major buffer; `data.len()` must divide by `n_classes`.
+    pub fn new(data: Vec<f32>, n_classes: usize) -> ProbMatrix {
+        assert!(n_classes > 0, "n_classes = 0");
+        assert_eq!(data.len() % n_classes, 0, "ragged probability matrix");
+        ProbMatrix { data, n_classes }
+    }
+
+    /// Collect per-row distributions (all rows must share one length).
+    pub fn from_rows(rows: Vec<Vec<f32>>, n_classes: usize) -> ProbMatrix {
+        let mut data = Vec::with_capacity(rows.len() * n_classes);
+        for r in rows {
+            debug_assert_eq!(r.len(), n_classes);
+            data.extend_from_slice(&r);
+        }
+        ProbMatrix::new(data, n_classes)
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.data.len() / self.n_classes
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    /// One row's distribution.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.n_classes..(i + 1) * self.n_classes]
+    }
+
+    /// Per-row argmax labels (first index wins ties, like
+    /// [`crate::util::argmax`]).
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        (0..self.n_rows()).map(|i| crate::util::argmax(self.row(i))).collect()
+    }
+
+    /// The underlying row-major buffer.
+    pub fn into_raw(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+/// A trained classifier behind the unified batch-first interface.
+///
+/// Only [`Classifier::predict_proba_batch`] and
+/// [`Classifier::cost_report`] (plus the shape accessors) are required;
+/// per-sample prediction, label batches and accuracy all derive from the
+/// batch path, so batch and per-sample results agree by construction
+/// unless an implementation deliberately overrides them.
+pub trait Classifier: Send + Sync {
+    /// Which Table-1 column this model belongs to.
+    fn kind(&self) -> ClassifierKind;
+
+    /// Human-readable name (defaults to the Table-1 column label).
+    fn name(&self) -> &'static str {
+        self.kind().label()
+    }
+
+    fn n_features(&self) -> usize;
+
+    fn n_classes(&self) -> usize;
+
+    /// Class-probability prediction over a row-major batch
+    /// `x: [n, n_features]`.
+    fn predict_proba_batch(&self, x: &[f32], n: usize) -> ProbMatrix;
+
+    /// Label prediction over a batch (argmax of the probability rows).
+    fn predict_batch(&self, x: &[f32], n: usize) -> Vec<usize> {
+        self.predict_proba_batch(x, n).argmax_rows()
+    }
+
+    /// Per-sample probability prediction (a batch of one).
+    fn predict_proba(&self, x: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(x.len(), self.n_features());
+        self.predict_proba_batch(x, 1).into_raw()
+    }
+
+    /// Per-sample label prediction (a batch of one).
+    fn predict(&self, x: &[f32]) -> usize {
+        self.predict_batch(x, 1)[0]
+    }
+
+    /// Accuracy over a labelled split (batch path).
+    fn accuracy(&self, split: &Split) -> f64 {
+        let preds = self.predict_batch(&split.x, split.len());
+        crate::util::stats::accuracy(&preds, &split.y)
+    }
+
+    /// Hardware PPA of one classification on this trained model.
+    ///
+    /// When `probe` is given, dynamic op counts (traversed comparisons,
+    /// average FoG hops) are *measured* on it — the paper's methodology
+    /// for Table 1. Without a probe, static worst-case bounds (padded
+    /// depth, full ring circulation) are charged instead.
+    fn cost_report(
+        &self,
+        probe: Option<&Split>,
+        eb: &EnergyBlocks,
+        ab: &AreaBlocks,
+    ) -> CostReport;
+}
+
+/// Config → trained model: anything that can train a [`Classifier`] from
+/// a labelled [`Split`] under a deterministic seed.
+pub trait Estimator: Send + Sync {
+    /// Registry / display name of the model this estimator produces.
+    fn name(&self) -> &str;
+
+    /// Train on `data` with the given seed. Implementations must be
+    /// deterministic: equal `(data, seed)` → an identical model.
+    fn fit(&self, data: &Split, seed: u64) -> Box<dyn Classifier>;
+}
+
+/// Batch helper for score-based models (SVMs, MLP, CNN): evaluate
+/// `score` on every row in parallel and normalize each row to a
+/// probability distribution via softmax (argmax-preserving, so label
+/// predictions equal the raw-score argmax).
+pub fn batch_from_scores<F>(
+    x: &[f32],
+    n: usize,
+    n_features: usize,
+    n_classes: usize,
+    score: F,
+) -> ProbMatrix
+where
+    F: Fn(&[f32]) -> Vec<f32> + Sync,
+{
+    assert_eq!(x.len(), n * n_features, "batch shape mismatch");
+    let rows = par_map(n, |i| {
+        let mut s = score(&x[i * n_features..(i + 1) * n_features]);
+        softmax_in_place(&mut s);
+        s
+    });
+    ProbMatrix::from_rows(rows, n_classes)
+}
+
+/// Numerically-stable in-place softmax over one score row.
+pub fn softmax_in_place(scores: &mut [f32]) {
+    let max = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if !max.is_finite() {
+        // Degenerate row (empty or all -inf): uniform.
+        let n = scores.len().max(1);
+        scores.iter_mut().for_each(|v| *v = 1.0 / n as f32);
+        return;
+    }
+    let mut sum = 0.0f32;
+    for v in scores.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    scores.iter_mut().for_each(|v| *v *= inv);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prob_matrix_rows_and_argmax() {
+        let m = ProbMatrix::new(vec![0.1, 0.7, 0.2, 0.5, 0.3, 0.2], 3);
+        assert_eq!(m.n_rows(), 2);
+        assert_eq!(m.row(1), &[0.5, 0.3, 0.2]);
+        assert_eq!(m.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn softmax_normalizes_and_preserves_argmax() {
+        let mut s = vec![1.0f32, 3.0, 2.0];
+        softmax_in_place(&mut s);
+        let sum: f32 = s.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert_eq!(crate::util::argmax(&s), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_matrix_rejected() {
+        ProbMatrix::new(vec![0.0; 7], 3);
+    }
+}

@@ -1,0 +1,424 @@
+//! [`Classifier`](super::Classifier) implementations for the tree-family
+//! models: single decision trees (sparse and flattened), random forests
+//! under both vote modes, and the Field of Groves itself (wrapping
+//! Algorithm 2's confidence-gated evaluation, surfacing hops as cost).
+//!
+//! The four baselines implement the trait in their own modules
+//! (`baselines::svm_linear` etc.) via [`super::batch_from_scores`].
+
+use super::{Classifier, ProbMatrix};
+use crate::data::Split;
+use crate::dt::{DecisionTree, FlatTree};
+use crate::energy::blocks::{AreaBlocks, EnergyBlocks};
+use crate::energy::model::{fog_cost, rf_cost, ClassifierKind, CostReport, FogStats, RfStats};
+use crate::fog::eval::InputOutcome;
+use crate::fog::{FieldOfGroves, FogParams};
+use crate::forest::{RandomForest, VoteMode};
+use crate::util::rng::Rng;
+use crate::util::threadpool::par_map;
+
+/// Bytes of sparse node storage the hardware provisions: 6 B per node
+/// (weight + feature offset + control, §3.2.2 "Reprogrammability") plus
+/// one byte per leaf-class slot.
+fn sparse_tree_storage(n_nodes: usize, n_leaves: usize, n_classes: usize) -> f64 {
+    n_nodes as f64 * 6.0 + (n_leaves * n_classes) as f64
+}
+
+// ---------------------------------------------------------------------------
+// Single trees
+// ---------------------------------------------------------------------------
+
+impl Classifier for DecisionTree {
+    fn kind(&self) -> ClassifierKind {
+        ClassifierKind::Tree
+    }
+
+    fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    fn predict_proba_batch(&self, x: &[f32], n: usize) -> ProbMatrix {
+        assert_eq!(x.len(), n * self.n_features, "batch shape mismatch");
+        let f = self.n_features;
+        let rows =
+            par_map(n, |i| DecisionTree::predict_proba(self, &x[i * f..(i + 1) * f]).to_vec());
+        ProbMatrix::from_rows(rows, self.n_classes)
+    }
+
+    fn cost_report(
+        &self,
+        probe: Option<&Split>,
+        eb: &EnergyBlocks,
+        ab: &AreaBlocks,
+    ) -> CostReport {
+        let avg_comparisons = match probe {
+            Some(s) if !s.is_empty() => {
+                let totals = par_map(s.len(), |i| self.predict_proba_counted(s.row(i)).1);
+                totals.iter().sum::<usize>() as f64 / s.len() as f64
+            }
+            _ => self.depth as f64, // worst case: a full root-to-leaf walk
+        };
+        let stats = RfStats {
+            n_trees: 1,
+            avg_comparisons,
+            max_depth: self.depth.max(1),
+            n_features: self.n_features,
+            n_classes: self.n_classes,
+            node_storage_bytes: sparse_tree_storage(
+                self.n_nodes(),
+                self.n_leaves(),
+                self.n_classes,
+            ),
+        };
+        CostReport { kind: ClassifierKind::Tree, ..rf_cost(&stats, eb, ab) }
+    }
+}
+
+impl Classifier for FlatTree {
+    fn kind(&self) -> ClassifierKind {
+        ClassifierKind::Tree
+    }
+
+    fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    fn predict_proba_batch(&self, x: &[f32], n: usize) -> ProbMatrix {
+        assert_eq!(x.len(), n * self.n_features, "batch shape mismatch");
+        let f = self.n_features;
+        let rows = par_map(n, |i| FlatTree::predict_proba(self, &x[i * f..(i + 1) * f]).to_vec());
+        ProbMatrix::from_rows(rows, self.n_classes)
+    }
+
+    fn cost_report(
+        &self,
+        _probe: Option<&Split>,
+        eb: &EnergyBlocks,
+        ab: &AreaBlocks,
+    ) -> CostReport {
+        // A complete tree walks exactly `depth` levels on every input, so
+        // the comparison count is exact without a probe. Storage charges
+        // only live nodes (finite thresholds below the +inf sentinel).
+        let live = self.thr.iter().filter(|v| v.is_finite() && **v < 1e37).count();
+        let stats = RfStats {
+            n_trees: 1,
+            avg_comparisons: self.depth as f64,
+            max_depth: self.depth.max(1),
+            n_features: self.n_features,
+            n_classes: self.n_classes,
+            node_storage_bytes: sparse_tree_storage(live, live + 1, self.n_classes),
+        };
+        CostReport { kind: ClassifierKind::Tree, ..rf_cost(&stats, eb, ab) }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Random forest (both vote modes)
+// ---------------------------------------------------------------------------
+
+/// A trained forest behind the unified interface, with an explicit
+/// aggregation mode — the §3.2.1 contrast is part of the model identity
+/// (`"rf"` = majority vote, `"rf_prob"` = probability averaging).
+#[derive(Clone, Debug)]
+pub struct RfModel {
+    pub rf: RandomForest,
+    pub mode: VoteMode,
+}
+
+impl RfModel {
+    pub fn new(rf: RandomForest, mode: VoteMode) -> RfModel {
+        RfModel { rf, mode }
+    }
+
+    /// Measured (or depth-bound) statistics feeding the RF energy model.
+    pub fn stats(&self, probe: Option<&Split>) -> RfStats {
+        measured_rf_stats(&self.rf, probe)
+    }
+}
+
+/// Measured `RfStats` for a trained forest: comparisons measured on
+/// `probe` when given, the depth-bound worst case otherwise.
+pub fn measured_rf_stats(rf: &RandomForest, probe: Option<&Split>) -> RfStats {
+    let avg_comparisons = match probe {
+        Some(s) if !s.is_empty() => rf.avg_comparisons(s),
+        _ => (rf.n_trees() * rf.max_depth().max(1)) as f64,
+    };
+    let nodes: usize = rf.trees.iter().map(|t| t.n_nodes()).sum();
+    let leaves: usize = rf.trees.iter().map(|t| t.n_leaves()).sum();
+    RfStats {
+        n_trees: rf.n_trees(),
+        avg_comparisons,
+        max_depth: rf.max_depth().max(1),
+        n_features: rf.n_features,
+        n_classes: rf.n_classes,
+        node_storage_bytes: sparse_tree_storage(nodes, leaves, rf.n_classes),
+    }
+}
+
+impl Classifier for RfModel {
+    fn kind(&self) -> ClassifierKind {
+        ClassifierKind::RandomForest
+    }
+
+    fn name(&self) -> &'static str {
+        match self.mode {
+            VoteMode::Majority => "RF",
+            VoteMode::ProbAverage => "RF_prob",
+        }
+    }
+
+    fn n_features(&self) -> usize {
+        self.rf.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.rf.n_classes
+    }
+
+    fn predict_proba_batch(&self, x: &[f32], n: usize) -> ProbMatrix {
+        assert_eq!(x.len(), n * self.rf.n_features, "batch shape mismatch");
+        let f = self.rf.n_features;
+        let c = self.rf.n_classes;
+        let rows = par_map(n, |i| {
+            let row = &x[i * f..(i + 1) * f];
+            match self.mode {
+                VoteMode::ProbAverage => self.rf.predict_proba(row),
+                VoteMode::Majority => {
+                    // Vote fractions: a valid distribution whose argmax is
+                    // the majority-vote winner.
+                    let mut votes = vec![0.0f32; c];
+                    for t in &self.rf.trees {
+                        votes[t.predict(row)] += 1.0;
+                    }
+                    let inv = 1.0 / self.rf.n_trees() as f32;
+                    votes.iter_mut().for_each(|v| *v *= inv);
+                    votes
+                }
+            }
+        });
+        ProbMatrix::from_rows(rows, c)
+    }
+
+    // `predict_batch` keeps the trait default (argmax of the probability
+    // rows, first index wins ties) so batched, per-sample and served
+    // labels are always identical. Majority-vote ties therefore resolve
+    // to the *first* tied class, where `RandomForest::predict_with`
+    // resolves to the last — observable only on exact vote ties.
+
+    fn cost_report(
+        &self,
+        probe: Option<&Split>,
+        eb: &EnergyBlocks,
+        ab: &AreaBlocks,
+    ) -> CostReport {
+        rf_cost(&self.stats(probe), eb, ab)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Field of Groves
+// ---------------------------------------------------------------------------
+
+/// Measured `FogStats` for a FoG at a given operating point (shared by the
+/// experiment harnesses and [`FogModel::cost_report`]).
+pub fn measured_fog_stats(fog: &FieldOfGroves, avg_hops: f64, kind: ClassifierKind) -> FogStats {
+    let per_grove = fog.groves[0].n_trees();
+    // Storage sized to the *sparse* trained trees (the hardware stores
+    // real nodes, not the complete-tree padding the kernels use).
+    let storage = fog.groves[0].sparse_storage_bytes() as f64;
+    FogStats {
+        n_groves: fog.n_groves(),
+        trees_per_grove: per_grove,
+        depth: fog.depth,
+        avg_hops,
+        n_features: fog.n_features,
+        n_classes: fog.n_classes,
+        grove_storage_bytes: storage,
+        kind,
+    }
+}
+
+/// A Field of Groves at a fixed operating point (threshold + hop cap),
+/// wrapping Algorithm 2's `evaluate` behind the unified interface and
+/// surfacing the measured hop count as energy cost.
+///
+/// Start-grove selection hashes the *input content* (XOR-folded feature
+/// bits) rather than the batch index, so per-sample and batched
+/// predictions agree exactly — both are valid realizations of
+/// Algorithm 2 line 3's "random starting grove".
+#[derive(Clone, Debug)]
+pub struct FogModel {
+    pub fog: FieldOfGroves,
+    pub params: FogParams,
+    kind: ClassifierKind,
+}
+
+impl FogModel {
+    pub fn new(fog: FieldOfGroves, params: FogParams, kind: ClassifierKind) -> FogModel {
+        let mut params = params;
+        params.max_hops = params.max_hops.clamp(1, fog.n_groves());
+        FogModel { fog, params, kind }
+    }
+
+    /// The FoG_max configuration: threshold above 1 forces every grove to
+    /// contribute, reproducing the underlying forest's probability average.
+    pub fn fog_max(fog: FieldOfGroves, seed: u64) -> FogModel {
+        let n = fog.n_groves();
+        FogModel::new(fog, FogParams { seed, ..FogParams::fog_max(n) }, ClassifierKind::FogMax)
+    }
+
+    /// Content-derived start grove (batch-position independent).
+    fn start_grove(&self, row: &[f32]) -> usize {
+        let mut h = self.params.seed ^ 0x9E3779B97F4A7C15;
+        for &v in row {
+            h = (h ^ v.to_bits() as u64).wrapping_mul(0x100000001B3);
+        }
+        Rng::new(h).gen_range(self.fog.n_groves())
+    }
+
+    /// Algorithm 2 for one input at this operating point.
+    pub fn eval_row(&self, row: &[f32]) -> InputOutcome {
+        let start = self.start_grove(row);
+        self.fog.evaluate_one(row, start, self.params.threshold, self.params.max_hops)
+    }
+
+    /// Algorithm 2 over a row-major batch (parallel).
+    pub fn eval_batch(&self, x: &[f32], n: usize) -> Vec<InputOutcome> {
+        let f = self.fog.n_features;
+        assert_eq!(x.len(), n * f, "batch shape mismatch");
+        par_map(n, |i| self.eval_row(&x[i * f..(i + 1) * f]))
+    }
+
+    /// Mean groves consulted per input on `split` — the energy driver.
+    pub fn avg_hops_on(&self, split: &Split) -> f64 {
+        if split.is_empty() {
+            return self.params.max_hops as f64;
+        }
+        let outcomes = self.eval_batch(&split.x, split.len());
+        outcomes.iter().map(|o| o.hops as f64).sum::<f64>() / outcomes.len() as f64
+    }
+}
+
+impl Classifier for FogModel {
+    fn kind(&self) -> ClassifierKind {
+        self.kind
+    }
+
+    fn n_features(&self) -> usize {
+        self.fog.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.fog.n_classes
+    }
+
+    fn predict_proba_batch(&self, x: &[f32], n: usize) -> ProbMatrix {
+        let rows = self.eval_batch(x, n).into_iter().map(|o| o.prob).collect();
+        ProbMatrix::from_rows(rows, self.fog.n_classes)
+    }
+
+    fn cost_report(
+        &self,
+        probe: Option<&Split>,
+        eb: &EnergyBlocks,
+        ab: &AreaBlocks,
+    ) -> CostReport {
+        let avg_hops = match probe {
+            Some(s) if !s.is_empty() => self.avg_hops_on(s),
+            // No probe: charge the hop cap (full circulation bound).
+            _ => self.params.max_hops as f64,
+        };
+        fog_cost(&measured_fog_stats(&self.fog, avg_hops, self.kind), eb, ab)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetProfile};
+    use crate::forest::ForestParams;
+
+    fn setup() -> (RandomForest, crate::data::Dataset) {
+        let ds = generate(&DatasetProfile::demo(), 271);
+        let rf = RandomForest::fit(&ds.train, &ForestParams::default(), 3);
+        (rf, ds)
+    }
+
+    #[test]
+    fn rf_model_matches_forest_accuracy() {
+        let (rf, ds) = setup();
+        // ProbAverage shares the exact argmax path → bit-identical.
+        let model = RfModel::new(rf.clone(), VoteMode::ProbAverage);
+        let direct = rf.accuracy(&ds.test, VoteMode::ProbAverage);
+        assert!((Classifier::accuracy(&model, &ds.test) - direct).abs() < 1e-12);
+        // Majority differs from `predict_with` only on exact vote ties
+        // (first- vs last-max tie-break), so accuracies stay within the
+        // tie mass.
+        let model = RfModel::new(rf.clone(), VoteMode::Majority);
+        let direct = rf.accuracy(&ds.test, VoteMode::Majority);
+        assert!(
+            (Classifier::accuracy(&model, &ds.test) - direct).abs() < 0.05,
+            "majority-vote accuracy drifted beyond tie mass"
+        );
+    }
+
+    #[test]
+    fn tree_batch_matches_per_sample() {
+        let (rf, ds) = setup();
+        let tree = &rf.trees[0];
+        let batch = Classifier::predict_batch(tree, &ds.test.x, ds.test.len());
+        for i in 0..ds.test.len() {
+            assert_eq!(batch[i], DecisionTree::predict(tree, ds.test.row(i)));
+        }
+    }
+
+    #[test]
+    fn fog_model_batch_position_independent() {
+        let (rf, ds) = setup();
+        let fog = FieldOfGroves::from_forest(&rf, 4);
+        let model = FogModel::new(
+            fog,
+            FogParams { threshold: 0.3, max_hops: 4, seed: 9 },
+            ClassifierKind::FogOpt,
+        );
+        let batch = model.predict_batch(&ds.test.x, ds.test.len());
+        for i in (0..ds.test.len()).step_by(7) {
+            assert_eq!(batch[i], Classifier::predict(&model, ds.test.row(i)), "row {i}");
+        }
+    }
+
+    #[test]
+    fn fog_max_model_matches_rf_prob_average() {
+        let (rf, ds) = setup();
+        let fog = FieldOfGroves::from_forest(&rf, 4);
+        let model = FogModel::fog_max(fog, 0);
+        let a = Classifier::accuracy(&model, &ds.test);
+        let b = rf.accuracy(&ds.test, VoteMode::ProbAverage);
+        assert!((a - b).abs() < 1e-9, "fog_max {a} vs rf {b}");
+    }
+
+    #[test]
+    fn fog_cost_scales_with_threshold() {
+        let (rf, ds) = setup();
+        let eb = EnergyBlocks::default();
+        let ab = AreaBlocks::default();
+        let fog = FieldOfGroves::from_forest(&rf, 4);
+        let cheap = FogModel::new(
+            fog.clone(),
+            FogParams { threshold: 0.05, max_hops: 4, seed: 1 },
+            ClassifierKind::FogOpt,
+        );
+        let full = FogModel::fog_max(fog, 1);
+        let e_cheap = cheap.cost_report(Some(&ds.test), &eb, &ab).energy_nj;
+        let e_full = full.cost_report(Some(&ds.test), &eb, &ab).energy_nj;
+        assert!(e_cheap < e_full, "cheap {e_cheap} full {e_full}");
+    }
+}

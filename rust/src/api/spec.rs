@@ -1,0 +1,338 @@
+//! [`ModelSpec`] — the concrete [`Estimator`]: a builder over every model
+//! family in the crate, constructible by registry name. One construction
+//! site replaces the per-type match arms that used to be hand-rolled in
+//! the experiment suite, the coordinator and the CLI.
+
+use super::models::{FogModel, RfModel};
+use super::{Classifier, Estimator};
+use crate::baselines::cnn::CnnParams;
+use crate::baselines::mlp::MlpParams;
+use crate::baselines::svm_linear::LinearSvmParams;
+use crate::baselines::svm_rbf::RbfSvmParams;
+use crate::baselines::{Cnn, LinearSvm, Mlp, RbfSvm};
+use crate::data::Split;
+use crate::dt::TreeParams;
+use crate::energy::model::ClassifierKind;
+use crate::fog::tuner::{accuracy_optimal_threshold, default_grid, threshold_sweep};
+use crate::fog::{FieldOfGroves, FogParams};
+use crate::forest::{ForestParams, RandomForest, VoteMode};
+
+/// Every model family trainable by name. `"rf"` is the paper's
+/// conventional majority-vote forest; `"rf_prob"` the probability-average
+/// variant; `"fog_opt"` tunes its threshold on a training holdout
+/// (the paper's accuracy-optimal point); `"fog_max"` forces full ring
+/// circulation (threshold at maximum).
+pub const REGISTRY: &[&str] =
+    &["fog_opt", "fog_max", "rf", "rf_prob", "svm_lr", "svm_rbf", "mlp", "cnn"];
+
+/// FoG training configuration (Algorithm 1 split + operating point).
+#[derive(Clone, Debug)]
+pub struct FogSpec {
+    pub forest: ForestParams,
+    /// Trees per grove (`b` of the paper's `a×b` topology). Clamped to
+    /// the forest size at fit time.
+    pub trees_per_grove: usize,
+    /// Fixed confidence threshold; `None` tunes the accuracy-optimal
+    /// threshold on a holdout carved from the training data.
+    pub threshold: Option<f32>,
+    /// Hop cap; `None` = the grove count (the paper's Figure-5 setting).
+    pub max_hops: Option<usize>,
+    /// Fraction of the training data held out for threshold tuning.
+    pub holdout_frac: f32,
+    /// FoG_max: ignore `threshold` and force full circulation.
+    pub force_max: bool,
+}
+
+/// Per-family configuration carried by a [`ModelSpec`].
+#[derive(Clone, Debug)]
+pub enum ModelConfig {
+    Fog(FogSpec),
+    Rf { forest: ForestParams, mode: VoteMode },
+    SvmLinear(LinearSvmParams),
+    SvmRbf(RbfSvmParams),
+    Mlp(MlpParams),
+    Cnn(CnnParams),
+}
+
+/// A named, buildable model configuration — the registry entry.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub config: ModelConfig,
+}
+
+// --- hyper-parameter scaling (shared with `experiments::suite`) --------
+
+/// Forest sizing the paper's suite uses, keyed on dataset shape (big
+/// profiles like ISOLET/MNIST get deeper, feature-capped trees).
+pub fn forest_params_for(n_features: usize, n_classes: usize) -> ForestParams {
+    let big = n_features > 100;
+    let many_classes = n_classes > 10;
+    ForestParams {
+        n_trees: 16,
+        tree: TreeParams {
+            max_depth: if big || many_classes { 12 } else { 8 },
+            min_samples_leaf: 2,
+            max_features: if big { 64 } else { 0 },
+            ..Default::default()
+        },
+        bootstrap: true,
+    }
+}
+
+pub fn linear_params_for(n_features: usize) -> LinearSvmParams {
+    let big = n_features > 100;
+    LinearSvmParams { epochs: if big { 8 } else { 14 }, ..Default::default() }
+}
+
+pub fn rbf_params_for(n_features: usize) -> RbfSvmParams {
+    let big = n_features > 100;
+    RbfSvmParams { max_support: if big { 700 } else { 800 }, ..Default::default() }
+}
+
+pub fn mlp_params_for(n_features: usize) -> MlpParams {
+    let big = n_features > 100;
+    MlpParams {
+        hidden: vec![if big { 96 } else { 64 }],
+        epochs: if big { 12 } else { 30 },
+        ..Default::default()
+    }
+}
+
+pub fn cnn_params_for(n_features: usize) -> CnnParams {
+    let big = n_features > 100;
+    // Paper-comparable capacity: the paper's CNN is by far the largest
+    // design (2.1 mm², ~0.2-1.3 µJ/classification); channel counts are
+    // sized so conv MACs dominate at every feature count.
+    CnnParams {
+        conv1_channels: if big { 16 } else { 32 },
+        conv2_channels: if big { 32 } else { 64 },
+        pool1: if big { 4 } else { 2 },
+        epochs: if big { 5 } else { 20 },
+        ..Default::default()
+    }
+}
+
+impl ModelSpec {
+    pub fn new(name: impl Into<String>, config: ModelConfig) -> ModelSpec {
+        ModelSpec { name: name.into(), config }
+    }
+
+    /// Registry lookup with hyper-parameters scaled to the dataset shape
+    /// (the rules `experiments::suite` applies to the paper's profiles).
+    pub fn for_shape(name: &str, n_features: usize, n_classes: usize) -> Option<ModelSpec> {
+        let config = match name {
+            "fog_opt" => ModelConfig::Fog(FogSpec {
+                forest: forest_params_for(n_features, n_classes),
+                trees_per_grove: 2, // the paper's 8x2 working topology
+                threshold: None,
+                max_hops: None,
+                holdout_frac: 0.2,
+                force_max: false,
+            }),
+            "fog_max" => ModelConfig::Fog(FogSpec {
+                forest: forest_params_for(n_features, n_classes),
+                trees_per_grove: 2,
+                threshold: None,
+                max_hops: None,
+                holdout_frac: 0.2,
+                force_max: true,
+            }),
+            "rf" => ModelConfig::Rf {
+                forest: forest_params_for(n_features, n_classes),
+                mode: VoteMode::Majority,
+            },
+            "rf_prob" => ModelConfig::Rf {
+                forest: forest_params_for(n_features, n_classes),
+                mode: VoteMode::ProbAverage,
+            },
+            "svm_lr" => ModelConfig::SvmLinear(linear_params_for(n_features)),
+            "svm_rbf" => ModelConfig::SvmRbf(rbf_params_for(n_features)),
+            "mlp" => ModelConfig::Mlp(mlp_params_for(n_features)),
+            "cnn" => ModelConfig::Cnn(cnn_params_for(n_features)),
+            _ => return None,
+        };
+        Some(ModelSpec::new(name, config))
+    }
+
+    /// Registry lookup with default (penbase-shaped) hyper-parameters.
+    pub fn by_name(name: &str) -> Option<ModelSpec> {
+        Self::for_shape(name, 16, 10)
+    }
+
+    // --- builder knobs -------------------------------------------------
+
+    /// Set the ensemble size (forest-backed configs only; no-op otherwise).
+    pub fn with_trees(mut self, n_trees: usize) -> Self {
+        match &mut self.config {
+            ModelConfig::Fog(s) => s.forest.n_trees = n_trees,
+            ModelConfig::Rf { forest, .. } => forest.n_trees = n_trees,
+            _ => {}
+        }
+        self
+    }
+
+    /// Set the FoG grove size (trees per grove; no-op for other families).
+    pub fn with_grove_size(mut self, trees_per_grove: usize) -> Self {
+        if let ModelConfig::Fog(s) = &mut self.config {
+            s.trees_per_grove = trees_per_grove.max(1);
+        }
+        self
+    }
+
+    /// Pin the FoG confidence threshold instead of tuning it.
+    pub fn with_threshold(mut self, threshold: f32) -> Self {
+        if let ModelConfig::Fog(s) = &mut self.config {
+            s.threshold = Some(threshold);
+        }
+        self
+    }
+
+    /// Shrink training budgets for fast tests and doc examples (smaller
+    /// ensembles, fewer epochs, fewer support vectors). Accuracy drops a
+    /// little; determinism and interfaces are unchanged.
+    pub fn fast(mut self) -> Self {
+        match &mut self.config {
+            ModelConfig::Fog(s) => {
+                s.forest.n_trees = s.forest.n_trees.min(8);
+                s.forest.tree.max_depth = s.forest.tree.max_depth.min(6);
+            }
+            ModelConfig::Rf { forest, .. } => {
+                forest.n_trees = forest.n_trees.min(8);
+                forest.tree.max_depth = forest.tree.max_depth.min(6);
+            }
+            ModelConfig::SvmLinear(p) => p.epochs = p.epochs.min(6),
+            ModelConfig::SvmRbf(p) => p.max_support = p.max_support.min(200),
+            ModelConfig::Mlp(p) => {
+                p.epochs = p.epochs.min(8);
+                p.hidden = vec![16];
+            }
+            ModelConfig::Cnn(p) => {
+                p.epochs = p.epochs.min(4);
+                p.conv1_channels = p.conv1_channels.min(4);
+                p.conv2_channels = p.conv2_channels.min(8);
+            }
+        }
+        self
+    }
+
+    fn fit_fog(&self, spec: &FogSpec, data: &Split, seed: u64) -> FogModel {
+        assert!(data.len() >= 2, "need at least 2 samples to train a FoG");
+        let split_fog = |rf: &RandomForest| {
+            let k = spec.trees_per_grove.clamp(1, rf.n_trees());
+            FieldOfGroves::from_forest_shuffled(rf, k, Some(seed ^ 0x5EED))
+        };
+        if spec.force_max {
+            let rf = RandomForest::fit(data, &spec.forest, seed);
+            return FogModel::fog_max(split_fog(&rf), seed);
+        }
+        let threshold = match spec.threshold {
+            Some(t) => t,
+            None => {
+                // Tune on a strided holdout (every `stride`-th row), which
+                // stays class-balanced even for label-sorted inputs like
+                // UCI CSVs, using a throwaway forest trained without it.
+                let n = data.len();
+                let frac = spec.holdout_frac.clamp(0.05, 0.5);
+                let stride = ((1.0 / frac).round() as usize).clamp(2, n);
+                let val_idx: Vec<usize> =
+                    (0..n).filter(|i| i % stride == stride - 1).collect();
+                let train_idx: Vec<usize> =
+                    (0..n).filter(|i| i % stride != stride - 1).collect();
+                let train = data.subset(&train_idx);
+                let val = data.subset(&val_idx);
+                let rf_tune = RandomForest::fit(&train, &spec.forest, seed);
+                let fog_tune = split_fog(&rf_tune);
+                let sweep = threshold_sweep(&fog_tune, &val, &default_grid(), seed);
+                accuracy_optimal_threshold(&sweep, 0.01).threshold
+            }
+        };
+        // The final model always trains on the full split, so registry
+        // entries stay comparable (tuning never costs training data).
+        let rf = RandomForest::fit(data, &spec.forest, seed);
+        let fog = split_fog(&rf);
+        let n_groves = fog.n_groves();
+        let max_hops = spec.max_hops.unwrap_or(n_groves).clamp(1, n_groves);
+        FogModel::new(
+            fog,
+            FogParams { threshold, max_hops, seed },
+            ClassifierKind::FogOpt,
+        )
+    }
+}
+
+impl Estimator for ModelSpec {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The single model-construction site: everything downstream holds a
+    /// `Box<dyn Classifier>` and never matches on the model family again.
+    fn fit(&self, data: &Split, seed: u64) -> Box<dyn Classifier> {
+        match &self.config {
+            ModelConfig::Fog(spec) => Box::new(self.fit_fog(spec, data, seed)),
+            ModelConfig::Rf { forest, mode } => {
+                Box::new(RfModel::new(RandomForest::fit(data, forest, seed), *mode))
+            }
+            ModelConfig::SvmLinear(p) => Box::new(LinearSvm::fit(data, p, seed)),
+            ModelConfig::SvmRbf(p) => Box::new(RbfSvm::fit(data, p, seed)),
+            ModelConfig::Mlp(p) => Box::new(Mlp::fit(data, p, seed)),
+            ModelConfig::Cnn(p) => Box::new(Cnn::fit(data, p, seed)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetProfile};
+
+    #[test]
+    fn registry_names_resolve() {
+        for name in REGISTRY {
+            let spec = ModelSpec::by_name(name).unwrap_or_else(|| panic!("{name} missing"));
+            assert_eq!(spec.name, *name);
+        }
+        assert!(ModelSpec::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn builder_knobs_apply() {
+        let spec = ModelSpec::by_name("fog_opt")
+            .unwrap()
+            .with_trees(8)
+            .with_grove_size(4)
+            .with_threshold(0.4);
+        match &spec.config {
+            ModelConfig::Fog(s) => {
+                assert_eq!(s.forest.n_trees, 8);
+                assert_eq!(s.trees_per_grove, 4);
+                assert_eq!(s.threshold, Some(0.4));
+            }
+            other => panic!("wrong config {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fog_opt_trains_and_predicts() {
+        let ds = generate(&DatasetProfile::demo(), 281);
+        let spec = ModelSpec::for_shape("fog_opt", ds.n_features(), ds.n_classes())
+            .unwrap()
+            .fast();
+        let model = spec.fit(&ds.train, 7);
+        assert_eq!(model.n_classes(), ds.n_classes());
+        let acc = model.accuracy(&ds.test);
+        assert!(acc > 0.5, "fog_opt acc {acc}");
+    }
+
+    #[test]
+    fn shape_scaling_matches_profiles() {
+        // Big profiles (ISOLET-shaped) get deeper feature-capped trees.
+        let big = forest_params_for(617, 26);
+        assert_eq!(big.tree.max_depth, 12);
+        assert_eq!(big.tree.max_features, 64);
+        let small = forest_params_for(16, 10);
+        assert_eq!(small.tree.max_depth, 8);
+        assert_eq!(small.tree.max_features, 0);
+    }
+}

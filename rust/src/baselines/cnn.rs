@@ -12,8 +12,9 @@
 //! autograd); gradients flow through maxpool argmaxes and 'same'-padded
 //! convolutions.
 
-use super::common::Classifier;
+use crate::api::{batch_from_scores, Classifier, ProbMatrix};
 use crate::data::Split;
+use crate::energy::model::ClassifierKind;
 use crate::energy::blocks::{AreaBlocks, EnergyBlocks};
 use crate::energy::model::{cnn_cost, CostReport};
 use crate::util::rng::Rng;
@@ -341,16 +342,29 @@ impl Cnn {
 }
 
 impl Classifier for Cnn {
-    fn predict(&self, x: &[f32]) -> usize {
-        crate::util::argmax(&self.scores(x))
+    fn kind(&self) -> ClassifierKind {
+        ClassifierKind::Cnn
     }
 
-    fn cost_report(&self, eb: &EnergyBlocks, ab: &AreaBlocks) -> CostReport {
+    fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    fn predict_proba_batch(&self, x: &[f32], n: usize) -> ProbMatrix {
+        batch_from_scores(x, n, self.n_features, self.n_classes, |row| self.scores(row))
+    }
+
+    fn cost_report(
+        &self,
+        _probe: Option<&Split>,
+        eb: &EnergyBlocks,
+        ab: &AreaBlocks,
+    ) -> CostReport {
         cnn_cost(self.inference_macs(), self.weight_bytes(), self.activation_bytes(), eb, ab)
-    }
-
-    fn name(&self) -> &'static str {
-        "CNN"
     }
 }
 
@@ -394,7 +408,7 @@ mod tests {
     fn cost_report_most_expensive_kind() {
         let ds = generate(&DatasetProfile::demo(), 173);
         let cnn = Cnn::fit(&ds.train, &CnnParams { epochs: 1, ..small_params() }, 3);
-        let r = cnn.cost_report(&EnergyBlocks::default(), &AreaBlocks::default());
+        let r = cnn.cost_report(None, &EnergyBlocks::default(), &AreaBlocks::default());
         assert!(r.energy_nj > 0.0);
         assert_eq!(r.kind, crate::energy::model::ClassifierKind::Cnn);
     }

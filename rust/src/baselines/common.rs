@@ -1,50 +1,49 @@
-//! Shared classifier interface: every baseline predicts labels and
-//! reports the PPA cost of one hardware classification through the
-//! energy-model layer.
+//! Shared classifier interface for the baselines.
+//!
+//! Historically this module owned a minimal per-sample `Classifier`
+//! trait. The crate-wide, batch-first interface now lives in
+//! [`crate::api`]; this module re-exports it so existing
+//! `baselines::common::Classifier` imports keep working.
 
-use crate::data::Split;
-use crate::energy::blocks::{AreaBlocks, EnergyBlocks};
-use crate::energy::model::CostReport;
-use crate::util::threadpool::par_map;
-
-/// A trained classifier with a hardware cost model.
-pub trait Classifier: Sync {
-    /// Predict the label of one sample.
-    fn predict(&self, x: &[f32]) -> usize;
-
-    /// Hardware PPA of one classification on this trained model.
-    fn cost_report(&self, eb: &EnergyBlocks, ab: &AreaBlocks) -> CostReport;
-
-    /// Human-readable name.
-    fn name(&self) -> &'static str;
-
-    /// Batch accuracy (parallel).
-    fn accuracy(&self, split: &Split) -> f64 {
-        let preds = par_map(split.len(), |i| self.predict(split.row(i)));
-        crate::util::stats::accuracy(&preds, &split.y)
-    }
-}
+pub use crate::api::{Classifier, ProbMatrix};
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::energy::model::ClassifierKind;
+    use crate::data::Split;
+    use crate::energy::blocks::{AreaBlocks, EnergyBlocks};
+    use crate::energy::model::{ClassifierKind, CostReport};
 
-    struct Constant(usize);
+    /// Minimal conformance check of the trait's derived defaults.
+    struct Constant(usize, usize);
+
     impl Classifier for Constant {
-        fn predict(&self, _x: &[f32]) -> usize {
-            self.0
+        fn kind(&self) -> ClassifierKind {
+            ClassifierKind::Mlp
         }
-        fn cost_report(&self, _eb: &EnergyBlocks, _ab: &AreaBlocks) -> CostReport {
+        fn n_features(&self) -> usize {
+            1
+        }
+        fn n_classes(&self) -> usize {
+            self.1
+        }
+        fn predict_proba_batch(&self, _x: &[f32], n: usize) -> ProbMatrix {
+            let mut row = vec![0.0f32; self.1];
+            row[self.0] = 1.0;
+            ProbMatrix::from_rows(vec![row; n], self.1)
+        }
+        fn cost_report(
+            &self,
+            _probe: Option<&Split>,
+            _eb: &EnergyBlocks,
+            _ab: &AreaBlocks,
+        ) -> CostReport {
             CostReport {
                 kind: ClassifierKind::Mlp,
                 energy_nj: 1.0,
                 latency_ns: 1.0,
                 area_mm2: 1.0,
             }
-        }
-        fn name(&self) -> &'static str {
-            "const"
         }
     }
 
@@ -54,7 +53,9 @@ mod tests {
         s.push(&[0.0], 1);
         s.push(&[0.0], 1);
         s.push(&[0.0], 0);
-        let c = Constant(1);
+        let c = Constant(1, 2);
         assert!((c.accuracy(&s) - 2.0 / 3.0).abs() < 1e-9);
+        assert_eq!(c.predict(&[0.0]), 1);
+        assert_eq!(c.predict_batch(&s.x, 3), vec![1, 1, 1]);
     }
 }

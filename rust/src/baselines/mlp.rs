@@ -2,8 +2,9 @@
 //! cross-entropy output, mini-batch SGD with momentum. Trained from
 //! scratch on the [`crate::util::matrix`] substrate.
 
-use super::common::Classifier;
+use crate::api::{batch_from_scores, Classifier, ProbMatrix};
 use crate::data::Split;
+use crate::energy::model::ClassifierKind;
 use crate::energy::blocks::{AreaBlocks, EnergyBlocks};
 use crate::energy::model::{mlp_cost, CostReport};
 use crate::util::matrix::{softmax_rows, Matrix};
@@ -154,16 +155,29 @@ impl Mlp {
 }
 
 impl Classifier for Mlp {
-    fn predict(&self, x: &[f32]) -> usize {
-        crate::util::argmax(&self.scores(x))
+    fn kind(&self) -> ClassifierKind {
+        ClassifierKind::Mlp
     }
 
-    fn cost_report(&self, eb: &EnergyBlocks, ab: &AreaBlocks) -> CostReport {
+    fn n_features(&self) -> usize {
+        self.dims[0]
+    }
+
+    fn n_classes(&self) -> usize {
+        *self.dims.last().expect("mlp has layers")
+    }
+
+    fn predict_proba_batch(&self, x: &[f32], n: usize) -> ProbMatrix {
+        batch_from_scores(x, n, self.dims[0], Classifier::n_classes(self), |row| self.scores(row))
+    }
+
+    fn cost_report(
+        &self,
+        _probe: Option<&Split>,
+        eb: &EnergyBlocks,
+        ab: &AreaBlocks,
+    ) -> CostReport {
         mlp_cost(&self.dims, eb, ab)
-    }
-
-    fn name(&self) -> &'static str {
-        "MLP"
     }
 }
 
@@ -208,7 +222,7 @@ mod tests {
         let params = MlpParams { hidden: vec![32, 16], epochs: 2, ..Default::default() };
         let mlp = Mlp::fit(&ds.train, &params, 4);
         assert_eq!(mlp.dims, vec![8, 32, 16, 3]);
-        let r = mlp.cost_report(&EnergyBlocks::default(), &AreaBlocks::default());
+        let r = mlp.cost_report(None, &EnergyBlocks::default(), &AreaBlocks::default());
         assert!(r.energy_nj > 0.0);
     }
 

@@ -8,8 +8,9 @@
 //! profiles are deliberately not linearly separable, so the same gap
 //! emerges from training rather than being hard-coded.
 
-use super::common::Classifier;
+use crate::api::{batch_from_scores, Classifier, ProbMatrix};
 use crate::data::Split;
+use crate::energy::model::ClassifierKind;
 use crate::energy::blocks::{AreaBlocks, EnergyBlocks};
 use crate::energy::model::{svm_linear_cost, CostReport};
 use crate::util::matrix::dot;
@@ -91,16 +92,29 @@ impl LinearSvm {
 }
 
 impl Classifier for LinearSvm {
-    fn predict(&self, x: &[f32]) -> usize {
-        crate::util::argmax(&self.scores(x))
+    fn kind(&self) -> ClassifierKind {
+        ClassifierKind::SvmLinear
     }
 
-    fn cost_report(&self, eb: &EnergyBlocks, ab: &AreaBlocks) -> CostReport {
+    fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    fn predict_proba_batch(&self, x: &[f32], n: usize) -> ProbMatrix {
+        batch_from_scores(x, n, self.n_features, self.n_classes, |row| self.scores(row))
+    }
+
+    fn cost_report(
+        &self,
+        _probe: Option<&Split>,
+        eb: &EnergyBlocks,
+        ab: &AreaBlocks,
+    ) -> CostReport {
         svm_linear_cost(self.n_features, self.n_classes, eb, ab)
-    }
-
-    fn name(&self) -> &'static str {
-        "SVM_lr"
     }
 }
 
@@ -152,7 +166,7 @@ mod tests {
     fn cost_report_shape() {
         let ds = generate(&DatasetProfile::demo(), 143);
         let svm = LinearSvm::fit(&ds.train, &LinearSvmParams::default(), 8);
-        let r = svm.cost_report(&EnergyBlocks::default(), &AreaBlocks::default());
+        let r = svm.cost_report(None, &EnergyBlocks::default(), &AreaBlocks::default());
         assert!(r.energy_nj > 0.0 && r.area_mm2 > 0.0);
     }
 }

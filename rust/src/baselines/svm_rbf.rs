@@ -9,8 +9,9 @@
 //! [`RbfSvmParams::max_support`] for tractability (stratified, so class
 //! balance survives).
 
-use super::common::Classifier;
+use crate::api::{batch_from_scores, Classifier, ProbMatrix};
 use crate::data::Split;
+use crate::energy::model::ClassifierKind;
 use crate::energy::blocks::{AreaBlocks, EnergyBlocks};
 use crate::energy::model::{svm_rbf_cost, CostReport};
 use crate::util::matrix::sq_dist;
@@ -114,16 +115,29 @@ impl RbfSvm {
 }
 
 impl Classifier for RbfSvm {
-    fn predict(&self, x: &[f32]) -> usize {
-        crate::util::argmax(&self.scores(x))
+    fn kind(&self) -> ClassifierKind {
+        ClassifierKind::SvmRbf
     }
 
-    fn cost_report(&self, eb: &EnergyBlocks, ab: &AreaBlocks) -> CostReport {
+    fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    fn predict_proba_batch(&self, x: &[f32], n: usize) -> ProbMatrix {
+        batch_from_scores(x, n, self.n_features, self.n_classes, |row| self.scores(row))
+    }
+
+    fn cost_report(
+        &self,
+        _probe: Option<&Split>,
+        eb: &EnergyBlocks,
+        ab: &AreaBlocks,
+    ) -> CostReport {
         svm_rbf_cost(self.n_sv, self.n_features, self.n_classes, eb, ab)
-    }
-
-    fn name(&self) -> &'static str {
-        "SVM_rbf"
     }
 }
 

@@ -6,6 +6,7 @@
 use crate::dt::export::{sanitize_inf, FlatBundle};
 use crate::fog::FieldOfGroves;
 use crate::runtime::{GroveStepExec, Manifest, Runtime, StepOutput};
+use crate::util::error::Result;
 use std::path::PathBuf;
 use std::sync::mpsc;
 
@@ -15,7 +16,7 @@ pub struct AccelRequest {
     pub x: Vec<f32>,
     pub prob_sum: Vec<f32>,
     pub hops: Vec<f32>,
-    pub reply: mpsc::Sender<anyhow::Result<StepOutput>>,
+    pub reply: mpsc::Sender<Result<StepOutput>>,
 }
 
 /// Cloneable handle to the accelerator thread.
@@ -32,19 +33,19 @@ impl AccelHandle {
         x: Vec<f32>,
         prob_sum: Vec<f32>,
         hops: Vec<f32>,
-    ) -> anyhow::Result<StepOutput> {
+    ) -> Result<StepOutput> {
         let (reply, rx) = mpsc::channel();
         self.tx
             .send(AccelRequest { grove_idx, x, prob_sum, hops, reply })
-            .map_err(|_| anyhow::anyhow!("accelerator thread gone"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("accelerator dropped reply"))?
+            .map_err(|_| crate::err!("accelerator thread gone"))?;
+        rx.recv().map_err(|_| crate::err!("accelerator dropped reply"))?
     }
 }
 
 /// Spawn the accelerator thread for `fog`, loading `grove_step` artifacts
 /// from `artifacts_dir`. Fails fast (before returning) if the artifacts
 /// are missing or shape-incompatible.
-pub fn spawn(fog: &FieldOfGroves, artifacts_dir: PathBuf) -> anyhow::Result<AccelHandle> {
+pub fn spawn(fog: &FieldOfGroves, artifacts_dir: PathBuf) -> Result<AccelHandle> {
     // Snapshot the grove bundles (the thread owns its own copy).
     let bundles: Vec<FlatBundle> = fog
         .groves
@@ -63,19 +64,19 @@ pub fn spawn(fog: &FieldOfGroves, artifacts_dir: PathBuf) -> anyhow::Result<Acce
     );
 
     let (tx, rx) = mpsc::channel::<AccelRequest>();
-    let (init_tx, init_rx) = mpsc::channel::<anyhow::Result<()>>();
+    let (init_tx, init_rx) = mpsc::channel::<Result<()>>();
 
     std::thread::Builder::new()
         .name("fog-accel".into())
         .spawn(move || {
             // Everything PJRT stays on this thread.
-            let init = (|| -> anyhow::Result<Vec<GroveStepExec>> {
+            let init = (|| -> Result<Vec<GroveStepExec>> {
                 let rt = Runtime::cpu()?;
                 let manifest = Manifest::load(&artifacts_dir)?;
                 let meta = manifest
                     .find_grove_step(t, depth, f, c)
                     .ok_or_else(|| {
-                        anyhow::anyhow!(
+                        crate::err!(
                             "no grove_step artifact for t={t} depth={depth} f={f} c={c}; \
                              run: make artifacts SHAPES=ring:{t},{depth},{f},{c},32"
                         )
@@ -104,7 +105,7 @@ pub fn spawn(fog: &FieldOfGroves, artifacts_dir: PathBuf) -> anyhow::Result<Acce
 
     init_rx
         .recv()
-        .map_err(|_| anyhow::anyhow!("accelerator thread died during init"))??;
+        .map_err(|_| crate::err!("accelerator thread died during init"))??;
     Ok(AccelHandle { tx })
 }
 

@@ -15,14 +15,21 @@
 //! * **Pjrt** — workers forward batches to a dedicated accelerator
 //!   thread owning the AOT-compiled `grove_step` executables (PJRT
 //!   handles are thread-affine). Python is never involved at runtime.
+//!
+//! Besides the paper-faithful grove ring ([`FogServer`]), the module
+//! provides a generic [`ModelServer`] that serves *any*
+//! [`crate::api::Classifier`] trait object — every registry model shares
+//! one batched serving path, the foundation for multi-backend routing.
 
 pub mod accel;
 pub mod messages;
 pub mod metrics;
+pub mod model_server;
 pub mod router;
 pub mod server;
 pub mod worker;
 
 pub use messages::{Request, Response};
 pub use metrics::Metrics;
+pub use model_server::{ModelServer, ModelServerConfig};
 pub use server::{Backend, FogServer, ServerConfig};

@@ -1,0 +1,252 @@
+//! Generic model serving: batch any [`Classifier`] trait object behind
+//! the same request/response plumbing the FoG ring uses.
+//!
+//! Where [`super::server::FogServer`] is the paper-faithful grove ring
+//! (hop forwarding, confidence gating), `ModelServer` is the
+//! multi-backend front-end the unified API enables: *any* registry model
+//! — an SVM, the CNN, a plain forest, or a FoG at a fixed operating
+//! point — serves traffic through one code path with dynamic batching
+//! and shared metrics. Worker threads pull from a shared queue, assemble
+//! row-major batches, and answer through the batch-first
+//! [`Classifier::predict_proba_batch`] hot path; there is no
+//! per-model-type dispatch anywhere in the serving loop.
+
+use super::messages::Response;
+use super::metrics::Metrics;
+use crate::api::Classifier;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One enqueued classification request.
+struct Job {
+    id: u64,
+    features: Vec<f32>,
+    enqueued: Instant,
+}
+
+/// Configuration for a generic model server.
+#[derive(Clone, Debug)]
+pub struct ModelServerConfig {
+    /// Max items per evaluation batch.
+    pub batch_size: usize,
+    /// How long a worker waits for more items once one is in hand.
+    pub batch_timeout: Duration,
+    /// Worker threads sharing the queue.
+    pub n_workers: usize,
+}
+
+impl Default for ModelServerConfig {
+    fn default() -> Self {
+        ModelServerConfig {
+            batch_size: 32,
+            batch_timeout: Duration::from_micros(200),
+            n_workers: 2,
+        }
+    }
+}
+
+/// A running classification service over one trained model.
+pub struct ModelServer {
+    job_tx: Option<Sender<Job>>,
+    resp_rx: Receiver<Response>,
+    metrics: Arc<Metrics>,
+    n_features: usize,
+    next_id: u64,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ModelServer {
+    /// Spin up `cfg.n_workers` threads serving `model`.
+    pub fn start(model: Arc<dyn Classifier>, cfg: &ModelServerConfig) -> ModelServer {
+        let metrics = Arc::new(Metrics::default());
+        let (job_tx, job_rx) = channel::<Job>();
+        let (resp_tx, resp_rx) = channel::<Response>();
+        let shared_rx = Arc::new(Mutex::new(job_rx));
+        let n_workers = cfg.n_workers.max(1);
+        let batch_size = cfg.batch_size.max(1);
+
+        let mut workers = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let rx = Arc::clone(&shared_rx);
+            let tx = resp_tx.clone();
+            let m = Arc::clone(&metrics);
+            let model = Arc::clone(&model);
+            let timeout = cfg.batch_timeout;
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("model-server-{w}"))
+                    .spawn(move || {
+                        run_model_worker(model, rx, tx, m, batch_size, timeout)
+                    })
+                    .expect("spawn model worker"),
+            );
+        }
+        ModelServer {
+            job_tx: Some(job_tx),
+            resp_rx,
+            metrics,
+            n_features: model.n_features(),
+            next_id: 0,
+            workers,
+        }
+    }
+
+    /// Classify a row-major batch; returns responses in input order.
+    pub fn classify(&mut self, x: &[f32]) -> Vec<Response> {
+        let f = self.n_features;
+        assert_eq!(x.len() % f, 0, "ragged batch");
+        let n = x.len() / f;
+        let base_id = self.next_id;
+        self.next_id += n as u64;
+        let tx = self.job_tx.as_ref().expect("server running");
+        for i in 0..n {
+            self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+            tx.send(Job {
+                id: base_id + i as u64,
+                features: x[i * f..(i + 1) * f].to_vec(),
+                enqueued: Instant::now(),
+            })
+            .expect("workers alive");
+        }
+        let mut responses: Vec<Option<Response>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let resp = self.resp_rx.recv().expect("workers alive");
+            let idx = (resp.id - base_id) as usize;
+            responses[idx] = Some(resp);
+        }
+        responses.into_iter().map(|r| r.expect("all answered")).collect()
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Drop the queue (workers exit on disconnect) and join them.
+    pub fn shutdown(mut self) {
+        self.job_tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn run_model_worker(
+    model: Arc<dyn Classifier>,
+    rx: Arc<Mutex<Receiver<Job>>>,
+    responses: Sender<Response>,
+    metrics: Arc<Metrics>,
+    batch_size: usize,
+    batch_timeout: Duration,
+) {
+    let f = model.n_features();
+    loop {
+        // Hold the queue lock only while assembling one batch.
+        let batch = {
+            let guard = match rx.lock() {
+                Ok(g) => g,
+                Err(_) => return, // a sibling worker panicked
+            };
+            let first = match guard.recv() {
+                Ok(job) => job,
+                Err(_) => return, // server shut down
+            };
+            let mut batch = vec![first];
+            while batch.len() < batch_size {
+                match guard.recv_timeout(batch_timeout) {
+                    Ok(job) => batch.push(job),
+                    Err(_) => break,
+                }
+            }
+            batch
+        };
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        metrics.evals.fetch_add(batch.len() as u64, Ordering::Relaxed);
+
+        // One batch-first prediction for the whole assembly.
+        let mut x = Vec::with_capacity(batch.len() * f);
+        for job in &batch {
+            x.extend_from_slice(&job.features);
+        }
+        let probs = model.predict_proba_batch(&x, batch.len());
+        let labels = probs.argmax_rows();
+
+        for (i, job) in batch.into_iter().enumerate() {
+            metrics.responses.fetch_add(1, Ordering::Relaxed);
+            metrics.hops_total.fetch_add(1, Ordering::Relaxed);
+            if responses
+                .send(Response {
+                    id: job.id,
+                    label: labels[i],
+                    prob: probs.row(i).to_vec(),
+                    hops: 1,
+                    latency_us: job.enqueued.elapsed().as_micros() as u64,
+                })
+                .is_err()
+            {
+                return; // caller gone
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{Estimator, ModelSpec};
+    use crate::data::synthetic::{generate, DatasetProfile};
+
+    fn serve(name: &str, cfg: &ModelServerConfig) {
+        let ds = generate(&DatasetProfile::demo(), 221);
+        let spec = ModelSpec::for_shape(name, ds.n_features(), ds.n_classes())
+            .unwrap()
+            .fast();
+        let model: Arc<dyn Classifier> = Arc::from(spec.fit(&ds.train, 5));
+        let offline = model.predict_batch(&ds.test.x, ds.test.len());
+
+        let mut server = ModelServer::start(Arc::clone(&model), cfg);
+        let responses = server.classify(&ds.test.x);
+        assert_eq!(responses.len(), ds.test.len());
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.label, offline[i], "{name} row {i}");
+        }
+        let snap = server.metrics().snapshot();
+        assert_eq!(snap.responses as usize, ds.test.len());
+        server.shutdown();
+    }
+
+    #[test]
+    fn serves_linear_svm_matching_offline() {
+        serve("svm_lr", &ModelServerConfig::default());
+    }
+
+    #[test]
+    fn serves_forest_matching_offline() {
+        serve("rf", &ModelServerConfig { n_workers: 4, ..Default::default() });
+    }
+
+    #[test]
+    fn serves_fog_matching_offline() {
+        // The FoG model's content-hashed start groves make batched and
+        // per-request serving agree no matter how batches form.
+        serve("fog_opt", &ModelServerConfig { batch_size: 4, ..Default::default() });
+    }
+
+    #[test]
+    fn multiple_batches_unique_ids() {
+        let ds = generate(&DatasetProfile::demo(), 222);
+        let spec = ModelSpec::for_shape("svm_lr", ds.n_features(), ds.n_classes())
+            .unwrap()
+            .fast();
+        let model: Arc<dyn Classifier> = Arc::from(spec.fit(&ds.train, 6));
+        let mut server = ModelServer::start(model, &ModelServerConfig::default());
+        let f = ds.n_features();
+        let r1 = server.classify(&ds.test.x[..8 * f]);
+        let r2 = server.classify(&ds.test.x[8 * f..16 * f]);
+        assert!(r1.iter().enumerate().all(|(i, r)| r.id == i as u64));
+        assert!(r2.iter().enumerate().all(|(i, r)| r.id == 8 + i as u64));
+        server.shutdown();
+    }
+}

@@ -7,8 +7,9 @@
 use super::accel;
 use super::messages::{Msg, Request, Response, WorkItem};
 use super::metrics::{LatencySummary, Metrics};
-use super::worker::{run_worker, EvalBackend, WorkerConfig};
+use super::worker::{run_worker, AccelGrove, GroveBackend, NativeGrove, WorkerConfig};
 use crate::fog::FieldOfGroves;
+use crate::util::error::Result;
 use crate::util::rng::Rng;
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
@@ -68,9 +69,9 @@ pub struct FogServer {
 
 impl FogServer {
     /// Start workers for every grove of `fog`.
-    pub fn start(fog: &FieldOfGroves, cfg: &ServerConfig) -> anyhow::Result<FogServer> {
+    pub fn start(fog: &FieldOfGroves, cfg: &ServerConfig) -> Result<FogServer> {
         let n = fog.n_groves();
-        anyhow::ensure!(n > 0, "empty fog");
+        crate::ensure!(n > 0, "empty fog");
         let metrics = Arc::new(Metrics::default());
         let (resp_tx, resp_rx) = channel::<Response>();
 
@@ -102,13 +103,13 @@ impl FogServer {
             let responses = resp_tx.clone();
             let m = Arc::clone(&metrics);
             let grove = fog.groves[i].clone();
-            let backend = match &accel_handle {
-                None => EvalBackend::Native(grove),
-                Some(h) => EvalBackend::Accel {
+            let backend: Box<dyn GroveBackend> = match &accel_handle {
+                None => Box::new(NativeGrove(grove)),
+                Some(h) => Box::new(AccelGrove {
                     handle: h.clone(),
                     grove,
                     grove_idx: i,
-                },
+                }),
             };
             let wc = wcfg.clone();
             workers.push(

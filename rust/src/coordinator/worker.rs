@@ -1,9 +1,13 @@
 //! Grove worker: one thread per grove, draining its queue in dynamic
 //! batches, gating on confidence, forwarding the unconfident to the next
 //! grove (the software twin of the hardware tile in `uarch::ring`).
+//!
+//! Evaluation is dispatched through the [`GroveBackend`] trait object —
+//! the worker loop itself contains no backend- or model-type match arms,
+//! so new evaluation backends plug in without touching routing logic.
 
 use super::accel::AccelHandle;
-use super::messages::{Msg, Response};
+use super::messages::{Msg, Response, WorkItem};
 use super::metrics::Metrics;
 use crate::fog::confidence::max_diff;
 use crate::fog::Grove;
@@ -12,19 +16,83 @@ use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::time::Duration;
 
-/// How a worker evaluates its grove.
-pub enum EvalBackend {
-    /// Walk the flat trees directly in this thread.
-    Native(Grove),
-    /// Ship batches to the PJRT accelerator thread.
-    Accel { handle: AccelHandle, grove: Grove, grove_idx: usize },
+/// One hop's evaluation for a batch of in-flight items: accumulate this
+/// grove's probabilities into each item, bump its hop count, refresh its
+/// normalized distribution, and return the per-item MaxDiff confidence.
+pub trait GroveBackend: Send {
+    fn n_classes(&self) -> usize;
+
+    fn step_batch(&self, batch: &mut [WorkItem]) -> Vec<f32>;
 }
 
-impl EvalBackend {
+/// Walk the grove's flat trees directly on the worker thread (pure-rust
+/// hot path).
+pub struct NativeGrove(pub Grove);
+
+/// Shared by the native backend and the accelerator fallback path.
+fn native_step(grove: &Grove, batch: &mut [WorkItem]) -> Vec<f32> {
+    batch
+        .iter_mut()
+        .map(|item| {
+            grove.accumulate_proba(&item.features, &mut item.prob_sum);
+            item.hops += 1;
+            let inv = 1.0 / item.hops as f32;
+            let norm: Vec<f32> = item.prob_sum.iter().map(|p| p * inv).collect();
+            let c = max_diff(&norm);
+            item.scratch_norm = norm;
+            c
+        })
+        .collect()
+}
+
+impl GroveBackend for NativeGrove {
     fn n_classes(&self) -> usize {
-        match self {
-            EvalBackend::Native(g) => g.n_classes,
-            EvalBackend::Accel { grove, .. } => grove.n_classes,
+        self.0.n_classes
+    }
+
+    fn step_batch(&self, batch: &mut [WorkItem]) -> Vec<f32> {
+        native_step(&self.0, batch)
+    }
+}
+
+/// Ship batches to the PJRT accelerator thread; fall back to the native
+/// walk when the accelerator errors.
+pub struct AccelGrove {
+    pub handle: AccelHandle,
+    pub grove: Grove,
+    pub grove_idx: usize,
+}
+
+impl GroveBackend for AccelGrove {
+    fn n_classes(&self) -> usize {
+        self.grove.n_classes
+    }
+
+    fn step_batch(&self, batch: &mut [WorkItem]) -> Vec<f32> {
+        let n = batch.len();
+        let f = self.grove.n_features;
+        let c = self.grove.n_classes;
+        let mut x = Vec::with_capacity(n * f);
+        let mut prob = Vec::with_capacity(n * c);
+        let mut hops = Vec::with_capacity(n);
+        for item in batch.iter() {
+            x.extend_from_slice(&item.features);
+            prob.extend_from_slice(&item.prob_sum);
+            hops.push((item.hops + 1) as f32);
+        }
+        match self.handle.step(self.grove_idx, x, prob, hops) {
+            Ok(out) => {
+                for (i, item) in batch.iter_mut().enumerate() {
+                    item.hops += 1;
+                    item.prob_sum.copy_from_slice(&out.new_sum[i * c..(i + 1) * c]);
+                    item.scratch_norm = out.norm[i * c..(i + 1) * c].to_vec();
+                }
+                out.conf
+            }
+            Err(e) => {
+                eprintln!("accel error: {e}; falling back to native");
+                native_step(&self.grove, batch)
+            }
         }
     }
 }
@@ -41,16 +109,14 @@ pub struct WorkerConfig {
 }
 
 /// Worker main loop. Exits when the inbound channel disconnects.
-#[allow(clippy::too_many_arguments)]
 pub fn run_worker(
-    backend: EvalBackend,
+    backend: Box<dyn GroveBackend>,
     rx: Receiver<Msg>,
     next: Sender<Msg>,
     responses: Sender<Response>,
     metrics: Arc<Metrics>,
     cfg: WorkerConfig,
 ) {
-    let n_classes = backend.n_classes();
     loop {
         // Block for the first item.
         let first = match rx.recv() {
@@ -69,62 +135,8 @@ pub fn run_worker(
         metrics.batches.fetch_add(1, Ordering::Relaxed);
         metrics.evals.fetch_add(batch.len() as u64, Ordering::Relaxed);
 
-        // Evaluate the batch.
-        let confs: Vec<f32> = match &backend {
-            EvalBackend::Native(grove) => batch
-                .iter_mut()
-                .map(|item| {
-                    grove.accumulate_proba(&item.features, &mut item.prob_sum);
-                    item.hops += 1;
-                    let inv = 1.0 / item.hops as f32;
-                    let norm: Vec<f32> =
-                        item.prob_sum.iter().map(|p| p * inv).collect();
-                    let c = max_diff(&norm);
-                    item.scratch_norm = norm;
-                    c
-                })
-                .collect(),
-            EvalBackend::Accel { handle, grove_idx, grove } => {
-                let n = batch.len();
-                let f = grove.n_features;
-                let mut x = Vec::with_capacity(n * f);
-                let mut prob = Vec::with_capacity(n * n_classes);
-                let mut hops = Vec::with_capacity(n);
-                for item in &batch {
-                    x.extend_from_slice(&item.features);
-                    prob.extend_from_slice(&item.prob_sum);
-                    hops.push((item.hops + 1) as f32);
-                }
-                match handle.step(*grove_idx, x, prob, hops) {
-                    Ok(out) => {
-                        for (i, item) in batch.iter_mut().enumerate() {
-                            item.hops += 1;
-                            item.prob_sum
-                                .copy_from_slice(&out.new_sum[i * n_classes..(i + 1) * n_classes]);
-                            item.scratch_norm =
-                                out.norm[i * n_classes..(i + 1) * n_classes].to_vec();
-                        }
-                        out.conf
-                    }
-                    Err(e) => {
-                        eprintln!("accel error: {e}; falling back to native");
-                        batch
-                            .iter_mut()
-                            .map(|item| {
-                                grove.accumulate_proba(&item.features, &mut item.prob_sum);
-                                item.hops += 1;
-                                let inv = 1.0 / item.hops as f32;
-                                let norm: Vec<f32> =
-                                    item.prob_sum.iter().map(|p| p * inv).collect();
-                                let c = max_diff(&norm);
-                                item.scratch_norm = norm;
-                                c
-                            })
-                            .collect()
-                    }
-                }
-            }
-        };
+        // Evaluate the batch through the backend trait object.
+        let confs = backend.step_batch(&mut batch);
 
         // Route each item: respond or forward.
         for (item, conf) in batch.into_iter().zip(confs) {
@@ -152,6 +164,33 @@ pub fn run_worker(
 
 #[cfg(test)]
 mod tests {
-    // Worker behaviour is covered end-to-end in `server.rs` tests (the
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetProfile};
+    use crate::forest::{ForestParams, RandomForest};
+    use std::time::Instant;
+
+    #[test]
+    fn native_backend_one_hop_normalizes() {
+        let ds = generate(&DatasetProfile::demo(), 211);
+        let rf = RandomForest::fit(&ds.train, &ForestParams::small(), 1);
+        let fog = crate::fog::FieldOfGroves::from_forest(&rf, 4);
+        let backend = NativeGrove(fog.groves[0].clone());
+        let mut batch = vec![WorkItem {
+            id: 0,
+            features: ds.test.row(0).to_vec(),
+            prob_sum: vec![0.0; backend.n_classes()],
+            hops: 0,
+            injected: Instant::now(),
+            scratch_norm: Vec::new(),
+        }];
+        let confs = backend.step_batch(&mut batch);
+        assert_eq!(confs.len(), 1);
+        assert_eq!(batch[0].hops, 1);
+        let sum: f32 = batch[0].scratch_norm.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "norm sums to {sum}");
+        assert!((max_diff(&batch[0].scratch_norm) - confs[0]).abs() < 1e-6);
+    }
+
+    // Ring behaviour is covered end-to-end in `server.rs` tests (the
     // worker loop needs the full ring plumbing to exercise).
 }

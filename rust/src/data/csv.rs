@@ -7,6 +7,7 @@
 //! UCI convention for ISOLET/Pendigits/Letter); `label_first` flips it.
 
 use super::Split;
+use crate::util::error::Result;
 use std::collections::BTreeMap;
 use std::io::BufRead;
 use std::path::Path;
@@ -31,9 +32,9 @@ impl Default for CsvOptions {
 /// Load a labelled CSV into a [`Split`]. Labels may be arbitrary tokens
 /// (e.g. `A`..`Z` for Letter); they are mapped to dense class ids in order
 /// of first appearance, sorted for determinism at the end.
-pub fn load_csv(path: &Path, opts: &CsvOptions) -> anyhow::Result<Split> {
+pub fn load_csv(path: &Path, opts: &CsvOptions) -> Result<Split> {
     let file = std::fs::File::open(path)
-        .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?;
+        .map_err(|e| crate::err!("open {}: {e}", path.display()))?;
     let reader = std::io::BufReader::new(file);
 
     let mut rows: Vec<(Vec<f32>, String)> = Vec::new();
@@ -45,26 +46,27 @@ pub fn load_csv(path: &Path, opts: &CsvOptions) -> anyhow::Result<Split> {
         }
         let fields: Vec<&str> = line.split(opts.sep).map(|f| f.trim()).collect();
         if fields.len() < 2 {
-            anyhow::bail!("line {}: need >= 2 fields", lineno + 1);
+            crate::bail!("line {}: need >= 2 fields", lineno + 1);
         }
         let (label, feats) = if opts.label_first {
             (fields[0].to_string(), &fields[1..])
         } else {
             (fields[fields.len() - 1].to_string(), &fields[..fields.len() - 1])
         };
-        let parsed: Result<Vec<f32>, _> = feats.iter().map(|f| f.parse::<f32>()).collect();
+        let parsed: std::result::Result<Vec<f32>, _> =
+            feats.iter().map(|f| f.parse::<f32>()).collect();
         let parsed =
-            parsed.map_err(|e| anyhow::anyhow!("line {}: bad feature: {e}", lineno + 1))?;
+            parsed.map_err(|e| crate::err!("line {}: bad feature: {e}", lineno + 1))?;
         match n_features {
             None => n_features = Some(parsed.len()),
             Some(n) if n != parsed.len() => {
-                anyhow::bail!("line {}: {} features, expected {n}", lineno + 1, parsed.len())
+                crate::bail!("line {}: {} features, expected {n}", lineno + 1, parsed.len())
             }
             _ => {}
         }
         rows.push((parsed, label));
     }
-    anyhow::ensure!(!rows.is_empty(), "empty csv {}", path.display());
+    crate::ensure!(!rows.is_empty(), "empty csv {}", path.display());
 
     // Dense, deterministic label ids (sorted lexicographically).
     let mut labels: Vec<&String> = rows.iter().map(|(_, l)| l).collect();

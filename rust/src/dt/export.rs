@@ -8,6 +8,7 @@
 //! trivially.
 
 use super::flat::FlatTree;
+use crate::util::error::Result;
 use crate::util::json::{parse, Json};
 use std::path::Path;
 
@@ -70,35 +71,35 @@ impl FlatBundle {
         ])
     }
 
-    pub fn from_json(v: &Json) -> anyhow::Result<FlatBundle> {
-        let depth = v.get("depth").as_usize().ok_or_else(|| anyhow::anyhow!("missing depth"))?;
+    pub fn from_json(v: &Json) -> Result<FlatBundle> {
+        let depth = v.get("depth").as_usize().ok_or_else(|| crate::err!("missing depth"))?;
         let n_features =
-            v.get("n_features").as_usize().ok_or_else(|| anyhow::anyhow!("missing n_features"))?;
+            v.get("n_features").as_usize().ok_or_else(|| crate::err!("missing n_features"))?;
         let n_classes =
-            v.get("n_classes").as_usize().ok_or_else(|| anyhow::anyhow!("missing n_classes"))?;
+            v.get("n_classes").as_usize().ok_or_else(|| crate::err!("missing n_classes"))?;
         let trees_json =
-            v.get("trees").as_arr().ok_or_else(|| anyhow::anyhow!("missing trees"))?;
+            v.get("trees").as_arr().ok_or_else(|| crate::err!("missing trees"))?;
         let mut trees = Vec::with_capacity(trees_json.len());
         for tj in trees_json {
             let feat: Vec<i32> = tj
                 .get("feat")
                 .to_i64_vec()
-                .ok_or_else(|| anyhow::anyhow!("missing feat"))?
+                .ok_or_else(|| crate::err!("missing feat"))?
                 .into_iter()
                 .map(|v| v as i32)
                 .collect();
-            let thr = tj.get("thr").to_f32_vec().ok_or_else(|| anyhow::anyhow!("missing thr"))?;
-            let leaf = tj.get("leaf").to_f32_vec().ok_or_else(|| anyhow::anyhow!("missing leaf"))?;
-            anyhow::ensure!(feat.len() == (1 << depth) - 1, "feat len");
-            anyhow::ensure!(thr.len() == (1 << depth) - 1, "thr len");
-            anyhow::ensure!(leaf.len() == (1 << depth) * n_classes, "leaf len");
+            let thr = tj.get("thr").to_f32_vec().ok_or_else(|| crate::err!("missing thr"))?;
+            let leaf = tj.get("leaf").to_f32_vec().ok_or_else(|| crate::err!("missing leaf"))?;
+            crate::ensure!(feat.len() == (1 << depth) - 1, "feat len");
+            crate::ensure!(thr.len() == (1 << depth) - 1, "thr len");
+            crate::ensure!(leaf.len() == (1 << depth) * n_classes, "leaf len");
             trees.push(FlatTree { depth, n_features, n_classes, feat, thr, leaf });
         }
-        anyhow::ensure!(!trees.is_empty(), "empty bundle");
+        crate::ensure!(!trees.is_empty(), "empty bundle");
         Ok(FlatBundle { depth, n_features, n_classes, trees })
     }
 
-    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+    pub fn save(&self, path: &Path) -> Result<()> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
@@ -106,9 +107,9 @@ impl FlatBundle {
         Ok(())
     }
 
-    pub fn load(path: &Path) -> anyhow::Result<FlatBundle> {
+    pub fn load(path: &Path) -> Result<FlatBundle> {
         let text = std::fs::read_to_string(path)
-            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+            .map_err(|e| crate::err!("read {}: {e}", path.display()))?;
         FlatBundle::from_json(&parse(&text)?)
     }
 }

@@ -43,6 +43,9 @@ pub enum ClassifierKind {
     SvmRbf,
     Mlp,
     Cnn,
+    /// A single decision tree (not a Table-1 column; used by the unified
+    /// `fog::api` layer for tree-level models).
+    Tree,
     RandomForest,
     FogMax,
     FogOpt,
@@ -55,6 +58,7 @@ impl ClassifierKind {
             ClassifierKind::SvmRbf => "SVM_rbf",
             ClassifierKind::Mlp => "MLP",
             ClassifierKind::Cnn => "CNN",
+            ClassifierKind::Tree => "DT",
             ClassifierKind::RandomForest => "RF",
             ClassifierKind::FogMax => "FoG_max",
             ClassifierKind::FogOpt => "FoG_opt",

@@ -8,6 +8,7 @@ use crate::energy::blocks::{AreaBlocks, EnergyBlocks};
 use crate::energy::model::{fog_cost, ClassifierKind};
 use crate::fog::tuner::threshold_sweep;
 use crate::fog::FieldOfGroves;
+use crate::util::error::Result;
 
 /// One (threshold, accuracy, EDP) point.
 #[derive(Clone, Debug)]
@@ -25,8 +26,8 @@ pub fn run_dataset(
     topo: (usize, usize),
     thresholds: &[f32],
     seed: u64,
-) -> anyhow::Result<Vec<ThresholdPoint>> {
-    anyhow::ensure!(
+) -> Result<Vec<ThresholdPoint>> {
+    crate::ensure!(
         topo.0 * topo.1 == suite.rf.n_trees(),
         "topology {}x{} != {} trees",
         topo.0,

@@ -2,29 +2,37 @@
 //! compares (§4.1) on one dataset profile, with the paper's design flow:
 //!
 //! 1. standardize + fixed-point-quantize features (hardware input path),
-//! 2. train all classifiers "for their maximum accuracy" (§4.2),
+//! 2. train all classifiers "for their maximum accuracy" (§4.2) — the
+//!    baselines through the [`crate::api`] registry, so everything
+//!    downstream handles `Box<dyn Classifier>` uniformly,
 //! 3. split the RF into groves, pick the minimum-EDP topology whose
 //!    accuracy is within tolerance of the best (Figure 4's selection),
-//! 4. find the FoG_opt threshold (accuracy-optimal point, §4.2).
+//! 4. find the FoG_opt threshold (accuracy-optimal point, §4.2),
+//! 5. evaluate *every* model — baselines, RF, FoG_max, FoG_opt — through
+//!    one batch-first [`Classifier`] loop: accuracy plus a cost report
+//!    with op counts measured on the test split. No per-model-type
+//!    dispatch remains on the prediction path.
 
+use crate::api::spec::{
+    cnn_params_for, forest_params_for, linear_params_for, mlp_params_for, rbf_params_for,
+};
+use crate::api::{Classifier, Estimator, FogModel, ModelConfig, ModelSpec, RfModel};
 use crate::baselines::{
     cnn::CnnParams, mlp::MlpParams, svm_linear::LinearSvmParams, svm_rbf::RbfSvmParams,
-    Classifier, Cnn, LinearSvm, Mlp, RbfSvm,
 };
 use crate::data::normalize::{quantize_split, standardize};
 use crate::data::synthetic::{generate, DatasetProfile};
 use crate::data::Dataset;
-use crate::dt::TreeParams;
 use crate::energy::blocks::{AreaBlocks, EnergyBlocks};
-use crate::energy::model::{
-    fog_cost, rf_cost, ClassifierKind, CostReport, FogStats, RfStats,
-};
+use crate::energy::model::{fog_cost, ClassifierKind, CostReport, FogStats, RfStats};
 use crate::fog::tuner::{accuracy_optimal_threshold, threshold_sweep, SweepPoint};
 use crate::fog::{topology, FieldOfGroves, FogParams};
 use crate::forest::{ForestParams, RandomForest, VoteMode};
 
 /// Per-dataset training hyper-parameters, scaled so the big profiles
-/// (ISOLET/MNIST) stay tractable without changing the comparison.
+/// (ISOLET/MNIST) stay tractable without changing the comparison. The
+/// scaling rules live in [`crate::api::spec`] so the registry and the
+/// suite stay in sync.
 pub struct TrainConfig {
     pub forest: ForestParams,
     pub linear: LinearSvmParams,
@@ -34,67 +42,65 @@ pub struct TrainConfig {
 }
 
 impl TrainConfig {
-    pub fn for_profile(p: &DatasetProfile) -> TrainConfig {
-        let big = p.n_features > 100;
-        let many_classes = p.n_classes > 10;
+    pub fn for_shape(n_features: usize, n_classes: usize) -> TrainConfig {
         TrainConfig {
-            forest: ForestParams {
-                n_trees: 16,
-                tree: TreeParams {
-                    max_depth: if big || many_classes { 12 } else { 8 },
-                    min_samples_leaf: 2,
-                    max_features: if big { 64 } else { 0 },
-                    ..Default::default()
-                },
-                bootstrap: true,
-            },
-            linear: LinearSvmParams { epochs: if big { 8 } else { 14 }, ..Default::default() },
-            rbf: RbfSvmParams { max_support: if big { 700 } else { 800 }, ..Default::default() },
-            mlp: MlpParams {
-                hidden: vec![if big { 96 } else { 64 }],
-                epochs: if big { 12 } else { 30 },
-                ..Default::default()
-            },
-            cnn: CnnParams {
-                // Paper-comparable capacity: the paper's CNN is by far the
-                // largest design (2.1 mm², ~0.2-1.3 µJ/classification);
-                // channel counts are sized so conv MACs dominate at every
-                // feature count.
-                conv1_channels: if big { 16 } else { 32 },
-                conv2_channels: if big { 32 } else { 64 },
-                pool1: if big { 4 } else { 2 },
-                epochs: if big { 5 } else { 20 },
-                ..Default::default()
-            },
+            forest: forest_params_for(n_features, n_classes),
+            linear: linear_params_for(n_features),
+            rbf: rbf_params_for(n_features),
+            mlp: mlp_params_for(n_features),
+            cnn: cnn_params_for(n_features),
         }
+    }
+
+    pub fn for_profile(p: &DatasetProfile) -> TrainConfig {
+        Self::for_shape(p.n_features, p.n_classes)
     }
 }
 
-/// Everything trained on one dataset.
+/// Generate + condition one profile's data (standardize, Q3.4 quantize —
+/// the hardware input path).
+pub fn prepare_data(profile: &DatasetProfile, seed: u64) -> Dataset {
+    let mut data = generate(profile, seed);
+    standardize(&mut data);
+    quantize_split(&mut data.train);
+    quantize_split(&mut data.test);
+    data
+}
+
+/// Everything trained on one dataset: the forest (shared by the FoG
+/// design flow) plus the four baselines behind the unified API.
 pub struct TrainedSuite {
     pub profile: DatasetProfile,
     pub data: Dataset,
     pub rf: RandomForest,
-    pub svm_lr: LinearSvm,
-    pub svm_rbf: RbfSvm,
-    pub mlp: Mlp,
-    pub cnn: Cnn,
+    /// SVM_lr, SVM_rbf, MLP, CNN — Table-1 column order.
+    pub baselines: Vec<Box<dyn Classifier>>,
+}
+
+impl TrainedSuite {
+    /// Look up a baseline by its Table-1 column.
+    pub fn baseline(&self, kind: ClassifierKind) -> Option<&dyn Classifier> {
+        self.baselines.iter().map(|b| b.as_ref()).find(|b| b.kind() == kind)
+    }
 }
 
 /// Train the full suite on a profile (standardized + quantized data).
 pub fn train_suite(profile: &DatasetProfile, seed: u64) -> TrainedSuite {
-    let mut data = generate(profile, seed);
-    standardize(&mut data);
-    // Hardware input conditioning: Q3.4 bytes in the data queue.
-    quantize_split(&mut data.train);
-    quantize_split(&mut data.test);
+    let data = prepare_data(profile, seed);
     let cfg = TrainConfig::for_profile(profile);
     let rf = RandomForest::fit(&data.train, &cfg.forest, seed ^ 1);
-    let svm_lr = LinearSvm::fit(&data.train, &cfg.linear, seed ^ 2);
-    let svm_rbf = RbfSvm::fit(&data.train, &cfg.rbf, seed ^ 3);
-    let mlp = Mlp::fit(&data.train, &cfg.mlp, seed ^ 4);
-    let cnn = Cnn::fit(&data.train, &cfg.cnn, seed ^ 5);
-    TrainedSuite { profile: profile.clone(), data, rf, svm_lr, svm_rbf, mlp, cnn }
+    let specs = [
+        ModelSpec::new("svm_lr", ModelConfig::SvmLinear(cfg.linear.clone())),
+        ModelSpec::new("svm_rbf", ModelConfig::SvmRbf(cfg.rbf.clone())),
+        ModelSpec::new("mlp", ModelConfig::Mlp(cfg.mlp.clone())),
+        ModelSpec::new("cnn", ModelConfig::Cnn(cfg.cnn.clone())),
+    ];
+    let baselines = specs
+        .into_iter()
+        .enumerate()
+        .map(|(i, spec)| spec.fit(&data.train, seed ^ (i as u64 + 2)))
+        .collect();
+    TrainedSuite { profile: profile.clone(), data, rf, baselines }
 }
 
 /// The selected FoG design for a suite: topology + thresholds + stats.
@@ -148,42 +154,15 @@ fn grid_coarse() -> Vec<f32> {
     (1..=10).map(|i| i as f32 * 0.1).collect()
 }
 
-/// Measured FogStats for an evaluated operating point.
+/// Measured FogStats for an evaluated operating point (delegates to the
+/// `api` layer so one implementation feeds both paths).
 pub fn fog_stats(fog: &FieldOfGroves, avg_hops: f64, kind: ClassifierKind) -> FogStats {
-    let per_grove = fog.groves[0].n_trees();
-    let depth = fog.depth;
-    // Storage sized to the *sparse* trained trees (the hardware stores
-    // real nodes, not the complete-tree padding the kernels use).
-    let storage = fog.groves[0].sparse_storage_bytes() as f64;
-    FogStats {
-        n_groves: fog.n_groves(),
-        trees_per_grove: per_grove,
-        depth,
-        avg_hops,
-        n_features: fog.n_features,
-        n_classes: fog.n_classes,
-        grove_storage_bytes: storage,
-        kind,
-    }
+    crate::api::measured_fog_stats(fog, avg_hops, kind)
 }
 
 /// Measured RfStats for a trained forest.
 pub fn rf_stats(suite: &TrainedSuite) -> RfStats {
-    let rf = &suite.rf;
-    let depth = rf.max_depth().max(1);
-    // 6 bytes per sparse node: weight + feature offset + control
-    // (§3.2.2 "Reprogrammability"), plus one byte per leaf-class slot.
-    let nodes: usize = rf.trees.iter().map(|t| t.n_nodes()).sum();
-    let leaves: usize = rf.trees.iter().map(|t| t.n_leaves()).sum();
-    let storage = nodes as f64 * 6.0 + (leaves * rf.n_classes) as f64;
-    RfStats {
-        n_trees: rf.n_trees(),
-        avg_comparisons: rf.avg_comparisons(&suite.data.test),
-        max_depth: depth,
-        n_features: rf.n_features,
-        n_classes: rf.n_classes,
-        node_storage_bytes: storage,
-    }
+    crate::api::measured_rf_stats(&suite.rf, Some(&suite.data.test))
 }
 
 /// One Table-1 row: a classifier's accuracy and PPA on one dataset.
@@ -194,57 +173,38 @@ pub struct Row {
 }
 
 /// Evaluate the full suite (baselines + RF + FoG_max + FoG_opt) and
-/// return rows in the paper's column order.
+/// return rows in the paper's column order — one uniform pass over
+/// `&dyn Classifier`, with per-classification op counts measured on the
+/// test split. No per-model-type dispatch.
 pub fn evaluate_suite(suite: &TrainedSuite, seed: u64) -> Vec<Row> {
     let eb = EnergyBlocks::default();
     let ab = AreaBlocks::default();
     let test = &suite.data.test;
-    let mut rows = Vec::new();
 
-    rows.push(Row {
-        kind: ClassifierKind::SvmLinear,
-        accuracy: suite.svm_lr.accuracy(test),
-        report: suite.svm_lr.cost_report(&eb, &ab),
-    });
-    rows.push(Row {
-        kind: ClassifierKind::SvmRbf,
-        accuracy: suite.svm_rbf.accuracy(test),
-        report: suite.svm_rbf.cost_report(&eb, &ab),
-    });
-    rows.push(Row {
-        kind: ClassifierKind::Mlp,
-        accuracy: suite.mlp.accuracy(test),
-        report: suite.mlp.cost_report(&eb, &ab),
-    });
-    rows.push(Row {
-        kind: ClassifierKind::Cnn,
-        accuracy: suite.cnn.accuracy(test),
-        report: suite.cnn.cost_report(&eb, &ab),
-    });
-    rows.push(Row {
-        kind: ClassifierKind::RandomForest,
-        accuracy: suite.rf.accuracy(test, VoteMode::Majority),
-        report: rf_cost(&rf_stats(suite), &eb, &ab),
-    });
-
+    // FoG design flow (topology + threshold selection).
     let sel = select_fog(suite, seed, 0.01);
-    // FoG_max: threshold at maximum — every grove contributes.
-    let max_params = FogParams::fog_max(sel.fog.n_groves());
-    let max_res = sel.fog.evaluate(&test.x, &max_params);
-    let max_stats = fog_stats(&sel.fog, max_res.avg_hops(), ClassifierKind::FogMax);
-    rows.push(Row {
-        kind: ClassifierKind::FogMax,
-        accuracy: max_res.accuracy(&test.y),
-        report: fog_cost(&max_stats, &eb, &ab),
-    });
-    // FoG_opt: accuracy-optimal threshold.
-    let opt_stats = fog_stats(&sel.fog, sel.opt.avg_hops, ClassifierKind::FogOpt);
-    rows.push(Row {
-        kind: ClassifierKind::FogOpt,
-        accuracy: sel.opt.accuracy,
-        report: fog_cost(&opt_stats, &eb, &ab),
-    });
-    rows
+    let n_groves = sel.fog.n_groves();
+    let rf_model = RfModel::new(suite.rf.clone(), VoteMode::Majority);
+    let fog_max = FogModel::fog_max(sel.fog.clone(), seed);
+    let fog_opt = FogModel::new(
+        sel.fog,
+        FogParams { threshold: sel.opt.threshold, max_hops: n_groves, seed },
+        ClassifierKind::FogOpt,
+    );
+
+    let mut models: Vec<&dyn Classifier> = suite.baselines.iter().map(|b| b.as_ref()).collect();
+    models.push(&rf_model);
+    models.push(&fog_max);
+    models.push(&fog_opt);
+
+    models
+        .into_iter()
+        .map(|m| Row {
+            kind: m.kind(),
+            accuracy: m.accuracy(test),
+            report: m.cost_report(Some(test), &eb, &ab),
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -260,8 +220,9 @@ mod tests {
         let s = demo_suite();
         let test = &s.data.test;
         assert!(s.rf.accuracy(test, VoteMode::Majority) > 0.6);
-        assert!(s.svm_rbf.accuracy(test) > 0.5);
-        assert!(s.mlp.accuracy(test) > 0.5);
+        assert!(s.baseline(ClassifierKind::SvmRbf).unwrap().accuracy(test) > 0.5);
+        assert!(s.baseline(ClassifierKind::Mlp).unwrap().accuracy(test) > 0.5);
+        assert_eq!(s.baselines.len(), 4);
     }
 
     #[test]
@@ -294,5 +255,26 @@ mod tests {
         assert!(fog_opt.accuracy > rf.accuracy - 0.08);
         // Linear SVM cheapest.
         assert!(lr.report.energy_nj < rf.report.energy_nj);
+    }
+
+    #[test]
+    fn rows_come_from_trait_objects_uniformly() {
+        // Regression guard for the api refactor: the Table-1 column order
+        // must be reproducible straight from the trait objects.
+        let s = demo_suite();
+        let rows = evaluate_suite(&s, 3);
+        let kinds: Vec<ClassifierKind> = rows.iter().map(|r| r.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                ClassifierKind::SvmLinear,
+                ClassifierKind::SvmRbf,
+                ClassifierKind::Mlp,
+                ClassifierKind::Cnn,
+                ClassifierKind::RandomForest,
+                ClassifierKind::FogMax,
+                ClassifierKind::FogOpt,
+            ]
+        );
     }
 }

@@ -9,8 +9,43 @@
 //! class probabilities) is below a threshold, the partial result **hops** to
 //! the next grove. Easy inputs consume one grove's energy; hard inputs more.
 //!
-//! This crate provides, from scratch:
+//! ## The unified model API
 //!
+//! Every model family the paper compares — FoG, conventional RF, linear
+//! and RBF SVMs, MLP, CNN — sits behind one batch-first interface in
+//! [`api`]: [`api::Classifier`] (probability/label batches, accuracy, and
+//! a [`energy::model::CostReport`] hook feeding the energy models) and
+//! [`api::Estimator`] (config → trained model). Models are constructed by
+//! registry name through [`api::ModelSpec`]:
+//!
+//! ```
+//! use fog::api::{Classifier, Estimator, ModelSpec};
+//! use fog::data::synthetic::{generate, DatasetProfile};
+//! use fog::energy::blocks::{AreaBlocks, EnergyBlocks};
+//!
+//! let ds = generate(&DatasetProfile::demo(), 42);
+//! let spec = ModelSpec::for_shape("rf", ds.n_features(), ds.n_classes())
+//!     .expect("registry name")
+//!     .fast(); // small budgets for this doc example
+//! let model = spec.fit(&ds.train, 42); // Box<dyn Classifier>
+//!
+//! // Batch-first prediction + accuracy through the trait.
+//! let labels = model.predict_batch(&ds.test.x, ds.test.len());
+//! assert_eq!(labels.len(), ds.test.len());
+//! assert!(model.accuracy(&ds.test) > 0.5);
+//!
+//! // The same hook the Table-1 energy models consume.
+//! let report = model.cost_report(Some(&ds.test), &EnergyBlocks::default(), &AreaBlocks::default());
+//! assert!(report.energy_nj > 0.0);
+//! ```
+//!
+//! Registry names: `"fog_opt"`, `"fog_max"`, `"rf"`, `"rf_prob"`,
+//! `"svm_lr"`, `"svm_rbf"`, `"mlp"`, `"cnn"` (see [`api::REGISTRY`]).
+//!
+//! ## Layers
+//!
+//! * [`api`] — the unified batch-first `Classifier`/`Estimator` interface,
+//!   `ModelSpec` builder and name registry described above.
 //! * [`dt`] — CART decision-tree training and a flattened complete-tree
 //!   representation shared with the JAX/Pallas compile path.
 //! * [`forest`] — bagged random forests (incl. feature-budgeted training).
@@ -24,14 +59,19 @@
 //!   from scratch.
 //! * [`data`] — synthetic UCI-profile dataset generators and a CSV loader.
 //! * [`runtime`] — a PJRT client that loads the AOT-compiled (JAX/Pallas)
-//!   grove kernel from `artifacts/*.hlo.txt` and executes it.
-//! * [`coordinator`] — a threaded serving front-end: request router, grove
-//!   ring, batching, metrics.
+//!   grove kernel from `artifacts/*.hlo.txt` and executes it (behind the
+//!   `pjrt` cargo feature; a clean-failing stub otherwise).
+//! * [`coordinator`] — a threaded serving front-end: the FoG grove ring
+//!   plus a generic [`coordinator::ModelServer`] that serves *any*
+//!   [`api::Classifier`] trait object with dynamic batching and metrics.
 //! * [`experiments`] — harnesses regenerating every table/figure of the
-//!   paper's evaluation (Table 1, Figure 4, Figure 5).
+//!   paper's evaluation (Table 1, Figure 4, Figure 5), dispatching every
+//!   model through [`api`].
 //! * [`util`] — self-contained substrates (PRNG, JSON, thread pool, CLI
-//!   parsing, bench harness) so the crate has no heavyweight dependencies.
+//!   parsing, bench harness, error type) so the crate has no external
+//!   dependencies.
 
+pub mod api;
 pub mod baselines;
 pub mod coordinator;
 pub mod data;
@@ -44,5 +84,6 @@ pub mod runtime;
 pub mod uarch;
 pub mod util;
 
+pub use crate::api::{Classifier, Estimator, ModelSpec};
 pub use crate::fog::{FieldOfGroves, FogParams};
 pub use crate::forest::{ForestParams, RandomForest};

@@ -1,6 +1,8 @@
 //! `fog` — command-line launcher for the Field-of-Groves reproduction.
 //!
-//! Subcommands map one-to-one onto the paper's evaluation artifacts:
+//! Subcommands map one-to-one onto the paper's evaluation artifacts,
+//! plus registry-driven model evaluation and serving over the unified
+//! `fog::api` layer:
 //!
 //! ```text
 //! fog table1   [--datasets a,b,c] [--seed N]      Table 1 + headline
@@ -8,12 +10,16 @@
 //! fog fig5     [--topology 8x2] [--datasets ...]  Figure 5 threshold sweep
 //! fog headline [--seed N]                          just the §1 ratios
 //! fog ablate   [--dataset penbase]                 design-choice ablations
+//! fog eval     [--models all|rf,mlp] [--dataset d] any registry model: accuracy + PPA
 //! fog sim      [--dataset penbase] [--threshold T] cycle-level μarch sim
-//! fog serve    [--dataset demo] [--backend native|pjrt] serving demo
+//! fog serve    [--dataset demo] [--backend native|pjrt]
+//!              [--model <registry name>]           serving demo (FoG ring, or any
+//!                                                  registry model via ModelServer)
 //! fog dse      [--workload trees|gemm]             Aladdin-style DSE sweep
 //! ```
 
-use fog::coordinator::{Backend, FogServer, ServerConfig};
+use fog::api::{Classifier, Estimator, ModelSpec, REGISTRY};
+use fog::coordinator::{Backend, FogServer, ModelServer, ModelServerConfig, ServerConfig};
 use fog::data::synthetic::DatasetProfile;
 use fog::energy::aladdin;
 use fog::energy::blocks::{AreaBlocks, EnergyBlocks};
@@ -21,17 +27,28 @@ use fog::experiments::{fig4, fig5, suite, table1};
 use fog::fog::FieldOfGroves;
 use fog::uarch::{RingConfig, RingSim};
 use fog::util::cli::Args;
+use std::sync::Arc;
+
+/// Valid `--dataset` names, for error messages.
+fn dataset_names() -> String {
+    let mut names: Vec<&str> = DatasetProfile::paper_suite().iter().map(|p| p.name).collect();
+    names.push("demo");
+    names.join(", ")
+}
+
+/// Resolve one dataset name or exit with a friendly error listing the
+/// valid `DatasetProfile` names.
+fn profile_or_exit(name: &str) -> DatasetProfile {
+    DatasetProfile::by_name(name).unwrap_or_else(|| {
+        eprintln!("error: unknown dataset '{name}'; valid names: {}", dataset_names());
+        std::process::exit(2);
+    })
+}
 
 fn profiles_from(args: &Args) -> Vec<DatasetProfile> {
     match args.get("datasets") {
         None => DatasetProfile::paper_suite(),
-        Some(spec) => spec
-            .split(',')
-            .map(|name| {
-                DatasetProfile::by_name(name.trim())
-                    .unwrap_or_else(|| panic!("unknown dataset '{name}'"))
-            })
-            .collect(),
+        Some(spec) => spec.split(',').map(|name| profile_or_exit(name.trim())).collect(),
     }
 }
 
@@ -58,18 +75,18 @@ fn main() {
             fig5::print_series(topo, &all);
         }
         Some("ablate") => {
-            let name = args.get_or("dataset", "penbase");
-            let profile = DatasetProfile::by_name(name).expect("unknown dataset");
+            let profile = profile_or_exit(args.get_or("dataset", "penbase"));
             eprintln!("[ablate] training {} ...", profile.name);
             let s = suite::train_suite(&profile, seed);
             fog::experiments::ablations::print_all(&s, seed);
         }
+        Some("eval") => cmd_eval(&args, seed),
         Some("sim") => cmd_sim(&args, seed),
         Some("serve") => cmd_serve(&args, seed),
         Some("dse") => cmd_dse(&args),
         _ => {
             eprintln!(
-                "usage: fog <table1|fig4|fig5|headline|sim|serve|dse> [--flags]\n\
+                "usage: fog <table1|fig4|fig5|headline|ablate|eval|sim|serve|dse> [--flags]\n\
                  see `rust/src/main.rs` docs for the flag list"
             );
             std::process::exit(2);
@@ -77,10 +94,60 @@ fn main() {
     }
 }
 
+/// Train registry models by name and report accuracy + PPA through the
+/// unified `Classifier` interface — one uniform loop, no per-model-type
+/// dispatch.
+fn cmd_eval(args: &Args, seed: u64) {
+    let profile = profile_or_exit(args.get_or("dataset", "demo"));
+    let spec_names: Vec<String> = match args.get_or("models", "all") {
+        "all" => REGISTRY.iter().map(|s| s.to_string()).collect(),
+        list => list.split(',').map(|s| s.trim().to_string()).collect(),
+    };
+    let specs: Vec<ModelSpec> = spec_names
+        .iter()
+        .map(|name| {
+            ModelSpec::for_shape(name, profile.n_features, profile.n_classes).unwrap_or_else(
+                || {
+                    eprintln!(
+                        "error: unknown model '{name}'; valid names: {}",
+                        REGISTRY.join(", ")
+                    );
+                    std::process::exit(2);
+                },
+            )
+        })
+        .collect();
+
+    eprintln!("[eval] generating {} ...", profile.name);
+    let data = suite::prepare_data(&profile, seed);
+    let eb = EnergyBlocks::default();
+    let ab = AreaBlocks::default();
+    println!("== registry eval on '{}' (seed {seed}) ==", profile.name);
+    println!(
+        "{:<10}{:>11}{:>15}{:>13}{:>11}{:>12}",
+        "model", "accuracy%", "energy nJ", "latency ns", "area mm2", "train s"
+    );
+    for spec in &specs {
+        let t0 = std::time::Instant::now();
+        let model = spec.fit(&data.train, seed);
+        let train_s = t0.elapsed().as_secs_f64();
+        let report = model.cost_report(Some(&data.test), &eb, &ab);
+        println!(
+            "{:<10}{:>11.1}{:>15.2}{:>13.1}{:>11.2}{:>12.2}",
+            spec.name,
+            model.accuracy(&data.test) * 100.0,
+            report.energy_nj,
+            report.latency_ns,
+            report.area_mm2,
+            train_s
+        );
+    }
+}
+
 /// Cycle-level μarch simulation of the grove ring on one dataset.
 fn cmd_sim(args: &Args, seed: u64) {
-    let name = args.get_or("dataset", "penbase");
-    let profile = DatasetProfile::by_name(name).expect("unknown dataset");
+    let profile = profile_or_exit(args.get_or("dataset", "penbase"));
+    let name = profile.name;
     let threshold = args.get_f64("threshold", 0.3) as f32;
     let (groves, per_grove) = args.get_topology("topology", (8, 2));
     eprintln!("[sim] training {} ...", profile.name);
@@ -112,10 +179,15 @@ fn cmd_sim(args: &Args, seed: u64) {
     println!("dynamic energy/input : {:.3} nJ", sim.stats.dynamic_energy_per_input_nj(&eb));
 }
 
-/// Serving demo over the coordinator (native or PJRT backend).
+/// Serving demo. Default: the FoG grove ring (native or PJRT backend).
+/// With `--model <registry name>`: any unified-API model behind the
+/// generic `ModelServer`.
 fn cmd_serve(args: &Args, seed: u64) {
-    let name = args.get_or("dataset", "demo");
-    let profile = DatasetProfile::by_name(name).expect("unknown dataset");
+    if let Some(model_name) = args.get("model") {
+        return cmd_serve_model(args, model_name, seed);
+    }
+    let profile = profile_or_exit(args.get_or("dataset", "demo"));
+    let name = profile.name;
     eprintln!("[serve] training {} ...", profile.name);
     let s = suite::train_suite(&profile, seed);
     let per_grove = args.get_topology("topology", (4, 4)).1;
@@ -152,6 +224,42 @@ fn cmd_serve(args: &Args, seed: u64) {
     println!("requests   : {}", snap.requests);
     println!("accuracy   : {:.1}%", acc * 100.0);
     println!("avg hops   : {:.2}", snap.avg_hops());
+    println!("batch size : {:.1} avg", snap.avg_batch_size());
+    println!("throughput : {:.0} req/s", responses.len() as f64 / wall.as_secs_f64());
+    println!("latency    : p50 {:.0}µs  p95 {:.0}µs  p99 {:.0}µs", lat.p50_us, lat.p95_us, lat.p99_us);
+    server.shutdown();
+}
+
+/// Serve any registry model through the generic `ModelServer`.
+fn cmd_serve_model(args: &Args, model_name: &str, seed: u64) {
+    let profile = profile_or_exit(args.get_or("dataset", "demo"));
+    let spec = ModelSpec::for_shape(model_name, profile.n_features, profile.n_classes)
+        .unwrap_or_else(|| {
+            eprintln!(
+                "error: unknown model '{model_name}'; valid names: {}",
+                REGISTRY.join(", ")
+            );
+            std::process::exit(2);
+        });
+    eprintln!("[serve] training {model_name} on {} ...", profile.name);
+    let data = suite::prepare_data(&profile, seed);
+    let model: Arc<dyn Classifier> = Arc::from(spec.fit(&data.train, seed));
+    let cfg = ModelServerConfig {
+        batch_size: args.get_usize("batch", 32),
+        n_workers: args.get_usize("workers", 2),
+        ..Default::default()
+    };
+    let mut server = ModelServer::start(Arc::clone(&model), &cfg);
+    let t0 = std::time::Instant::now();
+    let responses = server.classify(&data.test.x);
+    let wall = t0.elapsed();
+    let preds: Vec<usize> = responses.iter().map(|r| r.label).collect();
+    let acc = fog::util::stats::accuracy(&preds, &data.test.y);
+    let snap = server.metrics().snapshot();
+    let lat = FogServer::latency_summary(&responses);
+    println!("== serving: {model_name} on {} via ModelServer ==", profile.name);
+    println!("requests   : {}", snap.requests);
+    println!("accuracy   : {:.1}%", acc * 100.0);
     println!("batch size : {:.1} avg", snap.avg_batch_size());
     println!("throughput : {:.0} req/s", responses.len() as f64 / wall.as_secs_f64());
     println!("latency    : p50 {:.0}µs  p95 {:.0}µs  p99 {:.0}µs", lat.p50_us, lat.p95_us, lat.p99_us);

@@ -3,6 +3,7 @@
 //! validates its inputs against these shapes before touching PJRT, so a
 //! stale artifact directory fails loudly instead of mis-executing.
 
+use crate::util::error::Result;
 use crate::util::json::parse;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -40,16 +41,16 @@ pub struct Manifest {
 
 impl Manifest {
     /// Load `<dir>/manifest.json`.
-    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+    pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
-            .map_err(|e| anyhow::anyhow!("read {}: {e} (run `make artifacts`)", path.display()))?;
+            .map_err(|e| crate::err!("read {}: {e} (run `make artifacts`)", path.display()))?;
         Self::from_json_str(&text, dir)
     }
 
-    pub fn from_json_str(text: &str, dir: &Path) -> anyhow::Result<Manifest> {
+    pub fn from_json_str(text: &str, dir: &Path) -> Result<Manifest> {
         let v = parse(text)?;
-        let obj = v.as_obj().ok_or_else(|| anyhow::anyhow!("manifest not an object"))?;
+        let obj = v.as_obj().ok_or_else(|| crate::err!("manifest not an object"))?;
         let mut entries = BTreeMap::new();
         for (name, meta) in obj {
             let strings = |key: &str| -> Vec<String> {
@@ -65,7 +66,7 @@ impl Manifest {
                     file: meta
                         .get("file")
                         .as_str()
-                        .ok_or_else(|| anyhow::anyhow!("{name}: missing file"))?
+                        .ok_or_else(|| crate::err!("{name}: missing file"))?
                         .to_string(),
                     kind: meta.get("kind").as_str().unwrap_or("unknown").to_string(),
                     t: meta.get("t").as_usize().unwrap_or(0),
@@ -81,10 +82,10 @@ impl Manifest {
         Ok(Manifest { dir: dir.to_path_buf(), entries })
     }
 
-    pub fn get(&self, name: &str) -> anyhow::Result<&ArtifactMeta> {
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
         self.entries
             .get(name)
-            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))
+            .ok_or_else(|| crate::err!("artifact '{name}' not in manifest"))
     }
 
     /// Find the grove_step artifact matching a shape, if any.

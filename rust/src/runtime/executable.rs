@@ -6,39 +6,16 @@
 //! whole batch: probabilities, normalized distribution, confidence).
 //! Inputs are validated against the manifest shapes; batches smaller than
 //! the compiled batch size are zero-padded (the compiled shape is static).
+//!
+//! The implementation needs the vendored `xla` crate and is gated behind
+//! the `pjrt` cargo feature. Without the feature (the default — this
+//! build environment ships no `xla` closure) the same API is exported as
+//! a stub whose constructors return errors, so the serving coordinator
+//! degrades to the native backend instead of failing to compile.
 
 use super::artifacts::{ArtifactMeta, Manifest};
 use crate::dt::export::FlatBundle;
-
-/// Owns the PJRT client. NOTE: PJRT handles are thread-affine in the
-/// `xla` crate (raw pointers, no `Send`), so a `Runtime` and everything
-/// loaded from it must stay on the thread that created it — the serving
-/// coordinator therefore runs one dedicated accelerator thread
-/// (`coordinator::accel`).
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    /// PJRT CPU client (the only backend in this environment).
-    pub fn cpu() -> anyhow::Result<Runtime> {
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime { client })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an HLO-text artifact.
-    pub fn compile(&self, path: &std::path::Path) -> anyhow::Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        Ok(self.client.compile(&comp)?)
-    }
-}
+use crate::util::error::Result;
 
 /// Output of one grove step over a batch.
 #[derive(Clone, Debug)]
@@ -51,118 +28,201 @@ pub struct StepOutput {
     pub conf: Vec<f32>,
 }
 
-/// Typed executor for a `grove_step` artifact bound to one grove's trees.
-pub struct GroveStepExec {
-    exe: xla::PjRtLoadedExecutable,
-    pub meta: ArtifactMeta,
-    /// Pre-built tree-table literals for this grove (constant per grove).
-    feat: xla::Literal,
-    thr: xla::Literal,
-    leaf: xla::Literal,
-}
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use super::*;
 
-impl GroveStepExec {
-    /// Compile the artifact and bind `bundle` (one grove's flat trees,
-    /// padded to the artifact's (t, depth) if smaller).
-    pub fn new(
-        rt: &Runtime,
-        manifest: &Manifest,
-        meta: &ArtifactMeta,
-        bundle: &FlatBundle,
-    ) -> anyhow::Result<GroveStepExec> {
-        anyhow::ensure!(meta.kind == "grove_step", "artifact kind {}", meta.kind);
-        anyhow::ensure!(
-            bundle.depth == meta.depth,
-            "bundle depth {} != artifact depth {}",
-            bundle.depth,
-            meta.depth
-        );
-        anyhow::ensure!(
-            bundle.n_features == meta.n_features && bundle.n_classes == meta.n_classes,
-            "bundle shape mismatch"
-        );
-        anyhow::ensure!(
-            bundle.trees.len() <= meta.t,
-            "bundle has {} trees, artifact takes {}",
-            bundle.trees.len(),
-            meta.t
-        );
-        // Pad with pass-through trees that predict uniform distributions?
-        // No — padding with *copies* of existing trees would bias the
-        // average; instead require exact t (aot emits the exact topology).
-        anyhow::ensure!(
-            bundle.trees.len() == meta.t,
-            "bundle trees {} != artifact t {} (regenerate artifacts)",
-            bundle.trees.len(),
-            meta.t
-        );
+    const UNAVAILABLE: &str =
+        "PJRT runtime unavailable: built without the `pjrt` feature (needs the vendored `xla` crate); use the native backend";
 
-        let (feat_v, thr_v, leaf_v) = bundle.stacked();
-        let n_int = meta.n_internal() as i64;
-        let t = meta.t as i64;
-        let feat = xla::Literal::vec1(&feat_v).reshape(&[t, n_int])?;
-        let thr = xla::Literal::vec1(&thr_v).reshape(&[t, n_int])?;
-        let leaf = xla::Literal::vec1(&leaf_v).reshape(&[
-            t,
-            meta.n_leaves() as i64,
-            meta.n_classes as i64,
-        ])?;
-        let exe = rt.compile(&manifest.path_of(meta))?;
-        Ok(GroveStepExec { exe, meta: meta.clone(), feat, thr, leaf })
+    /// Stub PJRT client handle (the `pjrt` feature is off).
+    pub struct Runtime {
+        _private: (),
     }
 
-    /// One hop for a batch. `x: [n, f]`, `prob_sum: [n, c]`, `hops[i]` =
-    /// groves contributed including this one. `n` may be ≤ the compiled
-    /// batch; rows beyond `n` are zero-padded and dropped from the output.
-    pub fn step(
-        &self,
-        x: &[f32],
-        prob_sum: &[f32],
-        hops: &[f32],
-    ) -> anyhow::Result<StepOutput> {
-        let f = self.meta.n_features;
-        let c = self.meta.n_classes;
-        let b = self.meta.batch;
-        let n = hops.len();
-        anyhow::ensure!(n > 0 && n <= b, "batch {n} out of range 1..={b}");
-        anyhow::ensure!(x.len() == n * f, "x len {} != {}", x.len(), n * f);
-        anyhow::ensure!(prob_sum.len() == n * c, "prob_sum len");
+    impl Runtime {
+        /// Always fails: the PJRT path is compiled out.
+        pub fn cpu() -> Result<Runtime> {
+            crate::bail!("{UNAVAILABLE}")
+        }
 
-        // Zero-pad to the compiled batch.
-        let mut xp = vec![0.0f32; b * f];
-        xp[..n * f].copy_from_slice(x);
-        let mut pp = vec![0.0f32; b * c];
-        pp[..n * c].copy_from_slice(prob_sum);
-        let mut hp = vec![1.0f32; b]; // avoid div-by-zero in padding rows
-        hp[..n].copy_from_slice(hops);
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+    }
 
-        let xl = xla::Literal::vec1(&xp).reshape(&[b as i64, f as i64])?;
-        let pl = xla::Literal::vec1(&pp).reshape(&[b as i64, c as i64])?;
-        let hl = xla::Literal::vec1(&hp).reshape(&[b as i64])?;
+    /// Stub typed executor (the `pjrt` feature is off).
+    pub struct GroveStepExec {
+        pub meta: ArtifactMeta,
+    }
 
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&[
-                self.feat.clone(),
-                self.thr.clone(),
-                self.leaf.clone(),
-                xl,
-                pl,
-                hl,
-            ])?[0][0]
-            .to_literal_sync()?;
-        let (s, m, cf) = result.to_tuple3()?;
-        let mut new_sum = s.to_vec::<f32>()?;
-        let mut norm = m.to_vec::<f32>()?;
-        let mut conf = cf.to_vec::<f32>()?;
-        new_sum.truncate(n * c);
-        norm.truncate(n * c);
-        conf.truncate(n);
-        Ok(StepOutput { new_sum, norm, conf })
+    impl GroveStepExec {
+        pub fn new(
+            _rt: &Runtime,
+            _manifest: &Manifest,
+            _meta: &ArtifactMeta,
+            _bundle: &FlatBundle,
+        ) -> Result<GroveStepExec> {
+            crate::bail!("{UNAVAILABLE}")
+        }
+
+        pub fn step(&self, _x: &[f32], _prob_sum: &[f32], _hops: &[f32]) -> Result<StepOutput> {
+            crate::bail!("{UNAVAILABLE}")
+        }
     }
 }
 
-#[cfg(test)]
+#[cfg(feature = "pjrt")]
+mod imp {
+    use super::*;
+
+    /// Owns the PJRT client. NOTE: PJRT handles are thread-affine in the
+    /// `xla` crate (raw pointers, no `Send`), so a `Runtime` and everything
+    /// loaded from it must stay on the thread that created it — the serving
+    /// coordinator therefore runs one dedicated accelerator thread
+    /// (`coordinator::accel`).
+    pub struct Runtime {
+        client: xla::PjRtClient,
+    }
+
+    impl Runtime {
+        /// PJRT CPU client (the only backend in this environment).
+        pub fn cpu() -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu().map_err(|e| crate::err!("pjrt cpu: {e:?}"))?;
+            Ok(Runtime { client })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO-text artifact.
+        pub fn compile(&self, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| crate::err!("non-utf8 path"))?,
+            )
+            .map_err(|e| crate::err!("hlo parse: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            self.client.compile(&comp).map_err(|e| crate::err!("compile: {e:?}"))
+        }
+    }
+
+    /// Typed executor for a `grove_step` artifact bound to one grove's trees.
+    pub struct GroveStepExec {
+        exe: xla::PjRtLoadedExecutable,
+        pub meta: ArtifactMeta,
+        /// Pre-built tree-table literals for this grove (constant per grove).
+        feat: xla::Literal,
+        thr: xla::Literal,
+        leaf: xla::Literal,
+    }
+
+    impl GroveStepExec {
+        /// Compile the artifact and bind `bundle` (one grove's flat trees).
+        pub fn new(
+            rt: &Runtime,
+            manifest: &Manifest,
+            meta: &ArtifactMeta,
+            bundle: &FlatBundle,
+        ) -> Result<GroveStepExec> {
+            crate::ensure!(meta.kind == "grove_step", "artifact kind {}", meta.kind);
+            crate::ensure!(
+                bundle.depth == meta.depth,
+                "bundle depth {} != artifact depth {}",
+                bundle.depth,
+                meta.depth
+            );
+            crate::ensure!(
+                bundle.n_features == meta.n_features && bundle.n_classes == meta.n_classes,
+                "bundle shape mismatch"
+            );
+            // Padding with *copies* of existing trees would bias the
+            // average; require exact t (aot emits the exact topology).
+            crate::ensure!(
+                bundle.trees.len() == meta.t,
+                "bundle trees {} != artifact t {} (regenerate artifacts)",
+                bundle.trees.len(),
+                meta.t
+            );
+
+            let (feat_v, thr_v, leaf_v) = bundle.stacked();
+            let n_int = meta.n_internal() as i64;
+            let t = meta.t as i64;
+            let lit = |e: xla::Error| crate::err!("literal: {e:?}");
+            let feat = xla::Literal::vec1(&feat_v).reshape(&[t, n_int]).map_err(lit)?;
+            let thr = xla::Literal::vec1(&thr_v).reshape(&[t, n_int]).map_err(lit)?;
+            let leaf = xla::Literal::vec1(&leaf_v)
+                .reshape(&[t, meta.n_leaves() as i64, meta.n_classes as i64])
+                .map_err(lit)?;
+            let exe = rt.compile(&manifest.path_of(meta))?;
+            Ok(GroveStepExec { exe, meta: meta.clone(), feat, thr, leaf })
+        }
+
+        /// One hop for a batch. `x: [n, f]`, `prob_sum: [n, c]`, `hops[i]` =
+        /// groves contributed including this one. `n` may be ≤ the compiled
+        /// batch; rows beyond `n` are zero-padded and dropped from the output.
+        pub fn step(&self, x: &[f32], prob_sum: &[f32], hops: &[f32]) -> Result<StepOutput> {
+            let f = self.meta.n_features;
+            let c = self.meta.n_classes;
+            let b = self.meta.batch;
+            let n = hops.len();
+            crate::ensure!(n > 0 && n <= b, "batch {n} out of range 1..={b}");
+            crate::ensure!(x.len() == n * f, "x len {} != {}", x.len(), n * f);
+            crate::ensure!(prob_sum.len() == n * c, "prob_sum len");
+
+            // Zero-pad to the compiled batch.
+            let mut xp = vec![0.0f32; b * f];
+            xp[..n * f].copy_from_slice(x);
+            let mut pp = vec![0.0f32; b * c];
+            pp[..n * c].copy_from_slice(prob_sum);
+            let mut hp = vec![1.0f32; b]; // avoid div-by-zero in padding rows
+            hp[..n].copy_from_slice(hops);
+
+            let lit = |e: xla::Error| crate::err!("literal: {e:?}");
+            let xl = xla::Literal::vec1(&xp).reshape(&[b as i64, f as i64]).map_err(lit)?;
+            let pl = xla::Literal::vec1(&pp).reshape(&[b as i64, c as i64]).map_err(lit)?;
+            let hl = xla::Literal::vec1(&hp).reshape(&[b as i64]).map_err(lit)?;
+
+            let run = |e: xla::Error| crate::err!("execute: {e:?}");
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&[
+                    self.feat.clone(),
+                    self.thr.clone(),
+                    self.leaf.clone(),
+                    xl,
+                    pl,
+                    hl,
+                ])
+                .map_err(run)?[0][0]
+                .to_literal_sync()
+                .map_err(run)?;
+            let (s, m, cf) = result.to_tuple3().map_err(run)?;
+            let mut new_sum = s.to_vec::<f32>().map_err(run)?;
+            let mut norm = m.to_vec::<f32>().map_err(run)?;
+            let mut conf = cf.to_vec::<f32>().map_err(run)?;
+            new_sum.truncate(n * c);
+            norm.truncate(n * c);
+            conf.truncate(n);
+            Ok(StepOutput { new_sum, norm, conf })
+        }
+    }
+}
+
+pub use imp::{GroveStepExec, Runtime};
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn stub_runtime_errors_cleanly() {
+        let e = Runtime::cpu().unwrap_err();
+        assert!(e.to_string().contains("pjrt"), "{e}");
+    }
+}
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
     use crate::data::synthetic::{generate, DatasetProfile};
@@ -212,11 +272,8 @@ mod tests {
         let rt = Runtime::cpu().unwrap();
         // Re-pad grove trees to the artifact depth.
         let grove = &fog.groves[0];
-        let repadded: Vec<crate::dt::FlatTree> = grove
-            .trees
-            .iter()
-            .map(|t| t.repad(meta.depth))
-            .collect();
+        let repadded: Vec<crate::dt::FlatTree> =
+            grove.trees.iter().map(|t| t.repad(meta.depth)).collect();
         let mut bundle = FlatBundle::new(repadded);
         sanitize_inf(&mut bundle);
         let exec = GroveStepExec::new(&rt, &manifest, &meta, &bundle).unwrap();
@@ -255,12 +312,9 @@ mod tests {
         let out = exec.step(x, &vec![0.0; 9], &[1.0, 1.0, 1.0]).unwrap();
         assert_eq!(out.norm.len(), 9);
         assert_eq!(out.conf.len(), 3);
-        let full = exec
-            .step(&ds.test.x[..16 * 8], &vec![0.0; 48], &vec![1.0; 16])
-            .unwrap();
+        let full = exec.step(&ds.test.x[..16 * 8], &vec![0.0; 48], &vec![1.0; 16]).unwrap();
         for j in 0..9 {
             assert!((out.norm[j] - full.norm[j]).abs() < 1e-5);
         }
     }
-
 }

@@ -1,0 +1,95 @@
+//! Crate-local error type: a string-message error plus `err!` / `bail!` /
+//! `ensure!` macros, replacing the `anyhow` dependency (the build
+//! environment vendors no external crates).
+//!
+//! Fallible crate APIs return [`Result`]; conversions exist for the error
+//! types that cross module boundaries (`std::io::Error`, the JSON
+//! [`ParseError`](crate::util::json::ParseError)) so `?` works unchanged.
+
+use std::fmt;
+
+/// A message-carrying error.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::new(e.to_string())
+    }
+}
+
+impl From<crate::util::json::ParseError> for Error {
+    fn from(e: crate::util::json::ParseError) -> Error {
+        Error::new(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::new(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        assert_eq!(fails(true).unwrap(), 7);
+        let e = fails(false).unwrap_err();
+        assert_eq!(e.to_string(), "flag was false");
+    }
+
+    #[test]
+    fn io_conversion() {
+        fn read() -> Result<String> {
+            Ok(std::fs::read_to_string("/nonexistent/fog")?)
+        }
+        assert!(read().is_err());
+    }
+}

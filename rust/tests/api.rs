@@ -1,0 +1,125 @@
+//! Conformance tests for the unified `fog::api` layer: every registry
+//! entry must train on a small synthetic dataset, agree between batch and
+//! per-sample prediction, and be deterministic under a fixed seed.
+
+use fog::api::{Classifier, Estimator, ModelSpec, REGISTRY};
+use fog::data::synthetic::{generate, DatasetProfile};
+use fog::data::Dataset;
+use fog::energy::blocks::{AreaBlocks, EnergyBlocks};
+
+fn small_data() -> Dataset {
+    generate(&DatasetProfile::demo(), 401)
+}
+
+fn fit_fast(name: &str, ds: &Dataset, seed: u64) -> Box<dyn Classifier> {
+    ModelSpec::for_shape(name, ds.n_features(), ds.n_classes())
+        .unwrap_or_else(|| panic!("registry name '{name}' missing"))
+        .fast()
+        .fit(&ds.train, seed)
+}
+
+#[test]
+fn every_registry_entry_trains_and_reports_shape() {
+    let ds = small_data();
+    for name in REGISTRY {
+        let model = fit_fast(name, &ds, 11);
+        assert_eq!(model.n_features(), ds.n_features(), "{name}");
+        assert_eq!(model.n_classes(), ds.n_classes(), "{name}");
+        assert!(!model.name().is_empty(), "{name}");
+        // Clearly not broken on the easy demo profile (the `fast()`
+        // budgets undertrain, so the bar is "better than ~chance", not
+        // "paper accuracy").
+        let acc = model.accuracy(&ds.test);
+        assert!(acc > 1.0 / ds.n_classes() as f64 - 0.05, "{name}: accuracy {acc}");
+    }
+}
+
+#[test]
+fn batch_and_per_sample_predictions_agree() {
+    let ds = small_data();
+    for name in REGISTRY {
+        let model = fit_fast(name, &ds, 12);
+        let n = ds.test.len();
+        let batch_labels = model.predict_batch(&ds.test.x, n);
+        let batch_probs = model.predict_proba_batch(&ds.test.x, n);
+        assert_eq!(batch_probs.n_rows(), n, "{name}");
+        for i in (0..n).step_by(5) {
+            let row = ds.test.row(i);
+            assert_eq!(batch_labels[i], model.predict(row), "{name} row {i}: label");
+            let single = model.predict_proba(row);
+            for (a, b) in batch_probs.row(i).iter().zip(&single) {
+                assert!((a - b).abs() < 1e-6, "{name} row {i}: {a} vs {b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn probability_rows_are_distributions() {
+    let ds = small_data();
+    for name in REGISTRY {
+        let model = fit_fast(name, &ds, 13);
+        let probs = model.predict_proba_batch(&ds.test.x, ds.test.len());
+        for i in (0..probs.n_rows()).step_by(11) {
+            let row = probs.row(i);
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-3, "{name} row {i} sums to {sum}");
+            assert!(row.iter().all(|&p| (-1e-6..=1.0 + 1e-6).contains(&p)), "{name} row {i}");
+        }
+    }
+}
+
+#[test]
+fn deterministic_under_fixed_seed() {
+    let ds = small_data();
+    for name in REGISTRY {
+        let a = fit_fast(name, &ds, 14);
+        let b = fit_fast(name, &ds, 14);
+        assert_eq!(
+            a.predict_batch(&ds.test.x, ds.test.len()),
+            b.predict_batch(&ds.test.x, ds.test.len()),
+            "{name}: refit with the same seed changed predictions"
+        );
+    }
+}
+
+#[test]
+fn cost_reports_are_positive_and_probe_sensitive() {
+    let ds = small_data();
+    let eb = EnergyBlocks::default();
+    let ab = AreaBlocks::default();
+    for name in REGISTRY {
+        let model = fit_fast(name, &ds, 15);
+        let measured = model.cost_report(Some(&ds.test), &eb, &ab);
+        let bound = model.cost_report(None, &eb, &ab);
+        for r in [&measured, &bound] {
+            assert!(r.energy_nj > 0.0, "{name}");
+            assert!(r.latency_ns > 0.0, "{name}");
+            assert!(r.area_mm2 > 0.0, "{name}");
+        }
+        // The probe-free bound must never undercharge relative to the
+        // measured point (worst-case depth / full circulation).
+        assert!(
+            bound.energy_nj + 1e-9 >= measured.energy_nj,
+            "{name}: bound {} < measured {}",
+            bound.energy_nj,
+            measured.energy_nj
+        );
+        assert_eq!(measured.kind, model.kind(), "{name}");
+    }
+}
+
+#[test]
+fn fog_opt_costs_less_than_fog_max_on_probe() {
+    let ds = small_data();
+    let eb = EnergyBlocks::default();
+    let ab = AreaBlocks::default();
+    let opt = fit_fast("fog_opt", &ds, 16);
+    let max = fit_fast("fog_max", &ds, 16);
+    let e_opt = opt.cost_report(Some(&ds.test), &eb, &ab).energy_nj;
+    let e_max = max.cost_report(Some(&ds.test), &eb, &ab).energy_nj;
+    assert!(
+        e_opt <= e_max + 1e-9,
+        "confidence gating should not cost more than full circulation: {e_opt} vs {e_max}"
+    );
+}
