@@ -38,12 +38,7 @@ fn main() {
     let want_depth = 6usize;
     let pjrt_ok = artifacts.join("manifest.json").exists() && fog.depth <= want_depth;
     let backend = if pjrt_ok && profile.name == "demo" {
-        for g in &mut fog.groves {
-            for t in &mut g.trees {
-                *t = t.repad(want_depth);
-            }
-        }
-        fog.depth = want_depth;
+        fog = fog.repad(want_depth);
         println!("backend: PJRT (artifacts at {})", artifacts.display());
         Backend::Pjrt { artifacts_dir: artifacts }
     } else {

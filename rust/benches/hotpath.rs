@@ -18,7 +18,7 @@ fn main() {
     let n = ds.test.len();
 
     // Single flat-tree traversal (the PE inner loop).
-    let tree = &fog.groves[0].trees[0];
+    let tree = fog.groves[0].tree(0);
     let x0 = ds.test.row(0);
     b.bench("flat_tree_traversal", 1, || {
         black_box(tree.predict_proba(black_box(x0)));

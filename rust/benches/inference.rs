@@ -1,0 +1,110 @@
+//! Inference throughput: one-call-per-sample vs the batch-tiled arena
+//! kernel, for every tree-based registry model.
+//! (criterion is unavailable offline; `util::bench` is the harness.)
+//!
+//! Run: `cargo bench --bench inference` (FOG_BENCH_FAST=1 for a smoke
+//! run with tiny sample counts — what CI does on every PR).
+//!
+//! Three measurements per forest model, two per FoG model:
+//! * `sparse_per_sample` (rf/rf_prob only) — the pre-arena hot path: a
+//!   per-sample walk of the sparse `DecisionTree`s with per-call
+//!   accumulator allocation, exactly what `RfModel` served before the
+//!   `exec` refactor.
+//! * `api_single_call`  — one `predict_proba` call per sample through the
+//!   unified API (today that is the arena kernel at batch 1).
+//! * `batch_tiled`      — one `predict_proba_batch` call for the whole
+//!   batch. For rf/rf_prob that is the tiled level-synchronous kernel;
+//!   for fog_opt/fog_max it is Algorithm 2's confidence-gated per-sample
+//!   arena walk, threaded across rows (gating is inherently per-sample).
+//!
+//! Besides the human-readable `bench ...` lines, each model emits one
+//! `BENCH_JSON {...}` line; a future `BENCH_*.json` tracker ingests those
+//! to catch throughput regressions.
+
+use fog::api::spec::forest_params_for;
+use fog::api::{Classifier, Estimator, ModelSpec};
+use fog::data::synthetic::{generate, DatasetProfile};
+use fog::forest::RandomForest;
+use fog::util::bench::{black_box, Bencher, Measurement};
+
+/// The tree-based registry entries — the models the arena refactor moves.
+const TREE_MODELS: &[&str] = &["rf", "rf_prob", "fog_opt", "fog_max"];
+
+fn main() {
+    let fast = std::env::var("FOG_BENCH_FAST").is_ok();
+    // Acceptance batch size; the smoke run shrinks it so CI stays quick.
+    let batch = if fast { 32 } else { 256 };
+    let mut b = Bencher::default();
+    let ds = generate(&DatasetProfile::demo(), 42);
+    let f = ds.n_features();
+
+    // The demo test split is smaller than the target batch; tile its rows
+    // round-robin so the batch stays on-profile.
+    let mut x = Vec::with_capacity(batch * f);
+    for i in 0..batch {
+        x.extend_from_slice(ds.test.row(i % ds.test.len()));
+    }
+
+    // Pre-refactor reference path: per-sample sparse-forest walks,
+    // trained identically to the registry's rf/rf_prob at seed 1
+    // (mirroring `ModelSpec::fast`'s forest shrink in smoke mode so the
+    // BENCH_JSON numbers stay comparable).
+    let mut sparse_params = forest_params_for(f, ds.n_classes());
+    if fast {
+        sparse_params.n_trees = sparse_params.n_trees.min(8);
+        sparse_params.tree.max_depth = sparse_params.tree.max_depth.min(6);
+    }
+    let sparse_rf = RandomForest::fit(&ds.train, &sparse_params, 1);
+    b.bench(&format!("rf_prob/sparse_per_sample/n{batch}"), batch, || {
+        for i in 0..batch {
+            black_box(sparse_rf.predict_proba(black_box(&x[i * f..(i + 1) * f])));
+        }
+    });
+    let sparse_ref = b.results.last().unwrap().clone();
+
+    let mut summary: Vec<(&str, Measurement, Measurement)> = Vec::new();
+    for &name in TREE_MODELS {
+        let spec = ModelSpec::for_shape(name, ds.n_features(), ds.n_classes())
+            .expect("registry name");
+        let spec = if fast { spec.fast() } else { spec };
+        let model = spec.fit(&ds.train, 1);
+
+        // One unified-API call per sample (arena kernel at batch 1).
+        b.bench(&format!("{name}/api_single_call/n{batch}"), batch, || {
+            for i in 0..batch {
+                black_box(model.predict_proba(black_box(&x[i * f..(i + 1) * f])));
+            }
+        });
+        let single = b.results.last().unwrap().clone();
+
+        // The arena path: one batch-tiled call for all samples.
+        b.bench(&format!("{name}/batch_tiled/n{batch}"), batch, || {
+            black_box(model.predict_proba_batch(black_box(&x), batch));
+        });
+        let tiled = b.results.last().unwrap().clone();
+        summary.push((name, single, tiled));
+    }
+
+    println!();
+    for (name, single, tiled) in &summary {
+        let speedup = single.median_ns / tiled.median_ns.max(1.0);
+        // The sparse pre-refactor baseline only describes the rf family
+        // (0 = not applicable, so the JSON stays valid).
+        let sparse_ns = if name.starts_with("rf") { sparse_ref.median_ns } else { 0.0 };
+        println!(
+            "speedup {name:<8} batch {batch}: {speedup:.2}x vs single-call \
+             (single {:.0} ns, batch-tiled {:.0} ns, sparse per-sample ref {:.0} ns)",
+            single.median_ns, tiled.median_ns, sparse_ns
+        );
+        println!(
+            "BENCH_JSON {{\"bench\":\"inference\",\"model\":\"{name}\",\"batch\":{batch},\
+             \"api_single_call_ns\":{:.0},\"batch_tiled_ns\":{:.0},\"sparse_per_sample_ns\":{:.0},\
+             \"speedup_vs_single_call\":{:.3},\"batch_tiled_per_s\":{:.1}}}",
+            single.median_ns,
+            tiled.median_ns,
+            sparse_ns,
+            speedup,
+            tiled.throughput_per_s.unwrap_or(0.0)
+        );
+    }
+}

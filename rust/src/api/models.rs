@@ -11,6 +11,7 @@ use crate::data::Split;
 use crate::dt::{DecisionTree, FlatTree};
 use crate::energy::blocks::{AreaBlocks, EnergyBlocks};
 use crate::energy::model::{fog_cost, rf_cost, ClassifierKind, CostReport, FogStats, RfStats};
+use crate::exec::{BatchPlan, ForestArena, Reduce};
 use crate::fog::eval::InputOutcome;
 use crate::fog::{FieldOfGroves, FogParams};
 use crate::forest::{RandomForest, VoteMode};
@@ -127,15 +128,35 @@ impl Classifier for FlatTree {
 /// A trained forest behind the unified interface, with an explicit
 /// aggregation mode — the §3.2.1 contrast is part of the model identity
 /// (`"rf"` = majority vote, `"rf_prob"` = probability averaging).
+///
+/// The forest is packed into a [`ForestArena`] at construction; both vote
+/// modes serve batches through the tiled level-synchronous
+/// [`BatchPlan`] kernel. The sparse CART trees are retained for training
+/// statistics (traversed-depth and node-storage accounting, which charge
+/// real nodes rather than complete-tree padding).
 #[derive(Clone, Debug)]
 pub struct RfModel {
-    pub rf: RandomForest,
+    /// Read-only: the arena is packed from this forest at construction,
+    /// so in-place mutation would silently desync the serving path.
+    rf: RandomForest,
     pub mode: VoteMode,
+    arena: ForestArena,
 }
 
 impl RfModel {
     pub fn new(rf: RandomForest, mode: VoteMode) -> RfModel {
-        RfModel { rf, mode }
+        let arena = ForestArena::from_forest(&rf, rf.max_depth());
+        RfModel { rf, mode, arena }
+    }
+
+    /// The trained sparse forest (feeds the energy/storage accounting).
+    pub fn forest(&self) -> &RandomForest {
+        &self.rf
+    }
+
+    /// The packed SoA forest serving this model's batch path.
+    pub fn arena(&self) -> &ForestArena {
+        &self.arena
     }
 
     /// Measured (or depth-bound) statistics feeding the RF energy model.
@@ -185,26 +206,15 @@ impl Classifier for RfModel {
 
     fn predict_proba_batch(&self, x: &[f32], n: usize) -> ProbMatrix {
         assert_eq!(x.len(), n * self.rf.n_features, "batch shape mismatch");
-        let f = self.rf.n_features;
-        let c = self.rf.n_classes;
-        let rows = par_map(n, |i| {
-            let row = &x[i * f..(i + 1) * f];
-            match self.mode {
-                VoteMode::ProbAverage => self.rf.predict_proba(row),
-                VoteMode::Majority => {
-                    // Vote fractions: a valid distribution whose argmax is
-                    // the majority-vote winner.
-                    let mut votes = vec![0.0f32; c];
-                    for t in &self.rf.trees {
-                        votes[t.predict(row)] += 1.0;
-                    }
-                    let inv = 1.0 / self.rf.n_trees() as f32;
-                    votes.iter_mut().for_each(|v| *v *= inv);
-                    votes
-                }
-            }
-        });
-        ProbMatrix::from_rows(rows, c)
+        // ProbAverage rows equal `RandomForest::predict_proba` bit-for-bit
+        // (same per-tree accumulation order); Majority rows are vote
+        // fractions — a valid distribution whose argmax is the
+        // majority-vote winner.
+        let reduce = match self.mode {
+            VoteMode::ProbAverage => Reduce::ProbAverage,
+            VoteMode::Majority => Reduce::MajorityVote,
+        };
+        BatchPlan::new(&self.arena, reduce).execute(x, n)
     }
 
     // `predict_batch` keeps the trait default (argmax of the probability
@@ -275,8 +285,10 @@ impl FogModel {
         FogModel::new(fog, FogParams { seed, ..FogParams::fog_max(n) }, ClassifierKind::FogMax)
     }
 
-    /// Content-derived start grove (batch-position independent).
-    fn start_grove(&self, row: &[f32]) -> usize {
+    /// Content-derived start grove (batch-position independent). Public
+    /// so conformance tests can replay Algorithm 2 against independent
+    /// per-tree `FlatTree` traversal.
+    pub fn start_grove(&self, row: &[f32]) -> usize {
         let mut h = self.params.seed ^ 0x9E3779B97F4A7C15;
         for &v in row {
             h = (h ^ v.to_bits() as u64).wrapping_mul(0x100000001B3);

@@ -51,7 +51,7 @@ pub fn spawn(fog: &FieldOfGroves, artifacts_dir: PathBuf) -> Result<AccelHandle>
         .groves
         .iter()
         .map(|g| {
-            let mut b = FlatBundle::new(g.trees.clone());
+            let mut b = FlatBundle::new(g.trees());
             sanitize_inf(&mut b);
             b
         })
@@ -148,12 +148,7 @@ mod tests {
                 eprintln!("skipping: trained depth {} > artifact 6", fog.depth);
                 return;
             }
-            for g in &mut fog.groves {
-                for t in &mut g.trees {
-                    *t = t.repad(6);
-                }
-            }
-            fog.depth = 6;
+            fog = fog.repad(6);
         }
         let handle = spawn(&fog, dir).unwrap();
         let n = 8usize;

@@ -14,6 +14,7 @@
 use super::messages::Response;
 use super::metrics::Metrics;
 use crate::api::Classifier;
+use crate::util::error::Result;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -93,10 +94,19 @@ impl ModelServer {
         }
     }
 
-    /// Classify a row-major batch; returns responses in input order.
-    pub fn classify(&mut self, x: &[f32]) -> Vec<Response> {
+    /// Classify a row-major batch; returns responses in input order, or a
+    /// friendly error when the batch is ragged (its length does not
+    /// divide into feature rows).
+    pub fn classify(&mut self, x: &[f32]) -> Result<Vec<Response>> {
         let f = self.n_features;
-        assert_eq!(x.len() % f, 0, "ragged batch");
+        crate::ensure!(
+            x.len() % f == 0,
+            "ragged batch: {} values do not divide into rows of {} features; \
+             pass a row-major [n, {}] batch",
+            x.len(),
+            f,
+            f
+        );
         let n = x.len() / f;
         let base_id = self.next_id;
         self.next_id += n as u64;
@@ -116,7 +126,7 @@ impl ModelServer {
             let idx = (resp.id - base_id) as usize;
             responses[idx] = Some(resp);
         }
-        responses.into_iter().map(|r| r.expect("all answered")).collect()
+        Ok(responses.into_iter().map(|r| r.expect("all answered")).collect())
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -206,7 +216,7 @@ mod tests {
         let offline = model.predict_batch(&ds.test.x, ds.test.len());
 
         let mut server = ModelServer::start(Arc::clone(&model), cfg);
-        let responses = server.classify(&ds.test.x);
+        let responses = server.classify(&ds.test.x).expect("aligned batch");
         assert_eq!(responses.len(), ds.test.len());
         for (i, r) in responses.iter().enumerate() {
             assert_eq!(r.id, i as u64);
@@ -243,10 +253,29 @@ mod tests {
         let model: Arc<dyn Classifier> = Arc::from(spec.fit(&ds.train, 6));
         let mut server = ModelServer::start(model, &ModelServerConfig::default());
         let f = ds.n_features();
-        let r1 = server.classify(&ds.test.x[..8 * f]);
-        let r2 = server.classify(&ds.test.x[8 * f..16 * f]);
+        let r1 = server.classify(&ds.test.x[..8 * f]).expect("aligned batch");
+        let r2 = server.classify(&ds.test.x[8 * f..16 * f]).expect("aligned batch");
         assert!(r1.iter().enumerate().all(|(i, r)| r.id == i as u64));
         assert!(r2.iter().enumerate().all(|(i, r)| r.id == 8 + i as u64));
+        server.shutdown();
+    }
+
+    #[test]
+    fn ragged_batch_is_a_friendly_error() {
+        let ds = generate(&DatasetProfile::demo(), 223);
+        let spec = ModelSpec::for_shape("svm_lr", ds.n_features(), ds.n_classes())
+            .unwrap()
+            .fast();
+        let model: Arc<dyn Classifier> = Arc::from(spec.fit(&ds.train, 7));
+        let mut server = ModelServer::start(model, &ModelServerConfig::default());
+        let err = server
+            .classify(&ds.test.x[..ds.n_features() + 1])
+            .expect_err("ragged batch must not panic");
+        let msg = err.to_string();
+        assert!(msg.contains("ragged batch"), "unhelpful message: {msg}");
+        // The server must stay usable after a rejected batch.
+        let ok = server.classify(&ds.test.x[..ds.n_features()]).expect("aligned batch");
+        assert_eq!(ok.len(), 1);
         server.shutdown();
     }
 }

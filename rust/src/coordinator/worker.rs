@@ -25,22 +25,42 @@ pub trait GroveBackend: Send {
     fn step_batch(&self, batch: &mut [WorkItem]) -> Vec<f32>;
 }
 
-/// Walk the grove's flat trees directly on the worker thread (pure-rust
+/// Walk the grove's arena slice directly on the worker thread (pure-rust
 /// hot path).
 pub struct NativeGrove(pub Grove);
 
-/// Shared by the native backend and the accelerator fallback path.
+/// Shared by the native backend and the accelerator fallback path: one
+/// hop for the whole batch through the grove's level-synchronous arena
+/// tile kernel. Per-item results are bit-identical to a per-item
+/// `accumulate_proba` walk (same per-tree accumulation order).
+///
+/// The batch is packed into contiguous `x`/`acc` buffers per hop — a
+/// deliberate copy (n·(f+2c) floats, a few KB at serving batch sizes)
+/// that buys the tile kernel's contiguous level-major traversal; item
+/// features stay owned by the `WorkItem` because they keep circulating
+/// the ring.
 fn native_step(grove: &Grove, batch: &mut [WorkItem]) -> Vec<f32> {
+    let n = batch.len();
+    let f = grove.n_features;
+    let c = grove.n_classes;
+    let mut x = Vec::with_capacity(n * f);
+    let mut acc = Vec::with_capacity(n * c);
+    for item in batch.iter() {
+        x.extend_from_slice(&item.features);
+        acc.extend_from_slice(&item.prob_sum);
+    }
+    grove.accumulate_proba_tile(&x, n, &mut acc);
     batch
         .iter_mut()
-        .map(|item| {
-            grove.accumulate_proba(&item.features, &mut item.prob_sum);
+        .enumerate()
+        .map(|(i, item)| {
+            item.prob_sum.copy_from_slice(&acc[i * c..(i + 1) * c]);
             item.hops += 1;
             let inv = 1.0 / item.hops as f32;
             let norm: Vec<f32> = item.prob_sum.iter().map(|p| p * inv).collect();
-            let c = max_diff(&norm);
+            let conf = max_diff(&norm);
             item.scratch_norm = norm;
-            c
+            conf
         })
         .collect()
 }

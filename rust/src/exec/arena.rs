@@ -1,0 +1,478 @@
+//! [`ForestArena`] — every flat tree of a forest packed into one
+//! contiguous structure-of-arrays allocation.
+//!
+//! Layout (all trees padded to one common complete-tree `depth`):
+//!
+//! * **Nodes are level-major.** Level `ℓ` of the whole forest occupies
+//!   `feat[level_off[ℓ] ..]` / `thr[level_off[ℓ] ..]`; within a level,
+//!   trees are consecutive, so the node of tree `t` with local index `i`
+//!   (`0 ≤ i < 2^ℓ`) sits at `level_off[ℓ] + t·2^ℓ + i`. A
+//!   level-synchronous kernel therefore touches one contiguous region per
+//!   level instead of hopping between per-tree heap allocations.
+//! * **Leaves are tree-major.** Tree `t`'s `2^depth × n_classes` leaf
+//!   distributions start at `tree_leaf_off[t]`.
+//! * **Groves are tree ranges.** `grove_off` partitions `0..n_trees` into
+//!   consecutive grove slices (the paper's `a×b` topology); a grove never
+//!   needs its own tree storage again.
+//!
+//! The traversal arithmetic is the same as [`FlatTree`]'s
+//! (`i ← 2i + (x[feat] > thr)` per level), so a walk through the arena
+//! reaches bit-identically the same leaf as the tree it was packed from.
+//! (Like every flat path — the Pallas kernel, the grove PE, FoG
+//! evaluation — the comparison is `>`-routed: a NaN feature routes left,
+//! where the sparse CART walk's `<=` would route right. Inputs are
+//! finite everywhere in this crate; flat routing is the layout's
+//! canonical semantics.)
+
+use crate::dt::FlatTree;
+use crate::forest::RandomForest;
+
+/// Threshold sentinel check shared with `Grove`'s storage accounting: a
+/// node is *live* (a real trained split, not complete-tree padding) iff
+/// its threshold is finite and below the `sanitize_inf` ceiling.
+#[inline]
+fn is_live(thr: f32) -> bool {
+    thr.is_finite() && thr < 1e37
+}
+
+/// A forest of complete trees in one structure-of-arrays allocation.
+#[derive(Clone, Debug)]
+pub struct ForestArena {
+    depth: usize,
+    n_features: usize,
+    n_classes: usize,
+    n_trees: usize,
+    /// Level-major split feature ids: `n_trees · (2^depth − 1)` entries.
+    feat: Vec<i32>,
+    /// Level-major split thresholds; `+inf` for dead (padding) slots.
+    thr: Vec<f32>,
+    /// Tree-major leaf distributions: `n_trees · 2^depth · n_classes`.
+    leaf: Vec<f32>,
+    /// Node-table base offset of each level (`level_off[ℓ] = n_trees·(2^ℓ−1)`).
+    level_off: Vec<usize>,
+    /// Leaf-table base offset of each tree.
+    tree_leaf_off: Vec<usize>,
+    /// Grove partition: grove `g` owns trees `grove_off[g] .. grove_off[g+1]`.
+    grove_off: Vec<usize>,
+}
+
+impl ForestArena {
+    /// Pack a slice of flat trees. Trees shallower than the deepest are
+    /// re-padded (function-preserving, see [`FlatTree::repad`]) so the
+    /// arena is depth-homogeneous. Starts with a single grove covering
+    /// the whole forest; see [`ForestArena::with_grove_sizes`].
+    pub fn from_flat_trees(trees: &[FlatTree]) -> ForestArena {
+        assert!(!trees.is_empty(), "empty forest");
+        let f = trees[0].n_features;
+        let c = trees[0].n_classes;
+        let depth = trees.iter().map(|t| t.depth).max().unwrap();
+        let n_trees = trees.len();
+        let n_internal = (1usize << depth) - 1;
+        let n_leaves = 1usize << depth;
+
+        let mut feat = vec![0i32; n_trees * n_internal];
+        let mut thr = vec![f32::INFINITY; n_trees * n_internal];
+        let mut leaf = vec![0.0f32; n_trees * n_leaves * c];
+        let level_off: Vec<usize> =
+            (0..depth).map(|l| n_trees * ((1usize << l) - 1)).collect();
+        let tree_leaf_off: Vec<usize> = (0..n_trees).map(|t| t * n_leaves * c).collect();
+
+        for (ti, t) in trees.iter().enumerate() {
+            assert_eq!(
+                (t.n_features, t.n_classes),
+                (f, c),
+                "inhomogeneous forest (tree {ti})"
+            );
+            // Validate every split's feature id once here (cold path):
+            // the traversal hot paths read features unchecked, and
+            // `FlatTree`'s fields are public, so the invariant must be
+            // enforced at packing time, not assumed.
+            for (s, &fi) in t.feat.iter().enumerate() {
+                assert!(
+                    (0..f as i32).contains(&fi),
+                    "tree {ti} slot {s}: feature id {fi} out of range (n_features {f})"
+                );
+            }
+            let padded;
+            let t = if t.depth == depth {
+                t
+            } else {
+                padded = t.repad(depth);
+                &padded
+            };
+            // FlatTree stores nodes level-order; peel its levels apart.
+            for lvl in 0..depth {
+                let w = 1usize << lvl;
+                let src = w - 1; // level ℓ starts at slot 2^ℓ − 1
+                let dst = level_off[lvl] + ti * w;
+                feat[dst..dst + w].copy_from_slice(&t.feat[src..src + w]);
+                thr[dst..dst + w].copy_from_slice(&t.thr[src..src + w]);
+            }
+            leaf[tree_leaf_off[ti]..tree_leaf_off[ti] + n_leaves * c]
+                .copy_from_slice(&t.leaf);
+        }
+        ForestArena {
+            depth,
+            n_features: f,
+            n_classes: c,
+            n_trees,
+            feat,
+            thr,
+            leaf,
+            level_off,
+            tree_leaf_off,
+            grove_off: vec![0, n_trees],
+        }
+    }
+
+    /// Pack a trained forest (flattened at `pad_depth`, clamped up to the
+    /// forest's own maximum depth).
+    pub fn from_forest(rf: &RandomForest, pad_depth: usize) -> ForestArena {
+        Self::from_flat_trees(&rf.flatten(pad_depth))
+    }
+
+    /// Record a grove partition: `sizes` are consecutive tree counts and
+    /// must sum to the forest size.
+    pub fn with_grove_sizes(mut self, sizes: &[usize]) -> ForestArena {
+        assert!(!sizes.is_empty(), "no groves");
+        assert!(sizes.iter().all(|&s| s > 0), "empty grove");
+        assert_eq!(
+            sizes.iter().sum::<usize>(),
+            self.n_trees,
+            "grove sizes must partition the forest"
+        );
+        let mut off = Vec::with_capacity(sizes.len() + 1);
+        off.push(0usize);
+        for &s in sizes {
+            off.push(off.last().unwrap() + s);
+        }
+        self.grove_off = off;
+        self
+    }
+
+    // --- shape accessors ---------------------------------------------------
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.n_trees
+    }
+
+    pub fn n_internal_per_tree(&self) -> usize {
+        (1usize << self.depth) - 1
+    }
+
+    pub fn n_leaves_per_tree(&self) -> usize {
+        1usize << self.depth
+    }
+
+    pub fn n_groves(&self) -> usize {
+        self.grove_off.len() - 1
+    }
+
+    /// Tree range `[lo, hi)` of grove `g`.
+    pub fn grove_range(&self, g: usize) -> (usize, usize) {
+        (self.grove_off[g], self.grove_off[g + 1])
+    }
+
+    // --- traversal ---------------------------------------------------------
+
+    /// Walk tree `t` on one sample; returns the local leaf index
+    /// (`0..2^depth`). Same comparisons, in the same order, as
+    /// [`FlatTree::predict_proba`] on the packed tree.
+    ///
+    /// Perf note: this is the Algorithm-2 per-sample hot loop (grove hop
+    /// evaluation, μarch PE). Like `FlatTree::predict_proba` (§Perf
+    /// iteration 1 there), the three indexings are unchecked: bounds
+    /// checks cost ~3× on this sub-100 ns path, and construction
+    /// guarantees the invariants (asserted in debug builds).
+    #[inline]
+    pub fn leaf_index(&self, t: usize, x: &[f32]) -> usize {
+        // Release asserts: `t` and `x` are caller-supplied on a safe pub
+        // fn, so they must be validated once up front — the unchecked
+        // accesses below are per-level, these are per-call.
+        assert!(t < self.n_trees, "tree {t} out of range");
+        assert!(x.len() >= self.n_features, "sample shorter than n_features");
+        let mut i = 0usize;
+        for lvl in 0..self.depth {
+            // SAFETY: lvl < depth = level_off.len(); the node offset is
+            // level_off[lvl] + t·2^lvl + i with t < n_trees and i < 2^lvl
+            // by the recurrence, so it stays below n_trees·(2^depth − 1) =
+            // |feat| = |thr|.
+            let off = unsafe { *self.level_off.get_unchecked(lvl) } + (t << lvl) + i;
+            let (f, thr) = unsafe {
+                (*self.feat.get_unchecked(off) as usize, *self.thr.get_unchecked(off))
+            };
+            debug_assert!(f < x.len());
+            // SAFETY: feat values are validated < n_features at tree
+            // construction (`fit_tree`/`from_tree`/`repad` never emit an
+            // out-of-range feature id).
+            let go_right = unsafe { *x.get_unchecked(f) } > thr;
+            i = 2 * i + go_right as usize;
+        }
+        i
+    }
+
+    /// Leaf distribution of tree `t` at local leaf index `local`.
+    #[inline]
+    pub fn leaf_slice(&self, t: usize, local: usize) -> &[f32] {
+        let c = self.n_classes;
+        let start = self.tree_leaf_off[t] + local * c;
+        &self.leaf[start..start + c]
+    }
+
+    /// Walk tree `t` on one sample and return the reached leaf
+    /// distribution.
+    #[inline]
+    pub fn leaf_dist(&self, t: usize, x: &[f32]) -> &[f32] {
+        self.leaf_slice(t, self.leaf_index(t, x))
+    }
+
+    /// Walk tree `t` on `x`, calling `visit(feature, live)` at every
+    /// level (`live` = real trained split, not complete-tree padding).
+    /// Returns the local leaf index. Used by the feature-acquisition cost
+    /// accounting in `forest::budgeted`.
+    pub fn walk_tree<F: FnMut(usize, bool)>(&self, t: usize, x: &[f32], mut visit: F) -> usize {
+        let mut i = 0usize;
+        for lvl in 0..self.depth {
+            let off = self.level_off[lvl] + (t << lvl) + i;
+            let f = self.feat[off] as usize;
+            let thr = self.thr[off];
+            visit(f, is_live(thr));
+            i = 2 * i + (x[f] > thr) as usize;
+        }
+        i
+    }
+
+    /// Level-synchronous traversal of a sample tile over the tree range
+    /// `[lo, hi)`: outer loop over levels, inner loop over the tile's
+    /// samples (the hardware PE's evaluation order). On return,
+    /// `cursors[j·n + s]` holds the local leaf index reached by tree
+    /// `lo + j` on sample `s`.
+    pub fn traverse_tile(&self, lo: usize, hi: usize, x: &[f32], n: usize, cursors: &mut [u32]) {
+        debug_assert!(lo <= hi && hi <= self.n_trees, "bad tree range {lo}..{hi}");
+        let t_cnt = hi - lo;
+        let f = self.n_features;
+        assert_eq!(x.len(), n * f, "tile shape mismatch");
+        assert_eq!(cursors.len(), t_cnt * n, "cursor buffer shape mismatch");
+        cursors.iter_mut().for_each(|ci| *ci = 0);
+        for lvl in 0..self.depth {
+            let w = 1usize << lvl;
+            let base = self.level_off[lvl];
+            for j in 0..t_cnt {
+                let off = base + (lo + j) * w;
+                let feat = &self.feat[off..off + w];
+                let thr = &self.thr[off..off + w];
+                let cur = &mut cursors[j * n..(j + 1) * n];
+                for (s, ci) in cur.iter_mut().enumerate() {
+                    let i = *ci as usize;
+                    let go_right = x[s * f + feat[i] as usize] > thr[i];
+                    *ci = (2 * i + go_right as usize) as u32;
+                }
+            }
+        }
+    }
+
+    // --- accounting (drives the μarch PE and energy models) ----------------
+
+    /// Comparator ops per evaluation of the tree range: every complete
+    /// tree walks exactly `depth` levels.
+    pub fn ops_per_eval_range(&self, lo: usize, hi: usize) -> usize {
+        (hi - lo) * self.depth
+    }
+
+    /// VMEM bytes of one packed tree: feat (i32) + thr (f32) + leaves (f32).
+    pub fn tree_vmem_bytes(&self) -> usize {
+        self.n_internal_per_tree() * 8 + self.n_leaves_per_tree() * self.n_classes * 4
+    }
+
+    /// VMEM bytes of a tree range.
+    pub fn vmem_bytes_range(&self, lo: usize, hi: usize) -> usize {
+        (hi - lo) * self.tree_vmem_bytes()
+    }
+
+    /// Total VMEM bytes of the arena (equals the sum over its trees).
+    pub fn vmem_bytes(&self) -> usize {
+        self.vmem_bytes_range(0, self.n_trees)
+    }
+
+    /// Live (finite-threshold) internal nodes of tree `t`.
+    pub fn live_nodes(&self, t: usize) -> usize {
+        (0..self.depth)
+            .map(|lvl| {
+                let w = 1usize << lvl;
+                let off = self.level_off[lvl] + t * w;
+                self.thr[off..off + w].iter().filter(|v| is_live(**v)).count()
+            })
+            .sum()
+    }
+
+    /// Bytes of *sparse* node storage the hardware would provision for a
+    /// tree range: live internal nodes at 6 B each + one byte per
+    /// leaf-class slot of the live leaves (complete-tree padding is a
+    /// kernel-layout artifact, not real storage).
+    pub fn sparse_storage_bytes_range(&self, lo: usize, hi: usize) -> usize {
+        (lo..hi)
+            .map(|t| {
+                let live = self.live_nodes(t);
+                live * 6 + (live + 1) * self.n_classes
+            })
+            .sum()
+    }
+
+    // --- materialization (cold paths: export, dropout, tests) --------------
+
+    /// Reconstruct one tree as a standalone [`FlatTree`] (bit-identical
+    /// to the tree packed in, modulo the homogenizing re-pad).
+    pub fn tree(&self, t: usize) -> FlatTree {
+        assert!(t < self.n_trees, "tree {t} out of range");
+        let n_internal = self.n_internal_per_tree();
+        let mut feat = Vec::with_capacity(n_internal);
+        let mut thr = Vec::with_capacity(n_internal);
+        for lvl in 0..self.depth {
+            let w = 1usize << lvl;
+            let off = self.level_off[lvl] + t * w;
+            feat.extend_from_slice(&self.feat[off..off + w]);
+            thr.extend_from_slice(&self.thr[off..off + w]);
+        }
+        let c = self.n_classes;
+        let lo = self.tree_leaf_off[t];
+        let leaf = self.leaf[lo..lo + self.n_leaves_per_tree() * c].to_vec();
+        FlatTree {
+            depth: self.depth,
+            n_features: self.n_features,
+            n_classes: self.n_classes,
+            feat,
+            thr,
+            leaf,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetProfile};
+    use crate::forest::ForestParams;
+
+    fn flats() -> (Vec<FlatTree>, crate::data::Dataset) {
+        let ds = generate(&DatasetProfile::demo(), 331);
+        let rf = RandomForest::fit(&ds.train, &ForestParams::small(), 1);
+        (rf.flatten(rf.max_depth()), ds)
+    }
+
+    #[test]
+    fn roundtrip_materialization() {
+        let (trees, _) = flats();
+        let arena = ForestArena::from_flat_trees(&trees);
+        assert_eq!(arena.n_trees(), trees.len());
+        for (t, orig) in trees.iter().enumerate() {
+            assert_eq!(&arena.tree(t), orig, "tree {t} changed in the arena");
+        }
+    }
+
+    #[test]
+    fn leaf_dist_matches_flat_traversal() {
+        let (trees, ds) = flats();
+        let arena = ForestArena::from_flat_trees(&trees);
+        for i in 0..40.min(ds.test.len()) {
+            let x = ds.test.row(i);
+            for (t, tree) in trees.iter().enumerate() {
+                assert_eq!(arena.leaf_dist(t, x), tree.predict_proba(x), "tree {t} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn traverse_tile_matches_per_sample() {
+        let (trees, ds) = flats();
+        let arena = ForestArena::from_flat_trees(&trees);
+        let n = 17.min(ds.test.len());
+        let f = arena.n_features();
+        let t_cnt = arena.n_trees();
+        let mut cursors = vec![0u32; t_cnt * n];
+        arena.traverse_tile(0, t_cnt, &ds.test.x[..n * f], n, &mut cursors);
+        for s in 0..n {
+            let x = ds.test.row(s);
+            for j in 0..t_cnt {
+                assert_eq!(cursors[j * n + s] as usize, arena.leaf_index(j, x));
+            }
+        }
+    }
+
+    #[test]
+    fn byte_totals_equal_sum_over_trees() {
+        // Satellite invariant: the arena reports exactly the per-tree sums.
+        let (trees, _) = flats();
+        let arena = ForestArena::from_flat_trees(&trees);
+        let per_tree: usize = trees.iter().map(|t| t.vmem_bytes()).sum();
+        assert_eq!(arena.vmem_bytes(), per_tree);
+        let live_sum: usize = trees
+            .iter()
+            .map(|t| {
+                let live = t.thr.iter().filter(|v| v.is_finite() && **v < 1e37).count();
+                live * 6 + (live + 1) * t.n_classes
+            })
+            .sum();
+        assert_eq!(arena.sparse_storage_bytes_range(0, arena.n_trees()), live_sum);
+    }
+
+    #[test]
+    fn repad_grows_vmem_not_sparse_storage() {
+        // Satellite invariant: re-padding adds dead slots (VMEM grows)
+        // but provisions no new real storage.
+        let (trees, _) = flats();
+        let arena = ForestArena::from_flat_trees(&trees);
+        let deeper: Vec<FlatTree> = trees.iter().map(|t| t.repad(t.depth + 2)).collect();
+        let deeper_arena = ForestArena::from_flat_trees(&deeper);
+        assert!(deeper_arena.vmem_bytes() > arena.vmem_bytes());
+        assert_eq!(
+            deeper_arena.sparse_storage_bytes_range(0, deeper_arena.n_trees()),
+            arena.sparse_storage_bytes_range(0, arena.n_trees()),
+        );
+    }
+
+    #[test]
+    fn mixed_depths_are_homogenized() {
+        let (trees, ds) = flats();
+        let mut mixed = trees.clone();
+        mixed[0] = mixed[0].repad(mixed[0].depth + 1);
+        let arena = ForestArena::from_flat_trees(&mixed);
+        assert_eq!(arena.depth(), trees[0].depth + 1);
+        // Function is preserved for every tree despite the re-pad.
+        for i in 0..10.min(ds.test.len()) {
+            let x = ds.test.row(i);
+            for (t, tree) in trees.iter().enumerate() {
+                assert_eq!(arena.leaf_dist(t, x), tree.predict_proba(x));
+            }
+        }
+    }
+
+    #[test]
+    fn grove_partition_recorded() {
+        let (trees, _) = flats();
+        let n = trees.len();
+        let arena = ForestArena::from_flat_trees(&trees).with_grove_sizes(&[3, 3, 2]);
+        assert_eq!(arena.n_groves(), 3);
+        assert_eq!(arena.grove_range(0), (0, 3));
+        assert_eq!(arena.grove_range(2), (6, n));
+        assert_eq!(arena.ops_per_eval_range(0, 3), 3 * arena.depth());
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_grove_sizes_panic() {
+        let (trees, _) = flats();
+        let _ = ForestArena::from_flat_trees(&trees).with_grove_sizes(&[1, 1]);
+    }
+}

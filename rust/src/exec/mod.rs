@@ -1,0 +1,35 @@
+//! `exec` — the SoA compiled-forest engine behind every tree-based
+//! prediction path.
+//!
+//! The paper's energy win comes from groves of *complete* trees traversed
+//! level-synchronously in hardware (§3.2); this module is the software
+//! twin of that layout discipline. Instead of a `Vec<FlatTree>` of
+//! per-tree heap objects walked one sample at a time, the whole forest is
+//! packed once into a [`ForestArena`] — contiguous level-major
+//! `feat`/`thr` node tables plus tree-major leaf distributions, with
+//! per-tree and per-grove offset tables — and batches are evaluated by a
+//! [`BatchPlan`]: a tiled traversal kernel whose outer loop is the tree
+//! *level* and whose inner loop is the samples of a tile, exactly the
+//! order the grove PE evaluates in hardware.
+//!
+//! Every tree-based predictor in the crate owns (or slices) an arena:
+//!
+//! * `api::RfModel` packs its forest and serves both vote modes through
+//!   one [`BatchPlan`];
+//! * `fog::FieldOfGroves` packs all trees into one shared arena and its
+//!   `Grove`s become disjoint tree-range slices of it: the coordinator's
+//!   grove workers batch each hop through the tile kernel
+//!   (`Grove::accumulate_proba_tile`), while Algorithm 2's offline
+//!   per-sample evaluation walks the same arena arrays one row at a time
+//!   (confidence gating is inherently per-sample);
+//! * `forest::budgeted` measures validation accuracy and feature
+//!   acquisition cost on the arena;
+//! * the μarch PE / energy models derive comparator counts and
+//!   VMEM/sparse-storage bytes from the arena layout (numerically
+//!   identical to the per-`FlatTree` accounting they replaced).
+
+pub mod arena;
+pub mod batch;
+
+pub use arena::ForestArena;
+pub use batch::{BatchPlan, Reduce, DEFAULT_TILE};

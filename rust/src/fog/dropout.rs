@@ -9,12 +9,16 @@
 
 use super::eval::{EvalResult, FogParams};
 use super::split::FieldOfGroves;
+use crate::dt::FlatTree;
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 impl FieldOfGroves {
     /// A copy of this FoG with the given groves removed (power-gated
     /// tiles are skipped by the ring; evaluation-wise they simply don't
-    /// exist). Panics if all groves would be disabled.
+    /// exist). The surviving groves keep slicing the *same* shared arena
+    /// — gating a tile moves no tree storage. Panics if all groves would
+    /// be disabled.
     pub fn with_groves_disabled(&self, disabled: &[usize]) -> FieldOfGroves {
         let groves: Vec<_> = self
             .groves
@@ -29,6 +33,7 @@ impl FieldOfGroves {
             n_features: self.n_features,
             n_classes: self.n_classes,
             depth: self.depth,
+            arena: Arc::clone(&self.arena),
         }
     }
 
@@ -42,30 +47,24 @@ impl FieldOfGroves {
         let drop = ((total as f64) * fraction).round() as usize;
         let mut kill: Vec<usize> = rng.sample_indices(total, drop.min(total - 1));
         kill.sort_unstable();
-        let mut groves = Vec::new();
+        let mut groups: Vec<Vec<FlatTree>> = Vec::new();
         let mut idx = 0usize;
         for g in &self.groves {
-            let trees: Vec<_> = g
-                .trees
-                .iter()
-                .filter(|_| {
-                    let dead = kill.binary_search(&idx).is_ok();
-                    idx += 1;
-                    !dead
-                })
-                .cloned()
-                .collect();
+            let mut trees = Vec::new();
+            for i in 0..g.n_trees() {
+                let dead = kill.binary_search(&idx).is_ok();
+                idx += 1;
+                if !dead {
+                    trees.push(g.tree(i));
+                }
+            }
             if !trees.is_empty() {
-                groves.push(super::grove::Grove::new(trees));
+                groups.push(trees);
             }
         }
-        assert!(!groves.is_empty());
-        FieldOfGroves {
-            groves,
-            n_features: self.n_features,
-            n_classes: self.n_classes,
-            depth: self.depth,
-        }
+        assert!(!groups.is_empty());
+        // Survivors are re-packed into a fresh shared arena.
+        FieldOfGroves::from_groves(groups)
     }
 }
 

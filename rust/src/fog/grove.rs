@@ -4,18 +4,35 @@
 //! trees on an input and emits the *sum* of leaf distributions (the hop
 //! loop divides by the number of contributing groves, Algorithm 2 line 8;
 //! keeping sums avoids re-scaling on every hop).
+//!
+//! Since the `exec` refactor a grove owns no tree storage of its own: it
+//! is a contiguous tree-range *slice* of a shared
+//! [`ForestArena`](crate::exec::ForestArena) (every grove of a
+//! [`FieldOfGroves`](super::FieldOfGroves) slices the same arena), so hop
+//! traversal, the coordinator's grove workers and the batch kernel all
+//! walk the same level-major arrays. Op counts and storage accounting are
+//! derived from the arena layout and are numerically identical to the
+//! per-`FlatTree` accounting they replaced.
 
 use crate::dt::FlatTree;
+use crate::exec::ForestArena;
+use std::sync::Arc;
 
-/// One grove of flattened trees (homogeneous depth).
+/// One grove of flattened trees (homogeneous padded depth), viewed as a
+/// tree range `[lo, hi)` of a shared arena.
 #[derive(Clone, Debug)]
 pub struct Grove {
-    pub trees: Vec<FlatTree>,
+    arena: Arc<ForestArena>,
+    lo: usize,
+    hi: usize,
     pub n_features: usize,
     pub n_classes: usize,
 }
 
 impl Grove {
+    /// Pack a standalone grove from owned trees (builds a private
+    /// single-grove arena; trees shallower than the deepest are re-padded,
+    /// which preserves the computed function).
     pub fn new(trees: Vec<FlatTree>) -> Grove {
         assert!(!trees.is_empty(), "empty grove");
         let f = trees[0].n_features;
@@ -23,15 +40,48 @@ impl Grove {
         for t in &trees {
             assert_eq!((t.n_features, t.n_classes), (f, c));
         }
-        Grove { trees, n_features: f, n_classes: c }
+        let arena = Arc::new(ForestArena::from_flat_trees(&trees));
+        let hi = arena.n_trees();
+        Grove { arena, lo: 0, hi, n_features: f, n_classes: c }
+    }
+
+    /// View the tree range `[lo, hi)` of a shared arena as a grove.
+    pub fn from_arena(arena: Arc<ForestArena>, lo: usize, hi: usize) -> Grove {
+        assert!(lo < hi && hi <= arena.n_trees(), "bad grove range {lo}..{hi}");
+        let f = arena.n_features();
+        let c = arena.n_classes();
+        Grove { arena, lo, hi, n_features: f, n_classes: c }
+    }
+
+    /// The shared arena this grove slices.
+    pub fn arena(&self) -> &Arc<ForestArena> {
+        &self.arena
+    }
+
+    /// This grove's tree range `[lo, hi)` within the arena.
+    pub fn tree_range(&self) -> (usize, usize) {
+        (self.lo, self.hi)
     }
 
     pub fn n_trees(&self) -> usize {
-        self.trees.len()
+        self.hi - self.lo
     }
 
+    /// Padded depth (uniform across the arena).
     pub fn depth(&self) -> usize {
-        self.trees.iter().map(|t| t.depth).max().unwrap_or(0)
+        self.arena.depth()
+    }
+
+    /// Materialize one tree as a standalone [`FlatTree`] (cold path:
+    /// export, dropout, PJRT bundle snapshots, tests).
+    pub fn tree(&self, i: usize) -> FlatTree {
+        assert!(i < self.n_trees(), "tree {i} out of grove range");
+        self.arena.tree(self.lo + i)
+    }
+
+    /// Materialize every tree of the grove.
+    pub fn trees(&self) -> Vec<FlatTree> {
+        (self.lo..self.hi).map(|t| self.arena.tree(t)).collect()
     }
 
     /// Add this grove's *averaged* distribution into `acc` (so `acc`
@@ -40,11 +90,34 @@ impl Grove {
     #[inline]
     pub fn accumulate_proba(&self, x: &[f32], acc: &mut [f32]) {
         debug_assert_eq!(acc.len(), self.n_classes);
-        let inv = 1.0 / self.trees.len() as f32;
-        for t in &self.trees {
-            let leaf = t.predict_proba(x);
+        let inv = 1.0 / self.n_trees() as f32;
+        for t in self.lo..self.hi {
+            let leaf = self.arena.leaf_dist(t, x);
             for (a, &p) in acc.iter_mut().zip(leaf) {
                 *a += p * inv;
+            }
+        }
+    }
+
+    /// One hop's compute for a whole tile: add this grove's averaged
+    /// distribution into every row of `acc` (row-major `[n, n_classes]`)
+    /// via the level-synchronous arena kernel. Row results are
+    /// bit-identical to per-sample [`Grove::accumulate_proba`] — the
+    /// per-tree adds happen in the same order with the same scaling.
+    pub fn accumulate_proba_tile(&self, x: &[f32], n: usize, acc: &mut [f32]) {
+        let c = self.n_classes;
+        assert_eq!(x.len(), n * self.n_features, "tile shape mismatch");
+        assert_eq!(acc.len(), n * c, "accumulator shape mismatch");
+        let t_cnt = self.n_trees();
+        let mut cursors = vec![0u32; t_cnt * n];
+        self.arena.traverse_tile(self.lo, self.hi, x, n, &mut cursors);
+        let inv = 1.0 / t_cnt as f32;
+        for j in 0..t_cnt {
+            for s in 0..n {
+                let leaf = self.arena.leaf_slice(self.lo + j, cursors[j * n + s] as usize);
+                for (a, &p) in acc[s * c..(s + 1) * c].iter_mut().zip(leaf) {
+                    *a += p * inv;
+                }
             }
         }
     }
@@ -56,16 +129,16 @@ impl Grove {
         acc
     }
 
-    /// Comparator ops per evaluation: each flat tree walks exactly `depth`
-    /// levels (complete-tree layout), matching the hardware PE whose
-    /// latency is depth-bound (paper §3.2.2 "Processing Element").
+    /// Comparator ops per evaluation: each packed tree walks exactly
+    /// `depth` levels (complete-tree layout), matching the hardware PE
+    /// whose latency is depth-bound (paper §3.2.2 "Processing Element").
     pub fn ops_per_eval(&self) -> usize {
-        self.trees.iter().map(|t| t.depth).sum()
+        self.arena.ops_per_eval_range(self.lo, self.hi)
     }
 
     /// Total VMEM bytes for the grove's node tables (perf estimates).
     pub fn vmem_bytes(&self) -> usize {
-        self.trees.iter().map(|t| t.vmem_bytes()).sum()
+        self.arena.vmem_bytes_range(self.lo, self.hi)
     }
 
     /// Bytes of *sparse* node storage the hardware would provision: live
@@ -73,13 +146,7 @@ impl Grove {
     /// leaf-class slot of the live leaves (complete-tree padding is a
     /// kernel-layout artifact, not real storage).
     pub fn sparse_storage_bytes(&self) -> usize {
-        self.trees
-            .iter()
-            .map(|t| {
-                let live = t.thr.iter().filter(|v| v.is_finite() && **v < 1e37).count();
-                live * 6 + (live + 1) * t.n_classes
-            })
-            .sum()
+        self.arena.sparse_storage_bytes_range(self.lo, self.hi)
     }
 }
 
@@ -117,10 +184,71 @@ mod tests {
     }
 
     #[test]
+    fn tile_matches_per_sample_bitwise() {
+        let (g, ds) = grove();
+        let n = 13;
+        let f = g.n_features;
+        let c = g.n_classes;
+        let mut tile_acc = vec![0.0f32; n * c];
+        g.accumulate_proba_tile(&ds.test.x[..n * f], n, &mut tile_acc);
+        for i in 0..n {
+            let mut acc = vec![0.0f32; c];
+            g.accumulate_proba(ds.test.row(i), &mut acc);
+            assert_eq!(&tile_acc[i * c..(i + 1) * c], &acc[..], "row {i}");
+        }
+    }
+
+    #[test]
     fn ops_metric() {
         let (g, _) = grove();
-        assert_eq!(g.ops_per_eval(), g.trees.iter().map(|t| t.depth).sum());
+        assert_eq!(g.ops_per_eval(), g.n_trees() * g.depth());
         assert!(g.vmem_bytes() > 0);
+    }
+
+    #[test]
+    fn materialized_trees_roundtrip() {
+        let (g, ds) = grove();
+        let trees = g.trees();
+        assert_eq!(trees.len(), g.n_trees());
+        for i in 0..5 {
+            let x = ds.test.row(i);
+            let mut acc = vec![0.0f32; g.n_classes];
+            let inv = 1.0 / trees.len() as f32;
+            for t in &trees {
+                for (a, &p) in acc.iter_mut().zip(t.predict_proba(x)) {
+                    *a += p * inv;
+                }
+            }
+            assert_eq!(acc, g.predict_proba(x), "row {i}");
+        }
+    }
+
+    #[test]
+    fn repad_grows_vmem_but_not_sparse_storage() {
+        // Satellite invariant at the grove level: deeper padding adds
+        // dead slots (VMEM grows) but no real (live-node) storage.
+        let (g, _) = grove();
+        let deeper =
+            Grove::new(g.trees().iter().map(|t| t.repad(g.depth() + 2)).collect());
+        assert!(deeper.vmem_bytes() > g.vmem_bytes());
+        assert_eq!(deeper.sparse_storage_bytes(), g.sparse_storage_bytes());
+        assert_eq!(deeper.depth(), g.depth() + 2);
+    }
+
+    #[test]
+    fn arena_slice_groves_match_standalone() {
+        let ds = generate(&DatasetProfile::demo(), 82);
+        let rf = RandomForest::fit(&ds.train, &ForestParams::small(), 3);
+        let flats = rf.flatten(rf.max_depth());
+        let arena = Arc::new(ForestArena::from_flat_trees(&flats));
+        let shared = Grove::from_arena(Arc::clone(&arena), 2, 6);
+        let standalone = Grove::new(flats[2..6].to_vec());
+        for i in 0..10 {
+            let x = ds.test.row(i);
+            assert_eq!(shared.predict_proba(x), standalone.predict_proba(x), "row {i}");
+        }
+        assert_eq!(shared.vmem_bytes(), standalone.vmem_bytes());
+        assert_eq!(shared.sparse_storage_bytes(), standalone.sparse_storage_bytes());
     }
 
     #[test]

@@ -9,18 +9,25 @@
 use super::grove::Grove;
 use crate::data::Split as DataSplit;
 use crate::dt::FlatTree;
+use crate::exec::ForestArena;
 use crate::forest::{ForestParams, RandomForest};
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 /// A field of groves: the forest's trees partitioned into groves arranged
-/// in a ring (grove `i` hands off to grove `(i+1) mod n`).
+/// in a ring (grove `i` hands off to grove `(i+1) mod n`). All trees live
+/// in one shared [`ForestArena`]; every grove is a disjoint tree-range
+/// slice of it, so hop traversal and batched evaluation walk the same
+/// level-major arrays.
 #[derive(Clone, Debug)]
 pub struct FieldOfGroves {
     pub groves: Vec<Grove>,
     pub n_features: usize,
     pub n_classes: usize,
-    /// Padded tree depth shared by every flat tree.
+    /// Padded tree depth shared by every tree in the arena.
     pub depth: usize,
+    /// The shared SoA arena every grove slices.
+    pub(crate) arena: Arc<ForestArena>,
 }
 
 impl FieldOfGroves {
@@ -58,19 +65,60 @@ impl FieldOfGroves {
             let mut rng = Rng::new(seed);
             rng.shuffle(&mut flats);
         }
-        let mut groves = Vec::new();
+        let mut sizes = Vec::new();
         let mut i = 0;
         while i < flats.len() {
             let hi = (i + grove_size).min(flats.len());
-            groves.push(Grove::new(flats[i..hi].to_vec()));
+            sizes.push(hi - i);
             i = hi;
         }
-        FieldOfGroves {
-            groves,
-            n_features: rf.n_features,
-            n_classes: rf.n_classes,
-            depth,
-        }
+        Self::assemble(flats, &sizes)
+    }
+
+    /// Build a FoG from explicit per-grove tree groups (used by the
+    /// dropout/degradation paths and [`FieldOfGroves::repad`]): all trees
+    /// are packed into one shared arena, each group becoming a
+    /// consecutive tree-range grove.
+    pub fn from_groves(groups: Vec<Vec<FlatTree>>) -> FieldOfGroves {
+        let sizes: Vec<usize> = groups.iter().map(|g| g.len()).collect();
+        assert!(!sizes.is_empty() && sizes.iter().all(|&s| s > 0), "empty grove");
+        let flats: Vec<FlatTree> = groups.into_iter().flatten().collect();
+        Self::assemble(flats, &sizes)
+    }
+
+    /// Pack `flats` into one shared arena partitioned by `sizes` and
+    /// slice out the groves.
+    fn assemble(flats: Vec<FlatTree>, sizes: &[usize]) -> FieldOfGroves {
+        assert!(!flats.is_empty(), "empty fog");
+        let n_features = flats[0].n_features;
+        let n_classes = flats[0].n_classes;
+        let arena = Arc::new(ForestArena::from_flat_trees(&flats).with_grove_sizes(sizes));
+        let depth = arena.depth();
+        let groves = (0..arena.n_groves())
+            .map(|g| {
+                let (lo, hi) = arena.grove_range(g);
+                Grove::from_arena(Arc::clone(&arena), lo, hi)
+            })
+            .collect();
+        FieldOfGroves { groves, n_features, n_classes, depth, arena }
+    }
+
+    /// The shared arena behind every grove.
+    pub fn arena(&self) -> &Arc<ForestArena> {
+        &self.arena
+    }
+
+    /// Re-pad every tree to at least `depth` levels (function-preserving;
+    /// see [`FlatTree::repad`]) — needed when binding trained trees to a
+    /// deeper AOT-compiled artifact shape. Rebuilds the shared arena.
+    pub fn repad(&self, depth: usize) -> FieldOfGroves {
+        let depth = depth.max(self.depth);
+        Self::from_groves(
+            self.groves
+                .iter()
+                .map(|g| g.trees().iter().map(|t| t.repad(depth)).collect())
+                .collect(),
+        )
     }
 
     pub fn n_groves(&self) -> usize {
@@ -158,5 +206,33 @@ mod tests {
     fn zero_grove_size_panics() {
         let (rf, _) = forest();
         FieldOfGroves::from_forest(&rf, 0);
+    }
+
+    #[test]
+    fn groves_share_one_arena() {
+        let (rf, _) = forest();
+        let fog = FieldOfGroves::from_forest(&rf, 4);
+        for g in &fog.groves {
+            assert!(std::sync::Arc::ptr_eq(g.arena(), fog.arena()), "grove has its own arena");
+        }
+        assert_eq!(fog.arena().n_trees(), 16);
+        assert_eq!(fog.arena().n_groves(), 4);
+    }
+
+    #[test]
+    fn repad_preserves_predictions_and_sparse_storage() {
+        let (rf, ds) = forest();
+        let fog = FieldOfGroves::from_forest(&rf, 4);
+        let deeper = fog.repad(fog.depth + 2);
+        assert_eq!(deeper.depth, fog.depth + 2);
+        deeper.validate_partition(16).unwrap();
+        let params = crate::fog::FogParams { threshold: 0.4, max_hops: 4, seed: 9 };
+        let a = fog.evaluate(&ds.test.x, &params);
+        let b = deeper.evaluate(&ds.test.x, &params);
+        assert_eq!(a.predictions(), b.predictions());
+        for (ga, gb) in fog.groves.iter().zip(&deeper.groves) {
+            assert!(gb.vmem_bytes() > ga.vmem_bytes());
+            assert_eq!(gb.sparse_storage_bytes(), ga.sparse_storage_bytes());
+        }
     }
 }

@@ -11,9 +11,11 @@
 //! (cost, accuracy) on validation data, and return the best
 //! accuracy design under the budget.
 
-use super::rf::{ForestParams, RandomForest, VoteMode};
+use super::rf::{ForestParams, RandomForest};
+use crate::api::ProbMatrix;
 use crate::data::split::stratified_holdout;
 use crate::data::Split;
+use crate::exec::{BatchPlan, ForestArena, Reduce};
 
 /// One evaluated design point of the budget sweep.
 #[derive(Clone, Debug)]
@@ -24,39 +26,45 @@ pub struct BudgetPoint {
     pub val_accuracy: f64,
 }
 
-/// Result of budgeted training.
+/// Result of budgeted training. The chosen forest is packed into a
+/// [`ForestArena`] so the budgeted design serves batches through the same
+/// tiled kernel as every other tree-based path.
 pub struct BudgetedForest {
     pub forest: RandomForest,
+    pub arena: ForestArena,
     pub chosen: BudgetPoint,
     pub sweep: Vec<BudgetPoint>,
 }
 
-/// Mean per-prediction feature-acquisition cost of a forest: every
-/// *distinct* feature read while routing a sample through all trees is
-/// charged once (sensor/feature acquisition semantics of [11]).
-pub fn avg_acquisition_cost(rf: &RandomForest, split: &Split, feature_cost: &[f32]) -> f64 {
+impl BudgetedForest {
+    /// Batch-tiled probability-average prediction on the chosen design.
+    pub fn predict_proba_batch(&self, x: &[f32], n: usize) -> ProbMatrix {
+        BatchPlan::new(&self.arena, Reduce::ProbAverage).execute(x, n)
+    }
+}
+
+/// Mean per-prediction feature-acquisition cost of a packed forest:
+/// every *distinct* feature read while routing a sample through all trees
+/// is charged once (sensor/feature acquisition semantics of [11]). Dead
+/// complete-tree padding slots are skipped — only live trained splits
+/// acquire features, so the totals equal the sparse-tree walk this
+/// replaced.
+pub fn avg_acquisition_cost(arena: &ForestArena, split: &Split, feature_cost: &[f32]) -> f64 {
     if split.is_empty() {
         return 0.0;
     }
     let mut total = 0.0f64;
-    let mut seen = vec![false; rf.n_features];
+    let mut seen = vec![false; arena.n_features()];
     for i in 0..split.len() {
         let x = split.row(i);
         seen.iter_mut().for_each(|s| *s = false);
-        for tree in &rf.trees {
-            let mut idx = 0usize;
-            loop {
-                let n = &tree.nodes[idx];
-                if n.is_leaf() {
-                    break;
-                }
-                let f = n.feature as usize;
-                if !seen[f] {
+        for t in 0..arena.n_trees() {
+            arena.walk_tree(t, x, |f, live| {
+                if live && !seen[f] {
                     seen[f] = true;
                     total += feature_cost[f] as f64;
                 }
-                idx = if x[f] <= n.threshold { n.left as usize } else { n.left as usize + 1 };
-            }
+            });
         }
     }
     total / split.len() as f64
@@ -90,10 +98,16 @@ pub fn fit_budgeted(
         params.tree.feature_cost = feature_cost.to_vec();
         params.tree.cost_weight = w;
         let rf = RandomForest::fit(&train, &params, seed);
+        // Both validation measurements run on the packed arena: the
+        // batch-kernel probabilities are bit-identical to
+        // `RandomForest::predict_proba`, and the acquisition walk skips
+        // dead padding slots, so the sweep numbers are unchanged.
+        let arena = ForestArena::from_forest(&rf, rf.max_depth());
+        let probs = BatchPlan::new(&arena, Reduce::ProbAverage).execute(&val.x, val.len());
         let point = BudgetPoint {
             cost_weight: w,
-            avg_cost: avg_acquisition_cost(&rf, &val, feature_cost),
-            val_accuracy: rf.accuracy(&val, VoteMode::ProbAverage),
+            avg_cost: avg_acquisition_cost(&arena, &val, feature_cost),
+            val_accuracy: crate::util::stats::accuracy(&probs.argmax_rows(), &val.y),
         };
         sweep.push(point.clone());
         candidates.push((point, rf));
@@ -125,7 +139,8 @@ pub fn fit_budgeted(
     params.tree.feature_cost = feature_cost.to_vec();
     params.tree.cost_weight = candidates[chosen_idx].0.cost_weight;
     let forest = RandomForest::fit(data, &params, seed);
-    BudgetedForest { forest, chosen: candidates[chosen_idx].0.clone(), sweep }
+    let arena = ForestArena::from_forest(&forest, forest.max_depth());
+    BudgetedForest { forest, arena, chosen: candidates[chosen_idx].0.clone(), sweep }
 }
 
 #[cfg(test)]
@@ -176,10 +191,65 @@ mod tests {
     fn acquisition_cost_counts_distinct_features_once() {
         let ds = generate(&DatasetProfile::demo(), 74);
         let rf = RandomForest::fit(&ds.train, &ForestParams::small(), 4);
+        let arena = ForestArena::from_forest(&rf, rf.max_depth());
         let costs = vec![1.0f32; ds.train.n_features];
-        let c = avg_acquisition_cost(&rf, &ds.test, &costs);
+        let c = avg_acquisition_cost(&arena, &ds.test, &costs);
         // Can't exceed the number of features when each costs 1.
         assert!(c <= ds.train.n_features as f64);
         assert!(c > 0.0);
+    }
+
+    #[test]
+    fn arena_acquisition_cost_matches_sparse_walk() {
+        // The arena walk skips dead padding slots, so it must charge
+        // exactly what the original sparse-tree walk charged.
+        let ds = generate(&DatasetProfile::demo(), 75);
+        let rf = RandomForest::fit(&ds.train, &ForestParams::small(), 5);
+        let arena = ForestArena::from_forest(&rf, rf.max_depth());
+        let costs: Vec<f32> = (0..ds.train.n_features).map(|f| 1.0 + f as f32 * 0.1).collect();
+        let via_arena = avg_acquisition_cost(&arena, &ds.test, &costs);
+
+        let mut total = 0.0f64;
+        let mut seen = vec![false; rf.n_features];
+        for i in 0..ds.test.len() {
+            let x = ds.test.row(i);
+            seen.iter_mut().for_each(|s| *s = false);
+            for tree in &rf.trees {
+                let mut idx = 0usize;
+                loop {
+                    let n = &tree.nodes[idx];
+                    if n.is_leaf() {
+                        break;
+                    }
+                    let f = n.feature as usize;
+                    if !seen[f] {
+                        seen[f] = true;
+                        total += costs[f] as f64;
+                    }
+                    idx = if x[f] <= n.threshold {
+                        n.left as usize
+                    } else {
+                        n.left as usize + 1
+                    };
+                }
+            }
+        }
+        let via_sparse = total / ds.test.len() as f64;
+        assert!(
+            (via_arena - via_sparse).abs() < 1e-9,
+            "arena {via_arena} vs sparse {via_sparse}"
+        );
+    }
+
+    #[test]
+    fn budgeted_arena_serves_chosen_forest() {
+        let ds = generate(&DatasetProfile::demo(), 76);
+        let costs = vec![1.0f32; ds.train.n_features];
+        let b = fit_budgeted(&ds.train, &ForestParams::small(), &costs, f64::INFINITY, 6);
+        let probs = b.predict_proba_batch(&ds.test.x, ds.test.len());
+        for i in (0..ds.test.len()).step_by(9) {
+            let reference = b.forest.predict_proba(ds.test.row(i));
+            assert_eq!(probs.row(i), &reference[..], "row {i}");
+        }
     }
 }

@@ -10,7 +10,7 @@ use crate::data::Split;
 use crate::dt::builder::{fit_tree, TreeParams};
 use crate::dt::{DecisionTree, FlatTree};
 use crate::util::rng::Rng;
-use crate::util::threadpool::par_map;
+use crate::util::threadpool::{num_threads, par_map, par_map_with};
 
 /// Aggregation rule across trees.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -59,13 +59,29 @@ pub struct RandomForest {
 impl RandomForest {
     /// Train with bagging; trees are fit in parallel, each from a forked
     /// deterministic RNG stream, so results are reproducible regardless of
-    /// thread count.
+    /// thread count. Uses the pool's default thread count (the
+    /// `FOG_THREADS` env var is consulted only here, at pool
+    /// construction); use [`RandomForest::fit_with_threads`] to pin an
+    /// explicit count.
     pub fn fit(data: &Split, params: &ForestParams, seed: u64) -> RandomForest {
+        Self::fit_with_threads(data, params, seed, num_threads())
+    }
+
+    /// [`RandomForest::fit`] with an explicit training thread count —
+    /// the deterministic-parallelism tests pass it directly instead of
+    /// mutating `FOG_THREADS` process-wide (which races the parallel test
+    /// harness).
+    pub fn fit_with_threads(
+        data: &Split,
+        params: &ForestParams,
+        seed: u64,
+        n_threads: usize,
+    ) -> RandomForest {
         assert!(params.n_trees > 0);
         assert!(!data.is_empty());
         let mut root = Rng::new(seed);
         let tree_seeds: Vec<u64> = (0..params.n_trees).map(|_| root.next_u64()).collect();
-        let trees = par_map(params.n_trees, |t| {
+        let trees = par_map_with(n_threads, params.n_trees, |t| {
             let mut rng = Rng::new(tree_seeds[t]);
             let samples: Vec<usize> = if params.bootstrap {
                 rng.bootstrap(data.len())
@@ -187,16 +203,19 @@ mod tests {
 
     #[test]
     fn deterministic_across_thread_counts() {
+        // Explicit thread counts — no process-wide FOG_THREADS mutation,
+        // which raced the other tests running in parallel.
         let ds = generate(&DatasetProfile::demo(), 62);
         let rf1 = RandomForest::fit(&ds.train, &ForestParams::small(), 7);
-        std::env::set_var("FOG_THREADS", "1");
-        let rf2 = RandomForest::fit(&ds.train, &ForestParams::small(), 7);
-        std::env::remove_var("FOG_THREADS");
-        for (a, b) in rf1.trees.iter().zip(&rf2.trees) {
-            assert_eq!(a.nodes.len(), b.nodes.len());
-            for (na, nb) in a.nodes.iter().zip(&b.nodes) {
-                assert_eq!(na.feature, nb.feature);
-                assert_eq!(na.threshold, nb.threshold);
+        for n_threads in [1, 2, 5] {
+            let rf2 =
+                RandomForest::fit_with_threads(&ds.train, &ForestParams::small(), 7, n_threads);
+            for (a, b) in rf1.trees.iter().zip(&rf2.trees) {
+                assert_eq!(a.nodes.len(), b.nodes.len());
+                for (na, nb) in a.nodes.iter().zip(&b.nodes) {
+                    assert_eq!(na.feature, nb.feature);
+                    assert_eq!(na.threshold, nb.threshold);
+                }
             }
         }
     }

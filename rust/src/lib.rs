@@ -46,11 +46,20 @@
 //!
 //! * [`api`] — the unified batch-first `Classifier`/`Estimator` interface,
 //!   `ModelSpec` builder and name registry described above.
+//! * [`exec`] — the SoA compiled-forest engine: [`exec::ForestArena`]
+//!   packs every flat tree into contiguous level-major `feat`/`thr`/`leaf`
+//!   arrays (per-tree and per-grove offset tables), and
+//!   [`exec::BatchPlan`] traverses sample tiles level-synchronously —
+//!   the software twin of the hardware grove PE. Every tree-based
+//!   prediction path (`RfModel`, the FoG grove ring, budgeted forests,
+//!   the coordinator's grove workers) runs on an arena; op counts and
+//!   VMEM/sparse-storage accounting derive from its layout.
 //! * [`dt`] — CART decision-tree training and a flattened complete-tree
 //!   representation shared with the JAX/Pallas compile path.
 //! * [`forest`] — bagged random forests (incl. feature-budgeted training).
 //! * [`fog`] — the paper's contribution: grove construction (Algorithm 1)
-//!   and confidence-gated hop evaluation (Algorithm 2).
+//!   and confidence-gated hop evaluation (Algorithm 2); groves are
+//!   disjoint tree-range slices of one shared arena.
 //! * [`uarch`] — a cycle-level simulator of the grove micro-architecture
 //!   (data queue with `$fr`/`$bk` pointers, DQC, PE, req/ack handshake).
 //! * [`energy`] — a 40 nm PPA library, an Aladdin-style design-space
@@ -77,6 +86,7 @@ pub mod coordinator;
 pub mod data;
 pub mod dt;
 pub mod energy;
+pub mod exec;
 pub mod experiments;
 pub mod fog;
 pub mod forest;

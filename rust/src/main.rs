@@ -194,14 +194,10 @@ fn cmd_serve(args: &Args, seed: u64) {
     let mut fog = FieldOfGroves::from_forest_shuffled(&s.rf, per_grove, Some(seed));
     let backend = match args.get_or("backend", "native") {
         "pjrt" => {
-            // Artifact shapes are padded to fixed depths; repad to match.
+            // Artifact shapes are padded to fixed depths; repad to match
+            // (rebuilds the shared arena at the deeper padding).
             let depth = args.get_usize("artifact-depth", 6);
-            for g in &mut fog.groves {
-                for t in &mut g.trees {
-                    *t = t.repad(depth.max(t.depth));
-                }
-            }
-            fog.depth = fog.groves.iter().map(|g| g.depth()).max().unwrap();
+            fog = fog.repad(depth);
             Backend::Pjrt { artifacts_dir: fog::runtime::artifacts::default_dir() }
         }
         _ => Backend::Native,
@@ -251,7 +247,10 @@ fn cmd_serve_model(args: &Args, model_name: &str, seed: u64) {
     };
     let mut server = ModelServer::start(Arc::clone(&model), &cfg);
     let t0 = std::time::Instant::now();
-    let responses = server.classify(&data.test.x);
+    let responses = server.classify(&data.test.x).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
     let wall = t0.elapsed();
     let preds: Vec<usize> = responses.iter().map(|r| r.label).collect();
     let acc = fog::util::stats::accuracy(&preds, &data.test.y);

@@ -273,7 +273,7 @@ mod tests {
         // Re-pad grove trees to the artifact depth.
         let grove = &fog.groves[0];
         let repadded: Vec<crate::dt::FlatTree> =
-            grove.trees.iter().map(|t| t.repad(meta.depth)).collect();
+            grove.trees().iter().map(|t| t.repad(meta.depth)).collect();
         let mut bundle = FlatBundle::new(repadded);
         sanitize_inf(&mut bundle);
         let exec = GroveStepExec::new(&rt, &manifest, &meta, &bundle).unwrap();
@@ -303,7 +303,7 @@ mod tests {
         let meta = manifest.get("grove_step_demo").unwrap().clone();
         let rt = Runtime::cpu().unwrap();
         let repadded: Vec<crate::dt::FlatTree> =
-            fog.groves[0].trees.iter().map(|t| t.repad(meta.depth)).collect();
+            fog.groves[0].trees().iter().map(|t| t.repad(meta.depth)).collect();
         let mut bundle = FlatBundle::new(repadded);
         sanitize_inf(&mut bundle);
         let exec = GroveStepExec::new(&rt, &manifest, &meta, &bundle).unwrap();

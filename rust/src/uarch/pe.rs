@@ -5,7 +5,10 @@
 //! exactly that: trees are grouped onto `parallelism` physical tree
 //! engines; each engine walks one level in [`CYCLES_PER_LEVEL`] cycles
 //! (node fetch → compare → next-address). The functional result is
-//! delegated to the same [`Grove`] the software path uses.
+//! delegated to the same [`Grove`] the software path uses — an arena
+//! slice since the `exec` refactor, so comparator-op counts
+//! (`Grove::ops_per_eval` = trees × padded depth) derive from the arena
+//! layout and are numerically identical to the per-tree accounting.
 
 use crate::fog::confidence::max_diff;
 use crate::fog::Grove;

@@ -7,8 +7,11 @@
 //! percent of optimal and keeps the substrate tiny and allocation-free on
 //! the hot path.
 
-/// Number of worker threads to use: respects `FOG_THREADS`, defaults to the
-/// available parallelism, and is clamped to `[1, 64]`.
+/// Default worker-thread count at pool construction: respects
+/// `FOG_THREADS`, falls back to the available parallelism, and is clamped
+/// to `[1, 64]`. Callers that need a *specific* count (determinism tests,
+/// benchmark pinning) pass it explicitly to [`par_map_with`] instead of
+/// mutating the env var — env mutation races the parallel test harness.
 pub fn num_threads() -> usize {
     if let Ok(s) = std::env::var("FOG_THREADS") {
         if let Ok(n) = s.parse::<usize>() {
@@ -18,14 +21,27 @@ pub fn num_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(1, 64)
 }
 
-/// Parallel map over `0..n`: calls `f(i)` for every index and collects the
-/// results in order. Falls back to a sequential loop for small `n`.
+/// Parallel map over `0..n` with the default thread count (see
+/// [`num_threads`]): calls `f(i)` for every index and collects the
+/// results in order.
 pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    let workers = num_threads().min(n.max(1));
+    par_map_with(num_threads(), n, f)
+}
+
+/// [`par_map`] with an explicit worker count (clamped to `[1, 64]`).
+/// Results are identical for every worker count — chunking only changes
+/// which thread computes which index. Falls back to a sequential loop for
+/// small `n`.
+pub fn par_map_with<T, F>(n_threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = n_threads.clamp(1, 64).min(n.max(1));
     if workers <= 1 || n < 2 {
         return (0..n).map(&f).collect();
     }
@@ -44,6 +60,35 @@ where
         }
     });
     out.into_iter().map(|o| o.expect("worker panicked")).collect()
+}
+
+/// Parallel for-each over row-aligned chunks of a row-major buffer:
+/// splits `data` (rows of `row_len` elements) into at most
+/// `num_threads()` contiguous chunks whose row counts are multiples of
+/// `rows_per_block` (the last chunk may be a partial block), and calls
+/// `f(first_row, chunk)` on each from its own thread. Lets a tiled
+/// kernel write straight into one preallocated output while each worker
+/// reuses its scratch across all blocks of its chunk.
+pub fn par_row_chunks_mut<T, F>(data: &mut [T], row_len: usize, rows_per_block: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(row_len > 0, "row_len = 0");
+    debug_assert_eq!(data.len() % row_len, 0, "ragged row buffer");
+    let n_rows = data.len() / row_len;
+    if n_rows == 0 {
+        return;
+    }
+    let block = rows_per_block.max(1);
+    let workers = num_threads().min(n_rows.div_ceil(block));
+    let chunk_rows = n_rows.div_ceil(workers).div_ceil(block) * block;
+    std::thread::scope(|s| {
+        for (w, chunk) in data.chunks_mut(chunk_rows * row_len).enumerate() {
+            let f = &f;
+            s.spawn(move || f(w * chunk_rows, chunk));
+        }
+    });
 }
 
 /// Parallel for-each over mutable chunks of a slice: splits `data` into
@@ -83,6 +128,39 @@ mod tests {
     fn par_map_empty_and_one() {
         assert_eq!(par_map(0, |i| i), Vec::<usize>::new());
         assert_eq!(par_map(1, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn par_map_with_explicit_counts_agree() {
+        let seq: Vec<usize> = (0..257).map(|i| i * 3).collect();
+        for workers in [1, 2, 3, 64, 1000] {
+            assert_eq!(par_map_with(workers, 257, |i| i * 3), seq, "workers {workers}");
+        }
+        assert_eq!(par_map_with(0, 4, |i| i), vec![0, 1, 2, 3]); // clamped to 1
+    }
+
+    #[test]
+    fn par_row_chunks_mut_covers_all_rows() {
+        // 53 rows of 3, blocks of 8 rows: chunk boundaries must stay
+        // block-aligned and every row must be visited exactly once.
+        let mut v = vec![0usize; 53 * 3];
+        par_row_chunks_mut(&mut v, 3, 8, |first_row, chunk| {
+            assert_eq!(first_row % 8, 0, "chunk start not block-aligned");
+            assert_eq!(chunk.len() % 3, 0, "chunk not row-aligned");
+            for (j, x) in chunk.iter_mut().enumerate() {
+                *x = first_row * 3 + j + 1;
+            }
+        });
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i + 1);
+        }
+        // Degenerate shapes.
+        let mut empty: Vec<usize> = Vec::new();
+        par_row_chunks_mut(&mut empty, 4, 8, |_, _| panic!("no rows"));
+        let mut one = vec![0usize; 3];
+        par_row_chunks_mut(&mut one, 3, 1000, |r, c| {
+            assert_eq!((r, c.len()), (0, 3));
+        });
     }
 
     #[test]

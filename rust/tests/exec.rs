@@ -1,0 +1,166 @@
+//! Conformance tests for the `exec` arena engine: batch-tiled prediction
+//! through `ForestArena`/`BatchPlan` must be bit-identical (same argmax,
+//! probs within 1e-6 — in practice exact) to independent per-tree
+//! `FlatTree` traversal for every tree-based registry model
+//! (`rf`, `rf_prob`, `fog_opt`, `fog_max`).
+
+use fog::api::spec::forest_params_for;
+use fog::api::{Classifier, Estimator, FogModel, ModelSpec};
+use fog::data::synthetic::{generate, DatasetProfile};
+use fog::data::Dataset;
+use fog::dt::FlatTree;
+use fog::energy::model::ClassifierKind;
+use fog::fog::confidence::max_diff;
+use fog::forest::RandomForest;
+use fog::{FieldOfGroves, FogParams};
+
+fn data() -> Dataset {
+    generate(&DatasetProfile::demo(), 501)
+}
+
+/// Reference per-tree probability average, accumulated in the same order
+/// as the kernel (sum in tree order, scale once at the end).
+fn flat_prob_average(flats: &[FlatTree], x: &[f32], c: usize) -> Vec<f32> {
+    let mut acc = vec![0.0f32; c];
+    for t in flats {
+        for (a, &p) in acc.iter_mut().zip(t.predict_proba(x)) {
+            *a += p;
+        }
+    }
+    let inv = 1.0 / flats.len() as f32;
+    acc.iter_mut().for_each(|v| *v *= inv);
+    acc
+}
+
+/// Reference per-tree majority-vote fractions.
+fn flat_vote_fractions(flats: &[FlatTree], x: &[f32], c: usize) -> Vec<f32> {
+    let mut votes = vec![0.0f32; c];
+    for t in flats {
+        votes[t.predict(x)] += 1.0;
+    }
+    let inv = 1.0 / flats.len() as f32;
+    votes.iter_mut().for_each(|v| *v *= inv);
+    votes
+}
+
+fn assert_rows_match(name: &str, i: usize, got: &[f32], want: &[f32]) {
+    assert_eq!(
+        fog::util::argmax(got),
+        fog::util::argmax(want),
+        "{name} row {i}: argmax diverged ({got:?} vs {want:?})"
+    );
+    for (a, b) in got.iter().zip(want) {
+        assert!((a - b).abs() < 1e-6, "{name} row {i}: {a} vs {b}");
+    }
+}
+
+/// `rf` / `rf_prob` registry models: the arena batch path must equal
+/// per-tree traversal of the identically-trained forest, flattened.
+#[test]
+fn rf_registry_models_match_per_tree_flat_traversal() {
+    let ds = data();
+    let (f, c) = (ds.n_features(), ds.n_classes());
+    let seed = 42;
+    // Reference forest: `ModelSpec::fit` for the rf family is exactly
+    // `RandomForest::fit(data, forest_params_for(..), seed)`.
+    let rf = RandomForest::fit(&ds.train, &forest_params_for(f, c), seed);
+    let flats = rf.flatten(rf.max_depth());
+    let n = ds.test.len();
+
+    for (name, majority) in [("rf", true), ("rf_prob", false)] {
+        let model = ModelSpec::for_shape(name, f, c).unwrap().fit(&ds.train, seed);
+        let probs = model.predict_proba_batch(&ds.test.x, n);
+        let labels = model.predict_batch(&ds.test.x, n);
+        assert_eq!(probs.n_rows(), n);
+        for i in 0..n {
+            let x = ds.test.row(i);
+            let want = if majority {
+                flat_vote_fractions(&flats, x, c)
+            } else {
+                flat_prob_average(&flats, x, c)
+            };
+            assert_rows_match(name, i, probs.row(i), &want);
+            assert_eq!(labels[i], fog::util::argmax(&want), "{name} row {i}");
+        }
+    }
+}
+
+/// Replay Algorithm 2 with materialized per-grove `FlatTree`s and compare
+/// against the model's arena-backed batch path.
+fn check_fog_model(name: &str, model: &FogModel, ds: &Dataset) {
+    let c = ds.n_classes();
+    let n = ds.test.len();
+    let n_groves = model.fog.n_groves();
+    let grove_flats: Vec<Vec<FlatTree>> =
+        model.fog.groves.iter().map(|g| g.trees()).collect();
+    let probs = model.predict_proba_batch(&ds.test.x, n);
+    let labels = model.predict_batch(&ds.test.x, n);
+
+    for i in 0..n {
+        let x = ds.test.row(i);
+        let start = model.start_grove(x);
+        let mut prob = vec![0.0f32; c];
+        let mut norm = vec![0.0f32; c];
+        for j in 0..model.params.max_hops {
+            let g = (start + j) % n_groves;
+            let trees = &grove_flats[g];
+            let inv = 1.0 / trees.len() as f32;
+            for t in trees {
+                for (a, &p) in prob.iter_mut().zip(t.predict_proba(x)) {
+                    *a += p * inv;
+                }
+            }
+            let hinv = 1.0 / (j + 1) as f32;
+            for (nm, &p) in norm.iter_mut().zip(&prob) {
+                *nm = p * hinv;
+            }
+            if max_diff(&norm) >= model.params.threshold {
+                break;
+            }
+        }
+        assert_rows_match(name, i, probs.row(i), &norm);
+        assert_eq!(labels[i], fog::util::argmax(&norm), "{name} row {i}");
+    }
+}
+
+/// `fog_opt`-style operating point (confidence-gated hops) and `fog_max`
+/// (full circulation): arena hop traversal equals per-tree traversal.
+#[test]
+fn fog_models_match_per_tree_flat_traversal() {
+    let ds = data();
+    let (f, c) = (ds.n_features(), ds.n_classes());
+    let seed = 7;
+    let rf = RandomForest::fit(&ds.train, &forest_params_for(f, c), seed);
+    let field = FieldOfGroves::from_forest_shuffled(&rf, 2, Some(seed ^ 0x5EED));
+    let n_groves = field.n_groves();
+
+    let opt = FogModel::new(
+        field.clone(),
+        FogParams { threshold: 0.35, max_hops: n_groves, seed },
+        ClassifierKind::FogOpt,
+    );
+    check_fog_model("fog_opt", &opt, &ds);
+
+    let max = FogModel::fog_max(field, seed);
+    check_fog_model("fog_max", &max, &ds);
+}
+
+/// Batched, per-sample and registry-constructed predictions agree for
+/// every tree-based registry entry (the arena path is position- and
+/// tile-independent).
+#[test]
+fn tree_registry_batch_equals_per_sample() {
+    let ds = data();
+    for name in ["rf", "rf_prob", "fog_opt", "fog_max"] {
+        let model = ModelSpec::for_shape(name, ds.n_features(), ds.n_classes())
+            .unwrap()
+            .fast()
+            .fit(&ds.train, 11);
+        let n = ds.test.len();
+        let batch = model.predict_proba_batch(&ds.test.x, n);
+        for i in (0..n).step_by(7) {
+            let single = model.predict_proba(ds.test.row(i));
+            assert_eq!(batch.row(i), &single[..], "{name} row {i}");
+        }
+    }
+}

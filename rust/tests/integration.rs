@@ -113,17 +113,12 @@ fn pjrt_serving_agrees_with_native_when_artifacts_exist() {
         bootstrap: true,
     };
     let rf = RandomForest::fit(&ds.train, &params, 5);
-    let mut fog = FieldOfGroves::from_forest_shuffled(&rf, 4, Some(5));
+    let fog = FieldOfGroves::from_forest_shuffled(&rf, 4, Some(5));
     if fog.depth > 6 {
         eprintln!("skipping: trained deeper than artifact");
         return;
     }
-    for g in &mut fog.groves {
-        for t in &mut g.trees {
-            *t = t.repad(6);
-        }
-    }
-    fog.depth = 6;
+    let fog = fog.repad(6);
 
     let run = |backend: Backend| {
         let mut server = FogServer::start(
