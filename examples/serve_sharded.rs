@@ -1,0 +1,79 @@
+//! Sharded serving demo: N replicas of one registry model behind the
+//! shared `ShardRouter` and a quantized `ProbCache` — the scale-out
+//! counterpart of `serve_fog.rs`. The second measured round replays the
+//! same traffic so the cache hit rate is visible; at quantization step 0
+//! every hit is byte-identical to cold evaluation.
+//!
+//! Run: `cargo run --release --example serve_sharded -- \
+//!        [--model rf] [--replicas 4] [--router least_loaded] \
+//!        [--cache-quant 0.0] [--rounds 3] [--dataset demo]`
+
+use fog::api::{Classifier, Estimator, ModelSpec, REGISTRY};
+use fog::coordinator::{RouterPolicy, ShardedServer, ShardedServerConfig};
+use fog::data::synthetic::{generate, DatasetProfile};
+use fog::util::cli::Args;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let profile = DatasetProfile::by_name(args.get_or("dataset", "demo")).expect("dataset");
+    let model_name = args.get_or("model", "rf");
+    let router = RouterPolicy::parse(args.get_or("router", "least_loaded"))
+        .expect("router: random | round_robin | least_loaded");
+
+    let spec = ModelSpec::for_shape(model_name, profile.n_features, profile.n_classes)
+        .unwrap_or_else(|| panic!("unknown model '{model_name}'; valid: {}", REGISTRY.join(", ")))
+        .with_replicas(args.get_usize("replicas", 4))
+        .with_router(router)
+        .with_cache_quant(args.get_f64("cache-quant", 0.0) as f32);
+
+    eprintln!("training {model_name} on {} ...", profile.name);
+    let data = generate(&profile, 42);
+    let model: Arc<dyn Classifier> = Arc::from(spec.fit(&data.train, 42));
+    let offline_acc = model.accuracy(&data.test);
+
+    // Every replica clones the Arc handle: one trained model (and for
+    // tree families one ForestArena) however many replicas serve it.
+    let cfg = ShardedServerConfig::for_serving(&spec.serving);
+    let mut server = ShardedServer::start(Arc::clone(&model), &cfg);
+
+    let rounds = args.get_usize("rounds", 3).max(1);
+    let t0 = std::time::Instant::now();
+    let mut responses = Vec::new();
+    for _ in 0..rounds {
+        responses = server.classify(&data.test.x).expect("aligned batch");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let n_total = responses.len() * rounds;
+
+    let preds: Vec<usize> = responses.iter().map(|r| r.label).collect();
+    let acc = fog::util::stats::accuracy(&preds, &data.test.y);
+    let snap = server.snapshot();
+    println!(
+        "model        : {model_name} x{} replicas ({})",
+        server.n_replicas(),
+        cfg.router.label()
+    );
+    println!("requests     : {n_total} ({} per round x {rounds})", responses.len());
+    println!("accuracy     : {:.1}% served vs {:.1}% offline", acc * 100.0, offline_acc * 100.0);
+    println!("avg batch    : {:.1}", snap.avg_batch_size());
+    println!(
+        "cache        : {:.1}% hit rate ({} hits / {} misses, quant {})",
+        snap.cache_hit_rate() * 100.0,
+        snap.cache_hits,
+        snap.cache_misses,
+        spec.serving.cache_quant.unwrap_or(0.0)
+    );
+    println!("throughput   : {:.0} req/s", n_total as f64 / wall);
+    for r in 0..server.n_replicas() {
+        let rs = server.replica_metrics(r).snapshot();
+        println!(
+            "replica {r}    : {} responses, {} batches ({:.1} avg), {:.0} resp/s",
+            rs.responses,
+            rs.batches,
+            rs.avg_batch_size(),
+            rs.responses as f64 / wall
+        );
+    }
+    server.shutdown();
+}

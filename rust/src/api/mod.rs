@@ -29,7 +29,7 @@ pub mod models;
 pub mod spec;
 
 pub use models::{measured_fog_stats, measured_rf_stats, FogModel, RfModel};
-pub use spec::{FogSpec, ModelConfig, ModelSpec, REGISTRY};
+pub use spec::{FogSpec, ModelConfig, ModelSpec, RouterPolicy, ServingSpec, REGISTRY};
 
 use crate::data::Split;
 use crate::energy::blocks::{AreaBlocks, EnergyBlocks};

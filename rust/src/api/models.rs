@@ -17,6 +17,7 @@ use crate::fog::{FieldOfGroves, FogParams};
 use crate::forest::{RandomForest, VoteMode};
 use crate::util::rng::Rng;
 use crate::util::threadpool::par_map;
+use std::sync::Arc;
 
 /// Bytes of sparse node storage the hardware provisions: 6 B per node
 /// (weight + feature offset + control, §3.2.2 "Reprogrammability") plus
@@ -129,23 +130,28 @@ impl Classifier for FlatTree {
 /// aggregation mode — the §3.2.1 contrast is part of the model identity
 /// (`"rf"` = majority vote, `"rf_prob"` = probability averaging).
 ///
-/// The forest is packed into a [`ForestArena`] at construction; both vote
-/// modes serve batches through the tiled level-synchronous
-/// [`BatchPlan`] kernel. The sparse CART trees are retained for training
-/// statistics (traversed-depth and node-storage accounting, which charge
-/// real nodes rather than complete-tree padding).
+/// The forest is packed into a shared [`ForestArena`] at construction;
+/// both vote modes serve batches through the tiled level-synchronous
+/// [`BatchPlan`] kernel. The arena sits behind an `Arc` so cloning the
+/// model — and in particular running it on every replica of a
+/// [`ShardedServer`](crate::coordinator::ShardedServer) — shares the one
+/// packed allocation instead of copying trees (same discipline as
+/// [`FieldOfGroves`], whose groves all slice one arena). The sparse CART
+/// trees are retained for training statistics (traversed-depth and
+/// node-storage accounting, which charge real nodes rather than
+/// complete-tree padding).
 #[derive(Clone, Debug)]
 pub struct RfModel {
     /// Read-only: the arena is packed from this forest at construction,
     /// so in-place mutation would silently desync the serving path.
     rf: RandomForest,
     pub mode: VoteMode,
-    arena: ForestArena,
+    arena: Arc<ForestArena>,
 }
 
 impl RfModel {
     pub fn new(rf: RandomForest, mode: VoteMode) -> RfModel {
-        let arena = ForestArena::from_forest(&rf, rf.max_depth());
+        let arena = Arc::new(ForestArena::from_forest(&rf, rf.max_depth()));
         RfModel { rf, mode, arena }
     }
 
@@ -154,8 +160,9 @@ impl RfModel {
         &self.rf
     }
 
-    /// The packed SoA forest serving this model's batch path.
-    pub fn arena(&self) -> &ForestArena {
+    /// The shared packed SoA forest serving this model's batch path
+    /// (clones of this model — replica handles — share it by pointer).
+    pub fn arena(&self) -> &Arc<ForestArena> {
         &self.arena
     }
 
@@ -380,6 +387,15 @@ mod tests {
             (Classifier::accuracy(&model, &ds.test) - direct).abs() < 0.05,
             "majority-vote accuracy drifted beyond tie mass"
         );
+    }
+
+    #[test]
+    fn rf_model_clones_share_one_arena() {
+        // Replica handles must share the packed forest, not copy it.
+        let (rf, _) = setup();
+        let model = RfModel::new(rf, VoteMode::ProbAverage);
+        let replica = model.clone();
+        assert!(Arc::ptr_eq(model.arena(), replica.arena()), "clone copied the arena");
     }
 
     #[test]

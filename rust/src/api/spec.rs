@@ -54,11 +54,81 @@ pub enum ModelConfig {
     Cnn(CnnParams),
 }
 
+/// Target-selection policy for the serving tiers: the start grove of the
+/// FoG ring, or the replica of a sharded server. Defined here (not in
+/// `coordinator`) so the model registry stays below the serving tier in
+/// the layering; `coordinator::router` re-exports it next to the
+/// [`ShardRouter`](crate::coordinator::ShardRouter) that interprets it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Per-input deterministic random stream (Algorithm 2 line 3).
+    Random,
+    /// Strict rotation.
+    RoundRobin,
+    /// Fewest in-flight items (greedy least-loaded, rotating tie-break).
+    LeastLoaded,
+}
+
+impl RouterPolicy {
+    /// CLI / BENCH_JSON label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            RouterPolicy::Random => "random",
+            RouterPolicy::RoundRobin => "round_robin",
+            RouterPolicy::LeastLoaded => "least_loaded",
+        }
+    }
+
+    /// Parse a CLI spelling (`random | round_robin | least_loaded`, with
+    /// `rr`/`least` shorthands).
+    pub fn parse(s: &str) -> Option<RouterPolicy> {
+        match s {
+            "random" => Some(RouterPolicy::Random),
+            "round_robin" | "round-robin" | "rr" => Some(RouterPolicy::RoundRobin),
+            "least_loaded" | "least-loaded" | "least" => Some(RouterPolicy::LeastLoaded),
+            _ => None,
+        }
+    }
+}
+
+/// Serving-tier knobs carried next to the training config: how many
+/// replicas of the trained model a
+/// [`ShardedServer`](crate::coordinator::ShardedServer) runs, how
+/// replicas are selected, and whether/how coarsely results are cached.
+/// Training ignores these; `fog serve` and the sharded examples read
+/// them via
+/// [`ShardedServerConfig::for_serving`](crate::coordinator::ShardedServerConfig::for_serving).
+#[derive(Clone, Copy, Debug)]
+pub struct ServingSpec {
+    /// Model replicas behind the shared router (1 = unsharded).
+    pub replicas: usize,
+    /// Replica-selection policy.
+    pub router: RouterPolicy,
+    /// Quantization step of the result-cache keys; `None` disables
+    /// caching, `Some(0.0)` caches with exact-bit keys.
+    pub cache_quant: Option<f32>,
+    /// Total result-cache entry budget.
+    pub cache_capacity: usize,
+}
+
+impl Default for ServingSpec {
+    fn default() -> Self {
+        ServingSpec {
+            replicas: 1,
+            router: RouterPolicy::LeastLoaded,
+            cache_quant: None,
+            cache_capacity: 4096,
+        }
+    }
+}
+
 /// A named, buildable model configuration — the registry entry.
 #[derive(Clone, Debug)]
 pub struct ModelSpec {
     pub name: String,
     pub config: ModelConfig,
+    /// Serving-tier knobs (replicas / router / cache); see [`ServingSpec`].
+    pub serving: ServingSpec,
 }
 
 // --- hyper-parameter scaling (shared with `experiments::suite`) --------
@@ -115,7 +185,7 @@ pub fn cnn_params_for(n_features: usize) -> CnnParams {
 
 impl ModelSpec {
     pub fn new(name: impl Into<String>, config: ModelConfig) -> ModelSpec {
-        ModelSpec { name: name.into(), config }
+        ModelSpec { name: name.into(), config, serving: ServingSpec::default() }
     }
 
     /// Registry lookup with hyper-parameters scaled to the dataset shape
@@ -185,6 +255,34 @@ impl ModelSpec {
         if let ModelConfig::Fog(s) = &mut self.config {
             s.threshold = Some(threshold);
         }
+        self
+    }
+
+    // --- serving knobs (read by `fog serve` / the sharded tier) --------
+
+    /// Serve this model through `n` replicas (clamped to ≥ 1).
+    pub fn with_replicas(mut self, n: usize) -> Self {
+        self.serving.replicas = n.max(1);
+        self
+    }
+
+    /// Replica-selection policy for the sharded tier.
+    pub fn with_router(mut self, policy: RouterPolicy) -> Self {
+        self.serving.router = policy;
+        self
+    }
+
+    /// Enable the serving result cache with the given key-quantization
+    /// step (0.0 = exact-bit keys; hits are byte-identical to cold
+    /// evaluation).
+    pub fn with_cache_quant(mut self, step: f32) -> Self {
+        self.serving.cache_quant = Some(step.max(0.0));
+        self
+    }
+
+    /// Result-cache entry budget (0 disables caching outright).
+    pub fn with_cache_capacity(mut self, capacity: usize) -> Self {
+        self.serving.cache_capacity = capacity;
         self
     }
 
@@ -311,6 +409,25 @@ mod tests {
             }
             other => panic!("wrong config {other:?}"),
         }
+    }
+
+    #[test]
+    fn serving_knobs_apply() {
+        let spec = ModelSpec::by_name("rf")
+            .unwrap()
+            .with_replicas(4)
+            .with_router(RouterPolicy::RoundRobin)
+            .with_cache_quant(0.25)
+            .with_cache_capacity(128);
+        assert_eq!(spec.serving.replicas, 4);
+        assert_eq!(spec.serving.router, RouterPolicy::RoundRobin);
+        assert_eq!(spec.serving.cache_quant, Some(0.25));
+        assert_eq!(spec.serving.cache_capacity, 128);
+        // Defaults: unsharded, no cache — training is never affected.
+        let plain = ModelSpec::by_name("rf").unwrap();
+        assert_eq!(plain.serving.replicas, 1);
+        assert!(plain.serving.cache_quant.is_none());
+        assert_eq!(ModelSpec::by_name("rf").unwrap().with_replicas(0).serving.replicas, 1);
     }
 
     #[test]

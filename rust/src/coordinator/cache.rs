@@ -1,0 +1,309 @@
+//! [`ProbCache`] — a bounded, sharded LRU cache of probability rows
+//! keyed by quantized feature vectors.
+//!
+//! The paper's headline metric is energy per classification; a serving
+//! deployment in front of the accelerator can spend *zero* grove energy
+//! on a repeated (or near-repeated) input by answering from a cache of
+//! recent [`ProbMatrix`](crate::api::ProbMatrix) rows. Keys are the
+//! feature vector quantized at a configurable step:
+//!
+//! * **step 0** — exact-hit semantics: the key is the raw f32 bit
+//!   pattern, so a hit returns byte-identical results to cold evaluation
+//!   (the conformance tests pin this).
+//! * **step q > 0** — each feature is bucketed to `round(v / q)`; nearby
+//!   inputs share a bucket and the cached row is an approximation, the
+//!   serving-tier analogue of the paper's accuracy-for-energy knob
+//!   (coarser buckets = more hits = fewer grove evaluations per answer).
+//!
+//! The cache is sharded by key hash: each shard is an independently
+//! locked LRU map, so concurrent worker threads filling completed
+//! batches contend only 1/N of the time. Eviction is least-recently-used
+//! within a shard (a recency tick bumped on every hit).
+
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Cache configuration carried by the sharded-server config.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheConfig {
+    /// Total entry budget across every shard (0 disables the cache).
+    pub capacity: usize,
+    /// Lock shards (clamped to `capacity`).
+    pub n_shards: usize,
+    /// Feature quantization step; 0.0 = exact bit-pattern keys.
+    pub quant_step: f32,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig { capacity: 4096, n_shards: 8, quant_step: 0.0 }
+    }
+}
+
+/// A quantized feature vector plus its precomputed hash. Equality
+/// compares the full quantized vector, so hash collisions can never
+/// return another input's row.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CacheKey {
+    quant: Vec<u64>,
+    hash: u64,
+}
+
+impl Hash for CacheKey {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        state.write_u64(self.hash);
+    }
+}
+
+/// Bucket codes beyond this magnitude are clamped so the tag-shifted
+/// code below stays injective (any practical bucket count is far
+/// smaller; beyond it the approximation merely coarsens).
+const MAX_BUCKET: f32 = 1e18;
+
+/// Quantize one feature value at `step` (0.0 = exact bit pattern).
+/// Finite values bucket to `round(v / step)`; non-finite values always
+/// key by their exact bit pattern (a NaN must never share a bucket with
+/// real values — float→int casts saturate NaN to 0). The low bit tags
+/// which key space a code belongs to, so a finite bucket can never alias
+/// a bit-pattern key either.
+#[inline]
+fn quantize(v: f32, step: f32) -> u64 {
+    if step > 0.0 && v.is_finite() {
+        let code = (v / step).round().clamp(-MAX_BUCKET, MAX_BUCKET) as i64;
+        (code as u64) << 1
+    } else {
+        ((v.to_bits() as u64) << 1) | 1
+    }
+}
+
+struct Entry {
+    prob: Vec<f32>,
+    tick: u64,
+}
+
+#[derive(Default)]
+struct Shard {
+    map: HashMap<CacheKey, Entry>,
+    tick: u64,
+}
+
+/// Point-in-time cache occupancy/eviction counters (hit/miss accounting
+/// lives in the serving tier's [`Metrics`](super::Metrics)).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub entries: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+}
+
+/// The sharded LRU probability-row cache.
+pub struct ProbCache {
+    shards: Vec<Mutex<Shard>>,
+    per_shard_cap: usize,
+    quant_step: f32,
+    insertions: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl ProbCache {
+    pub fn new(cfg: &CacheConfig) -> ProbCache {
+        let n_shards = cfg.n_shards.clamp(1, cfg.capacity.max(1));
+        ProbCache {
+            shards: (0..n_shards).map(|_| Mutex::new(Shard::default())).collect(),
+            // Floor division so shard caps never sum above the configured
+            // total budget (n_shards ≤ capacity keeps this ≥ 1).
+            per_shard_cap: cfg.capacity / n_shards,
+            quant_step: cfg.quant_step,
+            insertions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn quant_step(&self) -> f32 {
+        self.quant_step
+    }
+
+    /// Quantize a feature row into its cache key (FNV-1a over the
+    /// per-feature bucket codes).
+    pub fn key(&self, row: &[f32]) -> CacheKey {
+        let quant: Vec<u64> = row.iter().map(|&v| quantize(v, self.quant_step)).collect();
+        let mut hash = 0xCBF29CE484222325u64;
+        for &q in &quant {
+            hash = (hash ^ q).wrapping_mul(0x100000001B3);
+        }
+        CacheKey { quant, hash }
+    }
+
+    fn shard(&self, key: &CacheKey) -> &Mutex<Shard> {
+        &self.shards[(key.hash % self.shards.len() as u64) as usize]
+    }
+
+    /// Look up a row, bumping its recency on a hit. Returns a clone of
+    /// the cached probability distribution.
+    pub fn get(&self, key: &CacheKey) -> Option<Vec<f32>> {
+        let mut shard = self.shard(key).lock().ok()?;
+        shard.tick += 1;
+        let tick = shard.tick;
+        let entry = shard.map.get_mut(key)?;
+        entry.tick = tick;
+        Some(entry.prob.clone())
+    }
+
+    /// Insert (or refresh) a computed row, evicting the shard's
+    /// least-recently-used entry when the shard is at capacity.
+    pub fn insert(&self, key: CacheKey, prob: Vec<f32>) {
+        if self.per_shard_cap == 0 {
+            return;
+        }
+        let Ok(mut shard) = self.shard(&key).lock() else { return };
+        shard.tick += 1;
+        let tick = shard.tick;
+        if !shard.map.contains_key(&key) && shard.map.len() >= self.per_shard_cap {
+            // Linear min-tick scan: shards are small (capacity /
+            // n_shards), so eviction stays cheap without an intrusive
+            // list.
+            if let Some(oldest) =
+                shard.map.iter().min_by_key(|(_, e)| e.tick).map(|(k, _)| k.clone())
+            {
+                shard.map.remove(&oldest);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.insertions.fetch_add(1, Ordering::Relaxed);
+        shard.map.insert(key, Entry { prob, tick });
+    }
+
+    /// Entries currently cached (sums shard occupancy; racy but exact
+    /// when writers are quiescent).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().map(|g| g.map.len()).unwrap_or(0)).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            entries: self.len() as u64,
+            insertions: self.insertions.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache(capacity: usize, quant_step: f32) -> ProbCache {
+        ProbCache::new(&CacheConfig { capacity, n_shards: 4, quant_step })
+    }
+
+    #[test]
+    fn exact_keys_roundtrip() {
+        let c = cache(64, 0.0);
+        let row = [1.0f32, -2.5, 0.0, 3.25];
+        let key = c.key(&row);
+        assert!(c.get(&key).is_none());
+        c.insert(key.clone(), vec![0.1, 0.9]);
+        assert_eq!(c.get(&key), Some(vec![0.1, 0.9]));
+        // A one-bit perturbation misses at step 0.
+        let mut near = row;
+        near[3] = f32::from_bits(near[3].to_bits() + 1);
+        assert!(c.get(&c.key(&near)).is_none());
+    }
+
+    #[test]
+    fn quantized_keys_bucket_nearby_inputs() {
+        let c = cache(64, 0.5);
+        let key_a = c.key(&[1.0, 2.0]);
+        let key_b = c.key(&[1.1, 2.1]); // same 0.5-wide buckets
+        let key_far = c.key(&[1.4, 2.0]); // 1.4/0.5 rounds to 3, not 2
+        assert_eq!(key_a, key_b);
+        assert_ne!(key_a, key_far);
+        c.insert(key_a, vec![1.0]);
+        assert_eq!(c.get(&key_b), Some(vec![1.0]));
+        assert!(c.get(&key_far).is_none());
+    }
+
+    #[test]
+    fn capacity_is_bounded_and_lru_evicts() {
+        let c = ProbCache::new(&CacheConfig { capacity: 8, n_shards: 1, quant_step: 0.0 });
+        for i in 0..32 {
+            c.insert(c.key(&[i as f32]), vec![i as f32]);
+        }
+        assert_eq!(c.len(), 8);
+        assert_eq!(c.stats().evictions, 24);
+        // The most recent inserts survive.
+        assert!(c.get(&c.key(&[31.0f32])).is_some());
+        assert!(c.get(&c.key(&[0.0f32])).is_none());
+        // A get refreshes recency: 24 stays alive through 8 more inserts.
+        assert!(c.get(&c.key(&[24.0f32])).is_some());
+        for i in 100..107 {
+            c.insert(c.key(&[i as f32]), vec![0.0]);
+        }
+        assert!(c.get(&c.key(&[24.0f32])).is_some(), "refreshed entry was evicted");
+    }
+
+    #[test]
+    fn hash_collisions_cannot_alias() {
+        // Equality is the full quantized vector, so even a forced hash
+        // collision cannot return another input's row.
+        let a = CacheKey { quant: vec![1, 2], hash: 7 };
+        let b = CacheKey { quant: vec![2, 1], hash: 7 };
+        assert_ne!(a, b);
+        let c = cache(16, 0.0);
+        c.insert(a.clone(), vec![0.25]);
+        c.insert(b.clone(), vec![0.75]);
+        assert_eq!(c.get(&a), Some(vec![0.25]));
+        assert_eq!(c.get(&b), Some(vec![0.75]));
+    }
+
+    #[test]
+    fn non_finite_values_never_alias_real_buckets() {
+        // NaN would saturate to bucket 0 under a bare float→int cast and
+        // answer with a cached near-zero row; it must key by bit pattern,
+        // and the tag bit must keep bit-pattern keys disjoint from every
+        // finite bucket (INFINITY's bits are 2139095040 — a reachable
+        // bucket index for finite inputs at a fine step).
+        let c = cache(16, 0.5);
+        let zeroish = c.key(&[0.1f32, 0.0]);
+        assert_ne!(c.key(&[f32::NAN, 0.0]), zeroish);
+        assert_ne!(c.key(&[f32::INFINITY, 0.0]), zeroish);
+        assert_ne!(c.key(&[f32::INFINITY, 0.0]), c.key(&[f32::NEG_INFINITY, 0.0]));
+        c.insert(zeroish, vec![0.9, 0.1]);
+        assert!(c.get(&c.key(&[f32::NAN, 0.0])).is_none());
+        // Cross-space aliasing probe: a finite value whose bucket index
+        // equals INFINITY's bit pattern must still key differently.
+        let fine = cache(16, 1e-3);
+        let bucket_of_inf_bits = f32::INFINITY.to_bits() as f32 * 1e-3;
+        assert_ne!(
+            fine.key(&[bucket_of_inf_bits, 0.0]),
+            fine.key(&[f32::INFINITY, 0.0]),
+            "finite bucket aliased a non-finite bit-pattern key"
+        );
+    }
+
+    #[test]
+    fn shard_caps_never_exceed_total_budget() {
+        // capacity 9 over 8 shards must hold ≤ 9 entries, not ceil-split
+        // into 16.
+        let c = ProbCache::new(&CacheConfig { capacity: 9, n_shards: 8, quant_step: 0.0 });
+        for i in 0..64 {
+            c.insert(c.key(&[i as f32]), vec![0.0]);
+        }
+        assert!(c.len() <= 9, "over budget: {} entries", c.len());
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let c = ProbCache::new(&CacheConfig { capacity: 0, n_shards: 8, quant_step: 0.0 });
+        let key = c.key(&[1.0]);
+        c.insert(key.clone(), vec![1.0]);
+        assert!(c.get(&key).is_none());
+        assert!(c.is_empty());
+    }
+}

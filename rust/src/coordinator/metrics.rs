@@ -1,6 +1,14 @@
 //! Serving metrics: lock-free counters updated by workers, plus a
 //! latency reservoir the collector fills (reservoirs need no locks on
 //! the hot path because only the collector thread touches them).
+//!
+//! Paper anchor: these are the deployment-side observables of the §4.2
+//! energy claims — `avg_hops` is the Figure-5 x-axis driver (groves
+//! consulted per classification), and the cache hit/miss counters track
+//! how many classifications the sharded tier answered with *zero* grove
+//! evaluations. One `Metrics` instance serves a whole [`super::FogServer`]
+//! or [`super::ModelServer`]; a [`super::ShardedServer`] keeps one per
+//! replica plus a front-end instance for request/cache accounting.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -15,6 +23,10 @@ pub struct Metrics {
     pub batches: AtomicU64,
     /// Items evaluated (≥ responses; includes re-circulated items).
     pub evals: AtomicU64,
+    /// Requests answered straight from the probability cache.
+    pub cache_hits: AtomicU64,
+    /// Requests that missed the cache and went to a replica queue.
+    pub cache_misses: AtomicU64,
 }
 
 impl Metrics {
@@ -26,6 +38,8 @@ impl Metrics {
             forwards: self.forwards.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             evals: self.evals.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
         }
     }
 }
@@ -39,6 +53,8 @@ pub struct MetricsSnapshot {
     pub forwards: u64,
     pub batches: u64,
     pub evals: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
 }
 
 impl MetricsSnapshot {
@@ -55,6 +71,17 @@ impl MetricsSnapshot {
             0.0
         } else {
             self.evals as f64 / self.batches as f64
+        }
+    }
+
+    /// Fraction of cache lookups that hit (0.0 when caching is off or no
+    /// lookups happened yet).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let lookups = self.cache_hits + self.cache_misses;
+        if lookups == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / lookups as f64
         }
     }
 }
@@ -98,6 +125,15 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.avg_hops(), 2.5);
         assert_eq!(s.avg_batch_size(), 4.0);
+    }
+
+    #[test]
+    fn cache_hit_rate() {
+        let m = Metrics::default();
+        assert_eq!(m.snapshot().cache_hit_rate(), 0.0);
+        m.cache_hits.fetch_add(3, Ordering::Relaxed);
+        m.cache_misses.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(m.snapshot().cache_hit_rate(), 0.75);
     }
 
     #[test]

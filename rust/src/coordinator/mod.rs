@@ -17,19 +17,35 @@
 //!   handles are thread-affine). Python is never involved at runtime.
 //!
 //! Besides the paper-faithful grove ring ([`FogServer`]), the module
-//! provides a generic [`ModelServer`] that serves *any*
-//! [`crate::api::Classifier`] trait object — every registry model shares
-//! one batched serving path, the foundation for multi-backend routing.
+//! provides two generic serving tiers over the unified API:
+//!
+//! * [`ModelServer`] — one queue plus a worker pool serving *any*
+//!   [`crate::api::Classifier`] trait object with dynamic batching;
+//! * [`ShardedServer`] — the scale-out tier: N `ModelServer`-style
+//!   replicas of one model behind a shared [`ShardRouter`]
+//!   (`Random`/`RoundRobin`/`LeastLoaded` replica selection) and a
+//!   bounded [`ProbCache`] of probability rows keyed by quantized
+//!   feature vectors, checked before enqueue and filled on batch
+//!   completion.
+//!
+//! See `ARCHITECTURE.md` at the repo root for the full request-path
+//! diagram through router, replica queues, the batch kernel and the
+//! cache fill.
 
 pub mod accel;
+pub mod cache;
 pub mod messages;
 pub mod metrics;
 pub mod model_server;
 pub mod router;
 pub mod server;
+pub mod shard;
 pub mod worker;
 
+pub use cache::{CacheConfig, CacheStats, ProbCache};
 pub use messages::{Request, Response};
-pub use metrics::Metrics;
+pub use metrics::{Metrics, MetricsSnapshot};
 pub use model_server::{ModelServer, ModelServerConfig};
+pub use router::{Router, RouterPolicy, ShardRouter};
 pub use server::{Backend, FogServer, ServerConfig};
+pub use shard::{ShardedServer, ShardedServerConfig};

@@ -10,9 +10,17 @@
 //! row-major batches, and answer through the batch-first
 //! [`Classifier::predict_proba_batch`] hot path; there is no
 //! per-model-type dispatch anywhere in the serving loop.
+//!
+//! The queue-plus-worker-pool unit is factored out as a crate-internal
+//! `Replica`: a `ModelServer` is exactly one replica, and the
+//! scale-out [`super::ShardedServer`] runs N of them behind a
+//! [`super::ShardRouter`] and a [`super::ProbCache`] — same worker loop,
+//! same metrics, no duplicated batching logic.
 
+use super::cache::{CacheKey, ProbCache};
 use super::messages::Response;
 use super::metrics::Metrics;
+use super::router::ShardRouter;
 use crate::api::Classifier;
 use crate::util::error::Result;
 use std::sync::atomic::Ordering;
@@ -21,13 +29,17 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// One enqueued classification request.
-struct Job {
-    id: u64,
-    features: Vec<f32>,
-    enqueued: Instant,
+pub(crate) struct Job {
+    pub id: u64,
+    pub features: Vec<f32>,
+    pub enqueued: Instant,
+    /// Cache slot to fill with the computed row (sharded tier only; the
+    /// front-end quantizes once and the worker fills on completion).
+    pub cache_key: Option<CacheKey>,
 }
 
-/// Configuration for a generic model server.
+/// Configuration for a generic model server (per replica in the sharded
+/// tier).
 #[derive(Clone, Debug)]
 pub struct ModelServerConfig {
     /// Max items per evaluation batch.
@@ -48,22 +60,39 @@ impl Default for ModelServerConfig {
     }
 }
 
-/// A running classification service over one trained model.
-pub struct ModelServer {
+/// Side channels a replica's workers report into besides the response
+/// stream: per-replica metrics, the shared cache to fill on completion,
+/// and the router gauge to decrement per retired job.
+pub(crate) struct ReplicaCtx {
+    pub metrics: Arc<Metrics>,
+    pub cache: Option<Arc<ProbCache>>,
+    /// `(router, this replica's index)` — completions are reported so
+    /// `LeastLoaded` sees live queue depths.
+    pub router: Option<(Arc<ShardRouter>, usize)>,
+}
+
+/// One model replica: a job queue plus the worker pool draining it. The
+/// building block shared by [`ModelServer`] (one replica) and
+/// [`super::ShardedServer`] (N replicas behind a router).
+pub(crate) struct Replica {
     job_tx: Option<Sender<Job>>,
-    resp_rx: Receiver<Response>,
-    metrics: Arc<Metrics>,
-    n_features: usize,
-    next_id: u64,
+    pub metrics: Arc<Metrics>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
-impl ModelServer {
-    /// Spin up `cfg.n_workers` threads serving `model`.
-    pub fn start(model: Arc<dyn Classifier>, cfg: &ModelServerConfig) -> ModelServer {
+impl Replica {
+    /// Spin up `cfg.n_workers` threads serving `model`, answering on
+    /// `resp_tx`. `name` prefixes the worker thread names.
+    pub fn start(
+        model: Arc<dyn Classifier>,
+        cfg: &ModelServerConfig,
+        resp_tx: Sender<Response>,
+        cache: Option<Arc<ProbCache>>,
+        router: Option<(Arc<ShardRouter>, usize)>,
+        name: &str,
+    ) -> Replica {
         let metrics = Arc::new(Metrics::default());
         let (job_tx, job_rx) = channel::<Job>();
-        let (resp_tx, resp_rx) = channel::<Response>();
         let shared_rx = Arc::new(Mutex::new(job_rx));
         let n_workers = cfg.n_workers.max(1);
         let batch_size = cfg.batch_size.max(1);
@@ -72,69 +101,31 @@ impl ModelServer {
         for w in 0..n_workers {
             let rx = Arc::clone(&shared_rx);
             let tx = resp_tx.clone();
-            let m = Arc::clone(&metrics);
+            let ctx = ReplicaCtx {
+                metrics: Arc::clone(&metrics),
+                cache: cache.clone(),
+                router: router.clone(),
+            };
             let model = Arc::clone(&model);
             let timeout = cfg.batch_timeout;
             workers.push(
                 std::thread::Builder::new()
-                    .name(format!("model-server-{w}"))
-                    .spawn(move || {
-                        run_model_worker(model, rx, tx, m, batch_size, timeout)
-                    })
+                    .name(format!("{name}-{w}"))
+                    .spawn(move || run_replica_worker(model, rx, tx, ctx, batch_size, timeout))
                     .expect("spawn model worker"),
             );
         }
-        ModelServer {
-            job_tx: Some(job_tx),
-            resp_rx,
-            metrics,
-            n_features: model.n_features(),
-            next_id: 0,
-            workers,
-        }
+        Replica { job_tx: Some(job_tx), metrics, workers }
     }
 
-    /// Classify a row-major batch; returns responses in input order, or a
-    /// friendly error when the batch is ragged (its length does not
-    /// divide into feature rows).
-    pub fn classify(&mut self, x: &[f32]) -> Result<Vec<Response>> {
-        let f = self.n_features;
-        crate::ensure!(
-            x.len() % f == 0,
-            "ragged batch: {} values do not divide into rows of {} features; \
-             pass a row-major [n, {}] batch",
-            x.len(),
-            f,
-            f
-        );
-        let n = x.len() / f;
-        let base_id = self.next_id;
-        self.next_id += n as u64;
-        let tx = self.job_tx.as_ref().expect("server running");
-        for i in 0..n {
-            self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-            tx.send(Job {
-                id: base_id + i as u64,
-                features: x[i * f..(i + 1) * f].to_vec(),
-                enqueued: Instant::now(),
-            })
-            .expect("workers alive");
-        }
-        let mut responses: Vec<Option<Response>> = (0..n).map(|_| None).collect();
-        for _ in 0..n {
-            let resp = self.resp_rx.recv().expect("workers alive");
-            let idx = (resp.id - base_id) as usize;
-            responses[idx] = Some(resp);
-        }
-        Ok(responses.into_iter().map(|r| r.expect("all answered")).collect())
-    }
-
-    pub fn metrics(&self) -> &Metrics {
-        &self.metrics
+    /// Enqueue one job (counts it into the replica's request gauge).
+    pub fn send(&self, job: Job) {
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        self.job_tx.as_ref().expect("replica running").send(job).expect("workers alive");
     }
 
     /// Drop the queue (workers exit on disconnect) and join them.
-    pub fn shutdown(mut self) {
+    pub fn shutdown(&mut self) {
         self.job_tx.take();
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -142,11 +133,98 @@ impl ModelServer {
     }
 }
 
-fn run_model_worker(
+/// Validate a row-major batch length against the feature count; returns
+/// the row count, or the friendly ragged-batch error every serving
+/// front-end shares.
+pub(crate) fn check_aligned(len: usize, n_features: usize) -> Result<usize> {
+    crate::ensure!(
+        len % n_features == 0,
+        "ragged batch: {len} values do not divide into rows of {n_features} features; \
+         pass a row-major [n, {n_features}] batch"
+    );
+    Ok(len / n_features)
+}
+
+/// How long `collect_in_order` waits between responses before declaring
+/// the workers dead. Orders of magnitude above any single batch
+/// evaluation; its only job is turning a worker panic in a multi-replica
+/// server — where surviving senders keep the channel connected forever —
+/// into a loud failure instead of a silent hang.
+const WORKER_STALL_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Receive `pending` responses and slot each by `id - base_id` into the
+/// (possibly cache-prefilled) `responses`; returns the completed,
+/// input-ordered list. Shared by every queue-backed front-end so the id
+/// contract lives in one place.
+pub(crate) fn collect_in_order(
+    rx: &Receiver<Response>,
+    mut responses: Vec<Option<Response>>,
+    base_id: u64,
+    pending: usize,
+) -> Vec<Response> {
+    for _ in 0..pending {
+        let resp = match rx.recv_timeout(WORKER_STALL_TIMEOUT) {
+            Ok(resp) => resp,
+            Err(e) => panic!("serving workers died or stalled mid-batch: {e:?}"),
+        };
+        let idx = (resp.id - base_id) as usize;
+        responses[idx] = Some(resp);
+    }
+    responses.into_iter().map(|r| r.expect("all answered")).collect()
+}
+
+/// A running classification service over one trained model.
+pub struct ModelServer {
+    replica: Replica,
+    resp_rx: Receiver<Response>,
+    n_features: usize,
+    next_id: u64,
+}
+
+impl ModelServer {
+    /// Spin up `cfg.n_workers` threads serving `model`.
+    pub fn start(model: Arc<dyn Classifier>, cfg: &ModelServerConfig) -> ModelServer {
+        let (resp_tx, resp_rx) = channel::<Response>();
+        let n_features = model.n_features();
+        let replica = Replica::start(model, cfg, resp_tx, None, None, "model-server");
+        ModelServer { replica, resp_rx, n_features, next_id: 0 }
+    }
+
+    /// Classify a row-major batch; returns responses in input order, or a
+    /// friendly error when the batch is ragged (its length does not
+    /// divide into feature rows).
+    pub fn classify(&mut self, x: &[f32]) -> Result<Vec<Response>> {
+        let f = self.n_features;
+        let n = check_aligned(x.len(), f)?;
+        let base_id = self.next_id;
+        self.next_id += n as u64;
+        for i in 0..n {
+            self.replica.send(Job {
+                id: base_id + i as u64,
+                features: x[i * f..(i + 1) * f].to_vec(),
+                enqueued: Instant::now(),
+                cache_key: None,
+            });
+        }
+        let responses = (0..n).map(|_| None).collect();
+        Ok(collect_in_order(&self.resp_rx, responses, base_id, n))
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.replica.metrics
+    }
+
+    /// Drop the queue (workers exit on disconnect) and join them.
+    pub fn shutdown(mut self) {
+        self.replica.shutdown();
+    }
+}
+
+pub(crate) fn run_replica_worker(
     model: Arc<dyn Classifier>,
     rx: Arc<Mutex<Receiver<Job>>>,
     responses: Sender<Response>,
-    metrics: Arc<Metrics>,
+    ctx: ReplicaCtx,
     batch_size: usize,
     batch_timeout: Duration,
 ) {
@@ -171,8 +249,8 @@ fn run_model_worker(
             }
             batch
         };
-        metrics.batches.fetch_add(1, Ordering::Relaxed);
-        metrics.evals.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        ctx.metrics.batches.fetch_add(1, Ordering::Relaxed);
+        ctx.metrics.evals.fetch_add(batch.len() as u64, Ordering::Relaxed);
 
         // One batch-first prediction for the whole assembly.
         let mut x = Vec::with_capacity(batch.len() * f);
@@ -183,13 +261,22 @@ fn run_model_worker(
         let labels = probs.argmax_rows();
 
         for (i, job) in batch.into_iter().enumerate() {
-            metrics.responses.fetch_add(1, Ordering::Relaxed);
-            metrics.hops_total.fetch_add(1, Ordering::Relaxed);
+            let prob = probs.row(i).to_vec();
+            // Fill the cache before answering so a caller that sees the
+            // response and immediately re-asks hits.
+            if let (Some(cache), Some(key)) = (&ctx.cache, job.cache_key) {
+                cache.insert(key, prob.clone());
+            }
+            if let Some((router, idx)) = &ctx.router {
+                router.note_completed(*idx);
+            }
+            ctx.metrics.responses.fetch_add(1, Ordering::Relaxed);
+            ctx.metrics.hops_total.fetch_add(1, Ordering::Relaxed);
             if responses
                 .send(Response {
                     id: job.id,
                     label: labels[i],
-                    prob: probs.row(i).to_vec(),
+                    prob,
                     hops: 1,
                     latency_us: job.enqueued.elapsed().as_micros() as u64,
                 })

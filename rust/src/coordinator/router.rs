@@ -3,74 +3,114 @@
 //! Algorithm 2 starts each input at a *random* grove "to avoid bias"
 //! (line 3) — that is the paper-faithful default and the one every parity
 //! test uses. A deployment may prefer other policies; this module
-//! provides the standard three and measures their load-balance effect
-//! (used by the `ablate` experiment).
+//! provides the standard three behind one [`ShardRouter`] abstraction
+//! that serves two tiers of the stack:
+//!
+//! * **grove-start selection** — which grove of the ring an input enters
+//!   at ([`Router`] is the historical alias used by the `ablate`
+//!   experiment, which measures the load-balance effect of each policy);
+//! * **replica selection** — which [`ModelServer`](super::ModelServer)
+//!   replica of a [`ShardedServer`](super::ShardedServer) a request is
+//!   enqueued on (the scale-out tier added by the sharding PR).
+//!
+//! `LeastLoaded` breaks ties by a rotating start offset: a plain
+//! "first minimum wins" scan resolves every all-idle tie to replica 0,
+//! starving high-index replicas under uniform load (the serving batch
+//! drains faster than injection refills it, so loads are frequently all
+//! zero). The rotation makes the idle-tie case degrade to round-robin.
 
 use crate::util::rng::Rng;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Start-grove selection policy.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum RouterPolicy {
-    /// Per-input deterministic random stream (Algorithm 2 line 3).
-    Random,
-    /// Strict rotation.
-    RoundRobin,
-    /// Fewest in-flight items (greedy least-loaded).
-    LeastLoaded,
-}
+/// Re-exported from the api layer (the policy enum lives next to
+/// [`ServingSpec`](crate::api::ServingSpec) so the model registry never
+/// depends upward on the serving tier).
+pub use crate::api::spec::RouterPolicy;
 
-/// Router state shared with the injection loop.
-pub struct Router {
+/// Shared router state: picks one of `n_targets` destinations per
+/// request. The caller maintains the in-flight gauges on
+/// inject/complete; the router never blocks and never locks.
+pub struct ShardRouter {
     policy: RouterPolicy,
-    n_groves: usize,
+    n_targets: usize,
     seed: u64,
     rr_next: AtomicU64,
-    /// In-flight per grove (maintained by the caller on inject/complete).
+    /// Rotating tie-break offset for `LeastLoaded` (see module docs).
+    tie_next: AtomicU64,
+    /// In-flight per target (maintained by the caller on inject/complete).
     pub in_flight: Vec<AtomicU64>,
 }
 
-impl Router {
-    pub fn new(policy: RouterPolicy, n_groves: usize, seed: u64) -> Router {
-        Router {
+/// Historical name: the grove-start router of the FoG ring. Same state,
+/// same policies — grove-start selection is replica selection with
+/// groves as the targets.
+pub type Router = ShardRouter;
+
+impl ShardRouter {
+    pub fn new(policy: RouterPolicy, n_targets: usize, seed: u64) -> ShardRouter {
+        assert!(n_targets > 0, "router needs at least one target");
+        ShardRouter {
             policy,
-            n_groves,
+            n_targets,
             seed,
             rr_next: AtomicU64::new(0),
-            in_flight: (0..n_groves).map(|_| AtomicU64::new(0)).collect(),
+            tie_next: AtomicU64::new(0),
+            in_flight: (0..n_targets).map(|_| AtomicU64::new(0)).collect(),
         }
     }
 
-    /// Pick the start grove for input `index`.
+    pub fn n_targets(&self) -> usize {
+        self.n_targets
+    }
+
+    pub fn policy(&self) -> RouterPolicy {
+        self.policy
+    }
+
+    /// Pick the target for input `index`.
     pub fn route(&self, index: u64) -> usize {
         match self.policy {
             RouterPolicy::Random => {
                 let mut rng =
                     Rng::new(self.seed ^ index.wrapping_mul(0x9E3779B97F4A7C15));
-                rng.gen_range(self.n_groves)
+                rng.gen_range(self.n_targets)
             }
             RouterPolicy::RoundRobin => {
-                (self.rr_next.fetch_add(1, Ordering::Relaxed) % self.n_groves as u64) as usize
+                (self.rr_next.fetch_add(1, Ordering::Relaxed) % self.n_targets as u64)
+                    as usize
             }
-            RouterPolicy::LeastLoaded => self
-                .in_flight
-                .iter()
-                .enumerate()
-                .min_by_key(|(_, c)| c.load(Ordering::Relaxed))
-                .map(|(i, _)| i)
-                .unwrap_or(0),
+            RouterPolicy::LeastLoaded => {
+                // Strict-minimum scan from a rotating start offset: ties
+                // resolve to the first tied target at/after the offset,
+                // so an all-idle fleet degrades to round-robin instead of
+                // pinning target 0.
+                let n = self.n_targets;
+                let start =
+                    (self.tie_next.fetch_add(1, Ordering::Relaxed) % n as u64) as usize;
+                let mut best = start;
+                let mut best_load = self.in_flight[start].load(Ordering::Relaxed);
+                for k in 1..n {
+                    let i = (start + k) % n;
+                    let load = self.in_flight[i].load(Ordering::Relaxed);
+                    if load < best_load {
+                        best = i;
+                        best_load = load;
+                    }
+                }
+                best
+            }
         }
     }
 
-    pub fn note_injected(&self, grove: usize) {
-        self.in_flight[grove].fetch_add(1, Ordering::Relaxed);
+    pub fn note_injected(&self, target: usize) {
+        self.in_flight[target].fetch_add(1, Ordering::Relaxed);
     }
 
-    pub fn note_completed(&self, grove: usize) {
-        self.in_flight[grove].fetch_sub(1, Ordering::Relaxed);
+    pub fn note_completed(&self, target: usize) {
+        self.in_flight[target].fetch_sub(1, Ordering::Relaxed);
     }
 
-    /// Load-imbalance metric: max/mean of a per-grove assignment count.
+    /// Load-imbalance metric: max/mean of a per-target assignment count.
     pub fn imbalance(counts: &[u64]) -> f64 {
         if counts.is_empty() {
             return 0.0;
@@ -126,9 +166,47 @@ mod tests {
         r.note_injected(0);
         r.note_injected(0);
         r.note_injected(1);
+        // Loads [2, 1, 0]: target 2 is the unique minimum.
         assert_eq!(r.route(0), 2);
-        r.note_completed(0);
-        r.note_completed(0);
-        assert_eq!(r.route(1), 0);
+        r.note_injected(2);
+        r.note_injected(2);
+        // Loads [2, 1, 2]: target 1 is the unique minimum.
+        assert_eq!(r.route(1), 1);
+    }
+
+    #[test]
+    fn least_loaded_ties_rotate() {
+        // Regression: an all-idle fleet must not pin target 0. With no
+        // in-flight updates every route call is a full tie; the rotating
+        // offset must spread them round-robin.
+        let n = 5usize;
+        let r = Router::new(RouterPolicy::LeastLoaded, n, 0);
+        let mut counts = vec![0u64; n];
+        for i in 0..(100 * n as u64) {
+            counts[r.route(i)] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 100), "idle ties must rotate: {counts:?}");
+        assert!((Router::imbalance(&counts) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn least_loaded_balances_steady_state() {
+        // Inject/complete churn with FIFO completions: no target may be
+        // starved, and the assignment stays near-uniform.
+        let n = 4usize;
+        let r = Router::new(RouterPolicy::LeastLoaded, n, 0);
+        let mut counts = vec![0u64; n];
+        let mut in_flight = std::collections::VecDeque::new();
+        for i in 0..4000u64 {
+            let t = r.route(i);
+            counts[t] += 1;
+            r.note_injected(t);
+            in_flight.push_back(t);
+            if in_flight.len() > 2 * n {
+                r.note_completed(in_flight.pop_front().unwrap());
+            }
+        }
+        assert!(counts.iter().all(|&c| c > 0), "starved target: {counts:?}");
+        assert!(Router::imbalance(&counts) < 1.1, "{counts:?}");
     }
 }

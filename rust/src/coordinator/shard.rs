@@ -1,0 +1,361 @@
+//! [`ShardedServer`] — the scale-out serving tier: N replicas of one
+//! registry model behind a shared [`ShardRouter`] and a quantized
+//! [`ProbCache`].
+//!
+//! The paper argues energy-per-classification at scale (§1: "millions of
+//! classifications per day"); a single [`ModelServer`](super::ModelServer)
+//! queue is the wrong shape for that traffic. This tier runs **N
+//! replicas** — each its own job queue plus worker pool over a *shared*
+//! `Arc<dyn Classifier>` (replicas clone the handle, never the trees:
+//! tree-family models keep one [`ForestArena`](crate::exec::ForestArena)
+//! allocation however many replicas serve it) — behind two front-end
+//! stages:
+//!
+//! 1. **Cache** — each request row is quantized
+//!    ([`ProbCache::key`]) and looked up before any queue is touched; a
+//!    hit answers immediately with zero evaluation energy (`hops = 0`).
+//!    At quantization step 0 hits are exact-bit matches, so cached
+//!    answers are byte-identical to cold evaluation.
+//! 2. **Router** — misses are routed to a replica by the shared
+//!    [`ShardRouter`] (`Random`, `RoundRobin`, or `LeastLoaded` over the
+//!    live in-flight gauges), enqueued, and batch-evaluated by that
+//!    replica's workers, which fill the cache on completion.
+//!
+//! Request path (see `ARCHITECTURE.md` at the repo root for the full
+//! stack):
+//!
+//! ```text
+//! classify(x) ──► ProbCache ──hit──► Response (hops = 0)
+//!                   │ miss
+//!                   ▼
+//!               ShardRouter ──► replica queue ──► worker batch
+//!                                                   │
+//!                     cache fill ◄── ProbMatrix ◄───┘
+//! ```
+//!
+//! Every replica is batch-composition independent (the arena kernel and
+//! `batch_from_scores` evaluate rows independently; FoG start groves
+//! hash the input content), so a sharded server returns byte-identical
+//! probability rows to a single `ModelServer` — the conformance suite in
+//! `tests/shard.rs` pins this for every registry model.
+
+use super::cache::{CacheConfig, ProbCache};
+use super::messages::Response;
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::model_server::{Job, ModelServerConfig, Replica};
+use super::router::{RouterPolicy, ShardRouter};
+use crate::api::spec::ServingSpec;
+use crate::api::Classifier;
+use crate::util::error::Result;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Configuration for a sharded multi-replica server.
+#[derive(Clone, Debug)]
+pub struct ShardedServerConfig {
+    /// Model replicas, each with its own queue and worker pool.
+    pub replicas: usize,
+    /// Per-replica queue/batch/worker settings.
+    pub worker: ModelServerConfig,
+    /// Replica-selection policy.
+    pub router: RouterPolicy,
+    /// Seed for the `Random` policy's per-request stream.
+    pub router_seed: u64,
+    /// Result cache; `None` serves every request cold.
+    pub cache: Option<CacheConfig>,
+}
+
+impl Default for ShardedServerConfig {
+    fn default() -> Self {
+        ShardedServerConfig {
+            replicas: 2,
+            worker: ModelServerConfig::default(),
+            router: RouterPolicy::LeastLoaded,
+            router_seed: 0,
+            cache: None,
+        }
+    }
+}
+
+impl ShardedServerConfig {
+    /// Build from the serving knobs a [`ServingSpec`] carries (the
+    /// `ModelSpec` builder surface: replicas, router policy, cache
+    /// quantization).
+    pub fn for_serving(s: &ServingSpec) -> ShardedServerConfig {
+        // Capacity 0 means caching off entirely (no dead cache paying
+        // key quantization and a guaranteed miss per request).
+        let cache = match s.cache_quant {
+            Some(q) if s.cache_capacity > 0 => Some(CacheConfig {
+                capacity: s.cache_capacity,
+                quant_step: q,
+                ..Default::default()
+            }),
+            _ => None,
+        };
+        ShardedServerConfig {
+            replicas: s.replicas.max(1),
+            worker: ModelServerConfig::default(),
+            router: s.router,
+            router_seed: 0,
+            cache,
+        }
+    }
+}
+
+/// A running sharded classification service over one trained model.
+pub struct ShardedServer {
+    replicas: Vec<Replica>,
+    resp_rx: Receiver<Response>,
+    router: Arc<ShardRouter>,
+    cache: Option<Arc<ProbCache>>,
+    /// Front-end counters: total requests, cache hits/misses, and the
+    /// responses answered from cache (replica counters live per replica).
+    front: Arc<Metrics>,
+    n_features: usize,
+    next_id: u64,
+}
+
+impl ShardedServer {
+    /// Spin up `cfg.replicas` replicas serving `model`. Replicas share
+    /// the model storage (the `Arc` is cloned, not the model), the
+    /// response channel, the router and the cache.
+    pub fn start(model: Arc<dyn Classifier>, cfg: &ShardedServerConfig) -> ShardedServer {
+        let n_replicas = cfg.replicas.max(1);
+        let (resp_tx, resp_rx) = channel::<Response>();
+        let router = Arc::new(ShardRouter::new(cfg.router, n_replicas, cfg.router_seed));
+        // A zero-capacity cache config means caching off, not a cache
+        // that misses every lookup.
+        let cache = cfg
+            .cache
+            .as_ref()
+            .filter(|c| c.capacity > 0)
+            .map(|c| Arc::new(ProbCache::new(c)));
+        let n_features = model.n_features();
+        let replicas = (0..n_replicas)
+            .map(|r| {
+                Replica::start(
+                    Arc::clone(&model),
+                    &cfg.worker,
+                    resp_tx.clone(),
+                    cache.clone(),
+                    Some((Arc::clone(&router), r)),
+                    &format!("shard-replica-{r}"),
+                )
+            })
+            .collect();
+        ShardedServer {
+            replicas,
+            resp_rx,
+            router,
+            cache,
+            front: Arc::new(Metrics::default()),
+            n_features,
+            next_id: 0,
+        }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Classify a row-major batch; returns responses in input order, or
+    /// a friendly error when the batch is ragged. Each row is answered
+    /// from the cache when possible, otherwise routed to a replica.
+    pub fn classify(&mut self, x: &[f32]) -> Result<Vec<Response>> {
+        let f = self.n_features;
+        let n = super::model_server::check_aligned(x.len(), f)?;
+        let base_id = self.next_id;
+        self.next_id += n as u64;
+        let mut responses: Vec<Option<Response>> = (0..n).map(|_| None).collect();
+        let mut pending = 0usize;
+        for i in 0..n {
+            let id = base_id + i as u64;
+            let row = &x[i * f..(i + 1) * f];
+            self.front.requests.fetch_add(1, Ordering::Relaxed);
+            let cache_key = match &self.cache {
+                Some(cache) => {
+                    let key = cache.key(row);
+                    if let Some(prob) = cache.get(&key) {
+                        // Cache hit: answer without touching any queue.
+                        // `hops = 0` — no grove/model evaluation energy
+                        // was spent on this response.
+                        self.front.cache_hits.fetch_add(1, Ordering::Relaxed);
+                        self.front.responses.fetch_add(1, Ordering::Relaxed);
+                        let label = crate::util::argmax(&prob);
+                        responses[i] =
+                            Some(Response { id, label, prob, hops: 0, latency_us: 0 });
+                        continue;
+                    }
+                    self.front.cache_misses.fetch_add(1, Ordering::Relaxed);
+                    Some(key)
+                }
+                None => None,
+            };
+            let r = self.router.route(id);
+            self.router.note_injected(r);
+            self.replicas[r].send(Job {
+                id,
+                features: row.to_vec(),
+                enqueued: Instant::now(),
+                cache_key,
+            });
+            pending += 1;
+        }
+        Ok(super::model_server::collect_in_order(&self.resp_rx, responses, base_id, pending))
+    }
+
+    /// Front-end counters (requests, cache hits/misses, cache-answered
+    /// responses).
+    pub fn metrics(&self) -> &Metrics {
+        &self.front
+    }
+
+    /// Per-replica counters (requests routed, batches, evals, responses).
+    pub fn replica_metrics(&self, r: usize) -> &Metrics {
+        &self.replicas[r].metrics
+    }
+
+    /// The shared replica router (in-flight gauges are live).
+    pub fn router(&self) -> &ShardRouter {
+        &self.router
+    }
+
+    /// The shared result cache, when configured.
+    pub fn cache(&self) -> Option<&ProbCache> {
+        self.cache.as_deref()
+    }
+
+    /// One merged snapshot: front-end counters plus the sum over every
+    /// replica (so `responses` covers both cached and evaluated answers).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut total = self.front.snapshot();
+        for replica in &self.replicas {
+            let s = replica.metrics.snapshot();
+            total.responses += s.responses;
+            total.hops_total += s.hops_total;
+            total.forwards += s.forwards;
+            total.batches += s.batches;
+            total.evals += s.evals;
+        }
+        total
+    }
+
+    /// Drop every queue (workers exit on disconnect) and join them.
+    pub fn shutdown(mut self) {
+        for replica in &mut self.replicas {
+            replica.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{Estimator, ModelSpec};
+    use crate::data::synthetic::{generate, DatasetProfile};
+
+    fn model(name: &str, seed: u64) -> (Arc<dyn Classifier>, crate::data::Dataset) {
+        let ds = generate(&DatasetProfile::demo(), 600 + seed);
+        let spec = ModelSpec::for_shape(name, ds.n_features(), ds.n_classes())
+            .unwrap()
+            .fast();
+        (Arc::from(spec.fit(&ds.train, seed)), ds)
+    }
+
+    #[test]
+    fn sharded_matches_offline_predictions() {
+        let (m, ds) = model("rf", 31);
+        let offline = m.predict_proba_batch(&ds.test.x, ds.test.len());
+        let cfg = ShardedServerConfig { replicas: 3, ..Default::default() };
+        let mut server = ShardedServer::start(Arc::clone(&m), &cfg);
+        let responses = server.classify(&ds.test.x).expect("aligned batch");
+        assert_eq!(responses.len(), ds.test.len());
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(&r.prob[..], offline.row(i), "row {i} prob drifted");
+        }
+        let snap = server.snapshot();
+        assert_eq!(snap.requests as usize, ds.test.len());
+        assert_eq!(snap.responses as usize, ds.test.len());
+        server.shutdown();
+    }
+
+    #[test]
+    fn cache_answers_repeat_rows_identically() {
+        let (m, ds) = model("svm_lr", 32);
+        let cfg = ShardedServerConfig {
+            replicas: 2,
+            cache: Some(CacheConfig::default()), // quant_step 0 = exact
+            ..Default::default()
+        };
+        let mut server = ShardedServer::start(m, &cfg);
+        let cold = server.classify(&ds.test.x).expect("aligned");
+        let warm = server.classify(&ds.test.x).expect("aligned");
+        for (c, w) in cold.iter().zip(&warm) {
+            assert_eq!(c.label, w.label);
+            assert_eq!(c.prob, w.prob, "cached row differs from cold evaluation");
+            assert_eq!(w.hops, 0, "second pass should be all cache hits");
+        }
+        let snap = server.metrics().snapshot();
+        assert_eq!(snap.cache_hits as usize, ds.test.len());
+        assert!(snap.cache_hit_rate() > 0.49 && snap.cache_hit_rate() < 0.51);
+        server.shutdown();
+    }
+
+    #[test]
+    fn every_replica_sees_traffic_under_least_loaded() {
+        let (m, ds) = model("rf", 33);
+        let cfg = ShardedServerConfig {
+            replicas: 4,
+            router: RouterPolicy::LeastLoaded,
+            ..Default::default()
+        };
+        let mut server = ShardedServer::start(m, &cfg);
+        // Several passes so even fast-draining replicas accumulate work.
+        for _ in 0..3 {
+            server.classify(&ds.test.x).expect("aligned");
+        }
+        for r in 0..server.n_replicas() {
+            let evals = server.replica_metrics(r).snapshot().evals;
+            assert!(evals > 0, "replica {r} starved under LeastLoaded ties");
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn zero_capacity_spec_disables_cache() {
+        // `with_cache_capacity(0)` documents "disables caching outright".
+        let spec = crate::api::ModelSpec::by_name("rf")
+            .unwrap()
+            .with_cache_quant(0.0)
+            .with_cache_capacity(0);
+        let cfg = ShardedServerConfig::for_serving(&spec.serving);
+        assert!(cfg.cache.is_none());
+        // And a hand-built zero-capacity config is normalized off too.
+        let (m, _) = model("svm_lr", 35);
+        let server = ShardedServer::start(
+            m,
+            &ShardedServerConfig {
+                cache: Some(CacheConfig { capacity: 0, ..Default::default() }),
+                ..Default::default()
+            },
+        );
+        assert!(server.cache().is_none());
+        server.shutdown();
+    }
+
+    #[test]
+    fn ragged_batch_is_a_friendly_error() {
+        let (m, ds) = model("svm_lr", 34);
+        let mut server = ShardedServer::start(m, &ShardedServerConfig::default());
+        let err = server
+            .classify(&ds.test.x[..ds.n_features() + 1])
+            .expect_err("ragged batch must not panic");
+        assert!(err.to_string().contains("ragged batch"));
+        let ok = server.classify(&ds.test.x[..ds.n_features()]).expect("aligned");
+        assert_eq!(ok.len(), 1);
+        server.shutdown();
+    }
+}

@@ -1,8 +1,9 @@
 //! Train/validation splitting utilities (stratified, deterministic).
 //!
-//! The paper's budgeted training selects design points on cross-validation
-//! data (§4.1 step 2); these helpers carve validation folds out of the
-//! training split without touching the test set.
+//! Paper anchor: **§4.1 step 2** — budgeted training and the FoG_opt
+//! threshold tuning both select design points on cross-validation data;
+//! these helpers carve validation folds out of the training split
+//! without ever touching the test set Table 1 reports on.
 
 use super::Split;
 use crate::util::rng::Rng;

@@ -1,4 +1,5 @@
-//! Synthetic stand-ins for the paper's five UCI datasets.
+//! Synthetic stand-ins for the paper's five UCI datasets (the **§4.1 /
+//! Table 1** evaluation suite; Figures 4 and 5 sweep the same five).
 //!
 //! The paper evaluates on ISOLET, Pendigits (called "Penbase" in Table 1),
 //! MNIST, Letter and Segmentation from the UCI repository. This build

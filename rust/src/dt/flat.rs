@@ -13,7 +13,8 @@
 //! of depth exactly `d`: dead internal slots get `feat = 0, thr = +inf`
 //! (every input routes left) and leaf distributions are replicated down to
 //! the bottom level, so the padded tree computes *exactly* the same
-//! function as the sparse one — verified by [`tests::padding_preserves`].
+//! function as the sparse one — verified by the `padding_preserves` test
+//! in this module.
 
 use super::tree::DecisionTree;
 

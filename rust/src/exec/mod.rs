@@ -27,6 +27,15 @@
 //! * the μarch PE / energy models derive comparator counts and
 //!   VMEM/sparse-storage bytes from the arena layout (numerically
 //!   identical to the per-`FlatTree` accounting they replaced).
+//!
+//! **Sharing discipline:** arenas are immutable after packing and always
+//! held behind an `Arc` by their owners (`RfModel`, `FieldOfGroves`).
+//! Scale-out consumers — the replicas of a
+//! [`ShardedServer`](crate::coordinator::ShardedServer), grove workers,
+//! parallel benches — must clone the `Arc<ForestArena>` handle, never
+//! re-pack or materialize trees: N replicas of a forest model cost one
+//! arena allocation, and every [`BatchPlan`] they build borrows the same
+//! level-major arrays.
 
 pub mod arena;
 pub mod batch;

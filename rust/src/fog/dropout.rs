@@ -6,6 +6,10 @@
 //! connected to many other nodes." This module makes that claim testable:
 //! disable a subset of groves (power-gated tiles) or individual trees and
 //! re-evaluate; the ring simply skips dead groves when forwarding.
+//!
+//! Paper anchor: **§3.1**'s graceful-degradation argument (no figure in
+//! the paper quantifies it; the `ablate` experiment's dropout curve is
+//! this reproduction's version of that missing plot).
 
 use super::eval::{EvalResult, FogParams};
 use super::split::FieldOfGroves;

@@ -7,6 +7,10 @@
 //! Heads are modelled as disjoint slices of the class axis: a forest
 //! trained on the cartesian label space emits one concatenated
 //! distribution; `OutputLayout` says where each head begins and ends.
+//!
+//! Paper anchor: **§3.2 footnote 1** and the MaxDiff subroutine note of
+//! **Algorithm 2** — the only part of the paper's evaluation protocol
+//! that generalizes beyond single-label classification.
 
 use super::confidence::max_diff;
 

@@ -5,6 +5,10 @@
 //! (the paper splits randomly into non-overlapping subsets; since bagged
 //! trees are exchangeable, consecutive grouping after an optional shuffle
 //! is the same distribution — we shuffle for fidelity).
+//!
+//! Paper anchor: **§3.1, Algorithm 1**; the `a×b` topologies this builds
+//! are the x-axis of **Figure 4** (grove-count sweep at fixed forest
+//! size).
 
 use super::grove::Grove;
 use crate::data::Split as DataSplit;

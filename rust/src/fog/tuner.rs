@@ -2,6 +2,11 @@
 //! point the paper calls FoG_opt — "a threshold point above which accuracy
 //! does not increase with threshold but below which accuracy decreases
 //! with decrease in threshold" (§4.2).
+//!
+//! Paper anchor: this module reproduces the **Figure 5** x-axis sweep
+//! (accuracy and average hops vs confidence threshold) and the FoG_opt
+//! column of **Table 1** (the swept operating point every energy
+//! comparison quotes).
 
 use super::eval::{EvalResult, FogParams};
 use super::split::FieldOfGroves;

@@ -9,6 +9,12 @@
 //! class probabilities) is below a threshold, the partial result **hops** to
 //! the next grove. Easy inputs consume one grove's energy; hard inputs more.
 //!
+//! **`ARCHITECTURE.md`** at the repository root is the cross-module map:
+//! the layer diagram, the request path through the sharded serving tier
+//! (`ShardRouter` → replica queue → `BatchPlan` → cache fill), and the
+//! invariants the conformance suites pin. Start there for the big
+//! picture; the module docs below carry the per-layer detail.
+//!
 //! ## The unified model API
 //!
 //! Every model family the paper compares — FoG, conventional RF, linear
@@ -70,9 +76,12 @@
 //! * [`runtime`] — a PJRT client that loads the AOT-compiled (JAX/Pallas)
 //!   grove kernel from `artifacts/*.hlo.txt` and executes it (behind the
 //!   `pjrt` cargo feature; a clean-failing stub otherwise).
-//! * [`coordinator`] — a threaded serving front-end: the FoG grove ring
-//!   plus a generic [`coordinator::ModelServer`] that serves *any*
-//!   [`api::Classifier`] trait object with dynamic batching and metrics.
+//! * [`coordinator`] — the threaded serving front-ends: the FoG grove
+//!   ring, a generic [`coordinator::ModelServer`] that serves *any*
+//!   [`api::Classifier`] trait object with dynamic batching and metrics,
+//!   and the scale-out [`coordinator::ShardedServer`] — N replicas of
+//!   one model behind a shared [`coordinator::ShardRouter`] and a
+//!   quantized [`coordinator::ProbCache`] of probability rows.
 //! * [`experiments`] — harnesses regenerating every table/figure of the
 //!   paper's evaluation (Table 1, Figure 4, Figure 5), dispatching every
 //!   model through [`api`].

@@ -15,11 +15,22 @@
 //! fog serve    [--dataset demo] [--backend native|pjrt]
 //!              [--model <registry name>]           serving demo (FoG ring, or any
 //!                                                  registry model via ModelServer)
+//!              [--replicas N] [--router random|round_robin|least_loaded]
+//!              [--cache-quant q] [--cache-cap N] [--no-cache] [--rounds R]
+//!                                                  sharded tier: N replicas of the
+//!                                                  model behind a shared router and
+//!                                                  a quantized result cache; emits
+//!                                                  BENCH_JSON lines (aggregate +
+//!                                                  per-replica throughput, cache
+//!                                                  hit rate)
 //! fog dse      [--workload trees|gemm]             Aladdin-style DSE sweep
 //! ```
 
 use fog::api::{Classifier, Estimator, ModelSpec, REGISTRY};
-use fog::coordinator::{Backend, FogServer, ModelServer, ModelServerConfig, ServerConfig};
+use fog::coordinator::{
+    Backend, FogServer, ModelServer, ModelServerConfig, RouterPolicy, ServerConfig,
+    ShardedServer, ShardedServerConfig,
+};
 use fog::data::synthetic::DatasetProfile;
 use fog::energy::aladdin;
 use fog::energy::blocks::{AreaBlocks, EnergyBlocks};
@@ -181,10 +192,27 @@ fn cmd_sim(args: &Args, seed: u64) {
 
 /// Serving demo. Default: the FoG grove ring (native or PJRT backend).
 /// With `--model <registry name>`: any unified-API model behind the
-/// generic `ModelServer`.
+/// generic `ModelServer`; add `--replicas N` for the sharded tier
+/// (`ShardedServer`: replica router + quantized result cache).
 fn cmd_serve(args: &Args, seed: u64) {
+    // Any sharded-tier flag selects the sharded path, so no knob is ever
+    // silently ignored by the single-queue server or the FoG ring.
+    let sharded_flags = ["replicas", "router", "cache-quant", "cache-cap", "no-cache", "rounds"];
+    let wants_sharded = sharded_flags.iter().any(|k| args.get(k).is_some());
     if let Some(model_name) = args.get("model") {
+        if wants_sharded {
+            return cmd_serve_sharded(args, model_name, seed);
+        }
         return cmd_serve_model(args, model_name, seed);
+    }
+    if wants_sharded {
+        eprintln!(
+            "error: --replicas/--router/--cache-quant/--cache-cap/--no-cache/--rounds \
+             need --model <registry name> (the sharded tier serves registry models; \
+             valid names: {})",
+            REGISTRY.join(", ")
+        );
+        std::process::exit(2);
     }
     let profile = profile_or_exit(args.get_or("dataset", "demo"));
     let name = profile.name;
@@ -262,6 +290,110 @@ fn cmd_serve_model(args: &Args, model_name: &str, seed: u64) {
     println!("batch size : {:.1} avg", snap.avg_batch_size());
     println!("throughput : {:.0} req/s", responses.len() as f64 / wall.as_secs_f64());
     println!("latency    : p50 {:.0}µs  p95 {:.0}µs  p99 {:.0}µs", lat.p50_us, lat.p95_us, lat.p99_us);
+    server.shutdown();
+}
+
+/// Serve a registry model through the sharded multi-replica tier:
+/// `--replicas N` replicas behind `--router` (default least_loaded) and
+/// a quantized result cache (`--cache-quant`, default 0 = exact keys;
+/// `--no-cache` disables). Runs `--rounds` passes over the test split
+/// (default 2, so the second pass exercises the cache) and emits one
+/// aggregate and one per-replica `BENCH_JSON` line.
+fn cmd_serve_sharded(args: &Args, model_name: &str, seed: u64) {
+    let profile = profile_or_exit(args.get_or("dataset", "demo"));
+    let router = RouterPolicy::parse(args.get_or("router", "least_loaded")).unwrap_or_else(|| {
+        eprintln!(
+            "error: unknown router '{}'; valid policies: random, round_robin, least_loaded",
+            args.get_or("router", "least_loaded")
+        );
+        std::process::exit(2);
+    });
+    let mut spec = ModelSpec::for_shape(model_name, profile.n_features, profile.n_classes)
+        .unwrap_or_else(|| {
+            eprintln!(
+                "error: unknown model '{model_name}'; valid names: {}",
+                REGISTRY.join(", ")
+            );
+            std::process::exit(2);
+        })
+        .with_replicas(args.get_usize("replicas", 2))
+        .with_router(router)
+        .with_cache_capacity(args.get_usize("cache-cap", 4096));
+    if !args.get_bool("no-cache") {
+        spec = spec.with_cache_quant(args.get_f64("cache-quant", 0.0) as f32);
+    }
+
+    eprintln!("[serve] training {model_name} on {} ...", profile.name);
+    let data = suite::prepare_data(&profile, seed);
+    let model: Arc<dyn Classifier> = Arc::from(spec.fit(&data.train, seed));
+    let mut cfg = ShardedServerConfig::for_serving(&spec.serving);
+    cfg.worker = ModelServerConfig {
+        batch_size: args.get_usize("batch", 32),
+        n_workers: args.get_usize("workers", 2),
+        ..Default::default()
+    };
+    cfg.router_seed = seed;
+
+    let mut server = ShardedServer::start(Arc::clone(&model), &cfg);
+    let rounds = args.get_usize("rounds", 2).max(1);
+    let t0 = std::time::Instant::now();
+    let mut responses = Vec::new();
+    for _ in 0..rounds {
+        responses = server.classify(&data.test.x).unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        });
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let preds: Vec<usize> = responses.iter().map(|r| r.label).collect();
+    let acc = fog::util::stats::accuracy(&preds, &data.test.y);
+    let snap = server.snapshot();
+    let n_total = responses.len() * rounds;
+
+    println!(
+        "== serving: {model_name} on {} via ShardedServer x{} ({}) ==",
+        profile.name,
+        server.n_replicas(),
+        cfg.router.label()
+    );
+    println!("requests   : {} ({} per round x {rounds})", snap.requests, responses.len());
+    println!("accuracy   : {:.1}%", acc * 100.0);
+    println!("batch size : {:.1} avg", snap.avg_batch_size());
+    println!(
+        "cache      : {:.1}% hit rate ({} hits / {} misses)",
+        snap.cache_hit_rate() * 100.0,
+        snap.cache_hits,
+        snap.cache_misses
+    );
+    println!("throughput : {:.0} req/s", n_total as f64 / wall);
+    println!(
+        "BENCH_JSON {{\"bench\":\"serve_sharded\",\"model\":\"{model_name}\",\
+         \"dataset\":\"{}\",\"replicas\":{},\"router\":\"{}\",\"rounds\":{rounds},\
+         \"requests\":{},\"throughput_per_s\":{:.1},\"cache_hit_rate\":{:.4},\
+         \"cache_quant\":{:.6},\"accuracy\":{:.4}}}",
+        profile.name,
+        server.n_replicas(),
+        cfg.router.label(),
+        snap.requests,
+        n_total as f64 / wall,
+        snap.cache_hit_rate(),
+        spec.serving.cache_quant.unwrap_or(-1.0),
+        acc
+    );
+    for r in 0..server.n_replicas() {
+        let rs = server.replica_metrics(r).snapshot();
+        println!(
+            "BENCH_JSON {{\"bench\":\"serve_sharded_replica\",\"model\":\"{model_name}\",\
+             \"replica\":{r},\"requests\":{},\"responses\":{},\"batches\":{},\
+             \"evals\":{},\"avg_batch_size\":{:.2},\"throughput_per_s\":{:.1}}}",
+            rs.requests,
+            rs.responses,
+            rs.batches,
+            rs.evals,
+            rs.avg_batch_size(),
+            rs.responses as f64 / wall
+        );
+    }
     server.shutdown();
 }
 

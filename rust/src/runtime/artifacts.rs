@@ -2,6 +2,11 @@
 //! compile path produced (`artifacts/manifest.json`). The rust runtime
 //! validates its inputs against these shapes before touching PJRT, so a
 //! stale artifact directory fails loudly instead of mis-executing.
+//!
+//! Paper anchor: **§3.2.2 "Reprogrammability"** — the manifest's
+//! `(t, depth, n_features, n_classes, batch)` tuple is the compile-time
+//! contract a reprogrammed grove tile must re-match, exactly like the
+//! hardware's fixed node/leaf store shapes.
 
 use crate::util::error::Result;
 use crate::util::json::parse;

@@ -12,6 +12,11 @@
 //! build environment ships no `xla` closure) the same API is exported as
 //! a stub whose constructors return errors, so the serving coordinator
 //! degrades to the native backend instead of failing to compile.
+//!
+//! Paper anchor: **§3.2**'s grove processing element — one compiled
+//! `grove_step` is the software stand-in for the hardware PE's
+//! level-synchronous tree walk plus the Algorithm 2 confidence update,
+//! executed per hop of the ring.
 
 use super::artifacts::{ArtifactMeta, Manifest};
 use crate::dt::export::FlatBundle;

@@ -1,0 +1,161 @@
+//! Conformance tests for the sharded serving tier: a `ShardedServer`
+//! with N replicas must be *observationally identical* to a single
+//! `ModelServer` (byte-identical probability rows for every registry
+//! model), the quantized result cache must be invisible at step 0
+//! (exact-bit keys), and the `LeastLoaded` router must not starve
+//! high-index replicas under uniform load.
+
+use fog::api::{Classifier, Estimator, ModelSpec, REGISTRY};
+use fog::coordinator::{
+    CacheConfig, ModelServer, ModelServerConfig, RouterPolicy, ShardedServer,
+    ShardedServerConfig,
+};
+use fog::data::synthetic::{generate, DatasetProfile};
+use fog::data::Dataset;
+use std::sync::Arc;
+
+fn small_data() -> Dataset {
+    generate(&DatasetProfile::demo(), 501)
+}
+
+fn fit_fast(name: &str, ds: &Dataset, seed: u64) -> Arc<dyn Classifier> {
+    Arc::from(
+        ModelSpec::for_shape(name, ds.n_features(), ds.n_classes())
+            .unwrap_or_else(|| panic!("registry name '{name}' missing"))
+            .fast()
+            .fit(&ds.train, seed),
+    )
+}
+
+/// (a) For every registry model, N replicas behind every router policy
+/// return byte-identical probability rows to one `ModelServer` over the
+/// same trained model.
+#[test]
+fn sharded_matches_single_server_for_every_registry_model() {
+    let ds = small_data();
+    for name in REGISTRY {
+        let model = fit_fast(name, &ds, 21);
+
+        let mut single = ModelServer::start(Arc::clone(&model), &ModelServerConfig::default());
+        let reference = single.classify(&ds.test.x).expect("aligned batch");
+        single.shutdown();
+
+        let cfg = ShardedServerConfig {
+            replicas: 3,
+            router: RouterPolicy::RoundRobin,
+            ..Default::default()
+        };
+        let mut sharded = ShardedServer::start(Arc::clone(&model), &cfg);
+        let responses = sharded.classify(&ds.test.x).expect("aligned batch");
+        assert_eq!(responses.len(), reference.len(), "{name}");
+        for (r, s) in reference.iter().zip(&responses) {
+            assert_eq!(r.id, s.id, "{name}");
+            assert_eq!(r.label, s.label, "{name} id {}", r.id);
+            assert_eq!(
+                r.prob, s.prob,
+                "{name} id {}: sharded prob row is not byte-identical",
+                r.id
+            );
+        }
+        let snap = sharded.snapshot();
+        assert_eq!(snap.responses as usize, ds.test.len(), "{name}");
+        sharded.shutdown();
+    }
+}
+
+/// (b) At quantization step 0 the cache is exact: a warm pass returns
+/// rows byte-identical to the cold evaluation, entirely from cache.
+#[test]
+fn cache_hits_identical_to_cold_eval_at_step_zero() {
+    let ds = small_data();
+    for name in ["rf", "fog_opt", "mlp"] {
+        let model = fit_fast(name, &ds, 22);
+        let cfg = ShardedServerConfig {
+            replicas: 2,
+            cache: Some(CacheConfig { quant_step: 0.0, ..Default::default() }),
+            ..Default::default()
+        };
+        let mut server = ShardedServer::start(model, &cfg);
+        let cold = server.classify(&ds.test.x).expect("aligned batch");
+        let warm = server.classify(&ds.test.x).expect("aligned batch");
+        for (c, w) in cold.iter().zip(&warm) {
+            assert_eq!(c.label, w.label, "{name}");
+            assert_eq!(c.prob, w.prob, "{name}: cache hit differs from cold evaluation");
+        }
+        assert!(
+            warm.iter().all(|r| r.hops == 0),
+            "{name}: warm pass should be answered entirely from cache"
+        );
+        let snap = server.metrics().snapshot();
+        assert_eq!(snap.cache_hits as usize, ds.test.len(), "{name}");
+        assert_eq!(snap.cache_misses as usize, ds.test.len(), "{name}");
+        server.shutdown();
+    }
+}
+
+/// A coarse quantization step still yields valid (identical-shape)
+/// answers and buckets near-identical inputs together.
+#[test]
+fn quantized_cache_buckets_nearby_rows() {
+    let ds = small_data();
+    let model = fit_fast("rf", &ds, 23);
+    let f = ds.n_features();
+    let cfg = ShardedServerConfig {
+        replicas: 2,
+        cache: Some(CacheConfig { quant_step: 1.0, ..Default::default() }),
+        ..Default::default()
+    };
+    let mut server = ShardedServer::start(model, &cfg);
+    // Hand-built rows far from every bucket boundary (boundaries sit at
+    // half-integers under step 1.0), so the perturbation below can never
+    // flip a bucket.
+    let row = vec![0.25f32; f];
+    let nudged = vec![0.26f32; f];
+    let cold = server.classify(&row).expect("aligned");
+    let warm = server.classify(&nudged).expect("aligned");
+    assert_eq!(warm[0].hops, 0, "sub-bucket perturbation should hit the cache");
+    assert_eq!(cold[0].prob, warm[0].prob);
+    server.shutdown();
+}
+
+/// Load-balance regression for the `LeastLoaded` tie-break fix: under
+/// uniform (mostly-idle) load every replica must see traffic — the old
+/// lowest-index tie resolution starved every replica but 0 whenever the
+/// queues drained between requests.
+#[test]
+fn least_loaded_does_not_starve_high_index_replicas() {
+    let ds = small_data();
+    let model = fit_fast("svm_lr", &ds, 24);
+    let cfg = ShardedServerConfig {
+        replicas: 4,
+        router: RouterPolicy::LeastLoaded,
+        ..Default::default()
+    };
+    let mut server = ShardedServer::start(model, &cfg);
+    for _ in 0..3 {
+        server.classify(&ds.test.x).expect("aligned batch");
+    }
+    let per_replica: Vec<u64> =
+        (0..server.n_replicas()).map(|r| server.replica_metrics(r).snapshot().evals).collect();
+    assert!(
+        per_replica.iter().all(|&e| e > 0),
+        "replica starved under LeastLoaded uniform load: {per_replica:?}"
+    );
+    server.shutdown();
+}
+
+/// The sharded tier composes with multiple sequential batches and keeps
+/// globally unique, per-batch-ordered ids (same contract as
+/// `ModelServer`).
+#[test]
+fn sequential_batches_keep_id_contract() {
+    let ds = small_data();
+    let model = fit_fast("svm_lr", &ds, 25);
+    let f = ds.n_features();
+    let mut server = ShardedServer::start(model, &ShardedServerConfig::default());
+    let r1 = server.classify(&ds.test.x[..6 * f]).expect("aligned");
+    let r2 = server.classify(&ds.test.x[6 * f..12 * f]).expect("aligned");
+    assert!(r1.iter().enumerate().all(|(i, r)| r.id == i as u64));
+    assert!(r2.iter().enumerate().all(|(i, r)| r.id == 6 + i as u64));
+    server.shutdown();
+}
