@@ -1,0 +1,76 @@
+//! Execution-backend throughput: the software arena kernel vs the
+//! hardware-in-the-loop μarch backend over identical sample tiles, for
+//! every tree-based registry model.
+//! (criterion is unavailable offline; `util::bench` is the harness.)
+//!
+//! Run: `cargo bench --bench backend` (FOG_BENCH_FAST=1 for the CI smoke
+//! run with tiny sample counts).
+//!
+//! Answers are byte-identical across backends (pinned by
+//! `rust/tests/backend.rs`); this bench tracks the *price of the
+//! accounting* — how much wall-clock the cycle-level simulation adds per
+//! tile — and emits the simulated per-classification cycles, energy and
+//! comparator ops as `BENCH_JSON` lines so the hardware-in-the-loop
+//! numbers are tracked from PR to PR alongside throughput.
+
+use fog::api::{BackendKind, Classifier, Estimator, ModelSpec};
+use fog::util::bench::{black_box, Bencher};
+
+const TREE_MODELS: &[&str] = &["rf", "rf_prob", "fog_opt", "fog_max"];
+
+fn main() {
+    let fast = std::env::var("FOG_BENCH_FAST").is_ok();
+    let batch = if fast { 32 } else { 256 };
+    let mut b = Bencher::default();
+    let ds = fog::data::synthetic::generate(&fog::data::synthetic::DatasetProfile::demo(), 42);
+    let f = ds.n_features();
+
+    // The demo test split is smaller than the target batch; tile its rows
+    // round-robin so the batch stays on-profile.
+    let mut x = Vec::with_capacity(batch * f);
+    for i in 0..batch {
+        x.extend_from_slice(ds.test.row(i % ds.test.len()));
+    }
+
+    for &name in TREE_MODELS {
+        let spec = ModelSpec::for_shape(name, ds.n_features(), ds.n_classes())
+            .expect("registry name");
+        let spec = if fast { spec.fast() } else { spec };
+        let model = spec.fit(&ds.train, 1);
+        let sw = model.exec_backend(BackendKind::Software).expect("software backend");
+        let ua = model.exec_backend(BackendKind::Uarch).expect("uarch backend");
+
+        b.bench(&format!("{name}/software_tile/n{batch}"), batch, || {
+            black_box(sw.evaluate_tile(black_box(&x), batch));
+        });
+        let sw_m = b.results.last().unwrap().clone();
+
+        b.bench(&format!("{name}/uarch_tile/n{batch}"), batch, || {
+            black_box(ua.evaluate_tile(black_box(&x), batch));
+        });
+        let ua_m = b.results.last().unwrap().clone();
+
+        // One clean tile for the simulated accounting figures.
+        let (_, report) = ua.evaluate_tile(&x, batch);
+        let overhead = ua_m.median_ns / sw_m.median_ns.max(1.0);
+        println!(
+            "sim {name:<8} batch {batch}: {:.1} cycles/cls, {:.4} nJ/cls, \
+             {:.0} comparator ops/cls ({overhead:.2}x software wall-clock)",
+            report.cycles_per_class(),
+            report.energy_per_class_nj(),
+            report.comparator_ops_per_class()
+        );
+        println!(
+            "BENCH_JSON {{\"bench\":\"backend\",\"model\":\"{name}\",\"batch\":{batch},\
+             \"software_tile_ns\":{:.0},\"uarch_tile_ns\":{:.0},\"sim_overhead_x\":{overhead:.3},\
+             \"cycles_per_class\":{:.2},\"energy_per_class_nj\":{:.6},\
+             \"comparator_ops_per_class\":{:.2},\"software_per_s\":{:.1}}}",
+            sw_m.median_ns,
+            ua_m.median_ns,
+            report.cycles_per_class(),
+            report.energy_per_class_nj(),
+            report.comparator_ops_per_class(),
+            sw_m.throughput_per_s.unwrap_or(0.0)
+        );
+    }
+}

@@ -29,12 +29,15 @@ pub mod models;
 pub mod spec;
 
 pub use models::{measured_fog_stats, measured_rf_stats, FogModel, RfModel};
-pub use spec::{FogSpec, ModelConfig, ModelSpec, RouterPolicy, ServingSpec, REGISTRY};
+pub use spec::{
+    BackendKind, FogSpec, ModelConfig, ModelSpec, RouterPolicy, ServingSpec, REGISTRY,
+};
 
 use crate::data::Split;
 use crate::energy::blocks::{AreaBlocks, EnergyBlocks};
 use crate::energy::model::{ClassifierKind, CostReport};
 use crate::util::threadpool::par_map;
+use std::sync::Arc;
 
 /// A row-major `[n, n_classes]` matrix of class-probability rows — the
 /// result of one batched prediction.
@@ -150,6 +153,18 @@ pub trait Classifier: Send + Sync {
         eb: &EnergyBlocks,
         ab: &AreaBlocks,
     ) -> CostReport;
+
+    /// The execution backend evaluating this model's batches under
+    /// `kind`, or `None` when the family has no arena-backed engine (the
+    /// dense baselines) — serving replicas then fall back to
+    /// [`Classifier::predict_proba_batch`]. Implementations must keep
+    /// every backend answer-identical to the direct batch path: backends
+    /// change *accounting*, never *answers* (pinned by
+    /// `rust/tests/backend.rs`).
+    fn exec_backend(&self, kind: BackendKind) -> Option<Arc<dyn crate::exec::Backend>> {
+        let _ = kind;
+        None
+    }
 }
 
 /// Config → trained model: anything that can train a [`Classifier`] from

@@ -6,16 +6,17 @@
 //! The four baselines implement the trait in their own modules
 //! (`baselines::svm_linear` etc.) via [`super::batch_from_scores`].
 
+use super::spec::BackendKind;
 use super::{Classifier, ProbMatrix};
 use crate::data::Split;
 use crate::dt::{DecisionTree, FlatTree};
 use crate::energy::blocks::{AreaBlocks, EnergyBlocks};
 use crate::energy::model::{fog_cost, rf_cost, ClassifierKind, CostReport, FogStats, RfStats};
-use crate::exec::{BatchPlan, ForestArena, Reduce};
-use crate::fog::eval::InputOutcome;
+use crate::exec::backend::{fog_tile, forest_tile};
+use crate::exec::{Backend, ForestArena, Reduce, SoftwareBackend, UarchBackend};
+use crate::fog::eval::{content_start_grove, InputOutcome};
 use crate::fog::{FieldOfGroves, FogParams};
 use crate::forest::{RandomForest, VoteMode};
-use crate::util::rng::Rng;
 use crate::util::threadpool::par_map;
 use std::sync::Arc;
 
@@ -132,7 +133,7 @@ impl Classifier for FlatTree {
 ///
 /// The forest is packed into a shared [`ForestArena`] at construction;
 /// both vote modes serve batches through the tiled level-synchronous
-/// [`BatchPlan`] kernel. The arena sits behind an `Arc` so cloning the
+/// [`BatchPlan`](crate::exec::BatchPlan) kernel. The arena sits behind an `Arc` so cloning the
 /// model — and in particular running it on every replica of a
 /// [`ShardedServer`](crate::coordinator::ShardedServer) — shares the one
 /// packed allocation instead of copying trees (same discipline as
@@ -169,6 +170,14 @@ impl RfModel {
     /// Measured (or depth-bound) statistics feeding the RF energy model.
     pub fn stats(&self, probe: Option<&Split>) -> RfStats {
         measured_rf_stats(&self.rf, probe)
+    }
+
+    /// The arena reduction implementing this model's vote mode.
+    fn reduce(&self) -> Reduce {
+        match self.mode {
+            VoteMode::ProbAverage => Reduce::ProbAverage,
+            VoteMode::Majority => Reduce::MajorityVote,
+        }
     }
 }
 
@@ -216,12 +225,10 @@ impl Classifier for RfModel {
         // ProbAverage rows equal `RandomForest::predict_proba` bit-for-bit
         // (same per-tree accumulation order); Majority rows are vote
         // fractions — a valid distribution whose argmax is the
-        // majority-vote winner.
-        let reduce = match self.mode {
-            VoteMode::ProbAverage => Reduce::ProbAverage,
-            VoteMode::Majority => Reduce::MajorityVote,
-        };
-        BatchPlan::new(&self.arena, reduce).execute(x, n)
+        // majority-vote winner. `forest_tile` is the single kernel entry
+        // point shared with the execution backends, so direct, software-
+        // and uarch-served answers are identical by construction.
+        forest_tile(&self.arena, self.reduce(), x, n).0
     }
 
     // `predict_batch` keeps the trait default (argmax of the probability
@@ -237,6 +244,18 @@ impl Classifier for RfModel {
         ab: &AreaBlocks,
     ) -> CostReport {
         rf_cost(&self.stats(probe), eb, ab)
+    }
+
+    fn exec_backend(&self, kind: BackendKind) -> Option<Arc<dyn Backend>> {
+        let backend: Arc<dyn Backend> = match kind {
+            BackendKind::Software => {
+                Arc::new(SoftwareBackend::forest(Arc::clone(&self.arena), self.reduce()))
+            }
+            BackendKind::Uarch => {
+                Arc::new(UarchBackend::forest(Arc::clone(&self.arena), self.reduce()))
+            }
+        };
+        Some(backend)
     }
 }
 
@@ -294,13 +313,11 @@ impl FogModel {
 
     /// Content-derived start grove (batch-position independent). Public
     /// so conformance tests can replay Algorithm 2 against independent
-    /// per-tree `FlatTree` traversal.
+    /// per-tree `FlatTree` traversal. Delegates to the shared
+    /// [`content_start_grove`] hash so the execution backends (software
+    /// kernel and μarch ring) draw identical groves for identical rows.
     pub fn start_grove(&self, row: &[f32]) -> usize {
-        let mut h = self.params.seed ^ 0x9E3779B97F4A7C15;
-        for &v in row {
-            h = (h ^ v.to_bits() as u64).wrapping_mul(0x100000001B3);
-        }
-        Rng::new(h).gen_range(self.fog.n_groves())
+        content_start_grove(self.params.seed, row, self.fog.n_groves())
     }
 
     /// Algorithm 2 for one input at this operating point.
@@ -340,8 +357,11 @@ impl Classifier for FogModel {
     }
 
     fn predict_proba_batch(&self, x: &[f32], n: usize) -> ProbMatrix {
-        let rows = self.eval_batch(x, n).into_iter().map(|o| o.prob).collect();
-        ProbMatrix::from_rows(rows, self.fog.n_classes)
+        // `fog_tile` is the single Algorithm-2 kernel entry point shared
+        // with the execution backends (content-hashed start groves +
+        // `evaluate_one`), so direct, software- and uarch-served answers
+        // are identical by construction.
+        fog_tile(&self.fog, &self.params, x, n).0
     }
 
     fn cost_report(
@@ -356,6 +376,14 @@ impl Classifier for FogModel {
             _ => self.params.max_hops as f64,
         };
         fog_cost(&measured_fog_stats(&self.fog, avg_hops, self.kind), eb, ab)
+    }
+
+    fn exec_backend(&self, kind: BackendKind) -> Option<Arc<dyn Backend>> {
+        let backend: Arc<dyn Backend> = match kind {
+            BackendKind::Software => Arc::new(SoftwareBackend::fog(self.fog.clone(), self.params)),
+            BackendKind::Uarch => Arc::new(UarchBackend::fog(self.fog.clone(), self.params)),
+        };
+        Some(backend)
     }
 }
 

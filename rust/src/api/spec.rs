@@ -91,10 +91,48 @@ impl RouterPolicy {
     }
 }
 
+/// Execution-backend selection for the serving tier. Defined here next
+/// to [`RouterPolicy`] (registry layer below serving); the replicas of a
+/// [`ShardedServer`](crate::coordinator::ShardedServer) interpret it by
+/// resolving [`Classifier::exec_backend`](super::Classifier::exec_backend)
+/// once at start-up.
+///
+/// `Software` evaluates through the level-synchronous arena kernels
+/// unchanged; `Uarch` streams the same tiles through the cycle-level
+/// grove-ring simulator, adding per-classification cycle and energy
+/// accounting without changing any answer (tree-based models only).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    #[default]
+    Software,
+    Uarch,
+}
+
+impl BackendKind {
+    /// CLI / BENCH_JSON label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendKind::Software => "software",
+            BackendKind::Uarch => "uarch",
+        }
+    }
+
+    /// Parse a CLI spelling (`software | uarch`, with `sw`/`sim`
+    /// shorthands).
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "software" | "sw" => Some(BackendKind::Software),
+            "uarch" | "sim" => Some(BackendKind::Uarch),
+            _ => None,
+        }
+    }
+}
+
 /// Serving-tier knobs carried next to the training config: how many
 /// replicas of the trained model a
 /// [`ShardedServer`](crate::coordinator::ShardedServer) runs, how
-/// replicas are selected, and whether/how coarsely results are cached.
+/// replicas are selected, which execution backend evaluates batches, and
+/// whether/how coarsely results are cached.
 /// Training ignores these; `fog serve` and the sharded examples read
 /// them via
 /// [`ShardedServerConfig::for_serving`](crate::coordinator::ShardedServerConfig::for_serving).
@@ -104,6 +142,8 @@ pub struct ServingSpec {
     pub replicas: usize,
     /// Replica-selection policy.
     pub router: RouterPolicy,
+    /// Execution backend replicas dispatch batches through.
+    pub backend: BackendKind,
     /// Quantization step of the result-cache keys; `None` disables
     /// caching, `Some(0.0)` caches with exact-bit keys.
     pub cache_quant: Option<f32>,
@@ -116,6 +156,7 @@ impl Default for ServingSpec {
         ServingSpec {
             replicas: 1,
             router: RouterPolicy::LeastLoaded,
+            backend: BackendKind::Software,
             cache_quant: None,
             cache_capacity: 4096,
         }
@@ -272,6 +313,14 @@ impl ModelSpec {
         self
     }
 
+    /// Execution backend the serving replicas dispatch batches through
+    /// (`Software` = arena kernels; `Uarch` = hardware-in-the-loop grove
+    /// ring with live cycle/energy accounting, tree-based models only).
+    pub fn with_backend(mut self, backend: BackendKind) -> Self {
+        self.serving.backend = backend;
+        self
+    }
+
     /// Enable the serving result cache with the given key-quantization
     /// step (0.0 = exact-bit keys; hits are byte-identical to cold
     /// evaluation).
@@ -417,17 +466,31 @@ mod tests {
             .unwrap()
             .with_replicas(4)
             .with_router(RouterPolicy::RoundRobin)
+            .with_backend(BackendKind::Uarch)
             .with_cache_quant(0.25)
             .with_cache_capacity(128);
         assert_eq!(spec.serving.replicas, 4);
         assert_eq!(spec.serving.router, RouterPolicy::RoundRobin);
+        assert_eq!(spec.serving.backend, BackendKind::Uarch);
         assert_eq!(spec.serving.cache_quant, Some(0.25));
         assert_eq!(spec.serving.cache_capacity, 128);
-        // Defaults: unsharded, no cache — training is never affected.
+        // Defaults: unsharded, software backend, no cache — training is
+        // never affected.
         let plain = ModelSpec::by_name("rf").unwrap();
         assert_eq!(plain.serving.replicas, 1);
+        assert_eq!(plain.serving.backend, BackendKind::Software);
         assert!(plain.serving.cache_quant.is_none());
         assert_eq!(ModelSpec::by_name("rf").unwrap().with_replicas(0).serving.replicas, 1);
+    }
+
+    #[test]
+    fn backend_kind_labels_roundtrip() {
+        for kind in [BackendKind::Software, BackendKind::Uarch] {
+            assert_eq!(BackendKind::parse(kind.label()), Some(kind));
+        }
+        assert_eq!(BackendKind::parse("sw"), Some(BackendKind::Software));
+        assert_eq!(BackendKind::parse("sim"), Some(BackendKind::Uarch));
+        assert_eq!(BackendKind::parse("native"), None);
     }
 
     #[test]

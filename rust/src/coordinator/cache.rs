@@ -299,6 +299,49 @@ mod tests {
     }
 
     #[test]
+    fn no_eviction_until_exactly_past_capacity() {
+        // Boundary: filling to *exact* capacity keeps every entry; the
+        // first insert beyond it evicts exactly one (the LRU).
+        let c = ProbCache::new(&CacheConfig { capacity: 4, n_shards: 1, quant_step: 0.0 });
+        for i in 0..4 {
+            c.insert(c.key(&[i as f32]), vec![i as f32]);
+        }
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.stats().evictions, 0, "evicted below capacity");
+        for i in 0..4 {
+            assert_eq!(c.get(&c.key(&[i as f32])), Some(vec![i as f32]));
+        }
+        c.insert(c.key(&[99.0f32]), vec![99.0]);
+        assert_eq!(c.len(), 4, "capacity exceeded");
+        assert_eq!(c.stats().evictions, 1);
+        // The LRU victim is entry 0 (every other entry was just touched
+        // by the gets above — in insertion order, so 0 is oldest).
+        assert!(c.get(&c.key(&[0.0f32])).is_none(), "LRU entry survived");
+        assert!(c.get(&c.key(&[99.0f32])).is_some());
+    }
+
+    #[test]
+    fn quantization_collisions_map_to_one_entry() {
+        // Boundary: at step 1.0 the rows 0.2, -0.2 and 0.4 all round to
+        // bucket 0 per feature — one key, one entry, last insert wins.
+        let c = cache(16, 1.0);
+        let k_a = c.key(&[0.2f32, 0.2]);
+        let k_b = c.key(&[-0.2f32, 0.4]);
+        let k_far = c.key(&[0.6f32, 0.2]); // 0.6 rounds to bucket 1
+        assert_eq!(k_a, k_b, "colliding buckets must share a key");
+        assert_ne!(k_a, k_far);
+        c.insert(k_a.clone(), vec![0.9, 0.1]);
+        // The collision returns the cached approximation...
+        assert_eq!(c.get(&k_b), Some(vec![0.9, 0.1]));
+        // ...and re-inserting through the colliding key replaces, not
+        // duplicates.
+        c.insert(k_b, vec![0.2, 0.8]);
+        assert_eq!(c.get(&k_a), Some(vec![0.2, 0.8]));
+        let occupied: usize = c.len();
+        assert_eq!(occupied, 1, "collision created a duplicate entry");
+    }
+
+    #[test]
     fn zero_capacity_disables() {
         let c = ProbCache::new(&CacheConfig { capacity: 0, n_shards: 8, quant_step: 0.0 });
         let key = c.key(&[1.0]);

@@ -1,16 +1,26 @@
-//! Serving metrics: lock-free counters updated by workers, plus a
-//! latency reservoir the collector fills (reservoirs need no locks on
-//! the hot path because only the collector thread touches them).
+//! Serving metrics: lock-free counters updated by workers, a bounded
+//! per-batch latency reservoir, and execution-backend aggregates.
 //!
 //! Paper anchor: these are the deployment-side observables of the §4.2
 //! energy claims — `avg_hops` is the Figure-5 x-axis driver (groves
-//! consulted per classification), and the cache hit/miss counters track
-//! how many classifications the sharded tier answered with *zero* grove
-//! evaluations. One `Metrics` instance serves a whole [`super::FogServer`]
-//! or [`super::ModelServer`]; a [`super::ShardedServer`] keeps one per
-//! replica plus a front-end instance for request/cache accounting.
+//! consulted per classification), the cache hit/miss counters track how
+//! many classifications the sharded tier answered with *zero* grove
+//! evaluations, and the `exec_*` counters carry the hardware-in-the-loop
+//! [`ExecReport`](crate::exec::ExecReport)s (simulated cycles and
+//! nanojoules per classification, §4.2 / Table 1's headline metric) that
+//! `fog serve --backend uarch` surfaces live. One `Metrics` instance
+//! serves a whole [`super::FogServer`] or [`super::ModelServer`]; a
+//! [`super::ShardedServer`] keeps one per replica plus a front-end
+//! instance for request/cache accounting, merged with *saturating* adds
+//! by [`MetricsSnapshot::merge_worker`].
 
+use crate::exec::ExecReport;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Bounded size of the per-batch latency reservoir; once full, new
+/// samples overwrite round-robin so the summary tracks recent traffic.
+const BATCH_LATENCY_CAP: usize = 4096;
 
 /// Shared atomic counters.
 #[derive(Debug, Default)]
@@ -27,9 +37,56 @@ pub struct Metrics {
     pub cache_hits: AtomicU64,
     /// Requests that missed the cache and went to a replica queue.
     pub cache_misses: AtomicU64,
+    /// Classifications evaluated through an execution backend.
+    pub exec_samples: AtomicU64,
+    /// Comparator ops reported by the backend (arena-derived).
+    pub exec_comparator_ops: AtomicU64,
+    /// Simulated clock cycles (0 under the software backend).
+    pub exec_cycles: AtomicU64,
+    /// Simulated dynamic energy in femtojoules (1 fJ = 1e-6 nJ; integer
+    /// so workers can accumulate it lock-free).
+    pub exec_energy_fj: AtomicU64,
+    /// Per-batch evaluation latency samples (µs), bounded reservoir.
+    batch_latency_us: Mutex<Vec<u64>>,
+    /// Overwrite cursor once the latency reservoir is full.
+    latency_ticks: AtomicU64,
 }
 
 impl Metrics {
+    /// Fold one tile's execution report into the counters. (Cross-replica
+    /// aggregation saturates in [`MetricsSnapshot::merge_worker`]; the
+    /// per-instance atomics use plain adds — u64 wrap is centuries away
+    /// at serving rates.)
+    pub fn record_exec(&self, r: &ExecReport) {
+        self.exec_samples.fetch_add(r.samples, Ordering::Relaxed);
+        self.exec_comparator_ops.fetch_add(r.comparator_ops, Ordering::Relaxed);
+        self.exec_cycles.fetch_add(r.cycles, Ordering::Relaxed);
+        let fj = (r.energy_nj * 1e6).max(0.0).round() as u64;
+        self.exec_energy_fj.fetch_add(fj, Ordering::Relaxed);
+    }
+
+    /// Record one batch evaluation's wall-clock latency.
+    pub fn record_batch_latency_us(&self, us: u64) {
+        let Ok(mut v) = self.batch_latency_us.lock() else { return };
+        if v.len() < BATCH_LATENCY_CAP {
+            v.push(us);
+        } else {
+            let i = (self.latency_ticks.fetch_add(1, Ordering::Relaxed) as usize)
+                % BATCH_LATENCY_CAP;
+            v[i] = us;
+        }
+    }
+
+    /// Percentile summary of the recorded per-batch latencies.
+    pub fn batch_latency_summary(&self) -> LatencySummary {
+        let samples: Vec<f64> = self
+            .batch_latency_us
+            .lock()
+            .map(|v| v.iter().map(|&u| u as f64).collect())
+            .unwrap_or_default();
+        LatencySummary::from_us(samples)
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
@@ -40,12 +97,16 @@ impl Metrics {
             evals: self.evals.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            exec_samples: self.exec_samples.load(Ordering::Relaxed),
+            exec_comparator_ops: self.exec_comparator_ops.load(Ordering::Relaxed),
+            exec_cycles: self.exec_cycles.load(Ordering::Relaxed),
+            exec_energy_fj: self.exec_energy_fj.load(Ordering::Relaxed),
         }
     }
 }
 
 /// Point-in-time copy.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct MetricsSnapshot {
     pub requests: u64,
     pub responses: u64,
@@ -55,9 +116,32 @@ pub struct MetricsSnapshot {
     pub evals: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    pub exec_samples: u64,
+    pub exec_comparator_ops: u64,
+    pub exec_cycles: u64,
+    pub exec_energy_fj: u64,
 }
 
 impl MetricsSnapshot {
+    /// Merge a replica's worker-side counters into an aggregate snapshot
+    /// with *saturating* adds (a wrapped aggregate would report a bogus
+    /// rate). Front-end-owned counters — `requests`, `cache_hits`,
+    /// `cache_misses` — are deliberately not merged: the front end counts
+    /// each client row once, while a replica's `requests` gauge counts
+    /// the jobs routed to it; adding them would double-count.
+    pub fn merge_worker(&mut self, other: &MetricsSnapshot) {
+        self.responses = self.responses.saturating_add(other.responses);
+        self.hops_total = self.hops_total.saturating_add(other.hops_total);
+        self.forwards = self.forwards.saturating_add(other.forwards);
+        self.batches = self.batches.saturating_add(other.batches);
+        self.evals = self.evals.saturating_add(other.evals);
+        self.exec_samples = self.exec_samples.saturating_add(other.exec_samples);
+        self.exec_comparator_ops =
+            self.exec_comparator_ops.saturating_add(other.exec_comparator_ops);
+        self.exec_cycles = self.exec_cycles.saturating_add(other.exec_cycles);
+        self.exec_energy_fj = self.exec_energy_fj.saturating_add(other.exec_energy_fj);
+    }
+
     pub fn avg_hops(&self) -> f64 {
         if self.responses == 0 {
             0.0
@@ -82,6 +166,46 @@ impl MetricsSnapshot {
             0.0
         } else {
             self.cache_hits as f64 / lookups as f64
+        }
+    }
+
+    /// Simulated dynamic energy per *evaluated* classification, nJ
+    /// (0 when no backend reported — software backend or cache-only
+    /// traffic).
+    pub fn energy_per_class_nj(&self) -> f64 {
+        if self.exec_samples == 0 {
+            0.0
+        } else {
+            self.exec_energy_fj as f64 * 1e-6 / self.exec_samples as f64
+        }
+    }
+
+    /// Simulated dynamic energy amortized over every *response* — cache
+    /// hits are classifications at zero evaluation energy, so this is
+    /// what the deployment actually spends per answer.
+    pub fn energy_per_response_nj(&self) -> f64 {
+        if self.responses == 0 {
+            0.0
+        } else {
+            self.exec_energy_fj as f64 * 1e-6 / self.responses as f64
+        }
+    }
+
+    /// Simulated clock cycles per evaluated classification.
+    pub fn cycles_per_class(&self) -> f64 {
+        if self.exec_samples == 0 {
+            0.0
+        } else {
+            self.exec_cycles as f64 / self.exec_samples as f64
+        }
+    }
+
+    /// Comparator operations per evaluated classification.
+    pub fn comparator_ops_per_class(&self) -> f64 {
+        if self.exec_samples == 0 {
+            0.0
+        } else {
+            self.exec_comparator_ops as f64 / self.exec_samples as f64
         }
     }
 }
@@ -144,5 +268,70 @@ mod tests {
         assert!(s.p99_us >= s.p95_us);
         let empty = LatencySummary::from_us(vec![]);
         assert_eq!(empty.mean_us, 0.0);
+    }
+
+    #[test]
+    fn exec_reports_fold_into_per_class_rates() {
+        let m = Metrics::default();
+        let s = m.snapshot();
+        assert_eq!(s.energy_per_class_nj(), 0.0);
+        assert_eq!(s.cycles_per_class(), 0.0);
+        let r = ExecReport {
+            samples: 4,
+            comparator_ops: 400,
+            cycles: 100,
+            energy_nj: 2.0,
+            ..Default::default()
+        };
+        m.record_exec(&r);
+        m.record_exec(&r);
+        m.responses.fetch_add(16, Ordering::Relaxed); // 8 evaluated + 8 cached
+        let s = m.snapshot();
+        assert_eq!(s.exec_samples, 8);
+        assert!((s.energy_per_class_nj() - 0.5).abs() < 1e-9);
+        assert!((s.energy_per_response_nj() - 0.25).abs() < 1e-9);
+        assert!((s.cycles_per_class() - 25.0).abs() < 1e-12);
+        assert!((s.comparator_ops_per_class() - 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_worker_saturates_and_skips_front_end_counters() {
+        let mut a = MetricsSnapshot { responses: u64::MAX - 1, ..Default::default() };
+        let b = MetricsSnapshot {
+            responses: 5,
+            batches: 3,
+            evals: 7,
+            requests: 11,     // front-end-owned: must not merge
+            cache_hits: 13,   // front-end-owned: must not merge
+            exec_samples: 2,
+            exec_energy_fj: 1000,
+            ..Default::default()
+        };
+        a.merge_worker(&b);
+        assert_eq!(a.responses, u64::MAX, "responses must saturate, not wrap");
+        assert_eq!(a.batches, 3);
+        assert_eq!(a.evals, 7);
+        assert_eq!(a.exec_samples, 2);
+        assert_eq!(a.exec_energy_fj, 1000);
+        assert_eq!(a.requests, 0, "requests double-counted");
+        assert_eq!(a.cache_hits, 0, "cache hits double-counted");
+    }
+
+    #[test]
+    fn batch_latency_reservoir_summarizes_and_stays_bounded() {
+        let m = Metrics::default();
+        assert_eq!(m.batch_latency_summary().mean_us, 0.0);
+        for us in [10u64, 20, 30, 40] {
+            m.record_batch_latency_us(us);
+        }
+        let s = m.batch_latency_summary();
+        assert!((s.mean_us - 25.0).abs() < 1e-9);
+        assert!(s.p99_us >= s.p50_us && s.p50_us > 0.0);
+        // Reservoir never grows past its cap.
+        for us in 0..(2 * super::BATCH_LATENCY_CAP as u64) {
+            m.record_batch_latency_us(us);
+        }
+        let len = m.batch_latency_us.lock().unwrap().len();
+        assert_eq!(len, super::BATCH_LATENCY_CAP);
     }
 }

@@ -16,12 +16,22 @@
 //! scale-out [`super::ShardedServer`] runs N of them behind a
 //! [`super::ShardRouter`] and a [`super::ProbCache`] — same worker loop,
 //! same metrics, no duplicated batching logic.
+//!
+//! Each replica resolves an execution backend
+//! ([`Classifier::exec_backend`]) once at start-up and dispatches every
+//! assembled batch through it — `Router → Replica → Backend → Arena`.
+//! The default [`BackendKind::Software`] runs the arena kernels
+//! unchanged; [`BackendKind::Uarch`] streams the same tiles through the
+//! cycle-level grove-ring simulator, folding per-tile cycle and energy
+//! reports into the replica's [`Metrics`] (answers are byte-identical
+//! either way — the backend conformance suite pins it).
 
 use super::cache::{CacheKey, ProbCache};
 use super::messages::Response;
 use super::metrics::Metrics;
 use super::router::ShardRouter;
-use crate::api::Classifier;
+use crate::api::{BackendKind, Classifier};
+use crate::exec::Backend as ExecBackend;
 use crate::util::error::Result;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -48,6 +58,13 @@ pub struct ModelServerConfig {
     pub batch_timeout: Duration,
     /// Worker threads sharing the queue.
     pub n_workers: usize,
+    /// Execution backend workers dispatch batches through. Resolved once
+    /// per replica via [`Classifier::exec_backend`]; models without a
+    /// backend for the kind (dense baselines) fall back to
+    /// [`Classifier::predict_proba_batch`]. `Uarch` adds live
+    /// cycle/energy accounting to the replica's [`Metrics`] without
+    /// changing any answer.
+    pub backend: BackendKind,
 }
 
 impl Default for ModelServerConfig {
@@ -56,15 +73,20 @@ impl Default for ModelServerConfig {
             batch_size: 32,
             batch_timeout: Duration::from_micros(200),
             n_workers: 2,
+            backend: BackendKind::Software,
         }
     }
 }
 
 /// Side channels a replica's workers report into besides the response
-/// stream: per-replica metrics, the shared cache to fill on completion,
-/// and the router gauge to decrement per retired job.
+/// stream: per-replica metrics, the execution backend evaluating
+/// batches, the shared cache to fill on completion, and the router gauge
+/// to decrement per retired job.
 pub(crate) struct ReplicaCtx {
     pub metrics: Arc<Metrics>,
+    /// Resolved execution backend (`None` = fall back to the model's own
+    /// batch path — dense baselines have no arena engine).
+    pub backend: Option<Arc<dyn ExecBackend>>,
     pub cache: Option<Arc<ProbCache>>,
     /// `(router, this replica's index)` — completions are reported so
     /// `LeastLoaded` sees live queue depths.
@@ -96,6 +118,10 @@ impl Replica {
         let shared_rx = Arc::new(Mutex::new(job_rx));
         let n_workers = cfg.n_workers.max(1);
         let batch_size = cfg.batch_size.max(1);
+        // Resolve the execution backend once; every worker dispatches
+        // through the same engine (request path: Router → Replica →
+        // Backend → Arena).
+        let backend = model.exec_backend(cfg.backend);
 
         let mut workers = Vec::with_capacity(n_workers);
         for w in 0..n_workers {
@@ -103,6 +129,7 @@ impl Replica {
             let tx = resp_tx.clone();
             let ctx = ReplicaCtx {
                 metrics: Arc::clone(&metrics),
+                backend: backend.clone(),
                 cache: cache.clone(),
                 router: router.clone(),
             };
@@ -252,12 +279,23 @@ pub(crate) fn run_replica_worker(
         ctx.metrics.batches.fetch_add(1, Ordering::Relaxed);
         ctx.metrics.evals.fetch_add(batch.len() as u64, Ordering::Relaxed);
 
-        // One batch-first prediction for the whole assembly.
+        // One batch-first prediction for the whole assembly, dispatched
+        // through the replica's execution backend when one exists
+        // (answers are backend-independent; only the accounting differs).
         let mut x = Vec::with_capacity(batch.len() * f);
         for job in &batch {
             x.extend_from_slice(&job.features);
         }
-        let probs = model.predict_proba_batch(&x, batch.len());
+        let t_eval = Instant::now();
+        let probs = match &ctx.backend {
+            Some(backend) => {
+                let (probs, report) = backend.evaluate_tile(&x, batch.len());
+                ctx.metrics.record_exec(&report);
+                probs
+            }
+            None => model.predict_proba_batch(&x, batch.len()),
+        };
+        ctx.metrics.record_batch_latency_us(t_eval.elapsed().as_micros() as u64);
         let labels = probs.argmax_rows();
 
         for (i, job) in batch.into_iter().enumerate() {
@@ -329,6 +367,30 @@ mod tests {
         // The FoG model's content-hashed start groves make batched and
         // per-request serving agree no matter how batches form.
         serve("fog_opt", &ModelServerConfig { batch_size: 4, ..Default::default() });
+    }
+
+    #[test]
+    fn uarch_backend_serving_matches_offline() {
+        use crate::api::BackendKind;
+        let ds = generate(&DatasetProfile::demo(), 224);
+        let spec = ModelSpec::for_shape("fog_opt", ds.n_features(), ds.n_classes())
+            .unwrap()
+            .fast();
+        let model: Arc<dyn Classifier> = Arc::from(spec.fit(&ds.train, 9));
+        let offline = model.predict_proba_batch(&ds.test.x, ds.test.len());
+        let cfg = ModelServerConfig { backend: BackendKind::Uarch, ..Default::default() };
+        let mut server = ModelServer::start(Arc::clone(&model), &cfg);
+        let responses = server.classify(&ds.test.x).expect("aligned batch");
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(&r.prob[..], offline.row(i), "uarch-served row {i} diverged");
+        }
+        let snap = server.metrics().snapshot();
+        assert_eq!(snap.exec_samples as usize, ds.test.len());
+        assert!(snap.energy_per_class_nj() > 0.0, "no live energy reported");
+        assert!(snap.cycles_per_class() > 0.0);
+        let lat = server.metrics().batch_latency_summary();
+        assert!(lat.p99_us >= lat.p50_us);
+        server.shutdown();
     }
 
     #[test]

@@ -19,7 +19,11 @@
 //! 2. **Router** — misses are routed to a replica by the shared
 //!    [`ShardRouter`] (`Random`, `RoundRobin`, or `LeastLoaded` over the
 //!    live in-flight gauges), enqueued, and batch-evaluated by that
-//!    replica's workers, which fill the cache on completion.
+//!    replica's workers through the replica's execution backend
+//!    ([`crate::exec::Backend`], `software | uarch`); workers fill the
+//!    cache on completion and fold the backend's per-tile
+//!    [`ExecReport`](crate::exec::ExecReport) (simulated cycles,
+//!    nanojoules) into the replica's [`Metrics`].
 //!
 //! Request path (see `ARCHITECTURE.md` at the repo root for the full
 //! stack):
@@ -30,7 +34,10 @@
 //!                   ▼
 //!               ShardRouter ──► replica queue ──► worker batch
 //!                                                   │
-//!                     cache fill ◄── ProbMatrix ◄───┘
+//!                                    exec::Backend (software | uarch)
+//!                                                   │
+//!                     cache fill ◄── ProbMatrix ◄───┤
+//!                                     ExecReport ───┴──► Metrics
 //! ```
 //!
 //! Every replica is batch-composition independent (the arena kernel and
@@ -96,7 +103,7 @@ impl ShardedServerConfig {
         };
         ShardedServerConfig {
             replicas: s.replicas.max(1),
-            worker: ModelServerConfig::default(),
+            worker: ModelServerConfig { backend: s.backend, ..Default::default() },
             router: s.router,
             router_seed: 0,
             cache,
@@ -227,17 +234,14 @@ impl ShardedServer {
         self.cache.as_deref()
     }
 
-    /// One merged snapshot: front-end counters plus the sum over every
-    /// replica (so `responses` covers both cached and evaluated answers).
+    /// One merged snapshot: front-end counters plus the saturating sum
+    /// of every replica's worker-side counters (so `responses` covers
+    /// both cached and evaluated answers, and the `exec_*` aggregates
+    /// carry the fleet's hardware-in-the-loop cycle/energy totals).
     pub fn snapshot(&self) -> MetricsSnapshot {
         let mut total = self.front.snapshot();
         for replica in &self.replicas {
-            let s = replica.metrics.snapshot();
-            total.responses += s.responses;
-            total.hops_total += s.hops_total;
-            total.forwards += s.forwards;
-            total.batches += s.batches;
-            total.evals += s.evals;
+            total.merge_worker(&replica.metrics.snapshot());
         }
         total
     }
@@ -344,6 +348,48 @@ mod tests {
         );
         assert!(server.cache().is_none());
         server.shutdown();
+    }
+
+    #[test]
+    fn uarch_fleet_matches_software_fleet_and_reports_energy() {
+        use crate::api::BackendKind;
+        let (m, ds) = model("fog_opt", 36);
+        let serve = |backend: BackendKind| {
+            let cfg = ShardedServerConfig {
+                replicas: 2,
+                worker: ModelServerConfig { backend, ..Default::default() },
+                ..Default::default()
+            };
+            let mut server = ShardedServer::start(Arc::clone(&m), &cfg);
+            let responses = server.classify(&ds.test.x).expect("aligned batch");
+            let snap = server.snapshot();
+            server.shutdown();
+            (responses, snap)
+        };
+        let (sw, _) = serve(BackendKind::Software);
+        let (ua, snap) = serve(BackendKind::Uarch);
+        for (a, b) in sw.iter().zip(&ua) {
+            assert_eq!(a.prob, b.prob, "uarch replica answer diverged from software");
+        }
+        assert_eq!(snap.exec_samples as usize, ds.test.len());
+        assert!(snap.energy_per_class_nj() > 0.0, "fleet reported no live energy");
+        assert!(snap.cycles_per_class() > 0.0);
+        assert!(snap.comparator_ops_per_class() > 0.0);
+    }
+
+    #[test]
+    fn no_cache_flag_equals_zero_capacity() {
+        // Satellite boundary: a spec with caching never enabled
+        // (`--no-cache`: cache_quant stays None) and a spec with an
+        // explicit zero entry budget must produce the same cache-less
+        // serving config.
+        let never = crate::api::ModelSpec::by_name("rf").unwrap();
+        assert!(ShardedServerConfig::for_serving(&never.serving).cache.is_none());
+        let zero_cap = crate::api::ModelSpec::by_name("rf")
+            .unwrap()
+            .with_cache_quant(0.0)
+            .with_cache_capacity(0);
+        assert!(ShardedServerConfig::for_serving(&zero_cap.serving).cache.is_none());
     }
 
     #[test]

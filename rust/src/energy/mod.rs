@@ -16,6 +16,16 @@
 //! Absolute nJ values are calibrated to land in the paper's ranges (their
 //! testbed is a synthesized ASIC we don't have); the *ratios* between
 //! classifiers — the claims of Table 1 — emerge from op-count structure.
+//!
+//! **Paper anchors:** §4.1 (methodology steps 1–3: block
+//! characterization, Aladdin-style DSE, per-classifier assembly), §4.2 /
+//! Table 1 (energy, latency and area rows), Figure 5 (energy
+//! proportionality in the hop count). Beyond the offline harnesses, the
+//! same block energies drive *serving-time* accounting: the
+//! [`model::event_energy_nj`] fold turns the μarch simulator's event
+//! counters into the per-classification nanojoules that
+//! `fog serve --backend uarch` reports live (see
+//! [`crate::exec::backend`]).
 
 pub mod aladdin;
 pub mod blocks;

@@ -81,6 +81,25 @@ impl CostReport {
     }
 }
 
+/// Dynamic energy (nJ) of counted μarch execution events — the single
+/// per-report fold shared by the ring simulator's
+/// [`SimStats::dynamic_energy_nj`](crate::uarch::SimStats) and the
+/// serving tier's per-tile [`ExecReport`](crate::exec::ExecReport)s, so
+/// offline simulation and hardware-in-the-loop serving charge identical
+/// block energies per event.
+pub fn event_energy_nj(
+    eb: &EnergyBlocks,
+    comparator_ops: f64,
+    queue_bytes_read: f64,
+    queue_bytes_written: f64,
+    handshakes: f64,
+) -> f64 {
+    eb.comparisons_nj(comparator_ops)
+        + eb.sram_read_nj(queue_bytes_read)
+        + eb.sram_write_nj(queue_bytes_written)
+        + handshakes * eb.handshake_pj * 1e-3
+}
+
 fn stream_overflow_nj(working_set_bytes: f64) -> f64 {
     if working_set_bytes > ONCHIP_BYTES {
         (working_set_bytes - ONCHIP_BYTES) * STREAM_PJ_PER_BYTE * 1e-3
@@ -401,6 +420,22 @@ mod tests {
         let mlp = mlp_cost(&[784, 128, 10], &eb(), &ab());
         assert!(cnn.energy_nj > rf.energy_nj);
         assert!(cnn.energy_nj > mlp.energy_nj);
+    }
+
+    #[test]
+    fn event_energy_fold_charges_every_block() {
+        let b = eb();
+        // 1000 comparisons alone = 0.06 nJ (block library unit test's
+        // anchor); adding traffic and handshakes only increases it.
+        let base = event_energy_nj(&b, 1000.0, 0.0, 0.0, 0.0);
+        assert!((base - 0.06).abs() < 1e-9);
+        let full = event_energy_nj(&b, 1000.0, 100.0, 100.0, 10.0);
+        let expected = b.comparisons_nj(1000.0)
+            + b.sram_read_nj(100.0)
+            + b.sram_write_nj(100.0)
+            + 10.0 * b.handshake_pj * 1e-3;
+        assert!((full - expected).abs() < 1e-12);
+        assert!(full > base);
     }
 
     #[test]

@@ -475,4 +475,77 @@ mod tests {
         let (trees, _) = flats();
         let _ = ForestArena::from_flat_trees(&trees).with_grove_sizes(&[1, 1]);
     }
+
+    #[test]
+    #[should_panic(expected = "empty grove")]
+    fn zero_size_grove_slice_rejected() {
+        // A grove partition may never contain an empty tree-range slice,
+        // even when the sizes still sum to the forest.
+        let (trees, _) = flats();
+        let n = trees.len();
+        let _ = ForestArena::from_flat_trees(&trees).with_grove_sizes(&[n, 0]);
+    }
+
+    #[test]
+    fn leaf_only_trees_pack_and_predict() {
+        // Depth-0 forest: every tree is a bare leaf (pure-class training
+        // data). The arena must pack it with an empty node table and
+        // still answer through every accessor.
+        let mut s = crate::data::Split::new(2, 3);
+        for _ in 0..6 {
+            s.push(&[0.0, 1.0], 2);
+        }
+        let mut rng = crate::util::rng::Rng::new(5);
+        let tree = crate::dt::builder::fit_tree(
+            &s,
+            &[0, 1, 2, 3, 4, 5],
+            &crate::dt::builder::TreeParams::default(),
+            &mut rng,
+        );
+        assert_eq!(tree.depth, 0, "pure-class fit should be a single leaf");
+        let flat = FlatTree::from_tree(&tree, 0);
+        let arena = ForestArena::from_flat_trees(&[flat.clone(), flat]);
+        assert_eq!(arena.depth(), 0);
+        assert_eq!(arena.n_internal_per_tree(), 0);
+        assert_eq!(arena.n_leaves_per_tree(), 1);
+        assert_eq!(arena.ops_per_eval_range(0, 2), 0, "no levels, no comparator ops");
+        for t in 0..2 {
+            assert_eq!(arena.leaf_index(t, &[9.9, -9.9]), 0);
+            assert_eq!(arena.leaf_dist(t, &[0.5, 0.5]), &[0.0, 0.0, 1.0]);
+            assert_eq!(arena.live_nodes(t), 0);
+            let visited = arena.walk_tree(t, &[1.0, 2.0], |_, _| panic!("no levels to visit"));
+            assert_eq!(visited, 0);
+        }
+        // Materialization round-trips the degenerate shape.
+        assert_eq!(arena.tree(0).depth, 0);
+        assert_eq!(arena.tree(0).leaf, vec![0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn max_depth_padding_slots_are_dead_but_function_preserving() {
+        // Re-pad two levels past the trained depth: every walk crosses
+        // dead (padding) slots, live-node accounting is unchanged, and
+        // the reached distribution equals the original tree's.
+        let (trees, ds) = flats();
+        let orig = ForestArena::from_flat_trees(&trees);
+        let deeper: Vec<FlatTree> = trees.iter().map(|t| t.repad(t.depth + 2)).collect();
+        let arena = ForestArena::from_flat_trees(&deeper);
+        assert_eq!(arena.depth(), orig.depth() + 2);
+        let x = ds.test.row(0);
+        for t in 0..arena.n_trees() {
+            assert_eq!(arena.live_nodes(t), orig.live_nodes(t), "padding became live");
+            let mut dead = 0;
+            let leaf = arena.walk_tree(t, x, |_, live| {
+                if !live {
+                    dead += 1;
+                }
+            });
+            assert!(dead >= 2, "tree {t}: walk crossed {dead} dead slots, expected ≥ 2");
+            assert_eq!(
+                arena.leaf_slice(t, leaf),
+                orig.leaf_dist(t, x),
+                "tree {t}: padded walk reached a different distribution"
+            );
+        }
+    }
 }

@@ -1,0 +1,424 @@
+//! [`Backend`] — pluggable execution backends behind every tree-based
+//! prediction path.
+//!
+//! The paper's headline metric is *energy per classification* (§1,
+//! §4.2), yet a software serving tier naturally reports only throughput.
+//! This module closes that gap by making the execution engine behind a
+//! prediction path a first-class, swappable object:
+//!
+//! * [`SoftwareBackend`] — today's kernels, unchanged: the tiled
+//!   level-synchronous [`BatchPlan`] for whole-forest reductions and
+//!   Algorithm 2's confidence-gated per-sample arena walk for FoG
+//!   operating points. Reports arena-derived comparator-op counts; no
+//!   cycle or energy accounting (software has no hardware clock).
+//! * [`UarchBackend`] — hardware in the loop: the same sample tiles are
+//!   streamed through the cycle-level grove-ring simulator
+//!   (`uarch::{pe, ring, queue, handshake, stats}`), and the collected
+//!   [`SimStats`] are folded through the PPA block library
+//!   ([`crate::energy::model::event_energy_nj`]) into per-tile cycle and
+//!   joule estimates. `fog serve --backend uarch` surfaces these as live
+//!   energy-per-classification next to throughput.
+//!
+//! **Conformance invariant** (pinned by `rust/tests/backend.rs`): a
+//! backend changes *accounting*, never *answers*. [`UarchBackend`]
+//! probability rows are byte-identical to [`SoftwareBackend`] for every
+//! tree-based registry model — the simulator is driven with the model's
+//! own content-hashed start groves and its PE runs the very same
+//! arena-slice arithmetic — and its comparator-op counts equal the
+//! arena-derived accounting (`ops_per_eval_range` = trees × padded
+//! depth per visited grove), so Table 1 / Fig 4–5 numbers are unchanged.
+//!
+//! Serving integration: replicas resolve a backend once at start-up via
+//! [`Classifier::exec_backend`](crate::api::Classifier::exec_backend)
+//! and dispatch every assembled batch through
+//! [`Backend::evaluate_tile`], folding the returned [`ExecReport`] into
+//! their [`Metrics`](crate::coordinator::Metrics) — the request path is
+//! `Router → Replica → Backend → Arena` (see `ARCHITECTURE.md`).
+
+use super::arena::ForestArena;
+use super::batch::{BatchPlan, Reduce};
+use crate::api::ProbMatrix;
+use crate::energy::blocks::EnergyBlocks;
+use crate::fog::eval::content_start_grove;
+use crate::fog::{FieldOfGroves, FogParams, Grove};
+use crate::uarch::pe::PeModel;
+use crate::uarch::{RingConfig, RingSim, SimStats};
+use crate::util::threadpool::par_map;
+use std::sync::Arc;
+
+/// Execution accounting for one evaluated tile (or an aggregate of
+/// tiles — see [`ExecReport::merge`]). Counter semantics follow
+/// [`SimStats`]; `energy_nj` is *dynamic* evaluation energy (static /
+/// leakage stays in the analytical [`crate::energy::model`] path).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ExecReport {
+    /// Classifications evaluated.
+    pub samples: u64,
+    /// Comparator operations (arena-derived: trees × padded depth per
+    /// visited grove).
+    pub comparator_ops: u64,
+    /// Simulated clock cycles spent on the tile (0 for software).
+    pub cycles: u64,
+    /// Data-queue traffic charged by the simulator.
+    pub queue_bytes_read: u64,
+    pub queue_bytes_written: u64,
+    /// Completed inter-grove transfers.
+    pub handshakes: u64,
+    /// Groves consulted, summed over samples (1 per sample for whole-
+    /// forest reductions).
+    pub hops_total: u64,
+    /// Dynamic evaluation energy in nanojoules (0 for software).
+    pub energy_nj: f64,
+}
+
+impl ExecReport {
+    /// Fold cycle-level simulator counters through the PPA block library
+    /// into a report (the `uarch::Stats → energy::model` bridge).
+    pub fn from_stats(s: &SimStats, eb: &EnergyBlocks) -> ExecReport {
+        ExecReport {
+            samples: s.classified,
+            comparator_ops: s.comparator_ops,
+            cycles: s.cycles,
+            queue_bytes_read: s.queue_bytes_read,
+            queue_bytes_written: s.queue_bytes_written,
+            handshakes: s.handshakes,
+            hops_total: s.total_hops,
+            energy_nj: s.dynamic_energy_nj(eb),
+        }
+    }
+
+    /// Accumulate another tile's counters (saturating adds, so long-lived
+    /// servers can never wrap a counter into a bogus rate).
+    pub fn merge(&mut self, other: &ExecReport) {
+        self.samples = self.samples.saturating_add(other.samples);
+        self.comparator_ops = self.comparator_ops.saturating_add(other.comparator_ops);
+        self.cycles = self.cycles.saturating_add(other.cycles);
+        self.queue_bytes_read = self.queue_bytes_read.saturating_add(other.queue_bytes_read);
+        self.queue_bytes_written =
+            self.queue_bytes_written.saturating_add(other.queue_bytes_written);
+        self.handshakes = self.handshakes.saturating_add(other.handshakes);
+        self.hops_total = self.hops_total.saturating_add(other.hops_total);
+        self.energy_nj += other.energy_nj;
+    }
+
+    /// Dynamic energy per evaluated classification, nJ (0 when nothing
+    /// was evaluated or the backend does not simulate energy).
+    pub fn energy_per_class_nj(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.energy_nj / self.samples as f64
+        }
+    }
+
+    /// Simulated cycles per evaluated classification.
+    pub fn cycles_per_class(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.cycles as f64 / self.samples as f64
+        }
+    }
+
+    /// Comparator operations per evaluated classification.
+    pub fn comparator_ops_per_class(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.comparator_ops as f64 / self.samples as f64
+        }
+    }
+}
+
+/// A pluggable execution engine over a compiled forest: evaluates
+/// row-major sample tiles and accounts for the work done. Backends are
+/// bound to their model (arena / grove ring) at construction, so the
+/// serving tier can hold them as trait objects and dispatch every batch
+/// through one call.
+pub trait Backend: Send + Sync {
+    /// CLI / `BENCH_JSON` label (`"software"` / `"uarch"`).
+    fn name(&self) -> &'static str;
+
+    /// Evaluate one row-major sample tile `x: [n, n_features]`; returns
+    /// the probability rows and the tile's execution report. Rows are
+    /// evaluated independently, so results are tile-composition
+    /// independent (the conformance suite pins this).
+    fn evaluate_tile(&self, x: &[f32], n: usize) -> (ProbMatrix, ExecReport);
+}
+
+/// What a backend evaluates: a whole-forest reduction over an arena, or
+/// a FoG operating point over its grove ring.
+#[derive(Clone, Debug)]
+enum TilePlan {
+    Forest { arena: Arc<ForestArena>, reduce: Reduce },
+    Fog { fog: FieldOfGroves, params: FogParams },
+}
+
+/// The software forest kernel entry point: every whole-forest prediction
+/// path (`RfModel::predict_proba_batch`, software replicas) runs this
+/// exact call, so backend and direct results are identical by
+/// construction.
+pub(crate) fn forest_tile(
+    arena: &ForestArena,
+    reduce: Reduce,
+    x: &[f32],
+    n: usize,
+) -> (ProbMatrix, ExecReport) {
+    let probs = BatchPlan::new(arena, reduce).execute(x, n);
+    let report = ExecReport {
+        samples: n as u64,
+        comparator_ops: (n as u64)
+            .saturating_mul(arena.ops_per_eval_range(0, arena.n_trees()) as u64),
+        hops_total: n as u64,
+        ..Default::default()
+    };
+    (probs, report)
+}
+
+/// The software FoG kernel entry point: Algorithm 2 with content-hashed
+/// start groves (`FogModel::predict_proba_batch` and software replicas
+/// both run this call). Comparator ops charge every visited grove's
+/// arena-derived `ops_per_eval`.
+pub(crate) fn fog_tile(
+    fog: &FieldOfGroves,
+    params: &FogParams,
+    x: &[f32],
+    n: usize,
+) -> (ProbMatrix, ExecReport) {
+    let f = fog.n_features;
+    assert_eq!(x.len(), n * f, "tile shape mismatch");
+    let n_groves = fog.n_groves();
+    let outcomes = par_map(n, |i| {
+        let row = &x[i * f..(i + 1) * f];
+        let start = content_start_grove(params.seed, row, n_groves);
+        let o = fog.evaluate_one(row, start, params.threshold, params.max_hops);
+        (o.prob, o.hops, start)
+    });
+    let mut report = ExecReport { samples: n as u64, ..Default::default() };
+    let mut rows = Vec::with_capacity(n);
+    for (prob, hops, start) in outcomes {
+        for j in 0..hops {
+            let ops = fog.groves[(start + j) % n_groves].ops_per_eval() as u64;
+            report.comparator_ops = report.comparator_ops.saturating_add(ops);
+        }
+        report.hops_total = report.hops_total.saturating_add(hops as u64);
+        rows.push(prob);
+    }
+    (ProbMatrix::from_rows(rows, fog.n_classes), report)
+}
+
+/// The software execution backend: today's level-synchronous kernels,
+/// unchanged and bit-identical to the models' direct batch paths, with
+/// arena-derived comparator-op accounting (no cycles, no joules).
+#[derive(Clone, Debug)]
+pub struct SoftwareBackend {
+    plan: TilePlan,
+}
+
+impl SoftwareBackend {
+    /// Whole-forest reduction over `[0, n_trees)` of `arena`.
+    pub fn forest(arena: Arc<ForestArena>, reduce: Reduce) -> SoftwareBackend {
+        SoftwareBackend { plan: TilePlan::Forest { arena, reduce } }
+    }
+
+    /// A FoG operating point (threshold + hop cap + start-grove seed).
+    pub fn fog(fog: FieldOfGroves, params: FogParams) -> SoftwareBackend {
+        SoftwareBackend { plan: TilePlan::Fog { fog, params } }
+    }
+}
+
+impl Backend for SoftwareBackend {
+    fn name(&self) -> &'static str {
+        "software"
+    }
+
+    fn evaluate_tile(&self, x: &[f32], n: usize) -> (ProbMatrix, ExecReport) {
+        match &self.plan {
+            TilePlan::Forest { arena, reduce } => forest_tile(arena, *reduce, x, n),
+            TilePlan::Fog { fog, params } => fog_tile(fog, params, x, n),
+        }
+    }
+}
+
+/// The hardware-in-the-loop execution backend: answers are byte-identical
+/// to [`SoftwareBackend`] (forest tiles run the identical kernel; FoG
+/// tiles run the grove-ring simulator, whose PE performs the same
+/// arena-slice arithmetic in the same order, driven with the model's own
+/// content-hashed start groves), while the accounting comes from the
+/// cycle-level machinery: PE latency, queue traffic, handshake stalls,
+/// injection backpressure — folded through the PPA block library into
+/// per-tile cycles and nanojoules.
+#[derive(Clone, Debug)]
+pub struct UarchBackend {
+    plan: TilePlan,
+    eb: EnergyBlocks,
+}
+
+impl UarchBackend {
+    /// Whole-forest reduction, modeled as the paper's §3.1 RF
+    /// accelerator: all trees evaluate in parallel, samples stream
+    /// serially through one PE tile.
+    pub fn forest(arena: Arc<ForestArena>, reduce: Reduce) -> UarchBackend {
+        UarchBackend {
+            plan: TilePlan::Forest { arena, reduce },
+            eb: EnergyBlocks::default(),
+        }
+    }
+
+    /// A FoG operating point driven through the grove ring (§3.2.2,
+    /// Figure 3).
+    pub fn fog(fog: FieldOfGroves, params: FogParams) -> UarchBackend {
+        UarchBackend { plan: TilePlan::Fog { fog, params }, eb: EnergyBlocks::default() }
+    }
+
+    /// Override the PPA block library the energy fold uses.
+    pub fn with_energy_blocks(mut self, eb: EnergyBlocks) -> UarchBackend {
+        self.eb = eb;
+        self
+    }
+}
+
+impl Backend for UarchBackend {
+    fn name(&self) -> &'static str {
+        "uarch"
+    }
+
+    fn evaluate_tile(&self, x: &[f32], n: usize) -> (ProbMatrix, ExecReport) {
+        match &self.plan {
+            TilePlan::Forest { arena, reduce } => {
+                // Answers from the identical software kernel; accounting
+                // from the single-tile RF accelerator model: every sample
+                // walks all trees in parallel (PE latency is depth-bound),
+                // moving one Γ-byte queue word in and out.
+                let (probs, sw) = forest_tile(arena, *reduce, x, n);
+                let grove = Grove::from_arena(Arc::clone(arena), 0, arena.n_trees());
+                let lat = PeModel::default().latency(&grove).max(1);
+                let gamma = (1 + arena.n_features() + 1 + arena.n_classes()) as u64;
+                let nn = n as u64;
+                let stats = SimStats {
+                    cycles: nn.saturating_mul(lat),
+                    classified: nn,
+                    comparator_ops: sw.comparator_ops,
+                    queue_bytes_read: nn.saturating_mul(gamma),
+                    queue_bytes_written: nn.saturating_mul(gamma),
+                    handshakes: 0,
+                    stall_cycles: 0,
+                    total_latency_cycles: nn.saturating_mul(lat),
+                    total_hops: nn,
+                    grove_busy_cycles: vec![nn.saturating_mul(lat)],
+                };
+                (probs, ExecReport::from_stats(&stats, &self.eb))
+            }
+            TilePlan::Fog { fog, params } => {
+                let f = fog.n_features;
+                assert_eq!(x.len(), n * f, "tile shape mismatch");
+                let n_groves = fog.n_groves();
+                let starts: Vec<usize> = (0..n)
+                    .map(|i| content_start_grove(params.seed, &x[i * f..(i + 1) * f], n_groves))
+                    .collect();
+                let cfg = RingConfig {
+                    threshold: params.threshold,
+                    max_hops: params.max_hops,
+                    seed: params.seed,
+                    // Serving streams tile entries back-to-back; the
+                    // injector's bubble rule still prevents deadlock.
+                    inject_interval: 1,
+                    ..Default::default()
+                };
+                let mut sim = RingSim::new(fog, cfg);
+                sim.load_batch_with_starts(x, &starts);
+                let rows: Vec<Vec<f32>> = sim.run().iter().map(|o| o.prob.clone()).collect();
+                let probs = ProbMatrix::from_rows(rows, fog.n_classes);
+                (probs, ExecReport::from_stats(&sim.stats, &self.eb))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetProfile};
+    use crate::forest::{ForestParams, RandomForest};
+
+    fn setup() -> (Arc<ForestArena>, FieldOfGroves, crate::data::Dataset) {
+        let ds = generate(&DatasetProfile::demo(), 911);
+        let rf = RandomForest::fit(&ds.train, &ForestParams::small(), 3);
+        let arena = Arc::new(ForestArena::from_forest(&rf, rf.max_depth()));
+        let fog = FieldOfGroves::from_forest(&rf, 2);
+        (arena, fog, ds)
+    }
+
+    #[test]
+    fn software_forest_matches_batch_plan() {
+        let (arena, _, ds) = setup();
+        let n = ds.test.len();
+        let direct = BatchPlan::new(&arena, Reduce::ProbAverage).execute(&ds.test.x, n);
+        let backend = SoftwareBackend::forest(Arc::clone(&arena), Reduce::ProbAverage);
+        let (probs, report) = backend.evaluate_tile(&ds.test.x, n);
+        assert_eq!(probs, direct);
+        assert_eq!(report.samples, n as u64);
+        assert_eq!(
+            report.comparator_ops,
+            (n * arena.ops_per_eval_range(0, arena.n_trees())) as u64
+        );
+        assert_eq!(report.cycles, 0);
+        assert_eq!(report.energy_nj, 0.0);
+    }
+
+    #[test]
+    fn uarch_forest_same_answers_with_accounting() {
+        let (arena, _, ds) = setup();
+        let n = ds.test.len();
+        let sw = SoftwareBackend::forest(Arc::clone(&arena), Reduce::MajorityVote);
+        let ua = UarchBackend::forest(Arc::clone(&arena), Reduce::MajorityVote);
+        let (p_sw, r_sw) = sw.evaluate_tile(&ds.test.x, n);
+        let (p_ua, r_ua) = ua.evaluate_tile(&ds.test.x, n);
+        assert_eq!(p_sw, p_ua, "uarch backend changed an answer");
+        assert_eq!(r_sw.comparator_ops, r_ua.comparator_ops);
+        assert!(r_ua.cycles > 0 && r_ua.energy_nj > 0.0);
+        assert!(r_ua.energy_per_class_nj() > 0.0);
+    }
+
+    #[test]
+    fn uarch_fog_same_answers_with_accounting() {
+        let (_, fog, ds) = setup();
+        let params = FogParams { threshold: 0.35, max_hops: fog.n_groves(), seed: 9 };
+        let sw = SoftwareBackend::fog(fog.clone(), params);
+        let ua = UarchBackend::fog(fog.clone(), params);
+        let n = ds.test.len();
+        let (p_sw, r_sw) = sw.evaluate_tile(&ds.test.x, n);
+        let (p_ua, r_ua) = ua.evaluate_tile(&ds.test.x, n);
+        assert_eq!(p_sw, p_ua, "simulated FoG answers diverged from Algorithm 2");
+        assert_eq!(r_sw.comparator_ops, r_ua.comparator_ops, "op accounting diverged");
+        assert_eq!(r_sw.hops_total, r_ua.hops_total);
+        assert!(r_ua.cycles > 0 && r_ua.energy_nj > 0.0);
+        assert_eq!(r_sw.cycles, 0);
+    }
+
+    #[test]
+    fn reports_merge_saturating() {
+        let mut a = ExecReport {
+            samples: u64::MAX - 1,
+            comparator_ops: 10,
+            energy_nj: 1.5,
+            ..Default::default()
+        };
+        let b = ExecReport { samples: 5, comparator_ops: 2, energy_nj: 0.5, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.samples, u64::MAX);
+        assert_eq!(a.comparator_ops, 12);
+        assert!((a.energy_nj - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_tile_is_empty() {
+        let (arena, _, _) = setup();
+        let backend = SoftwareBackend::forest(arena, Reduce::ProbAverage);
+        let (probs, report) = backend.evaluate_tile(&[], 0);
+        assert_eq!(probs.n_rows(), 0);
+        assert_eq!(report.samples, 0);
+        assert_eq!(report.energy_per_class_nj(), 0.0);
+        assert_eq!(report.cycles_per_class(), 0.0);
+    }
+}

@@ -210,4 +210,41 @@ mod tests {
         let probs = BatchPlan::new(&arena, Reduce::ProbAverage).execute(&[], 0);
         assert_eq!(probs.n_rows(), 0);
     }
+
+    #[test]
+    #[should_panic(expected = "bad tree range")]
+    fn empty_tree_range_rejected() {
+        // A plan over an empty grove slice (lo == hi) must be rejected
+        // loudly — it would otherwise divide by a zero tree count.
+        let (_, arena, _) = setup();
+        let _ = BatchPlan::over_range(&arena, 3, 3, Reduce::ProbAverage);
+    }
+
+    #[test]
+    fn leaf_only_arena_evaluates_through_plan() {
+        // Depth-0 (leaf-only) trees: the tiled kernel runs zero levels
+        // and every row gets the per-tree leaf average.
+        let mut s = crate::data::Split::new(2, 3);
+        for _ in 0..4 {
+            s.push(&[0.5, -0.5], 1);
+        }
+        let mut rng = crate::util::rng::Rng::new(6);
+        let tree = crate::dt::builder::fit_tree(
+            &s,
+            &[0, 1, 2, 3],
+            &crate::dt::builder::TreeParams::default(),
+            &mut rng,
+        );
+        assert_eq!(tree.depth, 0);
+        let flat = crate::dt::FlatTree::from_tree(&tree, 0);
+        let arena = ForestArena::from_flat_trees(&[flat.clone(), flat]);
+        let x = [1.0f32, 2.0, -3.0, 4.0]; // 2 rows
+        let probs = BatchPlan::new(&arena, Reduce::ProbAverage).execute(&x, 2);
+        assert_eq!(probs.n_rows(), 2);
+        for i in 0..2 {
+            assert_eq!(probs.row(i), &[0.0, 1.0, 0.0], "row {i}");
+        }
+        let votes = BatchPlan::new(&arena, Reduce::MajorityVote).execute(&x, 2);
+        assert_eq!(votes.row(0), &[0.0, 1.0, 0.0]);
+    }
 }

@@ -36,9 +36,20 @@
 //! re-pack or materialize trees: N replicas of a forest model cost one
 //! arena allocation, and every [`BatchPlan`] they build borrows the same
 //! level-major arrays.
+//!
+//! **Execution backends:** the engine behind a prediction path is
+//! swappable ([`backend::Backend`]): [`SoftwareBackend`] runs the
+//! kernels above unchanged, [`UarchBackend`] streams the same tiles
+//! through the cycle-level grove-ring simulator and folds its event
+//! counts into per-classification cycle/energy estimates. Backends
+//! change *accounting*, never *answers* — `rust/tests/backend.rs` pins
+//! byte-identical probabilities across backends for every tree-based
+//! registry model.
 
 pub mod arena;
+pub mod backend;
 pub mod batch;
 
 pub use arena::ForestArena;
+pub use backend::{Backend, ExecReport, SoftwareBackend, UarchBackend};
 pub use batch::{BatchPlan, Reduce, DEFAULT_TILE};

@@ -12,6 +12,19 @@ use super::split::FieldOfGroves;
 use crate::util::rng::Rng;
 use crate::util::threadpool::par_map;
 
+/// Content-derived start grove (Algorithm 2 line 3, batch-position
+/// independent): hash the input's feature bit patterns under `seed`, so
+/// per-sample, batched and simulated evaluations of the same row all
+/// draw the same grove. Shared by [`crate::api::FogModel`] and the
+/// execution backends in [`crate::exec::backend`].
+pub fn content_start_grove(seed: u64, row: &[f32], n_groves: usize) -> usize {
+    let mut h = seed ^ 0x9E3779B97F4A7C15;
+    for &v in row {
+        h = (h ^ v.to_bits() as u64).wrapping_mul(0x100000001B3);
+    }
+    Rng::new(h).gen_range(n_groves)
+}
+
 /// Run-time tunables (paper §3.2.2 "Run-time Tunability").
 #[derive(Clone, Copy, Debug)]
 pub struct FogParams {

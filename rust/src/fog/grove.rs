@@ -256,4 +256,13 @@ mod tests {
     fn empty_grove_panics() {
         Grove::new(vec![]);
     }
+
+    #[test]
+    #[should_panic(expected = "bad grove range")]
+    fn empty_arena_slice_rejected() {
+        // A grove must never be an empty tree-range slice (lo == hi) —
+        // its probability average would divide by zero trees.
+        let (g, _) = grove();
+        let _ = Grove::from_arena(std::sync::Arc::clone(g.arena()), 2, 2);
+    }
 }

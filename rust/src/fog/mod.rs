@@ -19,6 +19,6 @@ pub mod split;
 pub mod topology;
 pub mod tuner;
 
-pub use eval::{EvalResult, FogParams};
+pub use eval::{content_start_grove, EvalResult, FogParams};
 pub use grove::Grove;
 pub use split::FieldOfGroves;

@@ -59,7 +59,12 @@
 //!   the software twin of the hardware grove PE. Every tree-based
 //!   prediction path (`RfModel`, the FoG grove ring, budgeted forests,
 //!   the coordinator's grove workers) runs on an arena; op counts and
-//!   VMEM/sparse-storage accounting derive from its layout.
+//!   VMEM/sparse-storage accounting derive from its layout. The engine
+//!   behind a serving path is pluggable ([`exec::Backend`]):
+//!   [`exec::SoftwareBackend`] runs these kernels unchanged, while
+//!   [`exec::UarchBackend`] streams the same tiles through the
+//!   cycle-level ring simulator for live per-classification cycle and
+//!   energy estimates — byte-identical answers either way.
 //! * [`dt`] — CART decision-tree training and a flattened complete-tree
 //!   representation shared with the JAX/Pallas compile path.
 //! * [`forest`] — bagged random forests (incl. feature-budgeted training).
@@ -81,7 +86,10 @@
 //!   [`api::Classifier`] trait object with dynamic batching and metrics,
 //!   and the scale-out [`coordinator::ShardedServer`] — N replicas of
 //!   one model behind a shared [`coordinator::ShardRouter`] and a
-//!   quantized [`coordinator::ProbCache`] of probability rows.
+//!   quantized [`coordinator::ProbCache`] of probability rows. Every
+//!   replica dispatches batches through its resolved [`exec::Backend`]
+//!   (`software | uarch`), so `fog serve --backend uarch` reports live
+//!   energy-per-classification alongside throughput.
 //! * [`experiments`] — harnesses regenerating every table/figure of the
 //!   paper's evaluation (Table 1, Figure 4, Figure 5), dispatching every
 //!   model through [`api`].

@@ -11,22 +11,29 @@
 //! fog headline [--seed N]                          just the §1 ratios
 //! fog ablate   [--dataset penbase]                 design-choice ablations
 //! fog eval     [--models all|rf,mlp] [--dataset d] any registry model: accuracy + PPA
+//!              [--backend software|uarch]          uarch: add hardware-in-the-loop
+//!                                                  sim columns (nJ + cycles / class)
 //! fog sim      [--dataset penbase] [--threshold T] cycle-level μarch sim
 //! fog serve    [--dataset demo] [--backend native|pjrt]
 //!              [--model <registry name>]           serving demo (FoG ring, or any
 //!                                                  registry model via ModelServer)
 //!              [--replicas N] [--router random|round_robin|least_loaded]
+//!              [--backend software|uarch]          execution backend behind every
+//!                                                  replica (uarch = grove-ring
+//!                                                  simulator in the loop: live
+//!                                                  energy-per-classification)
 //!              [--cache-quant q] [--cache-cap N] [--no-cache] [--rounds R]
 //!                                                  sharded tier: N replicas of the
 //!                                                  model behind a shared router and
 //!                                                  a quantized result cache; emits
 //!                                                  BENCH_JSON lines (aggregate +
 //!                                                  per-replica throughput, cache
-//!                                                  hit rate)
+//!                                                  hit rate, energy/cycles per
+//!                                                  classification, batch p50/p99)
 //! fog dse      [--workload trees|gemm]             Aladdin-style DSE sweep
 //! ```
 
-use fog::api::{Classifier, Estimator, ModelSpec, REGISTRY};
+use fog::api::{BackendKind, Classifier, Estimator, ModelSpec, REGISTRY};
 use fog::coordinator::{
     Backend, FogServer, ModelServer, ModelServerConfig, RouterPolicy, ServerConfig,
     ShardedServer, ShardedServerConfig,
@@ -34,6 +41,7 @@ use fog::coordinator::{
 use fog::data::synthetic::DatasetProfile;
 use fog::energy::aladdin;
 use fog::energy::blocks::{AreaBlocks, EnergyBlocks};
+use fog::exec::ExecReport;
 use fog::experiments::{fig4, fig5, suite, table1};
 use fog::fog::FieldOfGroves;
 use fog::uarch::{RingConfig, RingSim};
@@ -129,21 +137,26 @@ fn cmd_eval(args: &Args, seed: u64) {
         })
         .collect();
 
+    let backend = parse_exec_backend(args);
     eprintln!("[eval] generating {} ...", profile.name);
     let data = suite::prepare_data(&profile, seed);
     let eb = EnergyBlocks::default();
     let ab = AreaBlocks::default();
     println!("== registry eval on '{}' (seed {seed}) ==", profile.name);
-    println!(
+    print!(
         "{:<10}{:>11}{:>15}{:>13}{:>11}{:>12}",
         "model", "accuracy%", "energy nJ", "latency ns", "area mm2", "train s"
     );
+    if backend == BackendKind::Uarch {
+        print!("{:>14}{:>14}", "sim nJ/cls", "sim cyc/cls");
+    }
+    println!();
     for spec in &specs {
         let t0 = std::time::Instant::now();
         let model = spec.fit(&data.train, seed);
         let train_s = t0.elapsed().as_secs_f64();
         let report = model.cost_report(Some(&data.test), &eb, &ab);
-        println!(
+        print!(
             "{:<10}{:>11.1}{:>15.2}{:>13.1}{:>11.2}{:>12.2}",
             spec.name,
             model.accuracy(&data.test) * 100.0,
@@ -152,7 +165,51 @@ fn cmd_eval(args: &Args, seed: u64) {
             report.area_mm2,
             train_s
         );
+        if backend == BackendKind::Uarch {
+            // Hardware in the loop: stream the test split tile-by-tile
+            // through the μarch backend and report measured (simulated)
+            // per-classification energy and cycles next to the
+            // analytical model's numbers.
+            match eval_through_backend(model.as_ref(), &data.test) {
+                Some(total) => print!(
+                    "{:>14.3}{:>14.1}",
+                    total.energy_per_class_nj(),
+                    total.cycles_per_class()
+                ),
+                None => print!("{:>14}{:>14}", "-", "-"),
+            }
+        }
+        println!();
     }
+}
+
+/// Parse `--backend software|uarch` (execution backend; distinct from
+/// the FoG ring's `native|pjrt` serving backends) or exit friendly.
+fn parse_exec_backend(args: &Args) -> BackendKind {
+    let spelled = args.get_or("backend", "software");
+    BackendKind::parse(spelled).unwrap_or_else(|| {
+        eprintln!("error: unknown execution backend '{spelled}'; valid names: software, uarch");
+        std::process::exit(2);
+    })
+}
+
+/// Stream a labelled split through the model's μarch execution backend
+/// in serving-sized tiles, merging the per-tile reports. `None` when the
+/// model family has no arena engine (dense baselines).
+fn eval_through_backend(model: &dyn Classifier, split: &fog::data::Split) -> Option<ExecReport> {
+    let backend = model.exec_backend(BackendKind::Uarch)?;
+    let f = model.n_features();
+    let n = split.len();
+    let tile = 64;
+    let mut total = ExecReport::default();
+    let mut i = 0;
+    while i < n {
+        let j = (i + tile).min(n);
+        let (_, report) = backend.evaluate_tile(&split.x[i * f..j * f], j - i);
+        total.merge(&report);
+        i = j;
+    }
+    Some(total)
 }
 
 /// Cycle-level μarch simulation of the grove ring on one dataset.
@@ -200,7 +257,11 @@ fn cmd_serve(args: &Args, seed: u64) {
     let sharded_flags = ["replicas", "router", "cache-quant", "cache-cap", "no-cache", "rounds"];
     let wants_sharded = sharded_flags.iter().any(|k| args.get(k).is_some());
     if let Some(model_name) = args.get("model") {
-        if wants_sharded {
+        // With --model, --backend selects the *execution* backend
+        // (software | uarch) and serves through the sharded tier so the
+        // per-replica ExecReport aggregates reach BENCH_JSON. (Without
+        // --model, --backend keeps its FoG-ring meaning: native | pjrt.)
+        if wants_sharded || args.get("backend").is_some() {
             return cmd_serve_sharded(args, model_name, seed);
         }
         return cmd_serve_model(args, model_name, seed);
@@ -228,7 +289,14 @@ fn cmd_serve(args: &Args, seed: u64) {
             fog = fog.repad(depth);
             Backend::Pjrt { artifacts_dir: fog::runtime::artifacts::default_dir() }
         }
-        _ => Backend::Native,
+        "native" => Backend::Native,
+        other => {
+            eprintln!(
+                "error: unknown FoG-ring backend '{other}'; valid names: native, pjrt \
+                 (the software|uarch execution backends need --model <registry name>)"
+            );
+            std::process::exit(2);
+        }
     };
     let cfg = ServerConfig {
         threshold: args.get_f64("threshold", 0.3) as f32,
@@ -294,11 +362,14 @@ fn cmd_serve_model(args: &Args, model_name: &str, seed: u64) {
 }
 
 /// Serve a registry model through the sharded multi-replica tier:
-/// `--replicas N` replicas behind `--router` (default least_loaded) and
-/// a quantized result cache (`--cache-quant`, default 0 = exact keys;
-/// `--no-cache` disables). Runs `--rounds` passes over the test split
-/// (default 2, so the second pass exercises the cache) and emits one
-/// aggregate and one per-replica `BENCH_JSON` line.
+/// `--replicas N` replicas behind `--router` (default least_loaded), an
+/// execution backend (`--backend software|uarch`; uarch streams every
+/// replica batch through the grove-ring simulator for live
+/// energy-per-classification) and a quantized result cache
+/// (`--cache-quant`, default 0 = exact keys; `--no-cache` disables).
+/// Runs `--rounds` passes over the test split (default 2, so the second
+/// pass exercises the cache) and emits one aggregate and one per-replica
+/// `BENCH_JSON` line.
 fn cmd_serve_sharded(args: &Args, model_name: &str, seed: u64) {
     let profile = profile_or_exit(args.get_or("dataset", "demo"));
     let router = RouterPolicy::parse(args.get_or("router", "least_loaded")).unwrap_or_else(|| {
@@ -308,6 +379,7 @@ fn cmd_serve_sharded(args: &Args, model_name: &str, seed: u64) {
         );
         std::process::exit(2);
     });
+    let backend = parse_exec_backend(args);
     let mut spec = ModelSpec::for_shape(model_name, profile.n_features, profile.n_classes)
         .unwrap_or_else(|| {
             eprintln!(
@@ -318,6 +390,7 @@ fn cmd_serve_sharded(args: &Args, model_name: &str, seed: u64) {
         })
         .with_replicas(args.get_usize("replicas", 2))
         .with_router(router)
+        .with_backend(backend)
         .with_cache_capacity(args.get_usize("cache-cap", 4096));
     if !args.get_bool("no-cache") {
         spec = spec.with_cache_quant(args.get_f64("cache-quant", 0.0) as f32);
@@ -326,10 +399,18 @@ fn cmd_serve_sharded(args: &Args, model_name: &str, seed: u64) {
     eprintln!("[serve] training {model_name} on {} ...", profile.name);
     let data = suite::prepare_data(&profile, seed);
     let model: Arc<dyn Classifier> = Arc::from(spec.fit(&data.train, seed));
+    if backend == BackendKind::Uarch && model.exec_backend(BackendKind::Uarch).is_none() {
+        eprintln!(
+            "error: model '{model_name}' has no μarch execution backend; \
+             tree-based registry models only (fog_opt, fog_max, rf, rf_prob)"
+        );
+        std::process::exit(2);
+    }
     let mut cfg = ShardedServerConfig::for_serving(&spec.serving);
     cfg.worker = ModelServerConfig {
         batch_size: args.get_usize("batch", 32),
         n_workers: args.get_usize("workers", 2),
+        backend,
         ..Default::default()
     };
     cfg.router_seed = seed;
@@ -351,10 +432,11 @@ fn cmd_serve_sharded(args: &Args, model_name: &str, seed: u64) {
     let n_total = responses.len() * rounds;
 
     println!(
-        "== serving: {model_name} on {} via ShardedServer x{} ({}) ==",
+        "== serving: {model_name} on {} via ShardedServer x{} ({}, backend={}) ==",
         profile.name,
         server.n_replicas(),
-        cfg.router.label()
+        cfg.router.label(),
+        backend.label()
     );
     println!("requests   : {} ({} per round x {rounds})", snap.requests, responses.len());
     println!("accuracy   : {:.1}%", acc * 100.0);
@@ -366,32 +448,59 @@ fn cmd_serve_sharded(args: &Args, model_name: &str, seed: u64) {
         snap.cache_misses
     );
     println!("throughput : {:.0} req/s", n_total as f64 / wall);
+    if snap.exec_samples > 0 {
+        // Hardware in the loop: per-classification dynamic energy and
+        // cycles measured by the grove-ring simulator inside every
+        // replica (per evaluated classification; per *response* amortizes
+        // cache hits to zero evaluation energy).
+        println!(
+            "energy     : {:.4} nJ/classification ({:.4} nJ/response), {:.1} cycles/classification",
+            snap.energy_per_class_nj(),
+            snap.energy_per_response_nj(),
+            snap.cycles_per_class()
+        );
+    }
     println!(
         "BENCH_JSON {{\"bench\":\"serve_sharded\",\"model\":\"{model_name}\",\
-         \"dataset\":\"{}\",\"replicas\":{},\"router\":\"{}\",\"rounds\":{rounds},\
-         \"requests\":{},\"throughput_per_s\":{:.1},\"cache_hit_rate\":{:.4},\
-         \"cache_quant\":{:.6},\"accuracy\":{:.4}}}",
+         \"dataset\":\"{}\",\"replicas\":{},\"router\":\"{}\",\"backend\":\"{}\",\
+         \"rounds\":{rounds},\"requests\":{},\"throughput_per_s\":{:.1},\
+         \"cache_hit_rate\":{:.4},\"cache_quant\":{:.6},\"accuracy\":{:.4},\
+         \"energy_per_class_nj\":{:.6},\"energy_per_response_nj\":{:.6},\
+         \"cycles_per_class\":{:.2},\"comparator_ops_per_class\":{:.2}}}",
         profile.name,
         server.n_replicas(),
         cfg.router.label(),
+        backend.label(),
         snap.requests,
         n_total as f64 / wall,
         snap.cache_hit_rate(),
         spec.serving.cache_quant.unwrap_or(-1.0),
-        acc
+        acc,
+        snap.energy_per_class_nj(),
+        snap.energy_per_response_nj(),
+        snap.cycles_per_class(),
+        snap.comparator_ops_per_class()
     );
     for r in 0..server.n_replicas() {
         let rs = server.replica_metrics(r).snapshot();
+        let lat = server.replica_metrics(r).batch_latency_summary();
         println!(
             "BENCH_JSON {{\"bench\":\"serve_sharded_replica\",\"model\":\"{model_name}\",\
-             \"replica\":{r},\"requests\":{},\"responses\":{},\"batches\":{},\
-             \"evals\":{},\"avg_batch_size\":{:.2},\"throughput_per_s\":{:.1}}}",
+             \"replica\":{r},\"backend\":\"{}\",\"requests\":{},\"responses\":{},\
+             \"batches\":{},\"evals\":{},\"avg_batch_size\":{:.2},\"throughput_per_s\":{:.1},\
+             \"batch_p50_us\":{:.1},\"batch_p99_us\":{:.1},\
+             \"energy_per_class_nj\":{:.6},\"cycles_per_class\":{:.2}}}",
+            backend.label(),
             rs.requests,
             rs.responses,
             rs.batches,
             rs.evals,
             rs.avg_batch_size(),
-            rs.responses as f64 / wall
+            rs.responses as f64 / wall,
+            lat.p50_us,
+            lat.p99_us,
+            rs.energy_per_class_nj(),
+            rs.cycles_per_class()
         );
     }
     server.shutdown();

@@ -15,6 +15,18 @@
 //! Algorithm 2 while its *timing/energy event counts* add the
 //! micro-architectural detail (queue traffic, handshake stalls,
 //! backpressure) the analytical model cannot see.
+//!
+//! **Paper anchors:** §3.2.2 and Figure 3 (grove tile: data queue with
+//! `$fr`/`$bk` pointers, DQC, PE, req/ack handshake), §3.2.1 (grove as
+//! the unit of computation), §4.2 (the cycle/energy observables).
+//!
+//! Besides whole-run offline simulation (`fog sim`), the ring can be
+//! driven tile-by-tile with explicit start groves
+//! ([`ring::RingSim::load_batch_with_starts`]) — the hardware-in-the-loop
+//! serving path: [`crate::exec::UarchBackend`] streams each replica batch
+//! through a ring instance and folds the per-tile [`SimStats`] (which
+//! [`SimStats::merge`] accumulates across tiles) into live
+//! energy-per-classification estimates.
 
 pub mod handshake;
 pub mod pe;

@@ -117,19 +117,42 @@ impl<'a> RingSim<'a> {
         let f = self.fog.n_features;
         assert_eq!(x.len() % f, 0);
         let n = x.len() / f;
-        self.injected_at.resize(self.injected_at.len() + n, 0);
-        for i in 0..n {
-            let mut rng =
-                Rng::new(self.cfg.seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
-            let start = rng.gen_range(self.fog.n_groves());
-            self.pending.push_back((i as u32, x[i * f..(i + 1) * f].to_vec(), start));
+        let starts: Vec<usize> = (0..n)
+            .map(|i| {
+                let mut rng =
+                    Rng::new(self.cfg.seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+                rng.gen_range(self.fog.n_groves())
+            })
+            .collect();
+        self.load_batch_with_starts(x, &starts);
+    }
+
+    /// Queue a batch with explicit per-input start groves — the
+    /// tile-level drive API the serving tier's
+    /// [`UarchBackend`](crate::exec::UarchBackend) uses: start groves
+    /// come from the model's content hash, so simulated answers are
+    /// byte-identical to the software evaluation path. Input ids continue
+    /// from previously loaded batches.
+    pub fn load_batch_with_starts(&mut self, x: &[f32], starts: &[usize]) {
+        let f = self.fog.n_features;
+        assert_eq!(x.len() % f, 0);
+        let n = x.len() / f;
+        assert_eq!(starts.len(), n, "one start grove per input");
+        let base = self.injected_at.len();
+        self.injected_at.resize(base + n, 0);
+        for (i, &start) in starts.iter().enumerate() {
+            assert!(start < self.fog.n_groves(), "start grove {start} out of range");
+            self.pending.push_back(((base + i) as u32, x[i * f..(i + 1) * f].to_vec(), start));
         }
     }
 
     /// Run until every loaded input is classified (or `max_cycles`).
-    /// Returns outcomes sorted by input id.
+    /// Returns outcomes sorted by input id. The target is everything
+    /// ever loaded (`injected_at.len()`), not just the currently-pending
+    /// queue, so load → run → load → run drives each new batch to
+    /// completion instead of returning the first batch's stale outcomes.
     pub fn run(&mut self) -> &[SimOutcome] {
-        let total = self.pending.len() as u64;
+        let total = self.injected_at.len() as u64;
         while (self.outcomes.len() as u64) < total {
             assert!(
                 self.stats.cycles < self.cfg.max_cycles,
@@ -431,6 +454,26 @@ mod tests {
         sim.load_batch(&ds.test.x);
         let outcomes = sim.run();
         assert!(outcomes.iter().all(|o| o.hops == 2));
+    }
+
+    #[test]
+    fn sequential_tile_loads_complete_each_batch() {
+        // The tile-drive contract: load → run → load → run must simulate
+        // every newly loaded input (ids continue across loads), not
+        // return the first batch's outcomes again.
+        let (fog, ds) = setup();
+        let cfg = RingConfig { threshold: 0.4, seed: 13, ..Default::default() };
+        let mut sim = RingSim::new(&fog, cfg);
+        let f = fog.n_features;
+        let (n1, n2) = (10usize, 6usize);
+        let starts1 = vec![0usize; n1];
+        let starts2 = vec![1usize; n2];
+        sim.load_batch_with_starts(&ds.test.x[..n1 * f], &starts1);
+        assert_eq!(sim.run().len(), n1);
+        sim.load_batch_with_starts(&ds.test.x[n1 * f..(n1 + n2) * f], &starts2);
+        let outcomes = sim.run();
+        assert_eq!(outcomes.len(), n1 + n2, "second tile not driven to completion");
+        assert!(outcomes.iter().enumerate().all(|(i, o)| o.id == i as u32));
     }
 
     #[test]

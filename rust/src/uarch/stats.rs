@@ -27,6 +27,29 @@ pub struct SimStats {
 }
 
 impl SimStats {
+    /// Accumulate another run's (or tile's) counters into this one —
+    /// saturating adds, so tile-by-tile serving accumulation can never
+    /// wrap. Per-grove busy vectors align by index, extending as needed.
+    pub fn merge(&mut self, other: &SimStats) {
+        self.cycles = self.cycles.saturating_add(other.cycles);
+        self.classified = self.classified.saturating_add(other.classified);
+        self.comparator_ops = self.comparator_ops.saturating_add(other.comparator_ops);
+        self.queue_bytes_read = self.queue_bytes_read.saturating_add(other.queue_bytes_read);
+        self.queue_bytes_written =
+            self.queue_bytes_written.saturating_add(other.queue_bytes_written);
+        self.handshakes = self.handshakes.saturating_add(other.handshakes);
+        self.stall_cycles = self.stall_cycles.saturating_add(other.stall_cycles);
+        self.total_latency_cycles =
+            self.total_latency_cycles.saturating_add(other.total_latency_cycles);
+        self.total_hops = self.total_hops.saturating_add(other.total_hops);
+        if self.grove_busy_cycles.len() < other.grove_busy_cycles.len() {
+            self.grove_busy_cycles.resize(other.grove_busy_cycles.len(), 0);
+        }
+        for (a, &b) in self.grove_busy_cycles.iter_mut().zip(&other.grove_busy_cycles) {
+            *a = a.saturating_add(b);
+        }
+    }
+
     pub fn avg_latency_cycles(&self) -> f64 {
         if self.classified == 0 {
             return 0.0;
@@ -58,12 +81,17 @@ impl SimStats {
         busy as f64 / (self.cycles as f64 * self.grove_busy_cycles.len() as f64)
     }
 
-    /// Dynamic energy (nJ) of the counted events.
+    /// Dynamic energy (nJ) of the counted events (the shared
+    /// [`event_energy_nj`](crate::energy::model::event_energy_nj) fold —
+    /// the serving tier's `ExecReport`s charge the same block energies).
     pub fn dynamic_energy_nj(&self, eb: &EnergyBlocks) -> f64 {
-        eb.comparisons_nj(self.comparator_ops as f64)
-            + eb.sram_read_nj(self.queue_bytes_read as f64)
-            + eb.sram_write_nj(self.queue_bytes_written as f64)
-            + self.handshakes as f64 * eb.handshake_pj * 1e-3
+        crate::energy::model::event_energy_nj(
+            eb,
+            self.comparator_ops as f64,
+            self.queue_bytes_read as f64,
+            self.queue_bytes_written as f64,
+            self.handshakes as f64,
+        )
     }
 
     /// Dynamic energy per classification (nJ).
@@ -99,6 +127,29 @@ mod tests {
         };
         let e = s.dynamic_energy_nj(&EnergyBlocks::default());
         assert!(e > 0.0);
+    }
+
+    #[test]
+    fn merge_accumulates_and_saturates() {
+        let mut a = SimStats {
+            cycles: u64::MAX - 10,
+            classified: 4,
+            comparator_ops: 100,
+            grove_busy_cycles: vec![5],
+            ..Default::default()
+        };
+        let b = SimStats {
+            cycles: 100,
+            classified: 2,
+            comparator_ops: 50,
+            grove_busy_cycles: vec![1, 2],
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.cycles, u64::MAX, "cycles must saturate, not wrap");
+        assert_eq!(a.classified, 6);
+        assert_eq!(a.comparator_ops, 150);
+        assert_eq!(a.grove_busy_cycles, vec![6, 2]);
     }
 
     #[test]

@@ -1,0 +1,203 @@
+//! Conformance tests for the pluggable execution backends: for every
+//! tree-based registry model (`fog_opt`, `fog_max`, `rf`, `rf_prob`) the
+//! hardware-in-the-loop `UarchBackend` must return probability rows
+//! **byte-identical** to the `SoftwareBackend` (the simulator changes
+//! *accounting*, never *answers*), and its per-classification
+//! comparator-op counts must equal the existing arena-derived μarch
+//! accounting — so Table 1 / Fig 4–5 numbers are unchanged by the
+//! backend split.
+
+use fog::api::{BackendKind, Classifier, Estimator, FogModel, ModelSpec, RfModel};
+use fog::coordinator::{ModelServerConfig, ShardedServer, ShardedServerConfig};
+use fog::data::synthetic::{generate, DatasetProfile};
+use fog::data::Dataset;
+use fog::energy::model::ClassifierKind;
+use fog::exec::ExecReport;
+use fog::forest::{ForestParams, RandomForest, VoteMode};
+use fog::{FieldOfGroves, FogParams};
+use std::sync::Arc;
+
+const TREE_MODELS: &[&str] = &["fog_opt", "fog_max", "rf", "rf_prob"];
+
+fn data() -> Dataset {
+    generate(&DatasetProfile::demo(), 711)
+}
+
+/// (a) Byte-identical probabilities across backends for every tree-based
+/// registry model, whole-split and odd-sized tiles alike — and both
+/// backends byte-identical to the model's direct batch path.
+#[test]
+fn uarch_probabilities_byte_identical_to_software() {
+    let ds = data();
+    let n = ds.test.len();
+    let f = ds.n_features();
+    for name in TREE_MODELS {
+        let model = ModelSpec::for_shape(name, f, ds.n_classes())
+            .unwrap_or_else(|| panic!("registry name '{name}' missing"))
+            .fast()
+            .fit(&ds.train, 33);
+        let sw = model
+            .exec_backend(BackendKind::Software)
+            .unwrap_or_else(|| panic!("{name}: no software backend"));
+        let ua = model
+            .exec_backend(BackendKind::Uarch)
+            .unwrap_or_else(|| panic!("{name}: no uarch backend"));
+        let direct = model.predict_proba_batch(&ds.test.x, n);
+
+        let (p_sw, _) = sw.evaluate_tile(&ds.test.x, n);
+        let (p_ua, _) = ua.evaluate_tile(&ds.test.x, n);
+        assert_eq!(p_sw, direct, "{name}: software backend diverged from direct path");
+        assert_eq!(p_sw, p_ua, "{name}: uarch backend changed an answer");
+
+        // Tile-composition independence: an odd split point must not
+        // change a single byte.
+        let cut = 7.min(n);
+        let (head, _) = ua.evaluate_tile(&ds.test.x[..cut * f], cut);
+        for i in 0..cut {
+            assert_eq!(head.row(i), direct.row(i), "{name}: tile split changed row {i}");
+        }
+    }
+}
+
+/// (b) Uarch comparator-op counts equal the arena-derived accounting —
+/// forests charge trees × padded depth per sample; FoG charges every
+/// visited grove's `ops_per_eval`, replayed independently via
+/// Algorithm 2.
+#[test]
+fn uarch_comparator_ops_equal_arena_accounting() {
+    let ds = data();
+    let n = ds.test.len();
+
+    // Forest: closed form from the arena layout.
+    let rf = RandomForest::fit(&ds.train, &ForestParams::small(), 17);
+    for mode in [VoteMode::Majority, VoteMode::ProbAverage] {
+        let model = RfModel::new(rf.clone(), mode);
+        let expected = (n * model.arena().ops_per_eval_range(0, model.arena().n_trees())) as u64;
+        let ua = model.exec_backend(BackendKind::Uarch).unwrap();
+        let (_, report) = ua.evaluate_tile(&ds.test.x, n);
+        assert_eq!(report.comparator_ops, expected, "rf {mode:?} op count drifted");
+        assert_eq!(report.samples, n as u64);
+        assert_eq!(report.hops_total, n as u64);
+    }
+
+    // FoG: replay Algorithm 2 per row and sum the visited groves' ops.
+    let field = FieldOfGroves::from_forest(&rf, 2);
+    let model = FogModel::new(
+        field,
+        FogParams { threshold: 0.4, max_hops: 4, seed: 21 },
+        ClassifierKind::FogOpt,
+    );
+    let n_groves = model.fog.n_groves();
+    let mut expected = 0u64;
+    let mut expected_hops = 0u64;
+    for i in 0..n {
+        let row = ds.test.row(i);
+        let outcome = model.eval_row(row);
+        let start = model.start_grove(row);
+        for j in 0..outcome.hops {
+            expected += model.fog.groves[(start + j) % n_groves].ops_per_eval() as u64;
+        }
+        expected_hops += outcome.hops as u64;
+    }
+    for kind in [BackendKind::Software, BackendKind::Uarch] {
+        let backend = model.exec_backend(kind).unwrap();
+        let (_, report) = backend.evaluate_tile(&ds.test.x, n);
+        assert_eq!(
+            report.comparator_ops, expected,
+            "fog {} op count != arena-derived accounting",
+            backend.name()
+        );
+        assert_eq!(report.hops_total, expected_hops, "fog {} hop total", backend.name());
+    }
+}
+
+/// (c) Only the uarch backend reports cycles and energy; the software
+/// backend reports the same op counts with zero hardware accounting.
+#[test]
+fn accounting_split_between_backends() {
+    let ds = data();
+    let n = ds.test.len();
+    let model = ModelSpec::for_shape("rf", ds.n_features(), ds.n_classes())
+        .unwrap()
+        .fast()
+        .fit(&ds.train, 5);
+    let (_, sw) = model
+        .exec_backend(BackendKind::Software)
+        .unwrap()
+        .evaluate_tile(&ds.test.x, n);
+    let (_, ua) = model
+        .exec_backend(BackendKind::Uarch)
+        .unwrap()
+        .evaluate_tile(&ds.test.x, n);
+    assert_eq!(sw.comparator_ops, ua.comparator_ops);
+    assert_eq!(sw.cycles, 0);
+    assert_eq!(sw.energy_nj, 0.0);
+    assert!(ua.cycles > 0, "uarch reported no cycles");
+    assert!(
+        ua.energy_per_class_nj() > 0.0 && ua.energy_per_class_nj().is_finite(),
+        "uarch energy/class must be finite nonzero, got {}",
+        ua.energy_per_class_nj()
+    );
+}
+
+/// (d) Dense baselines have no arena engine: `exec_backend` is `None`
+/// for every kind, and serving falls back to the model's batch path.
+#[test]
+fn dense_baselines_have_no_exec_backend() {
+    let ds = data();
+    for name in ["svm_lr", "mlp"] {
+        let model = ModelSpec::for_shape(name, ds.n_features(), ds.n_classes())
+            .unwrap()
+            .fast()
+            .fit(&ds.train, 3);
+        assert!(model.exec_backend(BackendKind::Software).is_none(), "{name}");
+        assert!(model.exec_backend(BackendKind::Uarch).is_none(), "{name}");
+    }
+}
+
+/// (e) End to end through the sharded tier: a uarch fleet answers
+/// byte-identically to a software fleet and its merged snapshot carries
+/// finite nonzero per-classification energy and cycles — the
+/// `fog serve --backend uarch` contract.
+#[test]
+fn sharded_uarch_serving_reports_live_energy() {
+    let ds = data();
+    let spec = ModelSpec::for_shape("fog_opt", ds.n_features(), ds.n_classes())
+        .unwrap()
+        .fast();
+    let model: Arc<dyn Classifier> = Arc::from(spec.fit(&ds.train, 44));
+
+    let serve = |backend: BackendKind| {
+        let cfg = ShardedServerConfig {
+            replicas: 2,
+            worker: ModelServerConfig { backend, ..Default::default() },
+            ..Default::default()
+        };
+        let mut server = ShardedServer::start(Arc::clone(&model), &cfg);
+        let responses = server.classify(&ds.test.x).expect("aligned batch");
+        let snap = server.snapshot();
+        let replica_snaps: Vec<_> =
+            (0..server.n_replicas()).map(|r| server.replica_metrics(r).snapshot()).collect();
+        server.shutdown();
+        (responses, snap, replica_snaps)
+    };
+
+    let (sw, _, _) = serve(BackendKind::Software);
+    let (ua, snap, replicas) = serve(BackendKind::Uarch);
+    for (a, b) in sw.iter().zip(&ua) {
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.prob, b.prob, "served uarch row is not byte-identical");
+    }
+    assert_eq!(snap.exec_samples as usize, ds.test.len());
+    let e = snap.energy_per_class_nj();
+    assert!(e > 0.0 && e.is_finite(), "aggregate energy/class: {e}");
+    assert!(snap.cycles_per_class() > 0.0);
+    // Per-replica reports merge into the aggregate (saturating adds).
+    let mut merged = ExecReport::default();
+    for rs in &replicas {
+        merged.samples += rs.exec_samples;
+        merged.cycles += rs.exec_cycles;
+    }
+    assert_eq!(merged.samples, snap.exec_samples);
+    assert_eq!(merged.cycles, snap.exec_cycles);
+}
