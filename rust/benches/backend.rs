@@ -50,8 +50,11 @@ fn main() {
         });
         let ua_m = b.results.last().unwrap().clone();
 
-        // One clean tile for the simulated accounting figures.
+        // One clean tile per backend for the accounting figures (the
+        // software report carries the ragged kernel's skipped levels;
+        // the μarch PE is depth-bound and reports none).
         let (_, report) = ua.evaluate_tile(&x, batch);
+        let (_, sw_report) = sw.evaluate_tile(&x, batch);
         let overhead = ua_m.median_ns / sw_m.median_ns.max(1.0);
         println!(
             "sim {name:<8} batch {batch}: {:.1} cycles/cls, {:.4} nJ/cls, \
@@ -64,12 +67,14 @@ fn main() {
             "BENCH_JSON {{\"bench\":\"backend\",\"model\":\"{name}\",\"batch\":{batch},\
              \"software_tile_ns\":{:.0},\"uarch_tile_ns\":{:.0},\"sim_overhead_x\":{overhead:.3},\
              \"cycles_per_class\":{:.2},\"energy_per_class_nj\":{:.6},\
-             \"comparator_ops_per_class\":{:.2},\"software_per_s\":{:.1}}}",
+             \"comparator_ops_per_class\":{:.2},\"levels_skipped_per_class\":{:.2},\
+             \"software_per_s\":{:.1}}}",
             sw_m.median_ns,
             ua_m.median_ns,
             report.cycles_per_class(),
             report.energy_per_class_nj(),
             report.comparator_ops_per_class(),
+            sw_report.levels_skipped_per_class(),
             sw_m.throughput_per_s.unwrap_or(0.0)
         );
     }

@@ -17,14 +17,22 @@
 //!   for fog_opt/fog_max it is Algorithm 2's confidence-gated per-sample
 //!   arena walk, threaded across rows (gating is inherently per-sample).
 //!
+//! A fourth section benches a **ragged** (mixed-depth) forest: the
+//! live-depth early-exit kernel against the forced padded-depth walk on
+//! the same arena (`model="ragged_mix"`, `ragged_speedup_x`) — the
+//! paper's fewer-comparator-ops argument as wall-clock.
+//!
 //! Besides the human-readable `bench ...` lines, each model emits one
-//! `BENCH_JSON {...}` line; a future `BENCH_*.json` tracker ingests those
-//! to catch throughput regressions.
+//! `BENCH_JSON {...}` line; `tools/bench_record.sh` folds those into the
+//! repo-root `BENCH_PALLAS.json` trajectory, which the CI gate diffs
+//! against to catch throughput regressions.
 
 use fog::api::spec::forest_params_for;
 use fog::api::{Classifier, Estimator, ModelSpec};
 use fog::data::synthetic::{generate, DatasetProfile};
-use fog::forest::RandomForest;
+use fog::dt::TreeParams;
+use fog::exec::{BatchPlan, ForestArena, Reduce};
+use fog::forest::{ForestParams, RandomForest};
 use fog::util::bench::{black_box, Bencher, Measurement};
 
 /// The tree-based registry entries — the models the arena refactor moves.
@@ -107,4 +115,61 @@ fn main() {
             tiled.throughput_per_s.unwrap_or(0.0)
         );
     }
+
+    // --- ragged forest: live-depth early exit vs forced padded walk ----
+    // Half the trees deep, half depth-capped: the padded walk burns
+    // (trees × padded depth) comparisons per sample, the ragged kernel
+    // Σ live_depth — the acceptance target is ≥ 1.3× on the tiled path.
+    let deep_params = ForestParams {
+        n_trees: if fast { 8 } else { 24 },
+        tree: TreeParams { max_depth: 12, min_samples_leaf: 1, ..TreeParams::default() },
+        bootstrap: true,
+    };
+    let shallow_params = ForestParams {
+        n_trees: deep_params.n_trees,
+        tree: TreeParams { max_depth: 3, ..TreeParams::default() },
+        bootstrap: true,
+    };
+    let deep_rf = RandomForest::fit(&ds.train, &deep_params, 5);
+    let shallow_rf = RandomForest::fit(&ds.train, &shallow_params, 6);
+    let mut trees = deep_rf.flatten(deep_rf.max_depth());
+    trees.extend(shallow_rf.flatten(shallow_rf.max_depth()));
+    let arena = ForestArena::from_flat_trees(&trees);
+    let t_cnt = arena.n_trees();
+    let live_frac = arena.live_ops_per_eval_range(0, t_cnt) as f64
+        / arena.ops_per_eval_range(0, t_cnt).max(1) as f64;
+    let ragged_plan = BatchPlan::new(&arena, Reduce::ProbAverage);
+    let padded_plan = BatchPlan::new(&arena, Reduce::ProbAverage).with_padded_walk(true);
+    // Conformance smoke before timing: the exit must not move a byte.
+    assert_eq!(
+        ragged_plan.execute(&x, batch),
+        padded_plan.execute(&x, batch),
+        "ragged kernel diverged from the padded walk"
+    );
+    b.bench(&format!("ragged_mix/padded_walk/n{batch}"), batch, || {
+        black_box(padded_plan.execute(black_box(&x), batch));
+    });
+    let padded = b.results.last().unwrap().clone();
+    b.bench(&format!("ragged_mix/batch_tiled/n{batch}"), batch, || {
+        black_box(ragged_plan.execute(black_box(&x), batch));
+    });
+    let ragged = b.results.last().unwrap().clone();
+    let ragged_speedup = padded.median_ns / ragged.median_ns.max(1.0);
+    println!();
+    println!(
+        "speedup ragged_mix batch {batch}: {ragged_speedup:.2}x vs padded walk \
+         (padded {:.0} ns, ragged {:.0} ns, live-op fraction {live_frac:.2}, \
+         depth {} over {t_cnt} trees)",
+        padded.median_ns,
+        ragged.median_ns,
+        arena.depth()
+    );
+    println!(
+        "BENCH_JSON {{\"bench\":\"inference\",\"model\":\"ragged_mix\",\"batch\":{batch},\
+         \"padded_walk_ns\":{:.0},\"batch_tiled_ns\":{:.0},\"ragged_speedup_x\":{ragged_speedup:.3},\
+         \"live_op_fraction\":{live_frac:.4},\"batch_tiled_per_s\":{:.1}}}",
+        padded.median_ns,
+        ragged.median_ns,
+        ragged.throughput_per_s.unwrap_or(0.0)
+    );
 }

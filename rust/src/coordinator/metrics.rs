@@ -39,8 +39,12 @@ pub struct Metrics {
     pub cache_misses: AtomicU64,
     /// Classifications evaluated through an execution backend.
     pub exec_samples: AtomicU64,
-    /// Comparator ops reported by the backend (arena-derived).
+    /// Comparator ops reported by the backend (arena-derived, padded
+    /// depth — the Table 1-stable accounting number).
     pub exec_comparator_ops: AtomicU64,
+    /// Dead padded levels the ragged software kernel skipped (live-depth
+    /// early exit; 0 under the depth-bound μarch backend).
+    pub exec_levels_skipped: AtomicU64,
     /// Simulated clock cycles (0 under the software backend).
     pub exec_cycles: AtomicU64,
     /// Simulated dynamic energy in femtojoules (1 fJ = 1e-6 nJ; integer
@@ -60,6 +64,7 @@ impl Metrics {
     pub fn record_exec(&self, r: &ExecReport) {
         self.exec_samples.fetch_add(r.samples, Ordering::Relaxed);
         self.exec_comparator_ops.fetch_add(r.comparator_ops, Ordering::Relaxed);
+        self.exec_levels_skipped.fetch_add(r.levels_skipped, Ordering::Relaxed);
         self.exec_cycles.fetch_add(r.cycles, Ordering::Relaxed);
         let fj = (r.energy_nj * 1e6).max(0.0).round() as u64;
         self.exec_energy_fj.fetch_add(fj, Ordering::Relaxed);
@@ -99,6 +104,7 @@ impl Metrics {
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
             exec_samples: self.exec_samples.load(Ordering::Relaxed),
             exec_comparator_ops: self.exec_comparator_ops.load(Ordering::Relaxed),
+            exec_levels_skipped: self.exec_levels_skipped.load(Ordering::Relaxed),
             exec_cycles: self.exec_cycles.load(Ordering::Relaxed),
             exec_energy_fj: self.exec_energy_fj.load(Ordering::Relaxed),
         }
@@ -118,6 +124,7 @@ pub struct MetricsSnapshot {
     pub cache_misses: u64,
     pub exec_samples: u64,
     pub exec_comparator_ops: u64,
+    pub exec_levels_skipped: u64,
     pub exec_cycles: u64,
     pub exec_energy_fj: u64,
 }
@@ -138,6 +145,8 @@ impl MetricsSnapshot {
         self.exec_samples = self.exec_samples.saturating_add(other.exec_samples);
         self.exec_comparator_ops =
             self.exec_comparator_ops.saturating_add(other.exec_comparator_ops);
+        self.exec_levels_skipped =
+            self.exec_levels_skipped.saturating_add(other.exec_levels_skipped);
         self.exec_cycles = self.exec_cycles.saturating_add(other.exec_cycles);
         self.exec_energy_fj = self.exec_energy_fj.saturating_add(other.exec_energy_fj);
     }
@@ -206,6 +215,17 @@ impl MetricsSnapshot {
             0.0
         } else {
             self.exec_comparator_ops as f64 / self.exec_samples as f64
+        }
+    }
+
+    /// Dead padded levels skipped per evaluated classification by the
+    /// ragged kernel's live-depth early exit (0 under the μarch backend,
+    /// whose PE is depth-bound).
+    pub fn levels_skipped_per_class(&self) -> f64 {
+        if self.exec_samples == 0 {
+            0.0
+        } else {
+            self.exec_levels_skipped as f64 / self.exec_samples as f64
         }
     }
 }
@@ -279,6 +299,7 @@ mod tests {
         let r = ExecReport {
             samples: 4,
             comparator_ops: 400,
+            levels_skipped: 40,
             cycles: 100,
             energy_nj: 2.0,
             ..Default::default()
@@ -292,6 +313,7 @@ mod tests {
         assert!((s.energy_per_response_nj() - 0.25).abs() < 1e-9);
         assert!((s.cycles_per_class() - 25.0).abs() < 1e-12);
         assert!((s.comparator_ops_per_class() - 100.0).abs() < 1e-12);
+        assert!((s.levels_skipped_per_class() - 10.0).abs() < 1e-12);
     }
 
     #[test]

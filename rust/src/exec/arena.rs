@@ -23,6 +23,30 @@
 //! where the sparse CART walk's `<=` would route right. Inputs are
 //! finite everywhere in this crate; flat routing is the layout's
 //! canonical semantics.)
+//!
+//! ## Ragged live depth: early-exit traversal
+//!
+//! The paper's energy argument is comparator ops *not executed* (§4,
+//! Table 1): complete-tree padding exists for the kernel layout, not to
+//! be walked. Packing therefore also records a per-tree **live depth**
+//! table — `live_depth[t]` = 1 + the deepest level of tree `t` holding a
+//! live split (0 for leaf-only trees). Every node at a level
+//! `≥ live_depth[t]` is a dead padding slot (`+inf`-sentinel threshold),
+//! and a dead slot routes left unconditionally, so a cursor `i` that has
+//! walked the `live_depth[t]` live levels lands — in closed form, without
+//! touching another node — on bottom-level leaf `i << (depth −
+//! live_depth[t])`. Every traversal entry point below (per-sample
+//! [`leaf_index`](ForestArena::leaf_index) and
+//! [`walk_tree`](ForestArena::walk_tree), tiled
+//! [`traverse_tile`](ForestArena::traverse_tile)) exits at the live depth
+//! and applies the shift, which is *function-preserving and
+//! byte-identical* to the padded walk (pinned by `rust/tests/exec.rs` on
+//! forests mixing depth-0 and deep trees). Comparator-op **accounting**
+//! ([`ops_per_eval_range`](ForestArena::ops_per_eval_range)) deliberately
+//! stays at trees × padded depth — the μarch PE is depth-bound hardware —
+//! while [`live_ops_per_eval_range`](ForestArena::live_ops_per_eval_range)
+//! / [`skipped_ops_per_eval_range`](ForestArena::skipped_ops_per_eval_range)
+//! expose what the software kernel actually walks vs. skips.
 
 use crate::dt::FlatTree;
 use crate::forest::RandomForest;
@@ -33,6 +57,44 @@ use crate::forest::RandomForest;
 #[inline]
 fn is_live(thr: f32) -> bool {
     thr.is_finite() && thr < 1e37
+}
+
+/// Cursor integer of the tiled traversal scratch: `u16` halves the hot
+/// cache footprint whenever the arena is shallow enough (`depth ≤ 15`,
+/// checked by [`crate::exec::BatchPlan`]); `u32` covers every depth the
+/// arena can physically allocate.
+pub(crate) trait CursorIdx: Copy + Send + Sync + 'static {
+    const ZERO: Self;
+    fn as_usize(self) -> usize;
+    /// `v` must fit the cursor width — callers guarantee `v < 2^depth`
+    /// with the width chosen from the arena depth.
+    fn from_usize(v: usize) -> Self;
+}
+
+impl CursorIdx for u16 {
+    const ZERO: Self = 0;
+    #[inline]
+    fn as_usize(self) -> usize {
+        self as usize
+    }
+    #[inline]
+    fn from_usize(v: usize) -> Self {
+        debug_assert!(v <= u16::MAX as usize);
+        v as u16
+    }
+}
+
+impl CursorIdx for u32 {
+    const ZERO: Self = 0;
+    #[inline]
+    fn as_usize(self) -> usize {
+        self as usize
+    }
+    #[inline]
+    fn from_usize(v: usize) -> Self {
+        debug_assert!(v <= u32::MAX as usize);
+        v as u32
+    }
 }
 
 /// A forest of complete trees in one structure-of-arrays allocation.
@@ -54,6 +116,11 @@ pub struct ForestArena {
     tree_leaf_off: Vec<usize>,
     /// Grove partition: grove `g` owns trees `grove_off[g] .. grove_off[g+1]`.
     grove_off: Vec<usize>,
+    /// Per-tree live depth: `live_depth[t]` = 1 + deepest level of tree
+    /// `t` with a live split (0 for leaf-only trees). Levels ≥ this hold
+    /// only dead padding slots, so traversal exits here and shifts the
+    /// cursor into the bottom level in closed form (`i << remaining`).
+    live_depth: Vec<u16>,
 }
 
 impl ForestArena {
@@ -73,6 +140,7 @@ impl ForestArena {
         let mut feat = vec![0i32; n_trees * n_internal];
         let mut thr = vec![f32::INFINITY; n_trees * n_internal];
         let mut leaf = vec![0.0f32; n_trees * n_leaves * c];
+        let mut live_depth = vec![0u16; n_trees];
         let level_off: Vec<usize> =
             (0..depth).map(|l| n_trees * ((1usize << l) - 1)).collect();
         let tree_leaf_off: Vec<usize> = (0..n_trees).map(|t| t * n_leaves * c).collect();
@@ -100,13 +168,17 @@ impl ForestArena {
                 padded = t.repad(depth);
                 &padded
             };
-            // FlatTree stores nodes level-order; peel its levels apart.
+            // FlatTree stores nodes level-order; peel its levels apart,
+            // recording the deepest level that still holds a live split.
             for lvl in 0..depth {
                 let w = 1usize << lvl;
                 let src = w - 1; // level ℓ starts at slot 2^ℓ − 1
                 let dst = level_off[lvl] + ti * w;
                 feat[dst..dst + w].copy_from_slice(&t.feat[src..src + w]);
                 thr[dst..dst + w].copy_from_slice(&t.thr[src..src + w]);
+                if t.thr[src..src + w].iter().any(|&v| is_live(v)) {
+                    live_depth[ti] = (lvl + 1) as u16;
+                }
             }
             leaf[tree_leaf_off[ti]..tree_leaf_off[ti] + n_leaves * c]
                 .copy_from_slice(&t.leaf);
@@ -122,6 +194,7 @@ impl ForestArena {
             level_off,
             tree_leaf_off,
             grove_off: vec![0, n_trees],
+            live_depth,
         }
     }
 
@@ -185,11 +258,28 @@ impl ForestArena {
         (self.grove_off[g], self.grove_off[g + 1])
     }
 
+    /// Levels tree `t` actually has to walk: 1 + the deepest level with a
+    /// live split (0 for leaf-only trees). Levels past this hold only
+    /// dead padding, which routes left unconditionally.
+    pub fn live_depth(&self, t: usize) -> usize {
+        self.live_depth[t] as usize
+    }
+
+    /// Deepest live depth over the tree range `[lo, hi)` — the number of
+    /// level iterations the ragged tile kernel runs for that range.
+    pub fn max_live_depth_range(&self, lo: usize, hi: usize) -> usize {
+        self.live_depth[lo..hi].iter().map(|&d| d as usize).max().unwrap_or(0)
+    }
+
     // --- traversal ---------------------------------------------------------
 
     /// Walk tree `t` on one sample; returns the local leaf index
     /// (`0..2^depth`). Same comparisons, in the same order, as
-    /// [`FlatTree::predict_proba`] on the packed tree.
+    /// [`FlatTree::predict_proba`] on the packed tree — except that the
+    /// walk exits at the tree's live depth and reaches the bottom-level
+    /// leaf in closed form (`i << remaining`): the skipped levels hold
+    /// only dead padding that routes left, so the result is
+    /// byte-identical to the full padded walk.
     ///
     /// Perf note: this is the Algorithm-2 per-sample hot loop (grove hop
     /// evaluation, μarch PE). Like `FlatTree::predict_proba` (§Perf
@@ -203,8 +293,9 @@ impl ForestArena {
         // accesses below are per-level, these are per-call.
         assert!(t < self.n_trees, "tree {t} out of range");
         assert!(x.len() >= self.n_features, "sample shorter than n_features");
+        let live = self.live_depth[t] as usize;
         let mut i = 0usize;
-        for lvl in 0..self.depth {
+        for lvl in 0..live {
             // SAFETY: lvl < depth = level_off.len(); the node offset is
             // level_off[lvl] + t·2^lvl + i with t < n_trees and i < 2^lvl
             // by the recurrence, so it stays below n_trees·(2^depth − 1) =
@@ -220,7 +311,8 @@ impl ForestArena {
             let go_right = unsafe { *x.get_unchecked(f) } > thr;
             i = 2 * i + go_right as usize;
         }
-        i
+        // Dead padding routes left every remaining level: i ← 2i.
+        i << (self.depth - live)
     }
 
     /// Leaf distribution of tree `t` at local leaf index `local`.
@@ -239,19 +331,24 @@ impl ForestArena {
     }
 
     /// Walk tree `t` on `x`, calling `visit(feature, live)` at every
-    /// level (`live` = real trained split, not complete-tree padding).
-    /// Returns the local leaf index. Used by the feature-acquisition cost
-    /// accounting in `forest::budgeted`.
+    /// *walked* level (`live` = real trained split, not complete-tree
+    /// padding). The walk exits at the tree's live depth — the levels it
+    /// skips are all-dead padding, so no live split is ever missed — and
+    /// returns the closed-form bottom-level leaf index. Used by the
+    /// feature-acquisition cost accounting in `forest::budgeted`, whose
+    /// totals only charge live splits and are therefore unchanged by the
+    /// early exit.
     pub fn walk_tree<F: FnMut(usize, bool)>(&self, t: usize, x: &[f32], mut visit: F) -> usize {
+        let live = self.live_depth[t] as usize;
         let mut i = 0usize;
-        for lvl in 0..self.depth {
+        for lvl in 0..live {
             let off = self.level_off[lvl] + (t << lvl) + i;
             let f = self.feat[off] as usize;
             let thr = self.thr[off];
             visit(f, is_live(thr));
             i = 2 * i + (x[f] > thr) as usize;
         }
-        i
+        i << (self.depth - live)
     }
 
     /// Level-synchronous traversal of a sample tile over the tree range
@@ -259,25 +356,83 @@ impl ForestArena {
     /// samples (the hardware PE's evaluation order). On return,
     /// `cursors[j·n + s]` holds the local leaf index reached by tree
     /// `lo + j` on sample `s`.
+    ///
+    /// Ragged: delegates to the feature-major kernel core
+    /// ([`ForestArena::traverse_tile_transposed`]) after transposing the
+    /// tile once, so every caller — including `Grove`'s hop path — gets
+    /// the live-depth early exit and stride-1 inner loop from the one
+    /// kernel implementation. Byte-identical to the padded walk, cheaper
+    /// by exactly the skipped dead levels.
     pub fn traverse_tile(&self, lo: usize, hi: usize, x: &[f32], n: usize, cursors: &mut [u32]) {
-        debug_assert!(lo <= hi && hi <= self.n_trees, "bad tree range {lo}..{hi}");
-        let t_cnt = hi - lo;
         let f = self.n_features;
         assert_eq!(x.len(), n * f, "tile shape mismatch");
+        let mut xt = vec![0.0f32; x.len()];
+        for (r, row) in x.chunks_exact(f).enumerate() {
+            for (k, &v) in row.iter().enumerate() {
+                xt[k * n + r] = v;
+            }
+        }
+        self.traverse_tile_transposed(lo, hi, &xt, n, cursors, false);
+    }
+
+    /// The tiled-kernel core behind [`crate::exec::BatchPlan`]: same
+    /// ragged level-synchronous traversal as
+    /// [`traverse_tile`](ForestArena::traverse_tile), but over a
+    /// **feature-major** (transposed) tile `xt: [n_features, n]` so the
+    /// inner comparison loop reads each feature column stride-1, with the
+    /// cursor width `C` chosen by the caller (`u16` when `depth ≤ 15`
+    /// halves the hot scratch). `padded_walk` forces the pre-exit
+    /// full-depth walk — the results are identical either way (the
+    /// bench/conformance baseline); only the work differs.
+    pub(crate) fn traverse_tile_transposed<C: CursorIdx>(
+        &self,
+        lo: usize,
+        hi: usize,
+        xt: &[f32],
+        n: usize,
+        cursors: &mut [C],
+        padded_walk: bool,
+    ) {
+        debug_assert!(lo <= hi && hi <= self.n_trees, "bad tree range {lo}..{hi}");
+        let t_cnt = hi - lo;
+        assert_eq!(xt.len(), n * self.n_features, "tile shape mismatch");
         assert_eq!(cursors.len(), t_cnt * n, "cursor buffer shape mismatch");
-        cursors.iter_mut().for_each(|ci| *ci = 0);
-        for lvl in 0..self.depth {
+        cursors.iter_mut().for_each(|ci| *ci = C::ZERO);
+        let live = |j: usize| {
+            if padded_walk {
+                self.depth
+            } else {
+                self.live_depth[lo + j] as usize
+            }
+        };
+        let max_depth = if padded_walk { self.depth } else { self.max_live_depth_range(lo, hi) };
+        for lvl in 0..max_depth {
             let w = 1usize << lvl;
             let base = self.level_off[lvl];
             for j in 0..t_cnt {
+                if live(j) <= lvl {
+                    continue; // only dead padding from here down
+                }
                 let off = base + (lo + j) * w;
                 let feat = &self.feat[off..off + w];
                 let thr = &self.thr[off..off + w];
                 let cur = &mut cursors[j * n..(j + 1) * n];
                 for (s, ci) in cur.iter_mut().enumerate() {
-                    let i = *ci as usize;
-                    let go_right = x[s * f + feat[i] as usize] > thr[i];
-                    *ci = (2 * i + go_right as usize) as u32;
+                    let i = ci.as_usize();
+                    // Feature-major tile: the column of feat[i] is the
+                    // contiguous run xt[feat[i]·n ..][..n], so samples
+                    // sharing a cursor (all of them at level 0, most at
+                    // shallow levels) read stride-1.
+                    let go_right = xt[feat[i] as usize * n + s] > thr[i];
+                    *ci = C::from_usize(2 * i + go_right as usize);
+                }
+            }
+        }
+        for j in 0..t_cnt {
+            let shift = self.depth - live(j);
+            if shift > 0 {
+                for ci in &mut cursors[j * n..(j + 1) * n] {
+                    *ci = C::from_usize(ci.as_usize() << shift);
                 }
             }
         }
@@ -286,9 +441,26 @@ impl ForestArena {
     // --- accounting (drives the μarch PE and energy models) ----------------
 
     /// Comparator ops per evaluation of the tree range: every complete
-    /// tree walks exactly `depth` levels.
+    /// tree is charged exactly `depth` levels. This is the *hardware*
+    /// number — the μarch PE is depth-bound (§3.2.2) — and it must stay
+    /// numerically identical across kernel changes so Table 1 / Fig 4–5
+    /// are stable; the software kernel's early exit is accounted
+    /// separately by [`skipped_ops_per_eval_range`](ForestArena::skipped_ops_per_eval_range).
     pub fn ops_per_eval_range(&self, lo: usize, hi: usize) -> usize {
         (hi - lo) * self.depth
+    }
+
+    /// Comparator ops the ragged software kernel actually executes per
+    /// evaluation of the tree range: Σ live_depth over its trees.
+    pub fn live_ops_per_eval_range(&self, lo: usize, hi: usize) -> usize {
+        self.live_depth[lo..hi].iter().map(|&d| d as usize).sum()
+    }
+
+    /// Dead padded levels the ragged kernel skips per evaluation of the
+    /// tree range (= [`ops_per_eval_range`](ForestArena::ops_per_eval_range)
+    /// − [`live_ops_per_eval_range`](ForestArena::live_ops_per_eval_range)).
+    pub fn skipped_ops_per_eval_range(&self, lo: usize, hi: usize) -> usize {
+        self.ops_per_eval_range(lo, hi) - self.live_ops_per_eval_range(lo, hi)
     }
 
     /// VMEM bytes of one packed tree: feat (i32) + thr (f32) + leaves (f32).
@@ -523,29 +695,138 @@ mod tests {
 
     #[test]
     fn max_depth_padding_slots_are_dead_but_function_preserving() {
-        // Re-pad two levels past the trained depth: every walk crosses
-        // dead (padding) slots, live-node accounting is unchanged, and
-        // the reached distribution equals the original tree's.
+        // Re-pad two levels past the trained depth: live-node accounting
+        // and live depth are unchanged, the walk exits at the live depth
+        // (never touching the two all-dead bottom levels), and the
+        // reached distribution equals the original tree's.
         let (trees, ds) = flats();
         let orig = ForestArena::from_flat_trees(&trees);
         let deeper: Vec<FlatTree> = trees.iter().map(|t| t.repad(t.depth + 2)).collect();
         let arena = ForestArena::from_flat_trees(&deeper);
         assert_eq!(arena.depth(), orig.depth() + 2);
+        assert_eq!(
+            arena.skipped_ops_per_eval_range(0, arena.n_trees()),
+            orig.skipped_ops_per_eval_range(0, orig.n_trees()) + 2 * arena.n_trees(),
+            "each tree must skip exactly the two new dead levels"
+        );
         let x = ds.test.row(0);
         for t in 0..arena.n_trees() {
             assert_eq!(arena.live_nodes(t), orig.live_nodes(t), "padding became live");
-            let mut dead = 0;
-            let leaf = arena.walk_tree(t, x, |_, live| {
-                if !live {
-                    dead += 1;
-                }
-            });
-            assert!(dead >= 2, "tree {t}: walk crossed {dead} dead slots, expected ≥ 2");
+            assert_eq!(arena.live_depth(t), orig.live_depth(t), "re-pad moved the live depth");
+            let mut visited = 0;
+            let leaf = arena.walk_tree(t, x, |_, _| visited += 1);
+            assert_eq!(visited, arena.live_depth(t), "walk must exit at the live depth");
             assert_eq!(
                 arena.leaf_slice(t, leaf),
                 orig.leaf_dist(t, x),
-                "tree {t}: padded walk reached a different distribution"
+                "tree {t}: early-exit walk reached a different distribution"
             );
+        }
+    }
+
+    /// Build a deliberately ragged forest: the trained trees, plus
+    /// re-trained shallow and leaf-only companions, all packed into one
+    /// arena (homogenized to the deepest).
+    fn ragged_flats() -> (Vec<FlatTree>, crate::data::Dataset) {
+        let ds = generate(&DatasetProfile::demo(), 337);
+        let deep = RandomForest::fit(&ds.train, &ForestParams::small(), 1);
+        let shallow_params = ForestParams {
+            tree: crate::dt::builder::TreeParams {
+                max_depth: 2,
+                ..crate::dt::builder::TreeParams::default()
+            },
+            ..ForestParams::small()
+        };
+        let shallow = RandomForest::fit(&ds.train, &shallow_params, 2);
+        let mut trees = deep.flatten(deep.max_depth());
+        trees.extend(shallow.flatten(shallow.max_depth()));
+        // A leaf-only tree: depth 0, packs as pure padding below level 0.
+        let mut s = crate::data::Split::new(ds.n_features(), ds.n_classes());
+        for _ in 0..4 {
+            s.push(&vec![0.25; ds.n_features()], 1);
+        }
+        let mut rng = crate::util::rng::Rng::new(9);
+        let leaf_tree = crate::dt::builder::fit_tree(
+            &s,
+            &[0, 1, 2, 3],
+            &crate::dt::builder::TreeParams::default(),
+            &mut rng,
+        );
+        assert_eq!(leaf_tree.depth, 0, "pure-class fit should be a single leaf");
+        trees.push(FlatTree::from_tree(&leaf_tree, 0));
+        (trees, ds)
+    }
+
+    #[test]
+    fn live_depth_table_tracks_deepest_live_split() {
+        let (trees, _) = ragged_flats();
+        let arena = ForestArena::from_flat_trees(&trees);
+        let depth = arena.depth();
+        let mut saw_shallow = false;
+        for (t, tree) in trees.iter().enumerate() {
+            // Reference: deepest level of the original (pre-homogenize)
+            // tree holding a live split.
+            let mut want = 0usize;
+            for lvl in 0..tree.depth {
+                let w = 1usize << lvl;
+                let src = w - 1;
+                if tree.thr[src..src + w].iter().any(|&v| v.is_finite() && v < 1e37) {
+                    want = lvl + 1;
+                }
+            }
+            assert_eq!(arena.live_depth(t), want, "tree {t}");
+            assert!(arena.live_depth(t) <= depth);
+            saw_shallow |= arena.live_depth(t) < depth;
+        }
+        assert!(saw_shallow, "fixture must actually be ragged");
+        assert_eq!(arena.live_depth(trees.len() - 1), 0, "leaf-only tree");
+        assert_eq!(arena.max_live_depth_range(0, arena.n_trees()), depth);
+        assert_eq!(
+            arena.live_ops_per_eval_range(0, arena.n_trees())
+                + arena.skipped_ops_per_eval_range(0, arena.n_trees()),
+            arena.ops_per_eval_range(0, arena.n_trees()),
+        );
+        assert!(arena.skipped_ops_per_eval_range(0, arena.n_trees()) > 0);
+    }
+
+    #[test]
+    fn ragged_walks_match_flat_traversal_bitwise() {
+        // Early exit on a mixed-depth arena: per-sample, tiled row-major
+        // and tiled transposed walks all reach byte-identically the leaf
+        // the padded per-tree FlatTree traversal reaches.
+        let (trees, ds) = ragged_flats();
+        let arena = ForestArena::from_flat_trees(&trees);
+        let depth = arena.depth();
+        let padded: Vec<FlatTree> = trees.iter().map(|t| t.repad(depth)).collect();
+        let n = 19.min(ds.test.len());
+        let f = arena.n_features();
+        let t_cnt = arena.n_trees();
+
+        let mut cursors = vec![0u32; t_cnt * n];
+        arena.traverse_tile(0, t_cnt, &ds.test.x[..n * f], n, &mut cursors);
+
+        // Transposed tile (feature-major) with both cursor widths.
+        let mut xt = vec![0.0f32; n * f];
+        for s in 0..n {
+            for k in 0..f {
+                xt[k * n + s] = ds.test.x[s * f + k];
+            }
+        }
+        let mut c16 = vec![0u16; t_cnt * n];
+        arena.traverse_tile_transposed(0, t_cnt, &xt, n, &mut c16, false);
+        let mut c32p = vec![0u32; t_cnt * n];
+        arena.traverse_tile_transposed(0, t_cnt, &xt, n, &mut c32p, true);
+
+        for s in 0..n {
+            let x = ds.test.row(s);
+            for (t, tree) in padded.iter().enumerate() {
+                let want = tree.predict_proba(x);
+                let leaf = arena.leaf_index(t, x);
+                assert_eq!(arena.leaf_slice(t, leaf), want, "leaf_index tree {t} row {s}");
+                assert_eq!(cursors[t * n + s] as usize, leaf, "tile tree {t} row {s}");
+                assert_eq!(c16[t * n + s] as usize, leaf, "u16 tile tree {t} row {s}");
+                assert_eq!(c32p[t * n + s] as usize, leaf, "padded tile tree {t} row {s}");
+            }
         }
     }
 }

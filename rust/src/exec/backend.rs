@@ -67,6 +67,12 @@ pub struct ExecReport {
     /// Groves consulted, summed over samples (1 per sample for whole-
     /// forest reductions).
     pub hops_total: u64,
+    /// Dead padded levels the ragged software kernel *did not* walk
+    /// (live-depth early exit), summed over trees and samples — the
+    /// comparator ops saved relative to `comparator_ops`, which stays at
+    /// the padded-depth hardware number. 0 for the μarch backend: the
+    /// simulated PE is depth-bound and walks the padding.
+    pub levels_skipped: u64,
     /// Dynamic evaluation energy in nanojoules (0 for software).
     pub energy_nj: f64,
 }
@@ -83,6 +89,9 @@ impl ExecReport {
             queue_bytes_written: s.queue_bytes_written,
             handshakes: s.handshakes,
             hops_total: s.total_hops,
+            // The simulated PE is depth-bound: hardware clocks through
+            // padding, so the μarch backend never skips a level.
+            levels_skipped: 0,
             energy_nj: s.dynamic_energy_nj(eb),
         }
     }
@@ -98,6 +107,7 @@ impl ExecReport {
             self.queue_bytes_written.saturating_add(other.queue_bytes_written);
         self.handshakes = self.handshakes.saturating_add(other.handshakes);
         self.hops_total = self.hops_total.saturating_add(other.hops_total);
+        self.levels_skipped = self.levels_skipped.saturating_add(other.levels_skipped);
         self.energy_nj += other.energy_nj;
     }
 
@@ -126,6 +136,16 @@ impl ExecReport {
             0.0
         } else {
             self.comparator_ops as f64 / self.samples as f64
+        }
+    }
+
+    /// Dead padded levels skipped per evaluated classification by the
+    /// ragged kernel's live-depth early exit.
+    pub fn levels_skipped_per_class(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.levels_skipped as f64 / self.samples as f64
         }
     }
 }
@@ -165,10 +185,15 @@ pub(crate) fn forest_tile(
     n: usize,
 ) -> (ProbMatrix, ExecReport) {
     let probs = BatchPlan::new(arena, reduce).execute(x, n);
+    // `comparator_ops` stays the padded-depth accounting number (the
+    // μarch suites pin it); the ragged kernel's saving is reported
+    // separately as `levels_skipped`.
     let report = ExecReport {
         samples: n as u64,
         comparator_ops: (n as u64)
             .saturating_mul(arena.ops_per_eval_range(0, arena.n_trees()) as u64),
+        levels_skipped: (n as u64)
+            .saturating_mul(arena.skipped_ops_per_eval_range(0, arena.n_trees()) as u64),
         hops_total: n as u64,
         ..Default::default()
     };
@@ -198,8 +223,11 @@ pub(crate) fn fog_tile(
     let mut rows = Vec::with_capacity(n);
     for (prob, hops, start) in outcomes {
         for j in 0..hops {
-            let ops = fog.groves[(start + j) % n_groves].ops_per_eval() as u64;
-            report.comparator_ops = report.comparator_ops.saturating_add(ops);
+            let g = &fog.groves[(start + j) % n_groves];
+            report.comparator_ops =
+                report.comparator_ops.saturating_add(g.ops_per_eval() as u64);
+            report.levels_skipped =
+                report.levels_skipped.saturating_add(g.skipped_ops_per_eval() as u64);
         }
         report.hops_total = report.hops_total.saturating_add(hops as u64);
         rows.push(prob);
@@ -361,6 +389,10 @@ mod tests {
         assert_eq!(
             report.comparator_ops,
             (n * arena.ops_per_eval_range(0, arena.n_trees())) as u64
+        );
+        assert_eq!(
+            report.levels_skipped,
+            (n * arena.skipped_ops_per_eval_range(0, arena.n_trees())) as u64
         );
         assert_eq!(report.cycles, 0);
         assert_eq!(report.energy_nj, 0.0);

@@ -1,29 +1,67 @@
 //! [`BatchPlan`] — the tiled, level-synchronous batch-prediction kernel
 //! over a [`ForestArena`] tree range.
 //!
-//! A batch is cut into tiles of [`DEFAULT_TILE`] samples. The output
-//! `ProbMatrix` is allocated once and split into tile-aligned row chunks
-//! across the thread pool ([`par_row_chunks_mut`]); each worker reduces
-//! its tiles straight into its output rows, reusing one thread-local
-//! cursor buffer across every level, tree and sample of its chunk — the
-//! per-sample `Vec` allocations of the old one-row-at-a-time path
-//! disappear from the hot loop. Within a tile the traversal is
-//! level-synchronous (outer loop over levels, inner loop over samples),
-//! so every level touches one contiguous arena region.
+//! A batch is cut into tiles of [`BatchPlan::tile`] samples (chosen by
+//! [`BatchPlan::auto_tile`] from the arena shape and thread count unless
+//! overridden). The output `ProbMatrix` is allocated once and split into
+//! row chunks across the thread pool ([`par_row_chunks_mut`]); each
+//! worker reduces its tiles straight into its output rows, reusing one
+//! thread-local cursor + transpose scratch across every level, tree and
+//! sample of its chunk — no allocation on the hot loop.
+//!
+//! Kernel structure (the perf levers, in order of leverage):
+//!
+//! * **Ragged live-depth early exit** — the traversal only walks each
+//!   tree to its live depth and finishes shallow trees' cursors in
+//!   closed form (see the arena module docs): a mixed-depth forest does
+//!   Σ live_depth comparisons per sample instead of trees × padded
+//!   depth, which is exactly the comparator-op saving the paper's
+//!   energy argument is built on (FoG §4, Table 1).
+//! * **Feature-major tiles** — each tile is transposed once into a
+//!   contiguous scratch so the inner comparison loop reads feature
+//!   columns stride-1 instead of striding `n_features` through row-major
+//!   input.
+//! * **Narrow cursors** — cursor scratch is `u16` whenever the arena
+//!   depth allows (`depth ≤ 15`), halving the hot state, and is sized to
+//!   the worker chunk's actual rows, never the full-tile worst case.
 //!
 //! The floating-point reduction order is *identical* to the per-tree
 //! reference paths (`RandomForest::predict_proba`, per-tree majority
 //! votes): trees accumulate in index order and the average is applied
 //! once at the end, so arena results are bit-identical to per-tree
-//! `FlatTree` traversal.
+//! `FlatTree` traversal — tile size, parallel grain, cursor width and
+//! early exit are all pure work-savers ([`BatchPlan::with_padded_walk`]
+//! keeps the pre-exit full-depth walk around as the bench/conformance
+//! baseline).
 
-use super::arena::ForestArena;
+use super::arena::{CursorIdx, ForestArena};
 use crate::api::ProbMatrix;
-use crate::util::threadpool::par_row_chunks_mut;
+use crate::util::threadpool::{num_threads, par_row_chunks_mut};
 
-/// Samples per tile. Cursor state is `n_trees × TILE × 4 B` — small
-/// enough to stay cache-resident next to the tile's input rows.
+/// Historical default tile; [`BatchPlan::auto_tile`] supersedes it but
+/// plans fall back to it if the footprint model degenerates.
 pub const DEFAULT_TILE: usize = 64;
+
+/// Bounds of the auto-tile search: below 16 rows the per-tile transpose
+/// overhead dominates; above 512 the tile state outgrows L2 on every
+/// machine we care about.
+const MIN_TILE: usize = 16;
+const MAX_TILE: usize = 512;
+
+/// Per-worker hot-scratch budget the auto-tiler targets (≈ a
+/// conservative private-L2 share) and the total shared-cache budget it
+/// divides among workers.
+const TILE_CACHE_BUDGET: usize = 192 * 1024;
+const CACHE_TOTAL_BUDGET: usize = 4 * 1024 * 1024;
+
+/// Deepest arena whose bottom-level leaf indices still fit a `u16`
+/// cursor (`2^15` leaves).
+const U16_MAX_DEPTH: usize = 15;
+
+/// Minimum rows per parallel chunk: a tiny batch runs on fewer workers
+/// rather than shattering into single-row chunks that pay one thread
+/// wake-up per row.
+const MIN_GRAIN_ROWS: usize = 8;
 
 /// How per-tree leaves reduce to one distribution per sample.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -43,6 +81,9 @@ pub struct BatchPlan<'a> {
     hi: usize,
     reduce: Reduce,
     tile: usize,
+    /// Bench/conformance baseline: walk every padded level instead of
+    /// exiting at each tree's live depth (results identical either way).
+    padded_walk: bool,
 }
 
 impl<'a> BatchPlan<'a> {
@@ -51,10 +92,33 @@ impl<'a> BatchPlan<'a> {
         Self::over_range(arena, 0, arena.n_trees(), reduce)
     }
 
-    /// Plan over the tree range `[lo, hi)` (a grove slice).
+    /// Plan over the tree range `[lo, hi)` (a grove slice). The tile is
+    /// picked by [`BatchPlan::auto_tile`]; override with
+    /// [`BatchPlan::with_tile`].
     pub fn over_range(arena: &'a ForestArena, lo: usize, hi: usize, reduce: Reduce) -> BatchPlan<'a> {
         assert!(lo < hi && hi <= arena.n_trees(), "bad tree range {lo}..{hi}");
-        BatchPlan { arena, lo, hi, reduce, tile: DEFAULT_TILE }
+        let tile = Self::auto_tile(arena, hi - lo);
+        BatchPlan { arena, lo, hi, reduce, tile, padded_walk: false }
+    }
+
+    /// Pick a tile size from the plan's hot-scratch footprint — cursor
+    /// lanes (one per tree, width from the arena depth), the
+    /// feature-major transpose, the source rows and the output rows —
+    /// against a per-worker cache budget (the shared budget split over
+    /// [`num_threads`], clamped to a private-L2 share). Deterministic and
+    /// cheap (no timing runs); results are tile-independent, so the
+    /// choice is purely a throughput knob.
+    pub fn auto_tile(arena: &ForestArena, t_cnt: usize) -> usize {
+        let cursor_bytes = if arena.depth() <= U16_MAX_DEPTH { 2 } else { 4 };
+        // Hot bytes per tile row: cursors + transposed copy + source row
+        // + accumulator row.
+        let per_row = t_cnt * cursor_bytes + 8 * arena.n_features() + 4 * arena.n_classes();
+        if per_row == 0 {
+            return DEFAULT_TILE;
+        }
+        let budget = (CACHE_TOTAL_BUDGET / num_threads().max(1)).min(TILE_CACHE_BUDGET);
+        let tile = (budget / per_row).clamp(MIN_TILE, MAX_TILE);
+        tile & !7 // keep row counts 8-aligned for tidy vector tails
     }
 
     /// Override the tile size (results are tile-size independent).
@@ -63,32 +127,73 @@ impl<'a> BatchPlan<'a> {
         self
     }
 
+    /// Force the pre-exit padded walk (every tree × every level). Only
+    /// benches and conformance tests want this: answers are identical,
+    /// the dead-level work is not.
+    pub fn with_padded_walk(mut self, padded: bool) -> BatchPlan<'a> {
+        self.padded_walk = padded;
+        self
+    }
+
+    /// The tile size this plan will cut batches into.
+    pub fn tile(&self) -> usize {
+        self.tile
+    }
+
+    /// Effective tile for an `n`-row batch.
+    fn effective_tile(&self, n: usize) -> usize {
+        self.tile.max(1).min(n.max(1))
+    }
+
+    /// Parallel grain in rows: one chunk per worker, clamped so tiny
+    /// batches run on fewer workers instead of shattering into
+    /// single-row chunks (results are grain-independent — pinned by
+    /// `tiny_batches_do_not_shatter` and `results_independent_of_tile_size`).
+    fn grain_rows(&self, n: usize) -> usize {
+        self.effective_tile(n).min(n.div_ceil(num_threads()).max(MIN_GRAIN_ROWS))
+    }
+
     /// Evaluate a row-major batch `x: [n, n_features]`. The output matrix
     /// is allocated once; workers write their tiles straight into
-    /// disjoint row ranges of it, each reusing one cursor scratch across
-    /// every tile of its chunk.
+    /// disjoint row ranges of it, each reusing one cursor + transpose
+    /// scratch across every tile of its chunk.
     pub fn execute(&self, x: &[f32], n: usize) -> ProbMatrix {
+        if self.arena.depth() <= U16_MAX_DEPTH {
+            self.execute_with::<u16>(x, n)
+        } else {
+            self.execute_with::<u32>(x, n)
+        }
+    }
+
+    fn execute_with<C: CursorIdx>(&self, x: &[f32], n: usize) -> ProbMatrix {
         let f = self.arena.n_features();
         let c = self.arena.n_classes();
         assert_eq!(x.len(), n * f, "batch shape mismatch");
-        let tile = self.tile.max(1).min(n.max(1));
+        let tile = self.effective_tile(n);
         let t_cnt = self.hi - self.lo;
-        // Parallel grain: one chunk per worker, but never coarser than
-        // what keeps every worker busy — small batches split below the
-        // cache tile rather than running single-threaded (results are
-        // grain-independent, see `results_independent_of_tile_size`).
-        let block =
-            tile.min(n.div_ceil(crate::util::threadpool::num_threads()).max(1));
+        let block = self.grain_rows(n);
         let mut data = vec![0.0f32; n * c];
         par_row_chunks_mut(&mut data, c, block, |first_row, chunk| {
-            let mut cursors = vec![0u32; t_cnt * tile];
             let rows = chunk.len() / c;
+            // Scratch sized to what this chunk can actually use — a
+            // chunk smaller than the tile never pays full-tile buffers.
+            let t = tile.min(rows.max(1));
+            let mut cursors = vec![C::ZERO; t_cnt * t];
+            let mut xt = vec![0.0f32; f * t];
             let mut s0 = 0;
             while s0 < rows {
                 let s1 = (s0 + tile).min(rows);
                 let m = s1 - s0;
-                self.run_tile(
-                    &x[(first_row + s0) * f..(first_row + s1) * f],
+                // Transpose the tile feature-major so each level's
+                // compare loop reads stride-1 columns.
+                let src = &x[(first_row + s0) * f..(first_row + s1) * f];
+                for (r, row) in src.chunks_exact(f).enumerate() {
+                    for (k, &v) in row.iter().enumerate() {
+                        xt[k * m + r] = v;
+                    }
+                }
+                self.run_tile::<C>(
+                    &xt[..f * m],
                     m,
                     &mut cursors[..t_cnt * m],
                     &mut chunk[s0 * c..s1 * c],
@@ -99,19 +204,20 @@ impl<'a> BatchPlan<'a> {
         ProbMatrix::new(data, c)
     }
 
-    /// One tile: traverse level-synchronously, then reduce leaves into
-    /// `acc` (the tile's zero-initialized output rows).
-    fn run_tile(&self, x: &[f32], n: usize, cursors: &mut [u32], acc: &mut [f32]) {
+    /// One tile: traverse level-synchronously over the feature-major
+    /// tile `xt`, then reduce leaves into `acc` (the tile's
+    /// zero-initialized output rows).
+    fn run_tile<C: CursorIdx>(&self, xt: &[f32], n: usize, cursors: &mut [C], acc: &mut [f32]) {
         let a = self.arena;
         let c = a.n_classes();
         let t_cnt = self.hi - self.lo;
-        a.traverse_tile(self.lo, self.hi, x, n, cursors);
+        a.traverse_tile_transposed(self.lo, self.hi, xt, n, cursors, self.padded_walk);
         let inv = 1.0 / t_cnt as f32;
         match self.reduce {
             Reduce::ProbAverage => {
                 for j in 0..t_cnt {
                     for s in 0..n {
-                        let leaf = a.leaf_slice(self.lo + j, cursors[j * n + s] as usize);
+                        let leaf = a.leaf_slice(self.lo + j, cursors[j * n + s].as_usize());
                         for (o, &p) in acc[s * c..(s + 1) * c].iter_mut().zip(leaf) {
                             *o += p;
                         }
@@ -121,7 +227,7 @@ impl<'a> BatchPlan<'a> {
             Reduce::MajorityVote => {
                 for j in 0..t_cnt {
                     for s in 0..n {
-                        let leaf = a.leaf_slice(self.lo + j, cursors[j * n + s] as usize);
+                        let leaf = a.leaf_slice(self.lo + j, cursors[j * n + s].as_usize());
                         acc[s * c + crate::util::argmax(leaf)] += 1.0;
                     }
                 }
@@ -135,6 +241,8 @@ impl<'a> BatchPlan<'a> {
 mod tests {
     use super::*;
     use crate::data::synthetic::{generate, DatasetProfile};
+    use crate::dt::builder::TreeParams;
+    use crate::dt::FlatTree;
     use crate::forest::{ForestParams, RandomForest};
 
     fn setup() -> (RandomForest, ForestArena, crate::data::Dataset) {
@@ -142,6 +250,21 @@ mod tests {
         let rf = RandomForest::fit(&ds.train, &ForestParams::small(), 2);
         let arena = ForestArena::from_forest(&rf, rf.max_depth());
         (rf, arena, ds)
+    }
+
+    /// A mixed-depth (ragged) arena: deep and depth-capped trees packed
+    /// together, homogenized to the deepest.
+    fn ragged_arena() -> (ForestArena, crate::data::Dataset) {
+        let ds = generate(&DatasetProfile::demo(), 351);
+        let deep = RandomForest::fit(&ds.train, &ForestParams::small(), 3);
+        let shallow_params = ForestParams {
+            tree: TreeParams { max_depth: 2, ..TreeParams::default() },
+            ..ForestParams::small()
+        };
+        let shallow = RandomForest::fit(&ds.train, &shallow_params, 4);
+        let mut trees = deep.flatten(deep.max_depth());
+        trees.extend(shallow.flatten(shallow.max_depth()));
+        (ForestArena::from_flat_trees(&trees), ds)
     }
 
     #[test]
@@ -182,6 +305,80 @@ mod tests {
                 .with_tile(tile)
                 .execute(&ds.test.x, n);
             assert_eq!(full, tiled, "tile {tile}");
+        }
+    }
+
+    #[test]
+    fn ragged_arena_matches_padded_walk_bitwise() {
+        // The live-depth early exit is a pure work-saver: on a forest
+        // mixing depth-2 and deep trees, the ragged kernel's output is
+        // byte-identical to the full padded walk, for both reductions.
+        let (arena, ds) = ragged_arena();
+        assert!(
+            arena.skipped_ops_per_eval_range(0, arena.n_trees()) > 0,
+            "fixture must actually skip levels"
+        );
+        let n = ds.test.len();
+        for reduce in [Reduce::ProbAverage, Reduce::MajorityVote] {
+            let ragged = BatchPlan::new(&arena, reduce).execute(&ds.test.x, n);
+            let padded = BatchPlan::new(&arena, reduce)
+                .with_padded_walk(true)
+                .execute(&ds.test.x, n);
+            assert_eq!(ragged, padded, "{reduce:?}");
+        }
+    }
+
+    #[test]
+    fn deep_arena_uses_u32_cursors_and_matches() {
+        // Re-pad past the u16 depth bound: the plan must switch to u32
+        // cursors and keep byte-identical results.
+        let (_, arena, ds) = setup();
+        let deep: Vec<FlatTree> =
+            (0..arena.n_trees()).map(|t| arena.tree(t).repad(16)).collect();
+        let deep_arena = ForestArena::from_flat_trees(&deep);
+        assert!(deep_arena.depth() > 15);
+        let n = 16.min(ds.test.len());
+        let want = BatchPlan::new(&arena, Reduce::ProbAverage)
+            .execute(&ds.test.x[..n * arena.n_features()], n);
+        let got = BatchPlan::new(&deep_arena, Reduce::ProbAverage)
+            .execute(&ds.test.x[..n * arena.n_features()], n);
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn auto_tile_bounded_and_deterministic() {
+        let (_, arena, _) = setup();
+        let tile = BatchPlan::auto_tile(&arena, arena.n_trees());
+        assert!((MIN_TILE..=MAX_TILE).contains(&tile), "tile {tile}");
+        assert_eq!(tile % 8, 0, "tile {tile} not 8-aligned");
+        assert_eq!(tile, BatchPlan::new(&arena, Reduce::ProbAverage).tile());
+        // More trees → more cursor state per row → never a larger tile.
+        let few = BatchPlan::auto_tile(&arena, 1);
+        assert!(tile <= few, "tile grew with tree count ({tile} > {few})");
+    }
+
+    #[test]
+    fn tiny_batches_do_not_shatter() {
+        // Satellite regression: the parallel grain is clamped to
+        // MIN_GRAIN_ROWS, so a tiny batch stays in one chunk instead of
+        // splitting into per-row thread wake-ups — and results equal the
+        // full-batch rows bitwise (grain independence).
+        let (_, arena, ds) = setup();
+        let plan = BatchPlan::new(&arena, Reduce::ProbAverage);
+        for n in [1usize, 2, 3, MIN_GRAIN_ROWS - 1] {
+            assert!(
+                plan.grain_rows(n) >= n,
+                "batch of {n} rows split below the grain clamp ({})",
+                plan.grain_rows(n)
+            );
+        }
+        assert!(plan.grain_rows(10_000) >= MIN_GRAIN_ROWS);
+        let full = plan.execute(&ds.test.x, ds.test.len());
+        for n in [1usize, 3, 5] {
+            let small = plan.execute(&ds.test.x[..n * arena.n_features()], n);
+            for i in 0..n {
+                assert_eq!(small.row(i), full.row(i), "n {n} row {i}");
+            }
         }
     }
 

@@ -12,6 +12,18 @@
 //! *level* and whose inner loop is the samples of a tile, exactly the
 //! order the grove PE evaluates in hardware.
 //!
+//! The packing also records per-tree **live-depth** tables (deepest level
+//! holding a live split): every traversal exits at a tree's live depth
+//! and computes the bottom-level leaf in closed form (`i << remaining` —
+//! dead padding routes left), so mixed-depth (*ragged*) forests cost
+//! Σ live_depth comparisons per sample instead of trees × padded depth,
+//! byte-identically. Tiles are transposed feature-major and cursors
+//! shrink to `u16` on shallow arenas; [`BatchPlan::auto_tile`] sizes the
+//! tile from the arena shape and thread count. Comparator-op
+//! *accounting* stays at the depth-bound hardware charge (Table 1 /
+//! Fig 4–5 stable); the skipped work is reported via
+//! [`ExecReport::levels_skipped`](backend::ExecReport).
+//!
 //! Every tree-based predictor in the crate owns (or slices) an arena:
 //!
 //! * `api::RfModel` packs its forest and serves both vote modes through

@@ -5,7 +5,12 @@
 //! normalized distribution's `MaxDiff` confidence reaches the threshold or
 //! `max_hops` groves have contributed. The per-input hop count is the
 //! quantity that makes FoG energy-proportional: easy inputs stop after one
-//! grove.
+//! grove. Hop evaluation composes with a second, orthogonal work-saver:
+//! each grove walk runs on the shared arena's live-depth early exit
+//! (`exec::ForestArena`), so confidence gating prunes *groves* while the
+//! kernel prunes each tree's dead padded *levels* — both byte-identical
+//! to full evaluation, both pure comparator-op savings (paper §4,
+//! Table 1).
 
 use super::confidence::max_diff;
 use super::split::FieldOfGroves;

@@ -12,7 +12,11 @@
 //! traversal, the coordinator's grove workers and the batch kernel all
 //! walk the same level-major arrays. Op counts and storage accounting are
 //! derived from the arena layout and are numerically identical to the
-//! per-`FlatTree` accounting they replaced.
+//! per-`FlatTree` accounting they replaced. Every grove walk inherits the
+//! arena's live-depth early exit (dead padded levels of mixed-depth trees
+//! are never touched, results byte-identical); the `ops_per_eval` charge
+//! stays depth-bound like the hardware PE, with the saving surfaced via
+//! [`Grove::skipped_ops_per_eval`].
 
 use crate::dt::FlatTree;
 use crate::exec::ForestArena;
@@ -129,11 +133,26 @@ impl Grove {
         acc
     }
 
-    /// Comparator ops per evaluation: each packed tree walks exactly
-    /// `depth` levels (complete-tree layout), matching the hardware PE
-    /// whose latency is depth-bound (paper §3.2.2 "Processing Element").
+    /// Comparator ops per evaluation: each packed tree is *charged*
+    /// exactly `depth` levels (complete-tree layout), matching the
+    /// hardware PE whose latency is depth-bound (paper §3.2.2
+    /// "Processing Element"). This accounting number is independent of
+    /// the software kernel's live-depth early exit — see
+    /// [`Grove::skipped_ops_per_eval`] for what the exit saves.
     pub fn ops_per_eval(&self) -> usize {
         self.arena.ops_per_eval_range(self.lo, self.hi)
+    }
+
+    /// Comparator ops the ragged software kernel actually executes per
+    /// evaluation: Σ live_depth over this grove's trees.
+    pub fn live_ops_per_eval(&self) -> usize {
+        self.arena.live_ops_per_eval_range(self.lo, self.hi)
+    }
+
+    /// Dead padded levels the live-depth early exit skips per evaluation
+    /// of this grove (`ops_per_eval − live_ops_per_eval`).
+    pub fn skipped_ops_per_eval(&self) -> usize {
+        self.arena.skipped_ops_per_eval_range(self.lo, self.hi)
     }
 
     /// Total VMEM bytes for the grove's node tables (perf estimates).
@@ -203,6 +222,46 @@ mod tests {
         let (g, _) = grove();
         assert_eq!(g.ops_per_eval(), g.n_trees() * g.depth());
         assert!(g.vmem_bytes() > 0);
+        // Live + skipped partition the padded charge exactly.
+        assert_eq!(g.live_ops_per_eval() + g.skipped_ops_per_eval(), g.ops_per_eval());
+        assert!(g.live_ops_per_eval() > 0);
+    }
+
+    #[test]
+    fn ragged_grove_tile_matches_per_sample_bitwise() {
+        // A grove mixing a depth-capped tree with deep ones: the tiled
+        // hop kernel (early exit) still equals per-sample accumulation,
+        // and the skip accounting is nonzero.
+        let ds = generate(&DatasetProfile::demo(), 83);
+        let rf = RandomForest::fit(&ds.train, &ForestParams::small(), 7);
+        let mut flats = rf.flatten(rf.max_depth());
+        let deep_ref = flats[0].clone();
+        let capped = RandomForest::fit(
+            &ds.train,
+            &ForestParams {
+                n_trees: 1,
+                tree: crate::dt::builder::TreeParams {
+                    max_depth: 2,
+                    ..crate::dt::builder::TreeParams::default()
+                },
+                bootstrap: true,
+            },
+            8,
+        );
+        flats.push(capped.flatten(capped.max_depth()).remove(0));
+        assert!(flats.last().unwrap().depth < deep_ref.depth);
+        let g = Grove::new(flats);
+        assert!(g.skipped_ops_per_eval() > 0, "fixture must be ragged");
+        let n = 11;
+        let f = g.n_features;
+        let c = g.n_classes;
+        let mut tile_acc = vec![0.0f32; n * c];
+        g.accumulate_proba_tile(&ds.test.x[..n * f], n, &mut tile_acc);
+        for i in 0..n {
+            let mut acc = vec![0.0f32; c];
+            g.accumulate_proba(ds.test.row(i), &mut acc);
+            assert_eq!(&tile_acc[i * c..(i + 1) * c], &acc[..], "row {i}");
+        }
     }
 
     #[test]

@@ -48,7 +48,9 @@ impl BudgetedForest {
 /// is charged once (sensor/feature acquisition semantics of [11]). Dead
 /// complete-tree padding slots are skipped — only live trained splits
 /// acquire features, so the totals equal the sparse-tree walk this
-/// replaced.
+/// replaced. The arena walk itself now exits at each tree's live depth
+/// (`ForestArena::walk_tree`), so on depth-heterogeneous budget sweeps
+/// the measurement pass is cheaper while charging identical costs.
 pub fn avg_acquisition_cost(arena: &ForestArena, split: &Split, feature_cost: &[f32]) -> f64 {
     if split.is_empty() {
         return 0.0;

@@ -466,7 +466,8 @@ fn cmd_serve_sharded(args: &Args, model_name: &str, seed: u64) {
          \"rounds\":{rounds},\"requests\":{},\"throughput_per_s\":{:.1},\
          \"cache_hit_rate\":{:.4},\"cache_quant\":{:.6},\"accuracy\":{:.4},\
          \"energy_per_class_nj\":{:.6},\"energy_per_response_nj\":{:.6},\
-         \"cycles_per_class\":{:.2},\"comparator_ops_per_class\":{:.2}}}",
+         \"cycles_per_class\":{:.2},\"comparator_ops_per_class\":{:.2},\
+         \"levels_skipped_per_class\":{:.2}}}",
         profile.name,
         server.n_replicas(),
         cfg.router.label(),
@@ -479,7 +480,8 @@ fn cmd_serve_sharded(args: &Args, model_name: &str, seed: u64) {
         snap.energy_per_class_nj(),
         snap.energy_per_response_nj(),
         snap.cycles_per_class(),
-        snap.comparator_ops_per_class()
+        snap.comparator_ops_per_class(),
+        snap.levels_skipped_per_class()
     );
     for r in 0..server.n_replicas() {
         let rs = server.replica_metrics(r).snapshot();

@@ -9,6 +9,13 @@
 //! slice since the `exec` refactor, so comparator-op counts
 //! (`Grove::ops_per_eval` = trees × padded depth) derive from the arena
 //! layout and are numerically identical to the per-tree accounting.
+//!
+//! Note on the software kernel's live-depth early exit: the PE stays
+//! **depth-bound** — a hardware tree engine clocks through every padded
+//! level, so `latency` and `ops_per_eval` deliberately do *not* shrink
+//! for ragged forests (keeping Table 1 / Fig 4–5 stable). The exit's
+//! saving is a software-kernel observable, reported separately as
+//! `ExecReport::levels_skipped`.
 
 use crate::fog::confidence::max_diff;
 use crate::fog::Grove;

@@ -111,6 +111,47 @@ fn uarch_comparator_ops_equal_arena_accounting() {
     }
 }
 
+/// (b') Ragged forests through both backends: a mixed-depth arena keeps
+/// software and μarch answers byte-identical and the comparator-op
+/// charge at the pre-exit padded number, while the software report now
+/// carries the levels the live-depth early exit skipped (the μarch PE is
+/// depth-bound, so it reports zero skipped levels).
+#[test]
+fn ragged_arena_backends_agree_and_account_skips() {
+    use fog::dt::{FlatTree, TreeParams};
+    use fog::exec::ForestArena;
+    let ds = data();
+    let deep = RandomForest::fit(&ds.train, &ForestParams::small(), 27);
+    let shallow_params = fog::forest::ForestParams {
+        n_trees: 4,
+        tree: TreeParams { max_depth: 2, ..TreeParams::default() },
+        bootstrap: true,
+    };
+    let shallow = RandomForest::fit(&ds.train, &shallow_params, 28);
+    let mut trees: Vec<FlatTree> = deep.flatten(deep.max_depth());
+    trees.extend(shallow.flatten(shallow.max_depth()));
+    let arena = ForestArena::from_flat_trees(&trees);
+    let skipped_per_eval = arena.skipped_ops_per_eval_range(0, arena.n_trees());
+    assert!(skipped_per_eval > 0, "fixture must actually be ragged");
+
+    let n = ds.test.len();
+    use fog::exec::{Backend, Reduce, SoftwareBackend, UarchBackend};
+    let arena = Arc::new(arena);
+    let sw = SoftwareBackend::forest(Arc::clone(&arena), Reduce::ProbAverage);
+    let ua = UarchBackend::forest(Arc::clone(&arena), Reduce::ProbAverage);
+    let (p_sw, r_sw) = sw.evaluate_tile(&ds.test.x, n);
+    let (p_ua, r_ua) = ua.evaluate_tile(&ds.test.x, n);
+    assert_eq!(p_sw, p_ua, "ragged arena: uarch backend changed an answer");
+    // Charge stays the padded pre-exit number on both backends.
+    let expected_ops = (n * arena.ops_per_eval_range(0, arena.n_trees())) as u64;
+    assert_eq!(r_sw.comparator_ops, expected_ops);
+    assert_eq!(r_ua.comparator_ops, expected_ops);
+    // The software kernel reports its skip; depth-bound hardware doesn't.
+    assert_eq!(r_sw.levels_skipped, (n * skipped_per_eval) as u64);
+    assert_eq!(r_ua.levels_skipped, 0);
+    assert!(r_sw.levels_skipped_per_class() > 0.0);
+}
+
 /// (c) Only the uarch backend reports cycles and energy; the software
 /// backend reports the same op counts with zero hardware accounting.
 #[test]

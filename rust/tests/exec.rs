@@ -145,6 +145,114 @@ fn fog_models_match_per_tree_flat_traversal() {
     check_fog_model("fog_max", &max, &ds);
 }
 
+/// A deliberately ragged forest: deep trees, depth-capped trees and a
+/// hand-built depth-0 (leaf-only) tree packed into one arena.
+fn ragged_flats(ds: &Dataset, seed: u64) -> Vec<FlatTree> {
+    let (f, c) = (ds.n_features(), ds.n_classes());
+    let deep = RandomForest::fit(&ds.train, &forest_params_for(f, c), seed);
+    let shallow_params = fog::forest::ForestParams {
+        n_trees: 6,
+        tree: fog::dt::TreeParams { max_depth: 2, ..fog::dt::TreeParams::default() },
+        bootstrap: true,
+    };
+    let shallow = RandomForest::fit(&ds.train, &shallow_params, seed ^ 0xA5);
+    let mut trees = deep.flatten(deep.max_depth());
+    trees.extend(shallow.flatten(shallow.max_depth()));
+    // Leaf-only tree: a bare class-0 distribution, no splits at all.
+    let mut dist = vec![0.0f32; c];
+    dist[0] = 1.0;
+    trees.push(FlatTree {
+        depth: 0,
+        n_features: f,
+        n_classes: c,
+        feat: vec![],
+        thr: vec![],
+        leaf: dist,
+    });
+    trees
+}
+
+/// Ragged-forest conformance: on a forest mixing depth-0, depth-capped
+/// and deep trees, the live-depth early-exit kernel is **bitwise** equal
+/// to independent per-tree `FlatTree` traversal and to the forced
+/// padded-depth walk, for both reductions and odd tile sizes.
+#[test]
+fn ragged_forest_kernel_bitwise_matches_per_tree_traversal() {
+    use fog::exec::{BatchPlan, ForestArena, Reduce};
+    let ds = data();
+    let trees = ragged_flats(&ds, 91);
+    let arena = ForestArena::from_flat_trees(&trees);
+    assert!(
+        arena.skipped_ops_per_eval_range(0, arena.n_trees()) > 0,
+        "fixture must actually be ragged"
+    );
+    assert_eq!(arena.live_depth(trees.len() - 1), 0, "leaf-only tree must have live depth 0");
+    // Reference per-tree traversal replays the *padded* trees.
+    let padded: Vec<FlatTree> = trees.iter().map(|t| t.repad(arena.depth())).collect();
+    let n = ds.test.len();
+    let c = ds.n_classes();
+
+    let probs = BatchPlan::new(&arena, Reduce::ProbAverage).execute(&ds.test.x, n);
+    let walk = BatchPlan::new(&arena, Reduce::ProbAverage)
+        .with_padded_walk(true)
+        .execute(&ds.test.x, n);
+    assert_eq!(probs, walk, "early exit changed an answer vs the padded walk");
+    let odd = BatchPlan::new(&arena, Reduce::ProbAverage)
+        .with_tile(5)
+        .execute(&ds.test.x, n);
+    assert_eq!(probs, odd, "tile size changed a ragged answer");
+    for i in 0..n {
+        let x = ds.test.row(i);
+        let want = flat_prob_average(&padded, x, c);
+        assert_eq!(probs.row(i), &want[..], "ragged row {i} != per-tree traversal");
+    }
+
+    let votes = BatchPlan::new(&arena, Reduce::MajorityVote).execute(&ds.test.x, n);
+    let votes_walk = BatchPlan::new(&arena, Reduce::MajorityVote)
+        .with_padded_walk(true)
+        .execute(&ds.test.x, n);
+    assert_eq!(votes, votes_walk);
+    for i in (0..n).step_by(7) {
+        let want = flat_vote_fractions(&padded, ds.test.row(i), c);
+        assert_eq!(votes.row(i), &want[..], "ragged vote row {i}");
+    }
+}
+
+/// Ragged-forest accounting: the early exit must not move a single
+/// pre-exit number — comparator-op charge stays trees × padded depth,
+/// VMEM/sparse-storage bytes stay the per-tree sums — while the new
+/// live/skipped split partitions the charge exactly.
+#[test]
+fn ragged_forest_accounting_equals_pre_exit_numbers() {
+    use fog::exec::ForestArena;
+    let ds = data();
+    let trees = ragged_flats(&ds, 92);
+    let arena = ForestArena::from_flat_trees(&trees);
+    let t_cnt = arena.n_trees();
+    let depth = arena.depth();
+
+    // Pre-exit comparator charge: every tree × padded depth.
+    assert_eq!(arena.ops_per_eval_range(0, t_cnt), t_cnt * depth);
+    // The ragged split partitions it without changing it.
+    assert_eq!(
+        arena.live_ops_per_eval_range(0, t_cnt) + arena.skipped_ops_per_eval_range(0, t_cnt),
+        arena.ops_per_eval_range(0, t_cnt)
+    );
+    // VMEM equals the sum over the homogenized per-tree footprints, and
+    // sparse storage equals the live-node bytes of the original trees
+    // (padding provisions nothing).
+    let per_tree_vmem: usize = trees.iter().map(|t| t.repad(depth).vmem_bytes()).sum();
+    assert_eq!(arena.vmem_bytes(), per_tree_vmem);
+    let live_sum: usize = trees
+        .iter()
+        .map(|t| {
+            let live = t.thr.iter().filter(|v| v.is_finite() && **v < 1e37).count();
+            live * 6 + (live + 1) * t.n_classes
+        })
+        .sum();
+    assert_eq!(arena.sparse_storage_bytes_range(0, t_cnt), live_sum);
+}
+
 /// Batched, per-sample and registry-constructed predictions agree for
 /// every tree-based registry entry (the arena path is position- and
 /// tile-independent).

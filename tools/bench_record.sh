@@ -1,0 +1,194 @@
+#!/usr/bin/env bash
+# BENCH_PALLAS.json trajectory tooling: fold the benches' BENCH_JSON
+# lines into the repo-root trajectory file, or gate a smoke run against
+# the recorded baseline.
+#
+#   tools/bench_record.sh record [--runs N] [--fast] [--out FILE]
+#       Run the inference + backend benches N times (default 3), take
+#       the per-metric median for every (bench, model, batch) key, and
+#       append one trajectory point to BENCH_PALLAS.json (or --out).
+#       --fast sets FOG_BENCH_FAST=1 (CI-sized batches; points are
+#       tagged so gate runs only compare like with like).
+#
+#   tools/bench_record.sh gate [--runs N] [--max-regress 0.15] [--out FILE]
+#       Smoke-run (FOG_BENCH_FAST=1) the inference bench N times, fold
+#       medians, and compare the throughput metrics against the most
+#       recent comparable (fast-tagged) point in BENCH_PALLAS.json:
+#       fail on a drop larger than --max-regress (default 15%). The
+#       3-run median keeps the gate green on noisy runners. Also
+#       enforces the ragged early-exit floor: the live median
+#       ragged_speedup_x must stay above the floor recorded in the
+#       trajectory file's "gate" block. Passes with a notice when the
+#       trajectory has no comparable baseline yet.
+#
+# Requires: a Rust toolchain (cargo) and python3.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+REPO_ROOT=$(pwd)
+
+MODE=${1:-}
+shift || true
+case "$MODE" in
+  record|gate) ;;
+  *)
+    echo "usage: tools/bench_record.sh <record|gate> [--runs N] [--fast] [--max-regress F] [--out FILE]" >&2
+    exit 2
+    ;;
+esac
+
+RUNS=3
+FAST=0
+MAX_REGRESS=0.15
+OUT="$REPO_ROOT/BENCH_PALLAS.json"
+while [ $# -gt 0 ]; do
+  case "$1" in
+    --runs) RUNS=$2; shift 2 ;;
+    --fast) FAST=1; shift ;;
+    --max-regress) MAX_REGRESS=$2; shift 2 ;;
+    --out) OUT=$2; shift 2 ;;
+    *) echo "unknown flag: $1" >&2; exit 2 ;;
+  esac
+done
+[ "$MODE" = gate ] && FAST=1
+
+BENCHES="inference"
+[ "$MODE" = record ] && BENCHES="inference backend"
+
+RAW=$(mktemp)
+LINES=$(mktemp)
+trap 'rm -f "$RAW" "$LINES"' EXIT
+# Each cargo bench run must succeed — `set -e` aborts on the first
+# failure, so the fold below never sees partial data from a crashed run.
+for run in $(seq 1 "$RUNS"); do
+  for bench in $BENCHES; do
+    echo "[bench_record] run $run/$RUNS: cargo bench --bench $bench (fast=$FAST)" >&2
+    if [ "$FAST" = 1 ]; then
+      (cd rust && FOG_BENCH_FAST=1 cargo bench --bench "$bench") | tee -a "$RAW"
+    else
+      (cd rust && cargo bench --bench "$bench") | tee -a "$RAW"
+    fi
+  done
+done
+grep '^BENCH_JSON ' "$RAW" | sed 's/^BENCH_JSON //' > "$LINES" || true
+
+if ! [ -s "$LINES" ]; then
+  echo "[bench_record] benches ran but emitted no BENCH_JSON lines — output format drifted?" >&2
+  exit 1
+fi
+
+GIT_REV=$(git rev-parse --short HEAD 2>/dev/null || echo unknown)
+DATE_UTC=$(date -u +%Y-%m-%dT%H:%M:%SZ)
+
+MODE="$MODE" LINES="$LINES" OUT="$OUT" FAST="$FAST" RUNS="$RUNS" \
+MAX_REGRESS="$MAX_REGRESS" GIT_REV="$GIT_REV" DATE_UTC="$DATE_UTC" \
+python3 - <<'PY'
+import json, os, statistics, sys
+
+mode = os.environ["MODE"]
+out_path = os.environ["OUT"]
+fast = os.environ["FAST"] == "1"
+max_regress = float(os.environ["MAX_REGRESS"])
+
+# Fold: (bench, model, batch) -> metric -> median over runs.
+samples = {}
+with open(os.environ["LINES"]) as fh:
+    for line in fh:
+        line = line.strip()
+        if not line:
+            continue
+        rec = json.loads(line)
+        key = f'{rec.get("bench","?")}/{rec.get("model","?")}/n{rec.get("batch","?")}'
+        bucket = samples.setdefault(key, {})
+        for metric, value in rec.items():
+            if isinstance(value, (int, float)) and metric not in ("batch",):
+                bucket.setdefault(metric, []).append(float(value))
+folded = {
+    key: {metric: statistics.median(vals) for metric, vals in metrics.items()}
+    for key, metrics in sorted(samples.items())
+}
+
+try:
+    with open(out_path) as fh:
+        trajectory = json.load(fh)
+except FileNotFoundError:
+    trajectory = {"schema": 1, "points": []}
+
+gate_cfg = trajectory.get("gate", {})
+gate_metrics = gate_cfg.get("metrics", ["batch_tiled_per_s", "software_per_s"])
+# Fast (CI smoke) runs time microsecond-scale tiles where fixed thread
+# dispatch overhead compresses the measurable speedup, so they enforce
+# only a lenient "not a pessimization" floor; the full-run floor guards
+# the real acceptance target at record time.
+if fast:
+    speedup_floor = float(gate_cfg.get("ragged_speedup_floor_fast", 0.95))
+else:
+    speedup_floor = float(gate_cfg.get("ragged_speedup_floor", 1.1))
+
+if mode == "record":
+    trajectory.setdefault("points", []).append(
+        {
+            "id": f"{os.environ['DATE_UTC']}-{os.environ['GIT_REV']}",
+            "date": os.environ["DATE_UTC"],
+            "git_rev": os.environ["GIT_REV"],
+            "fast": fast,
+            "runs": int(os.environ["RUNS"]),
+            "entries": folded,
+        }
+    )
+    with open(out_path, "w") as fh:
+        json.dump(trajectory, fh, indent=2, sort_keys=False)
+        fh.write("\n")
+    print(f"[bench_record] appended point {trajectory['points'][-1]['id']} "
+          f"({len(folded)} bench keys) to {out_path}")
+    sys.exit(0)
+
+# --- gate ---
+baseline = None
+for point in reversed(trajectory.get("points", [])):
+    if bool(point.get("fast")) == fast:
+        baseline = point
+        break
+
+failures = []
+
+# Absolute floor: the ragged early-exit win must be present in the live
+# run regardless of any baseline.
+for key, metrics in folded.items():
+    if "ragged_speedup_x" in metrics and metrics["ragged_speedup_x"] < speedup_floor:
+        failures.append(
+            f"{key}: ragged_speedup_x {metrics['ragged_speedup_x']:.3f} "
+            f"< floor {speedup_floor:.2f}"
+        )
+
+if baseline is None:
+    print("[bench_record] gate: no comparable baseline point in "
+          f"{out_path} yet — throughput diff skipped (pass).")
+    print("[bench_record] folded medians for this run (commit via "
+          "'tools/bench_record.sh record' where a toolchain exists):")
+    print(json.dumps(folded, indent=2))
+else:
+    for key, metrics in folded.items():
+        base_metrics = baseline.get("entries", {}).get(key, {})
+        for metric in gate_metrics:
+            base = base_metrics.get(metric)
+            live = metrics.get(metric)
+            if not base or live is None:
+                continue
+            drop = 1.0 - live / base
+            status = "FAIL" if drop > max_regress else "ok"
+            print(f"[bench_record] {status} {key} {metric}: "
+                  f"baseline {base:.1f} live {live:.1f} ({-drop:+.1%})")
+            if drop > max_regress:
+                failures.append(
+                    f"{key} {metric}: {live:.1f} vs baseline {base:.1f} "
+                    f"({drop:.1%} drop > {max_regress:.0%})"
+                )
+
+if failures:
+    print("[bench_record] gate FAILED:", file=sys.stderr)
+    for f in failures:
+        print(f"  - {f}", file=sys.stderr)
+    sys.exit(1)
+print("[bench_record] gate passed.")
+PY
