@@ -1,0 +1,128 @@
+//! Fleet serving demo: two FoG operating points (`fog_opt` + `fog_max`)
+//! behind one energy-aware admission front end, driven by the seeded
+//! open-loop load generator while the energy budget sweeps from loose to
+//! tight — the paper's Fig 5 trade-off happening live. Early points
+//! serve everything; as the budget drops below `fog_max`'s measured
+//! nJ/class its traffic downgrades onto `fog_opt` (or sheds under
+//! `--policy strict`), and below `fog_opt`'s cost the fleet sheds
+//! outright.
+//!
+//! Run: `cargo run --release --example serve_fleet -- \
+//!        [--dataset demo] [--qps 800] [--secs 1.0] [--points 5] \
+//!        [--policy downgrade] [--replicas 4] [--seed 42] [--pace]`
+
+use fog::api::{BackendKind, Classifier, Estimator, FleetPolicyKind, ModelSpec};
+use fog::coordinator::{
+    loadgen, EnergyBudget, Fleet, FleetConfig, LoadgenConfig, ModelServerConfig,
+};
+use fog::data::synthetic::{generate, DatasetProfile};
+use fog::data::Dataset;
+use fog::exec::Backend;
+use fog::util::cli::Args;
+use std::sync::Arc;
+
+/// Standalone uarch energy per classification over the test split — the
+/// calibration the budget sweep is anchored to.
+fn tile_energy_nj(model: &Arc<dyn Classifier>, ds: &Dataset) -> f64 {
+    let backend = model.exec_backend(BackendKind::Uarch).expect("uarch backend");
+    let (_, report) = backend.evaluate_tile(&ds.test.x, ds.test.len());
+    report.energy_per_class_nj()
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let profile = DatasetProfile::by_name(args.get_or("dataset", "demo")).expect("dataset");
+    let policy = FleetPolicyKind::parse(args.get_or("policy", "downgrade"))
+        .unwrap_or_else(|| {
+            panic!("unknown policy; valid: {}", FleetPolicyKind::NAMES.join(", "))
+        });
+    let seed = args.get_u64("seed", 42);
+    let qps = args.get_f64("qps", 800.0);
+    let secs = args.get_f64("secs", 1.0);
+    let points = args.get_usize("points", 5).max(2);
+
+    eprintln!("training fog_opt + fog_max on {} ...", profile.name);
+    let ds = generate(&profile, seed);
+    let names = ["fog_opt", "fog_max"];
+    let models: Vec<Arc<dyn Classifier>> = names
+        .iter()
+        .map(|name| {
+            let spec = ModelSpec::for_shape(name, ds.n_features(), ds.n_classes())
+                .expect("registry model");
+            let model: Arc<dyn Classifier> = Arc::from(spec.fit(&ds.train, seed));
+            model
+        })
+        .collect();
+    let e_opt = tile_energy_nj(&models[0], &ds);
+    let e_max = tile_energy_nj(&models[1], &ds);
+    println!(
+        "operating points : fog_opt {e_opt:.2} nJ/class, fog_max {e_max:.2} nJ/class \
+         ({:.1}x)",
+        e_max / e_opt.max(1e-12)
+    );
+
+    let lg = LoadgenConfig {
+        qps_start: qps / 5.0,
+        qps_end: qps,
+        duration_s: secs,
+        seed,
+        pace: args.get_bool("pace"),
+        ..LoadgenConfig::default()
+    };
+    println!(
+        "open-loop load   : ramp {:.0} -> {:.0} qps over {secs:.2}s (seed {seed}, \
+         policy {})",
+        lg.qps_start,
+        lg.qps_end,
+        policy.label()
+    );
+    println!(
+        "{:>16} | {:>6} {:>6} {:>6} {:>6} | {:>18} | {:>18}",
+        "budget nJ/class", "served", "downgr", "shed", "shed%", "fog_opt p99/nJ", "fog_max p99/nJ"
+    );
+
+    // Sweep the budget from comfortably above fog_max (nothing trips)
+    // down past fog_opt (everything trips) — the Fig 5 x-axis, walked
+    // live. Each point gets a fresh fleet so gauges never carry over,
+    // and the identical seed replays the identical arrival schedule.
+    for p in 0..points {
+        let frac = p as f64 / (points - 1) as f64;
+        let budget_nj = (1.25 * e_max) * (1.0 - frac) + (0.75 * e_opt) * frac;
+        let cfg = FleetConfig {
+            total_replicas: args.get_usize("replicas", 4),
+            worker: ModelServerConfig { backend: BackendKind::Uarch, ..Default::default() },
+            router_seed: seed,
+            budget: EnergyBudget {
+                energy_per_class_nj: Some(budget_nj),
+                ..EnergyBudget::default()
+            },
+            policy,
+            ..FleetConfig::default()
+        };
+        let registered = names
+            .iter()
+            .zip(&models)
+            .map(|(n, m)| (n.to_string(), Arc::clone(m)))
+            .collect();
+        let mut fleet = Fleet::start(registered, &cfg).expect("fleet start");
+        let report = loadgen::run(&mut fleet, &ds.test.x, &lg).expect("loadgen run");
+        let (opt_m, max_m) = (&report.per_model[0], &report.per_model[1]);
+        println!(
+            "{budget_nj:>16.2} | {:>6} {:>6} {:>6} {:>5.1}% | {:>10.0}us {:>5.2} | \
+             {:>10.0}us {:>5.2}",
+            report.served,
+            report.downgraded,
+            report.shed,
+            report.shed_rate * 100.0,
+            opt_m.latency.p99_us,
+            opt_m.energy_per_class_nj,
+            max_m.latency.p99_us,
+            max_m.energy_per_class_nj,
+        );
+        fleet.shutdown();
+    }
+    println!(
+        "reading          : downgr > 0 is fog_max traffic living on fog_opt's budget; \
+         shed rises once no operating point is affordable"
+    );
+}

@@ -30,7 +30,8 @@ pub mod spec;
 
 pub use models::{measured_fog_stats, measured_rf_stats, FogModel, RfModel};
 pub use spec::{
-    BackendKind, FogSpec, ModelConfig, ModelSpec, RouterPolicy, ServingSpec, REGISTRY,
+    BackendKind, FleetPolicyKind, FogSpec, ModelConfig, ModelSpec, RouterPolicy, ServingSpec,
+    REGISTRY,
 };
 
 use crate::data::Split;

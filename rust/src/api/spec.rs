@@ -70,6 +70,9 @@ pub enum RouterPolicy {
 }
 
 impl RouterPolicy {
+    /// Canonical CLI spellings, for friendly unknown-value errors.
+    pub const NAMES: &'static [&'static str] = &["random", "round_robin", "least_loaded"];
+
     /// CLI / BENCH_JSON label.
     pub fn label(&self) -> &'static str {
         match self {
@@ -109,6 +112,9 @@ pub enum BackendKind {
 }
 
 impl BackendKind {
+    /// Canonical CLI spellings, for friendly unknown-value errors.
+    pub const NAMES: &'static [&'static str] = &["software", "uarch"];
+
     /// CLI / BENCH_JSON label.
     pub fn label(&self) -> &'static str {
         match self {
@@ -123,6 +129,51 @@ impl BackendKind {
         match s {
             "software" | "sw" => Some(BackendKind::Software),
             "uarch" | "sim" => Some(BackendKind::Uarch),
+            _ => None,
+        }
+    }
+}
+
+/// Admission policy of the multi-model fleet tier
+/// ([`Fleet`](crate::coordinator::Fleet)): what happens to a request
+/// whose model has exhausted its energy/latency budget. Defined here next
+/// to [`RouterPolicy`] / [`BackendKind`] (registry layer below serving);
+/// `coordinator::fleet` interprets it by building the matching
+/// [`FleetPolicy`](crate::coordinator::FleetPolicy) object.
+///
+/// Paper anchor: Fig 5 frames FoG as the best classifier *under a tight
+/// energy budget*; the fleet tier promotes that budget from an offline
+/// axis to a live admission signal, and this enum picks what "over
+/// budget" means for traffic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FleetPolicyKind {
+    /// Shed (reject) requests for an over-budget model outright.
+    Strict,
+    /// Fall back to another registered model in fleet registration order
+    /// (e.g. `fog_max` → `fog_opt`); shed only when every model is over
+    /// budget.
+    #[default]
+    Downgrade,
+}
+
+impl FleetPolicyKind {
+    /// Canonical CLI spellings, for friendly unknown-value errors.
+    pub const NAMES: &'static [&'static str] = &["strict", "downgrade"];
+
+    /// CLI / BENCH_JSON label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FleetPolicyKind::Strict => "strict",
+            FleetPolicyKind::Downgrade => "downgrade",
+        }
+    }
+
+    /// Parse a CLI spelling (`strict | downgrade`, with `shed`/`fallback`
+    /// shorthands).
+    pub fn parse(s: &str) -> Option<FleetPolicyKind> {
+        match s {
+            "strict" | "shed" => Some(FleetPolicyKind::Strict),
+            "downgrade" | "fallback" => Some(FleetPolicyKind::Downgrade),
             _ => None,
         }
     }
@@ -149,6 +200,13 @@ pub struct ServingSpec {
     pub cache_quant: Option<f32>,
     /// Total result-cache entry budget.
     pub cache_capacity: usize,
+    /// Fleet-tier admission policy when this model is registered in a
+    /// [`Fleet`](crate::coordinator::Fleet) (ignored by the single-model
+    /// tiers).
+    pub fleet_policy: FleetPolicyKind,
+    /// Fleet-tier rolling energy budget per classification, nanojoules;
+    /// `None` = unlimited (every request admitted).
+    pub energy_budget_nj: Option<f64>,
 }
 
 impl Default for ServingSpec {
@@ -159,6 +217,8 @@ impl Default for ServingSpec {
             backend: BackendKind::Software,
             cache_quant: None,
             cache_capacity: 4096,
+            fleet_policy: FleetPolicyKind::default(),
+            energy_budget_nj: None,
         }
     }
 }
@@ -335,6 +395,21 @@ impl ModelSpec {
         self
     }
 
+    /// Fleet-tier admission policy (what happens to requests for an
+    /// over-budget model: `Strict` sheds, `Downgrade` falls back in
+    /// fleet registration order).
+    pub fn with_fleet_policy(mut self, policy: FleetPolicyKind) -> Self {
+        self.serving.fleet_policy = policy;
+        self
+    }
+
+    /// Fleet-tier rolling energy budget per classification (nJ); pass
+    /// `f64::INFINITY` or skip the call for an unlimited budget.
+    pub fn with_energy_budget_nj(mut self, budget_nj: f64) -> Self {
+        self.serving.energy_budget_nj = Some(budget_nj.max(0.0));
+        self
+    }
+
     /// Shrink training budgets for fast tests and doc examples (smaller
     /// ensembles, fewer epochs, fewer support vectors). Accuracy drops a
     /// little; determinism and interfaces are unchanged.
@@ -468,19 +543,47 @@ mod tests {
             .with_router(RouterPolicy::RoundRobin)
             .with_backend(BackendKind::Uarch)
             .with_cache_quant(0.25)
-            .with_cache_capacity(128);
+            .with_cache_capacity(128)
+            .with_fleet_policy(FleetPolicyKind::Strict)
+            .with_energy_budget_nj(1.5);
         assert_eq!(spec.serving.replicas, 4);
         assert_eq!(spec.serving.router, RouterPolicy::RoundRobin);
         assert_eq!(spec.serving.backend, BackendKind::Uarch);
         assert_eq!(spec.serving.cache_quant, Some(0.25));
         assert_eq!(spec.serving.cache_capacity, 128);
-        // Defaults: unsharded, software backend, no cache — training is
-        // never affected.
+        assert_eq!(spec.serving.fleet_policy, FleetPolicyKind::Strict);
+        assert_eq!(spec.serving.energy_budget_nj, Some(1.5));
+        // Defaults: unsharded, software backend, no cache, unlimited
+        // fleet budget — training is never affected.
         let plain = ModelSpec::by_name("rf").unwrap();
         assert_eq!(plain.serving.replicas, 1);
         assert_eq!(plain.serving.backend, BackendKind::Software);
         assert!(plain.serving.cache_quant.is_none());
+        assert_eq!(plain.serving.fleet_policy, FleetPolicyKind::Downgrade);
+        assert!(plain.serving.energy_budget_nj.is_none());
         assert_eq!(ModelSpec::by_name("rf").unwrap().with_replicas(0).serving.replicas, 1);
+        // A negative budget is clamped to the shed-everything floor of 0.
+        let zero = ModelSpec::by_name("rf").unwrap().with_energy_budget_nj(-2.0);
+        assert_eq!(zero.serving.energy_budget_nj, Some(0.0));
+    }
+
+    #[test]
+    fn fleet_policy_labels_roundtrip() {
+        for kind in [FleetPolicyKind::Strict, FleetPolicyKind::Downgrade] {
+            assert_eq!(FleetPolicyKind::parse(kind.label()), Some(kind));
+            assert!(FleetPolicyKind::NAMES.contains(&kind.label()));
+        }
+        assert_eq!(FleetPolicyKind::parse("shed"), Some(FleetPolicyKind::Strict));
+        assert_eq!(FleetPolicyKind::parse("fallback"), Some(FleetPolicyKind::Downgrade));
+        assert_eq!(FleetPolicyKind::parse("nope"), None);
+        // The NAMES consts exist so CLI errors can list every valid
+        // spelling without hand-maintained strings.
+        for name in RouterPolicy::NAMES {
+            assert!(RouterPolicy::parse(name).is_some());
+        }
+        for name in BackendKind::NAMES {
+            assert!(BackendKind::parse(name).is_some());
+        }
     }
 
     #[test]

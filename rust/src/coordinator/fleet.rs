@@ -1,0 +1,783 @@
+//! [`Fleet`] — the multi-model serving tier: several registry models
+//! behind one request path, with the paper's energy budget promoted to a
+//! **live admission signal**.
+//!
+//! Paper anchor: Fig 5 plots accuracy against energy per classification
+//! and frames FoG as the winning classifier *under a tight energy
+//! budget*. The offline suite sweeps that budget as a plot axis; this
+//! tier enforces it at serving time. A `Fleet` registers N models (e.g.
+//! `fog_opt`, `fog_max`, `rf`) — each an independent
+//! [`ShardedServer`](super::ShardedServer) slice of a shared replica
+//! pool — and consults the **rolling** per-model
+//! [`ExecReport`](crate::exec::ExecReport) aggregates (nanojoules per
+//! classification from the `uarch` backend, per-batch p99) before every
+//! batch: a model whose gauge exceeds its [`EnergyBudget`] is *over
+//! budget*, and the [`FleetPolicy`] decides what happens to its traffic
+//! — [`StrictShed`] rejects it, [`DowngradeFallback`] re-routes it to
+//! the cheapest still-admissible model in registration order (the Fig 5
+//! move: trade accuracy for energy, live). Every request resolves to an
+//! explicit [`FleetOutcome`]:
+//!
+//! ```text
+//! FleetRequest { model, features }
+//!        │ admission: FleetPolicy × EnergyBudget
+//!        │            (rolling energy/p99 gauges, updated per classify tick)
+//!        ▼
+//!     Fleet ──► entry m: ShardedServer ──► ShardRouter ──► Replica ──► Backend ──► Arena
+//!        │
+//!        └──► FleetOutcome::{ Served{model} | Downgraded{from,to} | Shed{requested} }
+//! ```
+//!
+//! Determinism: gauges advance only inside [`Fleet::classify`] (one
+//! *tick* per call), and the sharded tier is closed-loop — workers fold
+//! their `ExecReport`s into replica metrics *before* responding, and
+//! `classify` returns only after every response — so the gauge values a
+//! tick observes are a pure function of the traffic served so far.
+//! Replaying the same request sequence (e.g. from a seeded
+//! [`loadgen`](super::loadgen) schedule) reproduces the same
+//! `Served`/`Downgraded`/`Shed` counts.
+//!
+//! Conformance: a fleet with one model and an unlimited budget routes
+//! every request straight through its single `ShardedServer`, so
+//! probability rows and the deterministic metric totals are
+//! byte-identical to serving that `ShardedServer` directly (pinned by
+//! `rust/tests/fleet.rs`).
+
+use super::cache::CacheConfig;
+use super::messages::Response;
+use super::metrics::{LatencySummary, Metrics, MetricsSnapshot};
+use super::model_server::ModelServerConfig;
+use super::router::RouterPolicy;
+use super::shard::{ShardedServer, ShardedServerConfig};
+use crate::api::spec::{FleetPolicyKind, ServingSpec};
+use crate::api::Classifier;
+use crate::util::error::Result;
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+/// Live admission budget per registered model. `None` axes are
+/// unlimited; a model is **over budget** as soon as any configured axis
+/// is exhausted.
+///
+/// The energy axis compares against a *rolling* gauge (nJ per evaluated
+/// classification over the last [`EnergyBudget::window_ticks`] classify
+/// ticks) with `>=`, so a budget of `0.0` sheds every request even
+/// before any energy is measured — the Fig-5 degenerate point where no
+/// classification is affordable — while `f64::INFINITY` (or `None`)
+/// never sheds. Window eviction lets a model recover once its expensive
+/// traffic ages out, so budgets gate sustained cost, not one hot batch.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyBudget {
+    /// Rolling energy per evaluated classification, nanojoules
+    /// (`uarch`-backend fleets; the software backend reports no energy,
+    /// so its gauge stays 0 and only a `0.0` budget ever trips).
+    pub energy_per_class_nj: Option<f64>,
+    /// Per-batch p99 latency bound, µs, over each entry's pooled replica
+    /// reservoirs. Wall-clock — useful live, but not deterministic in
+    /// tests the way the energy axis is.
+    pub p99_us: Option<f64>,
+    /// Classify ticks the rolling energy gauge averages over.
+    pub window_ticks: usize,
+}
+
+impl Default for EnergyBudget {
+    fn default() -> Self {
+        EnergyBudget { energy_per_class_nj: None, p99_us: None, window_ticks: 32 }
+    }
+}
+
+impl EnergyBudget {
+    /// No limits on any axis: every request is admissible.
+    pub fn unlimited() -> EnergyBudget {
+        EnergyBudget::default()
+    }
+
+    /// Is a rolling energy gauge of `rolling_nj` over this budget?
+    /// (`>=`, so a zero budget trips on the zero gauge.)
+    pub fn energy_exhausted(&self, rolling_nj: f64) -> bool {
+        matches!(self.energy_per_class_nj, Some(b) if rolling_nj >= b)
+    }
+
+    /// Is a live batch p99 of `p99_us` over this budget?
+    pub fn latency_exhausted(&self, p99_us: f64) -> bool {
+        matches!(self.p99_us, Some(b) if p99_us > b)
+    }
+}
+
+/// What the fleet does with a request whose model is over budget.
+/// Implementations are consulted once per request with the live
+/// admissibility of every registered model.
+pub trait FleetPolicy: Send + Sync {
+    /// CLI / BENCH_JSON label.
+    fn label(&self) -> &'static str;
+
+    /// Pick the model that evaluates a request for `requested`, given
+    /// `within_budget[m]` for every registered model, or `None` to shed.
+    fn decide(&self, requested: usize, within_budget: &[bool]) -> Option<usize>;
+}
+
+/// Shed (reject) every request whose model is over budget; never
+/// re-routes. The hard-realtime reading of the Fig 5 budget: an answer
+/// from the wrong operating point is worse than no answer.
+pub struct StrictShed;
+
+impl FleetPolicy for StrictShed {
+    fn label(&self) -> &'static str {
+        "strict"
+    }
+
+    fn decide(&self, requested: usize, within_budget: &[bool]) -> Option<usize> {
+        within_budget.get(requested).copied().unwrap_or(false).then_some(requested)
+    }
+}
+
+/// Fall back in fleet registration order: an over-budget model's
+/// traffic goes to the first *other* registered model still within
+/// budget (register `fog_opt` before `fog_max` and exhausted `fog_max`
+/// traffic downgrades onto the cheaper operating point — the live Fig 5
+/// trade). Sheds only when every model is over budget.
+pub struct DowngradeFallback;
+
+impl FleetPolicy for DowngradeFallback {
+    fn label(&self) -> &'static str {
+        "downgrade"
+    }
+
+    fn decide(&self, requested: usize, within_budget: &[bool]) -> Option<usize> {
+        if within_budget.get(requested).copied().unwrap_or(false) {
+            return Some(requested);
+        }
+        (0..within_budget.len()).find(|&m| m != requested && within_budget[m])
+    }
+}
+
+impl FleetPolicyKind {
+    /// Materialize the policy object the fleet consults per request.
+    pub fn build(self) -> Box<dyn FleetPolicy> {
+        match self {
+            FleetPolicyKind::Strict => Box::new(StrictShed),
+            FleetPolicyKind::Downgrade => Box::new(DowngradeFallback),
+        }
+    }
+}
+
+/// One classification request addressed to a registered model (index in
+/// fleet registration order).
+#[derive(Clone, Debug)]
+pub struct FleetRequest {
+    pub model: usize,
+    pub features: Vec<f32>,
+}
+
+impl FleetRequest {
+    /// Expand a row-major `[n, n_features]` batch into per-row requests
+    /// for one model; friendly error on a ragged buffer.
+    pub fn batch(model: usize, x: &[f32], n_features: usize) -> Result<Vec<FleetRequest>> {
+        let n = super::model_server::check_aligned(x.len(), n_features)?;
+        Ok((0..n)
+            .map(|i| FleetRequest {
+                model,
+                features: x[i * n_features..(i + 1) * n_features].to_vec(),
+            })
+            .collect())
+    }
+}
+
+/// The admission decision a request resolved to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FleetOutcome {
+    /// Evaluated by the model it asked for.
+    Served { model: usize },
+    /// Evaluated by a fallback model after `from` exhausted its budget.
+    Downgraded { from: usize, to: usize },
+    /// Rejected: every admissible model was over budget.
+    Shed { requested: usize },
+}
+
+impl FleetOutcome {
+    /// BENCH_JSON / log label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FleetOutcome::Served { .. } => "served",
+            FleetOutcome::Downgraded { .. } => "downgraded",
+            FleetOutcome::Shed { .. } => "shed",
+        }
+    }
+
+    pub fn is_shed(&self) -> bool {
+        matches!(self, FleetOutcome::Shed { .. })
+    }
+}
+
+/// One request's result: the fleet-level id (input order), the admission
+/// outcome, and the evaluated response (`None` when shed).
+#[derive(Clone, Debug)]
+pub struct FleetResponse {
+    pub id: u64,
+    pub outcome: FleetOutcome,
+    pub response: Option<Response>,
+}
+
+/// Configuration for a multi-model fleet.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Total replica capacity shared across the registered models
+    /// (partitioned evenly, earlier registrations get the remainder,
+    /// every model keeps at least one replica).
+    pub total_replicas: usize,
+    /// Per-replica queue/batch/worker/backend settings (shared by every
+    /// entry; the `uarch` backend is what makes the energy gauges live).
+    pub worker: ModelServerConfig,
+    /// Replica-selection policy inside each entry.
+    pub router: RouterPolicy,
+    /// Seed for entry 0's router stream (entry m uses `seed + m`, so a
+    /// single-model fleet matches a plain `ShardedServer` bit-for-bit).
+    pub router_seed: u64,
+    /// Per-entry result cache; `None` serves every request cold.
+    pub cache: Option<CacheConfig>,
+    /// Admission budget applied to every registered model.
+    pub budget: EnergyBudget,
+    /// What happens to traffic for an over-budget model.
+    pub policy: FleetPolicyKind,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            total_replicas: 2,
+            worker: ModelServerConfig::default(),
+            router: RouterPolicy::LeastLoaded,
+            router_seed: 0,
+            cache: None,
+            budget: EnergyBudget::default(),
+            policy: FleetPolicyKind::default(),
+        }
+    }
+}
+
+impl FleetConfig {
+    /// Build from the serving knobs a [`ServingSpec`] carries
+    /// (`replicas` is read as the fleet-wide total).
+    pub fn for_serving(s: &ServingSpec) -> FleetConfig {
+        let shard = ShardedServerConfig::for_serving(s);
+        FleetConfig {
+            total_replicas: shard.replicas,
+            worker: shard.worker,
+            router: shard.router,
+            router_seed: shard.router_seed,
+            cache: shard.cache,
+            budget: EnergyBudget {
+                energy_per_class_nj: s.energy_budget_nj,
+                ..EnergyBudget::default()
+            },
+            policy: s.fleet_policy,
+        }
+    }
+}
+
+/// Split `total` replicas across `n` models: evenly, remainder to the
+/// earliest registrations, floor of one replica per model (capacity is
+/// shared, but no registered model is ever starved outright).
+pub(crate) fn partition_replicas(total: usize, n: usize) -> Vec<usize> {
+    assert!(n > 0, "partition_replicas over zero models");
+    let base = total / n;
+    let rem = total % n;
+    (0..n).map(|m| (base + usize::from(m < rem)).max(1)).collect()
+}
+
+/// Rolling budget gauges for one fleet entry, advanced once per
+/// [`Fleet::classify`] tick.
+#[derive(Debug, Default)]
+struct ModelGauges {
+    /// Entry snapshot at the last tick (deltas feed the window).
+    last: MetricsSnapshot,
+    /// Per-tick `(evaluated samples, energy fJ)` deltas, newest last.
+    window: VecDeque<(u64, u64)>,
+    /// Pooled-replica batch p99 at the last tick (µs); only refreshed
+    /// when the budget has a latency axis.
+    p99_live: f64,
+}
+
+/// Rolling nJ per evaluated classification over the gauge window (0.0
+/// until the window has seen an evaluated sample).
+fn rolling_energy_per_class_nj(g: &ModelGauges) -> f64 {
+    let (samples, fj) = g
+        .window
+        .iter()
+        .fold((0u64, 0u64), |(s, e), &(ds, de)| (s.saturating_add(ds), e.saturating_add(de)));
+    if samples == 0 {
+        0.0
+    } else {
+        fj as f64 * 1e-6 / samples as f64
+    }
+}
+
+fn over_budget(budget: &EnergyBudget, g: &ModelGauges) -> bool {
+    budget.energy_exhausted(rolling_energy_per_class_nj(g))
+        || budget.latency_exhausted(g.p99_live)
+}
+
+struct FleetEntry {
+    name: String,
+    server: ShardedServer,
+    gauges: ModelGauges,
+}
+
+/// A running multi-model fleet: per-model [`ShardedServer`] entries
+/// behind one admission front end. See the module docs for the request
+/// path and determinism contract.
+pub struct Fleet {
+    entries: Vec<FleetEntry>,
+    policy: Box<dyn FleetPolicy>,
+    budget: EnergyBudget,
+    /// Fleet-front counters: `requests` plus the
+    /// `fleet_served`/`fleet_downgraded`/`fleet_shed` outcomes (entry
+    /// servers keep their own front/replica metrics one tier down).
+    front: Metrics,
+    n_features: usize,
+    next_id: u64,
+    /// Per-model outcome counters (`classify` holds `&mut self`, so
+    /// plain integers suffice): requests addressed to m / served by the
+    /// model they asked for / shed.
+    requested: Vec<u64>,
+    served: Vec<u64>,
+    shed: Vec<u64>,
+    /// Flat `[from * n + to]` downgrade matrix.
+    downgrades: Vec<u64>,
+}
+
+impl Fleet {
+    /// Spin up one `ShardedServer` entry per `(name, model)` over a
+    /// shared replica pool of `cfg.total_replicas`. Friendly errors on
+    /// an empty registration list or models with mismatched feature
+    /// counts (one fleet serves one feature space; requests re-route
+    /// across models under `Downgrade`, so rows must fit every entry).
+    pub fn start(
+        models: Vec<(String, Arc<dyn Classifier>)>,
+        cfg: &FleetConfig,
+    ) -> Result<Fleet> {
+        crate::ensure!(!models.is_empty(), "fleet needs at least one registered model");
+        let n_features = models[0].1.n_features();
+        for (name, model) in &models {
+            crate::ensure!(
+                model.n_features() == n_features,
+                "fleet models disagree on feature count: '{}' expects {} features, \
+                 '{}' expects {}",
+                models[0].0,
+                n_features,
+                name,
+                model.n_features()
+            );
+        }
+        let n = models.len();
+        let replicas = partition_replicas(cfg.total_replicas, n);
+        let entries = models
+            .into_iter()
+            .zip(&replicas)
+            .enumerate()
+            .map(|(m, ((name, model), &r))| {
+                let shard_cfg = ShardedServerConfig {
+                    replicas: r,
+                    worker: cfg.worker.clone(),
+                    router: cfg.router,
+                    router_seed: cfg.router_seed.wrapping_add(m as u64),
+                    cache: cfg.cache.clone(),
+                };
+                FleetEntry {
+                    name,
+                    server: ShardedServer::start(model, &shard_cfg),
+                    gauges: ModelGauges::default(),
+                }
+            })
+            .collect();
+        Ok(Fleet {
+            entries,
+            policy: cfg.policy.build(),
+            budget: cfg.budget,
+            front: Metrics::default(),
+            n_features,
+            next_id: 0,
+            requested: vec![0; n],
+            served: vec![0; n],
+            shed: vec![0; n],
+            downgrades: vec![0; n * n],
+        })
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    /// Registration-order name of model `m`.
+    pub fn model_name(&self, m: usize) -> &str {
+        &self.entries[m].name
+    }
+
+    /// Look a registered model up by name.
+    pub fn resolve(&self, name: &str) -> Option<usize> {
+        self.entries.iter().position(|e| e.name == name)
+    }
+
+    /// The admission budget every model is held to.
+    pub fn budget(&self) -> &EnergyBudget {
+        &self.budget
+    }
+
+    /// The admission policy's CLI label.
+    pub fn policy_label(&self) -> &'static str {
+        self.policy.label()
+    }
+
+    /// Entry `m`'s sharded server (replica counts, router, cache).
+    pub fn server(&self, m: usize) -> &ShardedServer {
+        &self.entries[m].server
+    }
+
+    /// Fleet-front counters (requests + admission outcomes).
+    pub fn metrics(&self) -> &Metrics {
+        &self.front
+    }
+
+    /// Advance the rolling gauges one tick: fold each entry's snapshot
+    /// delta into its window and refresh the latency gauge when the
+    /// budget watches it.
+    fn tick(&mut self) {
+        let window_ticks = self.budget.window_ticks.max(1);
+        let watch_p99 = self.budget.p99_us.is_some();
+        for e in &mut self.entries {
+            let snap = e.server.snapshot();
+            let ds = snap.exec_samples.saturating_sub(e.gauges.last.exec_samples);
+            let de = snap.exec_energy_fj.saturating_sub(e.gauges.last.exec_energy_fj);
+            e.gauges.last = snap;
+            e.gauges.window.push_back((ds, de));
+            while e.gauges.window.len() > window_ticks {
+                e.gauges.window.pop_front();
+            }
+            if watch_p99 {
+                let samples: Vec<f64> = (0..e.server.n_replicas())
+                    .flat_map(|r| e.server.replica_metrics(r).batch_latency_samples_us())
+                    .collect();
+                e.gauges.p99_live = LatencySummary::from_us(samples).p99_us;
+            }
+        }
+    }
+
+    /// Admit, route and evaluate a request batch; returns one
+    /// [`FleetResponse`] per request, in input order. Gauges tick once
+    /// at the start of the call, so every request in the batch sees the
+    /// same admission state (and replays deterministically — see the
+    /// module docs).
+    pub fn classify(&mut self, requests: &[FleetRequest]) -> Result<Vec<FleetResponse>> {
+        let n_models = self.entries.len();
+        for (i, req) in requests.iter().enumerate() {
+            crate::ensure!(
+                req.model < n_models,
+                "request {i}: model index {} out of range (fleet registers {} models)",
+                req.model,
+                n_models
+            );
+            crate::ensure!(
+                req.features.len() == self.n_features,
+                "request {i}: {} features, fleet models expect {}",
+                req.features.len(),
+                self.n_features
+            );
+        }
+        self.tick();
+        let within: Vec<bool> =
+            self.entries.iter().map(|e| !over_budget(&self.budget, &e.gauges)).collect();
+
+        let base_id = self.next_id;
+        self.next_id += requests.len() as u64;
+        // Decide every request against this tick's gauges, grouping the
+        // admitted rows into one batch per target model.
+        let mut decisions: Vec<Option<usize>> = Vec::with_capacity(requests.len());
+        let mut rows: Vec<Vec<f32>> = vec![Vec::new(); n_models];
+        let mut origins: Vec<Vec<usize>> = vec![Vec::new(); n_models];
+        for (i, req) in requests.iter().enumerate() {
+            self.front.requests.fetch_add(1, Ordering::Relaxed);
+            self.requested[req.model] += 1;
+            let target = self.policy.decide(req.model, &within);
+            match target {
+                Some(t) => {
+                    rows[t].extend_from_slice(&req.features);
+                    origins[t].push(i);
+                }
+                None => {
+                    self.front.fleet_shed.fetch_add(1, Ordering::Relaxed);
+                    self.shed[req.model] += 1;
+                }
+            }
+            decisions.push(target);
+        }
+
+        let mut out: Vec<Option<FleetResponse>> = requests.iter().map(|_| None).collect();
+        for m in 0..n_models {
+            if origins[m].is_empty() {
+                continue;
+            }
+            let responses = self.entries[m].server.classify(&rows[m])?;
+            for (mut resp, &i) in responses.into_iter().zip(&origins[m]) {
+                let requested = requests[i].model;
+                let outcome = if requested == m {
+                    self.front.fleet_served.fetch_add(1, Ordering::Relaxed);
+                    self.served[requested] += 1;
+                    FleetOutcome::Served { model: m }
+                } else {
+                    self.front.fleet_downgraded.fetch_add(1, Ordering::Relaxed);
+                    self.downgrades[requested * n_models + m] += 1;
+                    FleetOutcome::Downgraded { from: requested, to: m }
+                };
+                let id = base_id + i as u64;
+                resp.id = id;
+                out[i] = Some(FleetResponse { id, outcome, response: Some(resp) });
+            }
+        }
+        for (i, decision) in decisions.iter().enumerate() {
+            if decision.is_none() {
+                out[i] = Some(FleetResponse {
+                    id: base_id + i as u64,
+                    outcome: FleetOutcome::Shed { requested: requests[i].model },
+                    response: None,
+                });
+            }
+        }
+        Ok(out.into_iter().map(|r| r.expect("every request resolved")).collect())
+    }
+
+    /// One structured snapshot: the merged fleet totals plus per-model
+    /// keyed aggregates, so energy numbers from different arenas never
+    /// blend (a `fog_max` entry's nJ/class stays its own — the satellite
+    /// regression `tests/fleet.rs` pins).
+    pub fn snapshot(&self) -> FleetSnapshot {
+        let n = self.entries.len();
+        let mut total = self.front.snapshot();
+        let mut per_model = Vec::with_capacity(n);
+        for (m, e) in self.entries.iter().enumerate() {
+            let snap = e.server.snapshot();
+            total.merge_worker(&snap);
+            // `merge_worker` deliberately skips front-end-owned
+            // counters; the entry's cache counters are front-end state
+            // one tier down, so fold them into the fleet total here.
+            total.cache_hits = total.cache_hits.saturating_add(snap.cache_hits);
+            total.cache_misses = total.cache_misses.saturating_add(snap.cache_misses);
+            let samples: Vec<f64> = (0..e.server.n_replicas())
+                .flat_map(|r| e.server.replica_metrics(r).batch_latency_samples_us())
+                .collect();
+            per_model.push(FleetModelStats {
+                name: e.name.clone(),
+                requested: self.requested[m],
+                served: self.served[m],
+                shed: self.shed[m],
+                downgraded_away: (0..n).map(|to| self.downgrades[m * n + to]).sum(),
+                downgraded_into: (0..n).map(|from| self.downgrades[from * n + m]).sum(),
+                rolling_energy_per_class_nj: rolling_energy_per_class_nj(&e.gauges),
+                batch_latency: LatencySummary::from_us(samples),
+                snapshot: snap,
+            });
+        }
+        let mut downgrades = Vec::new();
+        for from in 0..n {
+            for to in 0..n {
+                let count = self.downgrades[from * n + to];
+                if count > 0 {
+                    downgrades.push(((from, to), count));
+                }
+            }
+        }
+        FleetSnapshot { total, per_model, downgrades }
+    }
+
+    /// Drop every entry's queues and join their workers.
+    pub fn shutdown(self) {
+        for e in self.entries {
+            e.server.shutdown();
+        }
+    }
+}
+
+/// Per-model aggregates of one fleet snapshot, keyed by registration
+/// order. `requested == served + downgraded_away + shed` for every
+/// model — each addressed request resolves exactly once.
+#[derive(Clone, Debug)]
+pub struct FleetModelStats {
+    pub name: String,
+    /// Requests addressed to this model.
+    pub requested: u64,
+    /// ... evaluated by it (asked and answered).
+    pub served: u64,
+    /// ... rejected outright.
+    pub shed: u64,
+    /// ... re-routed to a fallback model.
+    pub downgraded_away: u64,
+    /// Requests this model absorbed from over-budget peers.
+    pub downgraded_into: u64,
+    /// This entry's own merged counters (per-model energy/cycles stay
+    /// keyed here; use `snapshot.energy_per_class_nj()` etc.).
+    pub snapshot: MetricsSnapshot,
+    /// Pooled-replica per-batch latency percentiles.
+    pub batch_latency: LatencySummary,
+    /// The admission gauge as of the last classify tick.
+    pub rolling_energy_per_class_nj: f64,
+}
+
+/// Point-in-time fleet state: merged totals, per-model keyed stats, and
+/// the sparse `(from, to) -> count` downgrade matrix.
+#[derive(Clone, Debug)]
+pub struct FleetSnapshot {
+    pub total: MetricsSnapshot,
+    pub per_model: Vec<FleetModelStats>,
+    pub downgrades: Vec<((usize, usize), u64)>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{Estimator, ModelSpec};
+    use crate::data::synthetic::{generate, DatasetProfile};
+
+    #[test]
+    fn partition_shares_capacity_with_floor() {
+        assert_eq!(partition_replicas(6, 2), vec![3, 3]);
+        assert_eq!(partition_replicas(5, 2), vec![3, 2]);
+        assert_eq!(partition_replicas(4, 3), vec![2, 1, 1]);
+        // Floor: over-subscribed fleets still give every model a replica.
+        assert_eq!(partition_replicas(1, 3), vec![1, 1, 1]);
+        assert_eq!(partition_replicas(0, 2), vec![1, 1]);
+    }
+
+    #[test]
+    fn budget_axes() {
+        let unlimited = EnergyBudget::unlimited();
+        assert!(!unlimited.energy_exhausted(1e12));
+        assert!(!unlimited.latency_exhausted(1e12));
+        let zero = EnergyBudget { energy_per_class_nj: Some(0.0), ..Default::default() };
+        assert!(zero.energy_exhausted(0.0), "budget 0 must trip on the zero gauge");
+        let b = EnergyBudget { energy_per_class_nj: Some(5.0), ..Default::default() };
+        assert!(!b.energy_exhausted(4.9));
+        assert!(b.energy_exhausted(5.0));
+        let inf =
+            EnergyBudget { energy_per_class_nj: Some(f64::INFINITY), ..Default::default() };
+        assert!(!inf.energy_exhausted(1e300));
+        let p = EnergyBudget { p99_us: Some(100.0), ..Default::default() };
+        assert!(!p.latency_exhausted(100.0));
+        assert!(p.latency_exhausted(100.5));
+    }
+
+    #[test]
+    fn strict_policy_never_reroutes() {
+        let p = StrictShed;
+        assert_eq!(p.decide(0, &[true, true]), Some(0));
+        assert_eq!(p.decide(0, &[false, true]), None);
+        assert_eq!(p.decide(1, &[true, false]), None);
+        assert_eq!(p.decide(2, &[true, true]), None, "out-of-range request sheds");
+    }
+
+    #[test]
+    fn downgrade_policy_falls_back_in_registration_order() {
+        let p = DowngradeFallback;
+        assert_eq!(p.decide(1, &[true, true, true]), Some(1), "within budget: no move");
+        assert_eq!(p.decide(1, &[true, false, true]), Some(0), "earliest admissible wins");
+        assert_eq!(p.decide(0, &[false, false, true]), Some(2));
+        assert_eq!(p.decide(0, &[false, false, false]), None, "all exhausted: shed");
+        assert_eq!(
+            p.decide(2, &[true, true]),
+            Some(0),
+            "unknown requested index still lands on an admissible model"
+        );
+    }
+
+    #[test]
+    fn policy_kind_builds_matching_object() {
+        assert_eq!(FleetPolicyKind::Strict.build().label(), "strict");
+        assert_eq!(FleetPolicyKind::Downgrade.build().label(), "downgrade");
+    }
+
+    #[test]
+    fn rolling_gauge_averages_window() {
+        let mut g = ModelGauges::default();
+        assert_eq!(rolling_energy_per_class_nj(&g), 0.0);
+        g.window.push_back((4, 2_000_000)); // 4 samples, 2e6 fJ = 2 nJ
+        g.window.push_back((0, 0)); // an idle tick dilutes nothing
+        assert!((rolling_energy_per_class_nj(&g) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fleet_serves_and_budget_zero_sheds() {
+        let ds = generate(&DatasetProfile::demo(), 711);
+        let spec = ModelSpec::for_shape("rf", ds.n_features(), ds.n_classes())
+            .unwrap()
+            .fast();
+        let model: Arc<dyn Classifier> = Arc::from(spec.fit(&ds.train, 11));
+
+        // Unlimited budget: every request Served by its model.
+        let mut fleet = Fleet::start(
+            vec![("rf".to_string(), Arc::clone(&model))],
+            &FleetConfig::default(),
+        )
+        .expect("fleet start");
+        let reqs =
+            FleetRequest::batch(0, &ds.test.x, ds.n_features()).expect("aligned batch");
+        let responses = fleet.classify(&reqs).expect("classify");
+        assert_eq!(responses.len(), ds.test.len());
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.outcome, FleetOutcome::Served { model: 0 });
+            assert!(r.response.is_some());
+        }
+        let snap = fleet.snapshot();
+        assert_eq!(snap.total.fleet_served as usize, ds.test.len());
+        assert_eq!(snap.total.fleet_shed, 0);
+        assert_eq!(snap.total.requests as usize, ds.test.len());
+        assert_eq!(snap.total.responses as usize, ds.test.len());
+        let m0 = &snap.per_model[0];
+        assert_eq!(m0.requested, m0.served + m0.downgraded_away + m0.shed);
+        assert_eq!(m0.served as usize, ds.test.len());
+        fleet.shutdown();
+
+        // Budget 0 under Strict: everything sheds, nothing evaluates.
+        let cfg = FleetConfig {
+            budget: EnergyBudget {
+                energy_per_class_nj: Some(0.0),
+                ..Default::default()
+            },
+            policy: FleetPolicyKind::Strict,
+            ..Default::default()
+        };
+        let mut starved = Fleet::start(vec![("rf".to_string(), model)], &cfg).unwrap();
+        let responses = starved.classify(&reqs).expect("classify");
+        assert!(responses.iter().all(|r| r.outcome.is_shed() && r.response.is_none()));
+        let snap = starved.snapshot();
+        assert_eq!(snap.total.fleet_shed as usize, ds.test.len());
+        assert_eq!(snap.total.responses, 0, "shed requests must not be evaluated");
+        assert!((snap.total.shed_rate() - 1.0).abs() < 1e-12);
+        starved.shutdown();
+    }
+
+    #[test]
+    fn mismatched_feature_counts_are_a_friendly_error() {
+        let ds = generate(&DatasetProfile::demo(), 712);
+        let spec = ModelSpec::for_shape("svm_lr", ds.n_features(), ds.n_classes())
+            .unwrap()
+            .fast();
+        let a: Arc<dyn Classifier> = Arc::from(spec.fit(&ds.train, 1));
+        let wider =
+            DatasetProfile { n_features: ds.n_features() + 1, ..DatasetProfile::demo() };
+        let ds2 = generate(&wider, 713);
+        let spec2 = ModelSpec::for_shape("svm_lr", ds2.n_features(), ds2.n_classes())
+            .unwrap()
+            .fast();
+        let b: Arc<dyn Classifier> = Arc::from(spec2.fit(&ds2.train, 2));
+        let err = Fleet::start(
+            vec![("a".to_string(), a), ("b".to_string(), b)],
+            &FleetConfig::default(),
+        )
+        .expect_err("mismatched feature counts must not start");
+        assert!(err.to_string().contains("feature count"), "unhelpful error: {err}");
+    }
+}

@@ -37,6 +37,14 @@ pub struct Metrics {
     pub cache_hits: AtomicU64,
     /// Requests that missed the cache and went to a replica queue.
     pub cache_misses: AtomicU64,
+    /// Fleet-tier admission outcomes (front-end owned, like `requests`):
+    /// requests served by the model they asked for.
+    pub fleet_served: AtomicU64,
+    /// Requests served by a fallback model after their requested model's
+    /// budget was exhausted (`Downgraded{from, to}`).
+    pub fleet_downgraded: AtomicU64,
+    /// Requests rejected because every admissible model was over budget.
+    pub fleet_shed: AtomicU64,
     /// Classifications evaluated through an execution backend.
     pub exec_samples: AtomicU64,
     /// Comparator ops reported by the backend (arena-derived, padded
@@ -82,14 +90,20 @@ impl Metrics {
         }
     }
 
-    /// Percentile summary of the recorded per-batch latencies.
-    pub fn batch_latency_summary(&self) -> LatencySummary {
-        let samples: Vec<f64> = self
-            .batch_latency_us
+    /// Raw per-batch latency samples (µs) currently in the reservoir —
+    /// bounded by the reservoir cap, arrival order not meaningful. The
+    /// fleet tier pools these across an entry's replicas so a per-model
+    /// percentile summary covers the whole replica set.
+    pub fn batch_latency_samples_us(&self) -> Vec<f64> {
+        self.batch_latency_us
             .lock()
             .map(|v| v.iter().map(|&u| u as f64).collect())
-            .unwrap_or_default();
-        LatencySummary::from_us(samples)
+            .unwrap_or_default()
+    }
+
+    /// Percentile summary of the recorded per-batch latencies.
+    pub fn batch_latency_summary(&self) -> LatencySummary {
+        LatencySummary::from_us(self.batch_latency_samples_us())
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -102,6 +116,9 @@ impl Metrics {
             evals: self.evals.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            fleet_served: self.fleet_served.load(Ordering::Relaxed),
+            fleet_downgraded: self.fleet_downgraded.load(Ordering::Relaxed),
+            fleet_shed: self.fleet_shed.load(Ordering::Relaxed),
             exec_samples: self.exec_samples.load(Ordering::Relaxed),
             exec_comparator_ops: self.exec_comparator_ops.load(Ordering::Relaxed),
             exec_levels_skipped: self.exec_levels_skipped.load(Ordering::Relaxed),
@@ -122,6 +139,9 @@ pub struct MetricsSnapshot {
     pub evals: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    pub fleet_served: u64,
+    pub fleet_downgraded: u64,
+    pub fleet_shed: u64,
     pub exec_samples: u64,
     pub exec_comparator_ops: u64,
     pub exec_levels_skipped: u64,
@@ -133,9 +153,11 @@ impl MetricsSnapshot {
     /// Merge a replica's worker-side counters into an aggregate snapshot
     /// with *saturating* adds (a wrapped aggregate would report a bogus
     /// rate). Front-end-owned counters — `requests`, `cache_hits`,
-    /// `cache_misses` — are deliberately not merged: the front end counts
-    /// each client row once, while a replica's `requests` gauge counts
-    /// the jobs routed to it; adding them would double-count.
+    /// `cache_misses`, and the fleet admission outcomes
+    /// (`fleet_served`/`fleet_downgraded`/`fleet_shed`) — are
+    /// deliberately not merged: the front end counts each client row
+    /// once, while a replica's `requests` gauge counts the jobs routed to
+    /// it; adding them would double-count.
     pub fn merge_worker(&mut self, other: &MetricsSnapshot) {
         self.responses = self.responses.saturating_add(other.responses);
         self.hops_total = self.hops_total.saturating_add(other.hops_total);
@@ -164,6 +186,17 @@ impl MetricsSnapshot {
             0.0
         } else {
             self.evals as f64 / self.batches as f64
+        }
+    }
+
+    /// Fraction of fleet-admitted requests that were shed (0.0 outside
+    /// the fleet tier, where no admission decision is ever taken).
+    pub fn shed_rate(&self) -> f64 {
+        let decided = self.fleet_served + self.fleet_downgraded + self.fleet_shed;
+        if decided == 0 {
+            0.0
+        } else {
+            self.fleet_shed as f64 / decided as f64
         }
     }
 
@@ -325,6 +358,8 @@ mod tests {
             evals: 7,
             requests: 11,     // front-end-owned: must not merge
             cache_hits: 13,   // front-end-owned: must not merge
+            fleet_served: 17, // front-end-owned: must not merge
+            fleet_shed: 19,   // front-end-owned: must not merge
             exec_samples: 2,
             exec_energy_fj: 1000,
             ..Default::default()
@@ -337,6 +372,21 @@ mod tests {
         assert_eq!(a.exec_energy_fj, 1000);
         assert_eq!(a.requests, 0, "requests double-counted");
         assert_eq!(a.cache_hits, 0, "cache hits double-counted");
+        assert_eq!(a.fleet_served, 0, "fleet outcomes double-counted");
+        assert_eq!(a.fleet_shed, 0, "fleet outcomes double-counted");
+    }
+
+    #[test]
+    fn shed_rate_counts_fleet_outcomes_only() {
+        let s = MetricsSnapshot::default();
+        assert_eq!(s.shed_rate(), 0.0, "no fleet tier => no shed");
+        let s = MetricsSnapshot {
+            fleet_served: 6,
+            fleet_downgraded: 2,
+            fleet_shed: 2,
+            ..Default::default()
+        };
+        assert!((s.shed_rate() - 0.2).abs() < 1e-12);
     }
 
     #[test]

@@ -26,14 +26,22 @@
 //!   (`Random`/`RoundRobin`/`LeastLoaded` replica selection) and a
 //!   bounded [`ProbCache`] of probability rows keyed by quantized
 //!   feature vectors, checked before enqueue and filled on batch
-//!   completion.
+//!   completion;
+//! * [`Fleet`] — the multi-model tier above the sharded one: several
+//!   registry models behind one request path, sharing replica capacity,
+//!   with the paper's Fig-5 energy budget enforced live — over-budget
+//!   models shed or downgrade their traffic ([`FleetPolicy`]) and every
+//!   request resolves to an explicit [`FleetOutcome`]. The seeded
+//!   open-loop load generator driving it lives in [`loadgen`].
 //!
 //! See `ARCHITECTURE.md` at the repo root for the full request-path
-//! diagram through router, replica queues, the batch kernel and the
-//! cache fill.
+//! diagram through fleet admission, router, replica queues, the batch
+//! kernel and the cache fill.
 
 pub mod accel;
 pub mod cache;
+pub mod fleet;
+pub mod loadgen;
 pub mod messages;
 pub mod metrics;
 pub mod model_server;
@@ -43,6 +51,11 @@ pub mod shard;
 pub mod worker;
 
 pub use cache::{CacheConfig, CacheStats, ProbCache};
+pub use fleet::{
+    DowngradeFallback, EnergyBudget, Fleet, FleetConfig, FleetModelStats, FleetOutcome,
+    FleetPolicy, FleetRequest, FleetResponse, FleetSnapshot, StrictShed,
+};
+pub use loadgen::{Arrival, LoadgenConfig, LoadgenModelReport, LoadgenReport};
 pub use messages::{Request, Response};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use model_server::{ModelServer, ModelServerConfig};

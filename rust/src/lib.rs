@@ -89,7 +89,12 @@
 //!   quantized [`coordinator::ProbCache`] of probability rows. Every
 //!   replica dispatches batches through its resolved [`exec::Backend`]
 //!   (`software | uarch`), so `fog serve --backend uarch` reports live
-//!   energy-per-classification alongside throughput.
+//!   energy-per-classification alongside throughput. On top sits the
+//!   multi-model [`coordinator::Fleet`]: several registry models behind
+//!   one request path, held to a live [`coordinator::EnergyBudget`]
+//!   (shed / downgrade admission — Fig 5 at runtime) and driven by the
+//!   seeded open-loop [`coordinator::loadgen`]
+//!   (`fog serve --fleet fog_opt,fog_max --loadgen QPS:SECS`).
 //! * [`experiments`] — harnesses regenerating every table/figure of the
 //!   paper's evaluation (Table 1, Figure 4, Figure 5), dispatching every
 //!   model through [`api`].

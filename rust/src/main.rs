@@ -30,12 +30,27 @@
 //!                                                  per-replica throughput, cache
 //!                                                  hit rate, energy/cycles per
 //!                                                  classification, batch p50/p99)
+//!              [--fleet fog_opt,fog_max]           fleet tier: several registry
+//!                                                  models behind one request path
+//!                                                  sharing --replicas capacity
+//!              [--energy-budget-nj N] [--p99-budget-us U] [--budget-window T]
+//!                                                  live Fig-5 admission budget per
+//!                                                  model (rolling energy/p99 gauges)
+//!              [--fleet-policy strict|downgrade]   over-budget traffic: shed, or
+//!                                                  fall back in registration order
+//!              [--loadgen QPS:SECS] [--loadgen-seed S]
+//!                                                  seeded open-loop arrival ramp
+//!                                                  (QPS/5 -> QPS over SECS); emits
+//!                                                  serve_fleet BENCH_JSON lines
+//!                                                  (shed rate, per-model p50/p99 +
+//!                                                  energy_per_class_nj)
 //! fog dse      [--workload trees|gemm]             Aladdin-style DSE sweep
 //! ```
 
-use fog::api::{BackendKind, Classifier, Estimator, ModelSpec, REGISTRY};
+use fog::api::{BackendKind, Classifier, Estimator, FleetPolicyKind, ModelSpec, REGISTRY};
 use fog::coordinator::{
-    Backend, FogServer, ModelServer, ModelServerConfig, RouterPolicy, ServerConfig,
+    loadgen, Backend, CacheConfig, EnergyBudget, Fleet, FleetConfig, FogServer,
+    LoadgenConfig, ModelServer, ModelServerConfig, RouterPolicy, ServerConfig,
     ShardedServer, ShardedServerConfig,
 };
 use fog::data::synthetic::DatasetProfile;
@@ -184,11 +199,41 @@ fn cmd_eval(args: &Args, seed: u64) {
 }
 
 /// Parse `--backend software|uarch` (execution backend; distinct from
-/// the FoG ring's `native|pjrt` serving backends) or exit friendly.
+/// the FoG ring's `native|pjrt` serving backends) or exit with a
+/// friendly error listing the valid spellings.
 fn parse_exec_backend(args: &Args) -> BackendKind {
     let spelled = args.get_or("backend", "software");
     BackendKind::parse(spelled).unwrap_or_else(|| {
-        eprintln!("error: unknown execution backend '{spelled}'; valid names: software, uarch");
+        eprintln!(
+            "error: unknown execution backend '{spelled}'; valid names: {}",
+            BackendKind::NAMES.join(", ")
+        );
+        std::process::exit(2);
+    })
+}
+
+/// Parse `--router` or exit with a friendly error listing the valid
+/// policies.
+fn parse_router_or_exit(args: &Args) -> RouterPolicy {
+    let spelled = args.get_or("router", "least_loaded");
+    RouterPolicy::parse(spelled).unwrap_or_else(|| {
+        eprintln!(
+            "error: unknown router '{spelled}'; valid policies: {}",
+            RouterPolicy::NAMES.join(", ")
+        );
+        std::process::exit(2);
+    })
+}
+
+/// Parse `--fleet-policy` or exit with a friendly error listing the
+/// valid policies.
+fn parse_fleet_policy_or_exit(args: &Args) -> FleetPolicyKind {
+    let spelled = args.get_or("fleet-policy", "downgrade");
+    FleetPolicyKind::parse(spelled).unwrap_or_else(|| {
+        eprintln!(
+            "error: unknown fleet policy '{spelled}'; valid policies: {}",
+            FleetPolicyKind::NAMES.join(", ")
+        );
         std::process::exit(2);
     })
 }
@@ -252,6 +297,23 @@ fn cmd_sim(args: &Args, seed: u64) {
 /// generic `ModelServer`; add `--replicas N` for the sharded tier
 /// (`ShardedServer`: replica router + quantized result cache).
 fn cmd_serve(args: &Args, seed: u64) {
+    // The fleet tier sits above the sharded one: --fleet takes a model
+    // *list* and owns the whole serve invocation.
+    if let Some(fleet_spec) = args.get("fleet") {
+        return cmd_serve_fleet(args, fleet_spec, seed);
+    }
+    // Fleet-only knobs without --fleet would otherwise be silently
+    // ignored by the lower tiers.
+    let fleet_flags =
+        ["fleet-policy", "energy-budget-nj", "p99-budget-us", "budget-window", "loadgen", "loadgen-seed"];
+    if let Some(flag) = fleet_flags.iter().find(|k| args.get(k).is_some()) {
+        eprintln!(
+            "error: --{flag} needs --fleet <model,model,...> (the fleet tier registers \
+             registry models; valid names: {})",
+            REGISTRY.join(", ")
+        );
+        std::process::exit(2);
+    }
     // Any sharded-tier flag selects the sharded path, so no knob is ever
     // silently ignored by the single-queue server or the FoG ring.
     let sharded_flags = ["replicas", "router", "cache-quant", "cache-cap", "no-cache", "rounds"];
@@ -372,13 +434,7 @@ fn cmd_serve_model(args: &Args, model_name: &str, seed: u64) {
 /// `BENCH_JSON` line.
 fn cmd_serve_sharded(args: &Args, model_name: &str, seed: u64) {
     let profile = profile_or_exit(args.get_or("dataset", "demo"));
-    let router = RouterPolicy::parse(args.get_or("router", "least_loaded")).unwrap_or_else(|| {
-        eprintln!(
-            "error: unknown router '{}'; valid policies: random, round_robin, least_loaded",
-            args.get_or("router", "least_loaded")
-        );
-        std::process::exit(2);
-    });
+    let router = parse_router_or_exit(args);
     let backend = parse_exec_backend(args);
     let mut spec = ModelSpec::for_shape(model_name, profile.n_features, profile.n_classes)
         .unwrap_or_else(|| {
@@ -506,6 +562,229 @@ fn cmd_serve_sharded(args: &Args, model_name: &str, seed: u64) {
         );
     }
     server.shutdown();
+}
+
+/// Serve several registry models through the multi-model fleet tier
+/// (`--fleet fog_opt,fog_max`): one request path over a shared replica
+/// pool, with the paper's Fig-5 energy budget enforced live
+/// (`--energy-budget-nj`, rolling per-model gauges; over-budget traffic
+/// sheds or downgrades per `--fleet-policy`). Driven by a seeded
+/// open-loop arrival ramp (`--loadgen QPS:SECS`, deterministic from
+/// `--loadgen-seed`); emits one aggregate `serve_fleet` BENCH_JSON line
+/// plus one `serve_fleet_model` line per registered model (shed rate,
+/// p50/p99, energy_per_class_nj — the live Fig 5 observables).
+fn cmd_serve_fleet(args: &Args, fleet_spec: &str, seed: u64) {
+    let profile = profile_or_exit(args.get_or("dataset", "demo"));
+    let names: Vec<String> = fleet_spec
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if names.is_empty() {
+        eprintln!(
+            "error: --fleet needs at least one registry model (e.g. --fleet fog_opt,fog_max); \
+             valid names: {}",
+            REGISTRY.join(", ")
+        );
+        std::process::exit(2);
+    }
+    let router = parse_router_or_exit(args);
+    let backend = parse_exec_backend(args);
+    let policy = parse_fleet_policy_or_exit(args);
+    let specs: Vec<ModelSpec> = names
+        .iter()
+        .map(|name| {
+            ModelSpec::for_shape(name, profile.n_features, profile.n_classes).unwrap_or_else(
+                || {
+                    eprintln!(
+                        "error: unknown model '{name}'; valid names: {}",
+                        REGISTRY.join(", ")
+                    );
+                    std::process::exit(2);
+                },
+            )
+        })
+        .collect();
+
+    eprintln!("[serve] training fleet [{}] on {} ...", names.join(", "), profile.name);
+    let data = suite::prepare_data(&profile, seed);
+    let models: Vec<(String, Arc<dyn Classifier>)> = specs
+        .iter()
+        .map(|spec| {
+            let model: Arc<dyn Classifier> = Arc::from(spec.fit(&data.train, seed));
+            if backend == BackendKind::Uarch && model.exec_backend(BackendKind::Uarch).is_none()
+            {
+                eprintln!(
+                    "error: model '{}' has no μarch execution backend; tree-based registry \
+                     models only (fog_opt, fog_max, rf, rf_prob)",
+                    spec.name
+                );
+                std::process::exit(2);
+            }
+            (spec.name.clone(), model)
+        })
+        .collect();
+
+    let budget = EnergyBudget {
+        energy_per_class_nj: args
+            .get("energy-budget-nj")
+            .map(|_| args.get_f64("energy-budget-nj", 0.0).max(0.0)),
+        p99_us: args.get("p99-budget-us").map(|_| args.get_f64("p99-budget-us", 0.0).max(0.0)),
+        window_ticks: args.get_usize("budget-window", 32).max(1),
+    };
+    let cache = if args.get_bool("no-cache") {
+        None
+    } else {
+        Some(CacheConfig {
+            capacity: args.get_usize("cache-cap", 4096),
+            quant_step: args.get_f64("cache-quant", 0.0) as f32,
+            ..Default::default()
+        })
+    };
+    let cfg = FleetConfig {
+        total_replicas: args.get_usize("replicas", 2 * names.len()),
+        worker: ModelServerConfig {
+            batch_size: args.get_usize("batch", 32),
+            n_workers: args.get_usize("workers", 2),
+            backend,
+            ..Default::default()
+        },
+        router,
+        router_seed: seed,
+        cache,
+        budget,
+        policy,
+    };
+    let mut fleet = Fleet::start(models, &cfg).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
+
+    let mut lg = match args.get("loadgen") {
+        Some(spec) => LoadgenConfig::parse_spec(spec).unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }),
+        // No --loadgen: a short unpaced ramp, enough to exercise the
+        // budget and fill every BENCH_JSON field deterministically.
+        None => LoadgenConfig {
+            qps_start: 200.0,
+            qps_end: 1000.0,
+            duration_s: 1.0,
+            pace: false,
+            ..Default::default()
+        },
+    };
+    lg.seed = args.get_u64("loadgen-seed", seed);
+    let t0 = std::time::Instant::now();
+    let report = loadgen::run(&mut fleet, &data.test.x, &lg).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = fleet.snapshot();
+
+    let budget_label = match budget.energy_per_class_nj {
+        Some(b) => format!("{b} nJ/class"),
+        None => "unlimited".to_string(),
+    };
+    println!(
+        "== serving: fleet [{}] on {} x{} replicas ({}, backend={}, policy={}, budget={}) ==",
+        names.join(", "),
+        profile.name,
+        (0..fleet.n_models()).map(|m| fleet.server(m).n_replicas()).sum::<usize>(),
+        cfg.router.label(),
+        backend.label(),
+        fleet.policy_label(),
+        budget_label
+    );
+    println!(
+        "offered    : {} over {:.2}s virtual (ramp {:.0}->{:.0} qps, seed {})",
+        report.offered, report.duration_s, lg.qps_start, lg.qps_end, lg.seed
+    );
+    println!(
+        "outcomes   : {} served, {} downgraded, {} shed ({:.1}% shed rate)",
+        report.served,
+        report.downgraded,
+        report.shed,
+        report.shed_rate * 100.0
+    );
+    println!("throughput : {:.0} req/s over {} ticks", report.offered as f64 / wall, report.ticks);
+    for (m, pm) in report.per_model.iter().enumerate() {
+        let stats = &snap.per_model[m];
+        print!(
+            "  {:<8} : {} asked, {} served, {} away, {} into, {} shed; \
+             p50 {:.0}µs p99 {:.0}µs",
+            pm.name,
+            pm.requested,
+            pm.served,
+            pm.downgraded_away,
+            pm.downgraded_into,
+            pm.shed,
+            pm.latency.p50_us,
+            pm.latency.p99_us
+        );
+        if stats.snapshot.exec_samples > 0 {
+            print!("; {:.4} nJ/class", pm.energy_per_class_nj);
+        }
+        println!();
+    }
+    for ((from, to), count) in &snap.downgrades {
+        println!(
+            "  downgrade: {} -> {} x{count}",
+            fleet.model_name(*from),
+            fleet.model_name(*to)
+        );
+    }
+
+    println!(
+        "BENCH_JSON {{\"bench\":\"serve_fleet\",\"model\":\"{}\",\"dataset\":\"{}\",\
+         \"replicas\":{},\"router\":\"{}\",\"backend\":\"{}\",\"policy\":\"{}\",\
+         \"energy_budget_nj\":{:.6},\"loadgen_seed\":{},\"offered\":{},\"served\":{},\
+         \"downgraded\":{},\"shed\":{},\"shed_rate\":{:.4},\"throughput_per_s\":{:.1},\
+         \"energy_per_class_nj\":{:.6}}}",
+        names.join("+"),
+        profile.name,
+        (0..fleet.n_models()).map(|m| fleet.server(m).n_replicas()).sum::<usize>(),
+        cfg.router.label(),
+        backend.label(),
+        fleet.policy_label(),
+        budget.energy_per_class_nj.unwrap_or(-1.0),
+        lg.seed,
+        report.offered,
+        report.served,
+        report.downgraded,
+        report.shed,
+        report.shed_rate,
+        report.offered as f64 / wall,
+        snap.total.energy_per_class_nj()
+    );
+    for (m, pm) in report.per_model.iter().enumerate() {
+        let stats = &snap.per_model[m];
+        println!(
+            "BENCH_JSON {{\"bench\":\"serve_fleet_model\",\"model\":\"{}\",\"fleet\":\"{}\",\
+             \"backend\":\"{}\",\"requested\":{},\"served\":{},\"downgraded_away\":{},\
+             \"downgraded_into\":{},\"shed\":{},\"shed_rate\":{:.4},\
+             \"req_p50_us\":{:.1},\"req_p99_us\":{:.1},\"batch_p50_us\":{:.1},\
+             \"batch_p99_us\":{:.1},\"energy_per_class_nj\":{:.6},\"cycles_per_class\":{:.2}}}",
+            pm.name,
+            names.join("+"),
+            backend.label(),
+            pm.requested,
+            pm.served,
+            pm.downgraded_away,
+            pm.downgraded_into,
+            pm.shed,
+            if pm.requested == 0 { 0.0 } else { pm.shed as f64 / pm.requested as f64 },
+            pm.latency.p50_us,
+            pm.latency.p99_us,
+            stats.batch_latency.p50_us,
+            stats.batch_latency.p99_us,
+            stats.snapshot.energy_per_class_nj(),
+            stats.snapshot.cycles_per_class()
+        );
+    }
+    fleet.shutdown();
 }
 
 /// Aladdin-style design-space exploration printout.

@@ -1,0 +1,443 @@
+//! Acceptance tests for the fleet tier (`coordinator::fleet` +
+//! `coordinator::loadgen`):
+//!
+//! * **Conformance pin** — a single-model fleet with an unlimited budget
+//!   is observationally identical to serving its `ShardedServer`
+//!   directly: byte-identical probability rows and equal deterministic
+//!   metric totals, cold and warm (cache) passes alike.
+//! * **Admission outcomes** — budget `0.0` sheds everything even under
+//!   `Downgrade`; a budget pinned between the two operating points'
+//!   measured energies downgrades `fog_max` traffic onto `fog_opt` with
+//!   *exact* outcome counts, in registration order.
+//! * **Keyed energy** — per-model snapshot aggregates keep each arena's
+//!   nJ/class its own instead of blending heterogeneous models.
+//! * **Loadgen determinism** — replaying the same seeded open-loop
+//!   schedule reproduces the same `Served`/`Downgraded`/`Shed` counts,
+//!   with nonzero shed (strict) and downgrade (fallback) activity under
+//!   a tight budget.
+
+use fog::api::{BackendKind, Classifier, Estimator, FleetPolicyKind, ModelSpec, RouterPolicy};
+use fog::coordinator::{
+    loadgen, CacheConfig, EnergyBudget, Fleet, FleetConfig, FleetOutcome, FleetRequest,
+    LoadgenConfig, LoadgenReport, MetricsSnapshot, ModelServerConfig, ShardedServer,
+    ShardedServerConfig,
+};
+use fog::data::synthetic::{generate, DatasetProfile};
+use fog::data::Dataset;
+use fog::exec::Backend;
+use std::sync::Arc;
+
+fn small_data() -> Dataset {
+    generate(&DatasetProfile::demo(), 601)
+}
+
+fn fit_fast(name: &str, ds: &Dataset, seed: u64) -> Arc<dyn Classifier> {
+    Arc::from(
+        ModelSpec::for_shape(name, ds.n_features(), ds.n_classes())
+            .unwrap_or_else(|| panic!("registry name '{name}' missing"))
+            .fast()
+            .fit(&ds.train, seed),
+    )
+}
+
+/// A FoG pair with clearly separated uarch energy: `fog_opt` pinned to
+/// an aggressive early-exit threshold, `fog_max` visiting every grove.
+fn fog_pair(ds: &Dataset) -> (Arc<dyn Classifier>, Arc<dyn Classifier>) {
+    let opt: Arc<dyn Classifier> = Arc::from(
+        ModelSpec::for_shape("fog_opt", ds.n_features(), ds.n_classes())
+            .expect("fog_opt in registry")
+            .fast()
+            .with_threshold(0.2)
+            .fit(&ds.train, 31),
+    );
+    let max: Arc<dyn Classifier> = Arc::from(
+        ModelSpec::for_shape("fog_max", ds.n_features(), ds.n_classes())
+            .expect("fog_max in registry")
+            .fast()
+            .fit(&ds.train, 31),
+    );
+    (opt, max)
+}
+
+/// Standalone uarch energy per classification over the test split.
+fn tile_energy_nj(model: &Arc<dyn Classifier>, ds: &Dataset) -> f64 {
+    let backend = model.exec_backend(BackendKind::Uarch).expect("uarch backend");
+    let (_, report) = backend.evaluate_tile(&ds.test.x, ds.test.len());
+    report.energy_per_class_nj()
+}
+
+/// The metric totals that are deterministic under the software backend
+/// (everything except `batches`, whose grouping is timing-dependent,
+/// and the fleet-only `fleet_*` outcome counters).
+fn deterministic_counters(s: &MetricsSnapshot) -> [u64; 12] {
+    [
+        s.requests,
+        s.responses,
+        s.evals,
+        s.hops_total,
+        s.forwards,
+        s.cache_hits,
+        s.cache_misses,
+        s.exec_samples,
+        s.exec_comparator_ops,
+        s.exec_levels_skipped,
+        s.exec_cycles,
+        s.exec_energy_fj,
+    ]
+}
+
+/// (ISSUE 6 acceptance) A fleet registering one model under an
+/// unlimited budget must be byte-identical to the plain `ShardedServer`
+/// it wraps: same probability rows, same ids, same deterministic metric
+/// totals — cold pass and cache-warm pass alike.
+#[test]
+fn single_model_unlimited_fleet_matches_sharded_server() {
+    let ds = small_data();
+    for name in ["rf", "fog_opt"] {
+        let model = fit_fast(name, &ds, 41);
+        let cache = Some(CacheConfig { quant_step: 0.0, ..Default::default() });
+
+        let shard_cfg = ShardedServerConfig {
+            replicas: 2,
+            router: RouterPolicy::RoundRobin,
+            router_seed: 0,
+            cache: cache.clone(),
+            ..Default::default()
+        };
+        let mut reference = ShardedServer::start(Arc::clone(&model), &shard_cfg);
+        let cold_ref = reference.classify(&ds.test.x).expect("aligned batch");
+        let warm_ref = reference.classify(&ds.test.x).expect("aligned batch");
+        let ref_snap = reference.snapshot();
+        reference.shutdown();
+
+        let fleet_cfg = FleetConfig {
+            total_replicas: 2,
+            router: RouterPolicy::RoundRobin,
+            router_seed: 0,
+            cache,
+            budget: EnergyBudget::unlimited(),
+            ..Default::default()
+        };
+        let mut fleet = Fleet::start(vec![(name.to_string(), model)], &fleet_cfg)
+            .expect("fleet start");
+        let reqs = FleetRequest::batch(0, &ds.test.x, ds.n_features()).expect("aligned");
+        let cold = fleet.classify(&reqs).expect("classify");
+        let warm = fleet.classify(&reqs).expect("classify");
+
+        for (refs, flts) in [(&cold_ref, &cold), (&warm_ref, &warm)] {
+            assert_eq!(refs.len(), flts.len(), "{name}");
+            for (r, f) in refs.iter().zip(flts.iter()) {
+                assert_eq!(f.outcome, FleetOutcome::Served { model: 0 }, "{name}");
+                let resp = f.response.as_ref().expect("served requests carry responses");
+                assert_eq!(r.id, f.id, "{name}");
+                assert_eq!(r.id, resp.id, "{name}");
+                assert_eq!(r.label, resp.label, "{name} id {}", r.id);
+                assert_eq!(r.hops, resp.hops, "{name} id {}", r.id);
+                assert_eq!(
+                    r.prob, resp.prob,
+                    "{name} id {}: fleet prob row is not byte-identical",
+                    r.id
+                );
+            }
+        }
+
+        let snap = fleet.snapshot();
+        assert_eq!(
+            deterministic_counters(&snap.total),
+            deterministic_counters(&ref_snap),
+            "{name}: fleet metric totals drifted from the plain sharded server"
+        );
+        assert_eq!(snap.total.fleet_served, snap.total.requests, "{name}");
+        assert_eq!(snap.total.fleet_downgraded, 0, "{name}");
+        assert_eq!(snap.total.fleet_shed, 0, "{name}");
+        fleet.shutdown();
+    }
+}
+
+/// Budget `0.0` is the degenerate Fig-5 point: no classification is
+/// affordable, so everything sheds — even under `Downgrade`, because no
+/// fallback model is admissible either. Nothing may reach a replica.
+#[test]
+fn zero_budget_sheds_everything_even_under_downgrade() {
+    let ds = small_data();
+    let a = fit_fast("rf", &ds, 42);
+    let b = fit_fast("svm_lr", &ds, 43);
+    let cfg = FleetConfig {
+        budget: EnergyBudget { energy_per_class_nj: Some(0.0), ..Default::default() },
+        policy: FleetPolicyKind::Downgrade,
+        ..Default::default()
+    };
+    let mut fleet =
+        Fleet::start(vec![("rf".to_string(), a), ("svm_lr".to_string(), b)], &cfg)
+            .expect("fleet start");
+    let mut reqs = FleetRequest::batch(0, &ds.test.x, ds.n_features()).expect("aligned");
+    for (i, r) in reqs.iter_mut().enumerate() {
+        r.model = i % 2;
+    }
+    let responses = fleet.classify(&reqs).expect("classify");
+    for (req, resp) in reqs.iter().zip(&responses) {
+        assert_eq!(resp.outcome, FleetOutcome::Shed { requested: req.model });
+        assert!(resp.response.is_none(), "shed requests must not carry answers");
+    }
+    let snap = fleet.snapshot();
+    assert_eq!(snap.total.fleet_shed as usize, reqs.len());
+    assert_eq!(snap.total.responses, 0, "nothing may evaluate under a zero budget");
+    assert_eq!(snap.total.evals, 0);
+    assert!(snap.downgrades.is_empty(), "a shed is not a downgrade");
+    for m in &snap.per_model {
+        assert_eq!(m.requested, m.served + m.downgraded_away + m.shed);
+        assert_eq!(m.requested, m.shed);
+    }
+    assert!((snap.total.shed_rate() - 1.0).abs() < 1e-12);
+    fleet.shutdown();
+}
+
+/// (ISSUE 6 satellite) Pin a budget halfway between the two operating
+/// points' measured energies and address everything to `fog_max`: the
+/// first classify tick serves (gauges are empty), the second downgrades
+/// every request onto `fog_opt` — in registration order, with exact
+/// outcome counts on both sides of the `(from, to)` edge.
+#[test]
+fn tight_budget_downgrades_fog_max_onto_fog_opt_exactly() {
+    let ds = small_data();
+    let (opt, max) = fog_pair(&ds);
+    let e_opt = tile_energy_nj(&opt, &ds);
+    let e_max = tile_energy_nj(&max, &ds);
+    assert!(
+        e_max > e_opt * 1.5,
+        "test premise: fog_max ({e_max:.3} nJ/class) must be clearly dearer than \
+         early-exit fog_opt ({e_opt:.3} nJ/class)"
+    );
+    let cfg = FleetConfig {
+        total_replicas: 2,
+        worker: ModelServerConfig { backend: BackendKind::Uarch, ..Default::default() },
+        budget: EnergyBudget {
+            energy_per_class_nj: Some((e_opt + e_max) / 2.0),
+            ..Default::default()
+        },
+        policy: FleetPolicyKind::Downgrade,
+        ..Default::default()
+    };
+    let mut fleet = Fleet::start(
+        vec![("fog_opt".to_string(), opt), ("fog_max".to_string(), max)],
+        &cfg,
+    )
+    .expect("fleet start");
+    let n = ds.test.len() as u64;
+    let reqs = FleetRequest::batch(1, &ds.test.x, ds.n_features()).expect("aligned");
+
+    // Tick 1: both gauges read 0 — fog_max serves its own traffic.
+    let r1 = fleet.classify(&reqs).expect("classify");
+    assert!(
+        r1.iter().all(|r| r.outcome == FleetOutcome::Served { model: 1 }),
+        "empty gauges must admit the requested model"
+    );
+
+    // Tick 2: fog_max's rolling gauge now reads ~e_max >= budget while
+    // idle fog_opt still reads 0 — every request downgrades 1 → 0.
+    let r2 = fleet.classify(&reqs).expect("classify");
+    assert!(
+        r2.iter().all(|r| r.outcome == FleetOutcome::Downgraded { from: 1, to: 0 }),
+        "over-budget fog_max traffic must fall back onto fog_opt"
+    );
+    assert!(
+        r2.iter().all(|r| r.response.is_some()),
+        "downgraded requests still get answers"
+    );
+
+    let snap = fleet.snapshot();
+    assert_eq!(snap.downgrades, vec![((1, 0), n)]);
+    let (m_opt, m_max) = (&snap.per_model[0], &snap.per_model[1]);
+    assert_eq!(m_max.requested, 2 * n);
+    assert_eq!(m_max.served, n);
+    assert_eq!(m_max.downgraded_away, n);
+    assert_eq!(m_max.shed, 0);
+    assert_eq!(m_max.requested, m_max.served + m_max.downgraded_away + m_max.shed);
+    assert_eq!(m_opt.requested, 0);
+    assert_eq!(m_opt.downgraded_into, n);
+    assert_eq!(snap.total.fleet_served, n);
+    assert_eq!(snap.total.fleet_downgraded, n);
+    assert_eq!(snap.total.fleet_shed, 0);
+    fleet.shutdown();
+}
+
+/// (ISSUE 6 satellite regression) Per-model snapshot aggregates stay
+/// keyed: each entry reports its *own* arena's nJ/class, matching the
+/// standalone tile measurement, while only the merged fleet total
+/// blends them.
+#[test]
+fn per_model_energy_stays_keyed_not_blended() {
+    let ds = small_data();
+    let (opt, max) = fog_pair(&ds);
+    let e_opt = tile_energy_nj(&opt, &ds);
+    let e_max = tile_energy_nj(&max, &ds);
+    let cfg = FleetConfig {
+        total_replicas: 2,
+        worker: ModelServerConfig { backend: BackendKind::Uarch, ..Default::default() },
+        ..Default::default()
+    };
+    let mut fleet = Fleet::start(
+        vec![("fog_opt".to_string(), opt), ("fog_max".to_string(), max)],
+        &cfg,
+    )
+    .expect("fleet start");
+    // Address the full test split to *both* models so each entry
+    // evaluates exactly the rows the standalone measurement covered.
+    let f = ds.n_features();
+    let mut reqs = FleetRequest::batch(0, &ds.test.x, f).expect("aligned");
+    reqs.extend(FleetRequest::batch(1, &ds.test.x, f).expect("aligned"));
+    let responses = fleet.classify(&reqs).expect("classify");
+    assert!(responses.iter().all(|r| !r.outcome.is_shed()));
+
+    let snap = fleet.snapshot();
+    let fleet_opt = snap.per_model[0].snapshot.energy_per_class_nj();
+    let fleet_max = snap.per_model[1].snapshot.energy_per_class_nj();
+    assert!(fleet_opt > 0.0 && fleet_max > 0.0, "uarch energy must surface per model");
+    assert!(
+        fleet_max > fleet_opt,
+        "heterogeneous energy blended: fog_max {fleet_max:.3} <= fog_opt {fleet_opt:.3}"
+    );
+    // Per-batch ring occupancy differs from the one-tile standalone
+    // measurement, so compare with a loose relative tolerance — the
+    // keying itself is what this pins, not the exact joule count.
+    let rel = |a: f64, b: f64| (a - b).abs() / b;
+    assert!(
+        rel(fleet_opt, e_opt) < 0.25,
+        "fog_opt fleet energy {fleet_opt:.3} nJ/class far from standalone {e_opt:.3}"
+    );
+    assert!(
+        rel(fleet_max, e_max) < 0.25,
+        "fog_max fleet energy {fleet_max:.3} nJ/class far from standalone {e_max:.3}"
+    );
+    let blended = snap.total.energy_per_class_nj();
+    assert!(
+        fleet_opt < blended && blended < fleet_max,
+        "merged total ({blended:.3}) should blend strictly between the \
+         per-model gauges ({fleet_opt:.3}, {fleet_max:.3})"
+    );
+    fleet.shutdown();
+}
+
+fn loadgen_fleet(ds: &Dataset, budget_nj: f64, policy: FleetPolicyKind) -> Fleet {
+    let (opt, max) = fog_pair(ds);
+    let cfg = FleetConfig {
+        total_replicas: 2,
+        worker: ModelServerConfig { backend: BackendKind::Uarch, ..Default::default() },
+        budget: EnergyBudget { energy_per_class_nj: Some(budget_nj), ..Default::default() },
+        policy,
+        ..Default::default()
+    };
+    Fleet::start(vec![("fog_opt".to_string(), opt), ("fog_max".to_string(), max)], &cfg)
+        .expect("fleet start")
+}
+
+/// Every outcome counter of a loadgen report, fleet-wide then per
+/// model; the deterministic fingerprint a seed replay must reproduce.
+fn outcome_counts(r: &LoadgenReport) -> Vec<u64> {
+    let mut v = vec![r.offered, r.served, r.downgraded, r.shed, r.ticks];
+    for m in &r.per_model {
+        v.extend([m.requested, m.served, m.downgraded_away, m.downgraded_into, m.shed]);
+    }
+    v
+}
+
+/// (ISSUE 6 acceptance) Replaying the seeded open-loop schedule against
+/// a freshly-built identical fleet reproduces the outcome counters
+/// bit-identically, with nonzero shed under `Strict` and nonzero
+/// downgrades under `Downgrade` at the same midpoint budget.
+#[test]
+fn loadgen_outcomes_replay_bit_identically_from_the_seed() {
+    let ds = small_data();
+    let (opt, max) = fog_pair(&ds);
+    let e_opt = tile_energy_nj(&opt, &ds);
+    let e_max = tile_energy_nj(&max, &ds);
+    assert!(
+        e_max > e_opt * 1.5,
+        "test premise: operating points must be clearly separated \
+         ({e_opt:.3} vs {e_max:.3} nJ/class)"
+    );
+    let budget = (e_opt + e_max) / 2.0;
+    let lg = LoadgenConfig {
+        qps_start: 400.0,
+        qps_end: 900.0,
+        duration_s: 0.6,
+        seed: 7,
+        tick_us: 20_000,
+        pace: false,
+    };
+
+    // Strict: fog_max traffic sheds once its gauge trips.
+    let mut a = loadgen_fleet(&ds, budget, FleetPolicyKind::Strict);
+    let mut b = loadgen_fleet(&ds, budget, FleetPolicyKind::Strict);
+    let ra = loadgen::run(&mut a, &ds.test.x, &lg).expect("loadgen run");
+    let rb = loadgen::run(&mut b, &ds.test.x, &lg).expect("loadgen run");
+    assert_eq!(
+        outcome_counts(&ra),
+        outcome_counts(&rb),
+        "same seed against an identical fleet must replay the same outcomes"
+    );
+    assert!(ra.offered > 0);
+    assert_eq!(ra.offered, ra.served + ra.downgraded + ra.shed);
+    assert!(ra.served > 0);
+    assert!(ra.shed > 0, "a midpoint budget must shed fog_max traffic under strict");
+    assert_eq!(ra.downgraded, 0, "strict never re-routes");
+    assert!(ra.per_model[1].shed > 0);
+    assert!(
+        ra.per_model[0].energy_per_class_nj > 0.0,
+        "uarch energy must surface in the per-model report"
+    );
+    assert!(
+        ra.per_model[1].energy_per_class_nj > ra.per_model[0].energy_per_class_nj,
+        "per-model loadgen energy must stay keyed even under partial service"
+    );
+    a.shutdown();
+    b.shutdown();
+
+    // Downgrade: the same over-budget traffic falls back onto fog_opt.
+    let mut c = loadgen_fleet(&ds, budget, FleetPolicyKind::Downgrade);
+    let mut d = loadgen_fleet(&ds, budget, FleetPolicyKind::Downgrade);
+    let rc = loadgen::run(&mut c, &ds.test.x, &lg).expect("loadgen run");
+    let rd = loadgen::run(&mut d, &ds.test.x, &lg).expect("loadgen run");
+    assert_eq!(outcome_counts(&rc), outcome_counts(&rd));
+    assert!(rc.downgraded > 0, "a midpoint budget must downgrade fog_max traffic");
+    assert_eq!(rc.shed, 0, "fog_opt stays within budget, so nothing sheds");
+    assert_eq!(rc.offered, ra.offered, "the schedule is policy-independent");
+    assert_eq!(rc.per_model[0].downgraded_into, rc.downgraded);
+    c.shutdown();
+    d.shutdown();
+}
+
+/// Malformed requests fail with friendly errors and leave the fleet
+/// serviceable.
+#[test]
+fn bad_requests_fail_with_friendly_errors() {
+    let ds = small_data();
+    let model = fit_fast("svm_lr", &ds, 44);
+    let mut fleet = Fleet::start(
+        vec![("svm_lr".to_string(), model)],
+        &FleetConfig::default(),
+    )
+    .expect("fleet start");
+    let f = ds.n_features();
+
+    let err = fleet
+        .classify(&[FleetRequest { model: 3, features: ds.test.x[..f].to_vec() }])
+        .expect_err("out-of-range model index must not serve");
+    assert!(err.to_string().contains("model index"), "unhelpful error: {err}");
+
+    let err = fleet
+        .classify(&[FleetRequest { model: 0, features: vec![0.0; f + 1] }])
+        .expect_err("wrong-width row must not serve");
+    assert!(err.to_string().contains("features"), "unhelpful error: {err}");
+
+    let err = FleetRequest::batch(0, &ds.test.x[..f + 1], f)
+        .expect_err("ragged buffer must not expand");
+    assert!(err.to_string().contains("ragged"), "unhelpful error: {err}");
+
+    // Rejected batches must not wedge the fleet: a good one still serves.
+    let ok = fleet
+        .classify(&FleetRequest::batch(0, &ds.test.x[..f], f).expect("aligned"))
+        .expect("classify");
+    assert_eq!(ok[0].outcome, FleetOutcome::Served { model: 0 });
+    fleet.shutdown();
+}

@@ -4,9 +4,12 @@
 # the recorded baseline.
 #
 #   tools/bench_record.sh record [--runs N] [--fast] [--out FILE]
-#       Run the inference + backend benches N times (default 3), take
-#       the per-metric median for every (bench, model, batch) key, and
-#       append one trajectory point to BENCH_PALLAS.json (or --out).
+#       Run the inference + backend benches plus the fleet loadgen serve
+#       path (`fog serve --fleet fog_opt,fog_max --backend uarch`, whose
+#       seeded open-loop schedule makes its serve_fleet/serve_fleet_model
+#       BENCH_JSON outcome counts replay-stable) N times (default 3),
+#       take the per-metric median for every (bench, model, batch) key,
+#       and append one trajectory point to BENCH_PALLAS.json (or --out).
 #       --fast sets FOG_BENCH_FAST=1 (CI-sized batches; points are
 #       tagged so gate runs only compare like with like).
 #
@@ -69,6 +72,15 @@ for run in $(seq 1 "$RUNS"); do
       (cd rust && cargo bench --bench "$bench") | tee -a "$RAW"
     fi
   done
+  if [ "$MODE" = record ]; then
+    # The fleet tier's trajectory: an unpaced seeded loadgen ramp against
+    # fog_opt + fog_max with live uarch energy. Outcome counters are a
+    # pure function of the loadgen seed, so the medians below fold
+    # throughput noise only, never admission noise.
+    echo "[bench_record] run $run/$RUNS: fog serve --fleet fog_opt,fog_max (loadgen)" >&2
+    (cd rust && cargo run --release -- serve --fleet fog_opt,fog_max \
+        --backend uarch --dataset demo --loadgen-seed 42) | tee -a "$RAW"
+  fi
 done
 grep '^BENCH_JSON ' "$RAW" | sed 's/^BENCH_JSON //' > "$LINES" || true
 
