@@ -22,6 +22,13 @@
 //! the same arena (`model="ragged_mix"`, `ragged_speedup_x`) — the
 //! paper's fewer-comparator-ops argument as wall-clock.
 //!
+//! A fifth section benches **quantized lanes** on a wide shallow forest
+//! (`model="quant_wide"`, `quant_speedup_x`): the exact u8/u16 rank-code
+//! tile path against the f32 tile path on the same arena, conformance-
+//! asserted byte-identical before timing. The recorded target is ≥ 2×
+//! (`quant_speedup_floor` in `BENCH_PALLAS.json`; CI's fast smoke uses
+//! the lenient `quant_speedup_floor_fast`).
+//!
 //! Besides the human-readable `bench ...` lines, each model emits one
 //! `BENCH_JSON {...}` line; `tools/bench_record.sh` folds those into the
 //! repo-root `BENCH_PALLAS.json` trajectory, which the CI gate diffs
@@ -171,5 +178,54 @@ fn main() {
         padded.median_ns,
         ragged.median_ns,
         ragged.throughput_per_s.unwrap_or(0.0)
+    );
+
+    // --- quantized lanes: exact u8/u16 tiles vs f32 tiles --------------
+    // The wide-forest config the ≥2× acceptance target names: many
+    // shallow trees, so the tile loop is compare-bound and lane width is
+    // the bottleneck (the fixed-point datapath argument of
+    // arXiv 1703.05853 as wall-clock).
+    let wide_params = ForestParams {
+        n_trees: if fast { 16 } else { 64 },
+        tree: TreeParams { max_depth: 5, min_samples_leaf: 1, ..TreeParams::default() },
+        bootstrap: true,
+    };
+    let wide_rf = RandomForest::fit(&ds.train, &wide_params, 7);
+    let wide_arena = ForestArena::from_forest(&wide_rf, wide_rf.max_depth());
+    let lane = wide_arena.quant_lane().unwrap_or("f32");
+    let f32_plan = BatchPlan::new(&wide_arena, Reduce::ProbAverage);
+    let quant_plan =
+        BatchPlan::new(&wide_arena, Reduce::ProbAverage).with_quant(fog::exec::QuantMode::Exact);
+    // Conformance smoke before timing: exact lanes must not move a byte.
+    assert_eq!(
+        f32_plan.execute(&x, batch),
+        quant_plan.execute(&x, batch),
+        "exact quantized tile diverged from the f32 kernel"
+    );
+    b.bench(&format!("quant_wide/f32_tiled/n{batch}"), batch, || {
+        black_box(f32_plan.execute(black_box(&x), batch));
+    });
+    let f32_tiled = b.results.last().unwrap().clone();
+    b.bench(&format!("quant_wide/quant_tiled_{lane}/n{batch}"), batch, || {
+        black_box(quant_plan.execute(black_box(&x), batch));
+    });
+    let quant_tiled = b.results.last().unwrap().clone();
+    let quant_speedup = f32_tiled.median_ns / quant_tiled.median_ns.max(1.0);
+    println!();
+    println!(
+        "speedup quant_wide batch {batch}: {quant_speedup:.2}x vs f32 tiles \
+         (f32 {:.0} ns, {lane} {:.0} ns, {} trees depth {})",
+        f32_tiled.median_ns,
+        quant_tiled.median_ns,
+        wide_arena.n_trees(),
+        wide_arena.depth()
+    );
+    println!(
+        "BENCH_JSON {{\"bench\":\"inference\",\"model\":\"quant_wide\",\"batch\":{batch},\
+         \"lanes\":\"{lane}\",\"f32_tiled_ns\":{:.0},\"quant_tiled_ns\":{:.0},\
+         \"quant_speedup_x\":{quant_speedup:.3},\"batch_tiled_per_s\":{:.1}}}",
+        f32_tiled.median_ns,
+        quant_tiled.median_ns,
+        quant_tiled.throughput_per_s.unwrap_or(0.0)
     );
 }

@@ -166,6 +166,16 @@ pub trait Classifier: Send + Sync {
         let _ = kind;
         None
     }
+
+    /// The per-feature threshold rank tables this model quantizes with,
+    /// when a [`QuantMode`](crate::exec::QuantMode) is active — shared so
+    /// the serving tier ([`ProbCache`](crate::coordinator::ProbCache))
+    /// can key on the same codes the kernel compares on, one
+    /// quantization pass per request. `None` for non-quantized models
+    /// and families without an arena.
+    fn quant_tables(&self) -> Option<Arc<crate::exec::QuantTables>> {
+        None
+    }
 }
 
 /// Config → trained model: anything that can train a [`Classifier`] from

@@ -12,8 +12,10 @@ use crate::data::Split;
 use crate::dt::{DecisionTree, FlatTree};
 use crate::energy::blocks::{AreaBlocks, EnergyBlocks};
 use crate::energy::model::{fog_cost, rf_cost, ClassifierKind, CostReport, FogStats, RfStats};
-use crate::exec::backend::{fog_tile, forest_tile};
-use crate::exec::{Backend, ForestArena, Reduce, SoftwareBackend, UarchBackend};
+use crate::exec::backend::{fog_tile, forest_tile_quant};
+use crate::exec::{
+    Backend, ForestArena, QuantMode, QuantTables, Reduce, SoftwareBackend, UarchBackend,
+};
 use crate::fog::eval::{content_start_grove, InputOutcome};
 use crate::fog::{FieldOfGroves, FogParams};
 use crate::forest::{RandomForest, VoteMode};
@@ -148,12 +150,27 @@ pub struct RfModel {
     rf: RandomForest,
     pub mode: VoteMode,
     arena: Arc<ForestArena>,
+    /// Kernel-lane quantization every prediction path runs under
+    /// (`Exact` is answer-identical to f32 by the rank-code argument).
+    quant: QuantMode,
 }
 
 impl RfModel {
     pub fn new(rf: RandomForest, mode: VoteMode) -> RfModel {
         let arena = Arc::new(ForestArena::from_forest(&rf, rf.max_depth()));
-        RfModel { rf, mode, arena }
+        RfModel { rf, mode, arena, quant: QuantMode::Off }
+    }
+
+    /// Run this model's batch paths (direct and backend-served) on
+    /// quantized integer lanes.
+    pub fn with_quant(mut self, mode: QuantMode) -> RfModel {
+        self.quant = mode;
+        self
+    }
+
+    /// The active kernel-lane quantization mode.
+    pub fn quant(&self) -> QuantMode {
+        self.quant
     }
 
     /// The trained sparse forest (feeds the energy/storage accounting).
@@ -225,10 +242,11 @@ impl Classifier for RfModel {
         // ProbAverage rows equal `RandomForest::predict_proba` bit-for-bit
         // (same per-tree accumulation order); Majority rows are vote
         // fractions — a valid distribution whose argmax is the
-        // majority-vote winner. `forest_tile` is the single kernel entry
-        // point shared with the execution backends, so direct, software-
-        // and uarch-served answers are identical by construction.
-        forest_tile(&self.arena, self.reduce(), x, n).0
+        // majority-vote winner. `forest_tile_quant` is the single kernel
+        // entry point shared with the execution backends, so direct,
+        // software- and uarch-served answers are identical by
+        // construction (under the model's one quant mode).
+        forest_tile_quant(&self.arena, self.reduce(), self.quant, x, n).0
     }
 
     // `predict_batch` keeps the trait default (argmax of the probability
@@ -248,14 +266,20 @@ impl Classifier for RfModel {
 
     fn exec_backend(&self, kind: BackendKind) -> Option<Arc<dyn Backend>> {
         let backend: Arc<dyn Backend> = match kind {
-            BackendKind::Software => {
-                Arc::new(SoftwareBackend::forest(Arc::clone(&self.arena), self.reduce()))
-            }
-            BackendKind::Uarch => {
-                Arc::new(UarchBackend::forest(Arc::clone(&self.arena), self.reduce()))
-            }
+            BackendKind::Software => Arc::new(
+                SoftwareBackend::forest(Arc::clone(&self.arena), self.reduce())
+                    .with_quant(self.quant),
+            ),
+            BackendKind::Uarch => Arc::new(
+                UarchBackend::forest(Arc::clone(&self.arena), self.reduce())
+                    .with_quant(self.quant),
+            ),
         };
         Some(backend)
+    }
+
+    fn quant_tables(&self) -> Option<Arc<QuantTables>> {
+        self.quant.is_on().then(|| Arc::clone(self.arena.quant_tables()))
     }
 }
 
@@ -385,6 +409,11 @@ impl Classifier for FogModel {
         };
         Some(backend)
     }
+
+    // `quant_tables` keeps the trait default (`None`): the FoG path stays
+    // f32 because `content_start_grove` hashes the raw f32 feature bits —
+    // keying the cache on rank codes would collide rows that draw
+    // different start groves.
 }
 
 #[cfg(test)]
@@ -424,6 +453,24 @@ mod tests {
         let model = RfModel::new(rf, VoteMode::ProbAverage);
         let replica = model.clone();
         assert!(Arc::ptr_eq(model.arena(), replica.arena()), "clone copied the arena");
+    }
+
+    #[test]
+    fn quantized_rf_model_matches_plain_bitwise() {
+        // Exact lanes through the full model path (direct batch +
+        // quant_tables plumbing): answers equal the f32 model's
+        // byte-for-byte, and only quantized models expose tables.
+        let (rf, ds) = setup();
+        for mode in [VoteMode::ProbAverage, VoteMode::Majority] {
+            let plain = RfModel::new(rf.clone(), mode);
+            let q = RfModel::new(rf.clone(), mode).with_quant(QuantMode::Exact);
+            let a = plain.predict_proba_batch(&ds.test.x, ds.test.len());
+            let b = q.predict_proba_batch(&ds.test.x, ds.test.len());
+            assert_eq!(a, b, "{mode:?}");
+            assert!(plain.quant_tables().is_none());
+            let tables = q.quant_tables().expect("quantized model exposes tables");
+            assert!(Arc::ptr_eq(&tables, q.arena().quant_tables()), "tables not shared");
+        }
     }
 
     #[test]

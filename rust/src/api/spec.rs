@@ -13,6 +13,7 @@ use crate::baselines::{Cnn, LinearSvm, Mlp, RbfSvm};
 use crate::data::Split;
 use crate::dt::TreeParams;
 use crate::energy::model::ClassifierKind;
+use crate::exec::QuantMode;
 use crate::fog::tuner::{accuracy_optimal_threshold, default_grid, threshold_sweep};
 use crate::fog::{FieldOfGroves, FogParams};
 use crate::forest::{ForestParams, RandomForest, VoteMode};
@@ -195,6 +196,10 @@ pub struct ServingSpec {
     pub router: RouterPolicy,
     /// Execution backend replicas dispatch batches through.
     pub backend: BackendKind,
+    /// Kernel-lane quantization: run forest tiles on u8/u16 rank-code
+    /// lanes ([`QuantMode::Exact`] is answer-identical to f32; lossy
+    /// trades accuracy for width). Forest-backed models only.
+    pub quant: QuantMode,
     /// Quantization step of the result-cache keys; `None` disables
     /// caching, `Some(0.0)` caches with exact-bit keys.
     pub cache_quant: Option<f32>,
@@ -215,6 +220,7 @@ impl Default for ServingSpec {
             replicas: 1,
             router: RouterPolicy::LeastLoaded,
             backend: BackendKind::Software,
+            quant: QuantMode::Off,
             cache_quant: None,
             cache_capacity: 4096,
             fleet_policy: FleetPolicyKind::default(),
@@ -381,6 +387,14 @@ impl ModelSpec {
         self
     }
 
+    /// Kernel-lane quantization mode for forest-backed models
+    /// (`Exact` = u8/u16 rank codes, answer-identical to f32; no-op for
+    /// families without an arena).
+    pub fn with_quant(mut self, mode: QuantMode) -> Self {
+        self.serving.quant = mode;
+        self
+    }
+
     /// Enable the serving result cache with the given key-quantization
     /// step (0.0 = exact-bit keys; hits are byte-identical to cold
     /// evaluation).
@@ -493,9 +507,10 @@ impl Estimator for ModelSpec {
     fn fit(&self, data: &Split, seed: u64) -> Box<dyn Classifier> {
         match &self.config {
             ModelConfig::Fog(spec) => Box::new(self.fit_fog(spec, data, seed)),
-            ModelConfig::Rf { forest, mode } => {
-                Box::new(RfModel::new(RandomForest::fit(data, forest, seed), *mode))
-            }
+            ModelConfig::Rf { forest, mode } => Box::new(
+                RfModel::new(RandomForest::fit(data, forest, seed), *mode)
+                    .with_quant(self.serving.quant),
+            ),
             ModelConfig::SvmLinear(p) => Box::new(LinearSvm::fit(data, p, seed)),
             ModelConfig::SvmRbf(p) => Box::new(RbfSvm::fit(data, p, seed)),
             ModelConfig::Mlp(p) => Box::new(Mlp::fit(data, p, seed)),
@@ -542,6 +557,7 @@ mod tests {
             .with_replicas(4)
             .with_router(RouterPolicy::RoundRobin)
             .with_backend(BackendKind::Uarch)
+            .with_quant(QuantMode::Exact)
             .with_cache_quant(0.25)
             .with_cache_capacity(128)
             .with_fleet_policy(FleetPolicyKind::Strict)
@@ -549,6 +565,7 @@ mod tests {
         assert_eq!(spec.serving.replicas, 4);
         assert_eq!(spec.serving.router, RouterPolicy::RoundRobin);
         assert_eq!(spec.serving.backend, BackendKind::Uarch);
+        assert_eq!(spec.serving.quant, QuantMode::Exact);
         assert_eq!(spec.serving.cache_quant, Some(0.25));
         assert_eq!(spec.serving.cache_capacity, 128);
         assert_eq!(spec.serving.fleet_policy, FleetPolicyKind::Strict);
@@ -558,6 +575,7 @@ mod tests {
         let plain = ModelSpec::by_name("rf").unwrap();
         assert_eq!(plain.serving.replicas, 1);
         assert_eq!(plain.serving.backend, BackendKind::Software);
+        assert_eq!(plain.serving.quant, QuantMode::Off);
         assert!(plain.serving.cache_quant.is_none());
         assert_eq!(plain.serving.fleet_policy, FleetPolicyKind::Downgrade);
         assert!(plain.serving.energy_budget_nj.is_none());

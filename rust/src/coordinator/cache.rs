@@ -19,11 +19,19 @@
 //! locked LRU map, so concurrent worker threads filling completed
 //! batches contend only 1/N of the time. Eviction is least-recently-used
 //! within a shard (a recency tick bumped on every hit).
+//!
+//! When the model serves on quantized kernel lanes, the cache can share
+//! the arena's per-feature rank tables ([`ProbCache::with_tables`]):
+//! keys become the same threshold-rank codes the kernel compares on, so
+//! the serving tier quantizes each request once, and two rows that the
+//! exact-quantized kernel cannot distinguish share an entry (semantically
+//! lossless for rank-code-pure models).
 
+use crate::exec::QuantTables;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Cache configuration carried by the sharded-server config.
 #[derive(Clone, Copy, Debug)]
@@ -103,6 +111,10 @@ pub struct ProbCache {
     shards: Vec<Mutex<Shard>>,
     per_shard_cap: usize,
     quant_step: f32,
+    /// When set, keys are the arena's per-feature threshold-rank codes
+    /// instead of `quant_step` buckets (one quantization scheme shared
+    /// with the kernel).
+    tables: Option<Arc<QuantTables>>,
     insertions: AtomicU64,
     evictions: AtomicU64,
 }
@@ -116,9 +128,19 @@ impl ProbCache {
             // total budget (n_shards ≤ capacity keeps this ≥ 1).
             per_shard_cap: cfg.capacity / n_shards,
             quant_step: cfg.quant_step,
+            tables: None,
             insertions: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
         }
+    }
+
+    /// Key on the model's per-feature threshold-rank codes (the same
+    /// tables the quantized kernel compares on) instead of `quant_step`
+    /// buckets. Hit/miss mechanics — step-0 exactness of the returned
+    /// row, LRU, sharding — are unchanged; only the key function is.
+    pub fn with_tables(mut self, tables: Option<Arc<QuantTables>>) -> ProbCache {
+        self.tables = tables;
+        self
     }
 
     pub fn quant_step(&self) -> f32 {
@@ -126,9 +148,15 @@ impl ProbCache {
     }
 
     /// Quantize a feature row into its cache key (FNV-1a over the
-    /// per-feature bucket codes).
+    /// per-feature codes: shared rank codes when the arena's tables are
+    /// attached, `quant_step` buckets otherwise).
     pub fn key(&self, row: &[f32]) -> CacheKey {
-        let quant: Vec<u64> = row.iter().map(|&v| quantize(v, self.quant_step)).collect();
+        let quant: Vec<u64> = match &self.tables {
+            Some(t) => {
+                row.iter().enumerate().map(|(k, &v)| t.code(k, v) as u64).collect()
+            }
+            None => row.iter().map(|&v| quantize(v, self.quant_step)).collect(),
+        };
         let mut hash = 0xCBF29CE484222325u64;
         for &q in &quant {
             hash = (hash ^ q).wrapping_mul(0x100000001B3);
@@ -339,6 +367,32 @@ mod tests {
         assert_eq!(c.get(&k_a), Some(vec![0.2, 0.8]));
         let occupied: usize = c.len();
         assert_eq!(occupied, 1, "collision created a duplicate entry");
+    }
+
+    #[test]
+    fn rank_code_keys_follow_kernel_equivalence() {
+        // Satellite pin: with the arena's tables attached, keys are the
+        // kernel's rank codes — rows the exact-quantized kernel cannot
+        // distinguish share an entry, rows it separates never collide —
+        // and step-0 hit mechanics (a hit returns the inserted row
+        // byte-identically) are unchanged.
+        let tables =
+            Arc::new(QuantTables::build(2, [(0usize, 1.0f32), (0, 3.0), (1, 0.5)].into_iter()));
+        let c = cache(64, 0.0).with_tables(Some(Arc::clone(&tables)));
+        // 0.2 and 0.9 sit below every feature-0 cut → same codes.
+        let k_a = c.key(&[0.2, 0.1]);
+        let k_b = c.key(&[0.9, 0.3]);
+        assert_eq!(k_a, k_b, "kernel-indistinguishable rows must share a key");
+        // 2.0 crosses the cut at 1.0 → the kernel separates these rows.
+        assert_ne!(k_a, c.key(&[2.0, 0.1]));
+        // NaN codes to 0 exactly like the kernel's rank coder.
+        assert_eq!(c.key(&[f32::NAN, 0.1]), k_a);
+        c.insert(k_a.clone(), vec![0.3, 0.7]);
+        assert_eq!(c.get(&k_b), Some(vec![0.3, 0.7]));
+        // Without tables the same config keys by bit pattern (unchanged
+        // baseline behavior).
+        let plain = cache(64, 0.0);
+        assert_ne!(plain.key(&[0.2, 0.1]), plain.key(&[0.9, 0.3]));
     }
 
     #[test]

@@ -133,12 +133,14 @@ impl ShardedServer {
         let (resp_tx, resp_rx) = channel::<Response>();
         let router = Arc::new(ShardRouter::new(cfg.router, n_replicas, cfg.router_seed));
         // A zero-capacity cache config means caching off, not a cache
-        // that misses every lookup.
+        // that misses every lookup. Quantized models hand the cache their
+        // arena's rank tables so request rows are coded once, with the
+        // same per-feature codes the kernel compares on.
         let cache = cfg
             .cache
             .as_ref()
             .filter(|c| c.capacity > 0)
-            .map(|c| Arc::new(ProbCache::new(c)));
+            .map(|c| Arc::new(ProbCache::new(c).with_tables(model.quant_tables())));
         let n_features = model.n_features();
         let replicas = (0..n_replicas)
             .map(|r| {

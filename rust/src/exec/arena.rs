@@ -48,8 +48,30 @@
 //! / [`skipped_ops_per_eval_range`](ForestArena::skipped_ops_per_eval_range)
 //! expose what the software kernel actually walks vs. skips.
 
+//!
+//! ## Quantized fixed-point lanes
+//!
+//! Packing also computes per-feature threshold-code tables
+//! ([`QuantTables`], see `exec::quant` — the fixed-point datapath the
+//! embedded comparator hardware actually ships, arXiv 1703.05853) and
+//! emits parallel integer threshold arrays `thr_q8`/`thr_q16` alongside
+//! `thr` whenever the codes fit the lane width. The tiled kernel core
+//! (the crate-private `ForestArena::traverse_tile_lanes`) is generic
+//! over the lane type, so the same stride-1 inner compare loop runs on
+//! f32, u8 or u16 columns; exact rank codes make the integer walk
+//! byte-identical to the f32 walk (pinned by `rust/tests/quant.rs`). A
+//! per-grove **depth-sorted visit order** (stable permutation
+//! [`visit_order`](ForestArena::visit_order) + inverse
+//! [`visit_rank`](ForestArena::visit_rank), rebuilt whenever the grove
+//! partition changes) turns each grove's per-level live set into a prefix
+//! range, dropping the per-tree live-depth branch from the inner loop;
+//! cursor rows stay indexed by original tree, so leaf/prob accumulation
+//! order — and therefore every f32 sum — is unchanged.
+
+use super::quant::{QuantTables, QuantizedLane};
 use crate::dt::FlatTree;
 use crate::forest::RandomForest;
+use std::sync::Arc;
 
 /// Threshold sentinel check shared with `Grove`'s storage accounting: a
 /// node is *live* (a real trained split, not complete-tree padding) iff
@@ -57,6 +79,51 @@ use crate::forest::RandomForest;
 #[inline]
 fn is_live(thr: f32) -> bool {
     thr.is_finite() && thr < 1e37
+}
+
+/// Rank-code the level-major threshold array into lane `L`: live splits
+/// get their per-feature cut rank, dead padding the lane's `DEAD`
+/// sentinel (codes never reach it, so dead slots route left exactly like
+/// `x > +inf`). Empty when the codes don't fit the lane.
+fn quantize_thresholds<L: QuantizedLane>(
+    feat: &[i32],
+    thr: &[f32],
+    q: &QuantTables,
+    fits: bool,
+) -> Vec<L> {
+    if !fits {
+        return Vec::new();
+    }
+    feat.iter()
+        .zip(thr)
+        .map(|(&k, &t)| {
+            if is_live(t) {
+                L::from_usize(q.thr_code(k as usize, t))
+            } else {
+                L::DEAD
+            }
+        })
+        .collect()
+}
+
+/// One tree-level step of the tiled walk over lane type `L`: advance the
+/// tile's cursors through this tree's `w = 2^lvl` node slots.
+#[inline(always)]
+fn step_level<C: CursorIdx, L: Copy + PartialOrd>(
+    xt: &[L],
+    n: usize,
+    feat: &[i32],
+    thr: &[L],
+    cur: &mut [C],
+) {
+    for (s, ci) in cur.iter_mut().enumerate() {
+        let i = ci.as_usize();
+        // Feature-major tile: the column of feat[i] is the contiguous
+        // run xt[feat[i]·n ..][..n], so samples sharing a cursor (all of
+        // them at level 0, most at shallow levels) read stride-1.
+        let go_right = xt[feat[i] as usize * n + s] > thr[i];
+        *ci = C::from_usize(2 * i + go_right as usize);
+    }
 }
 
 /// Cursor integer of the tiled traversal scratch: `u16` halves the hot
@@ -121,6 +188,23 @@ pub struct ForestArena {
     /// only dead padding slots, so traversal exits here and shifts the
     /// cursor into the bottom level in closed form (`i << remaining`).
     live_depth: Vec<u16>,
+    /// Per-feature threshold-code tables (exact rank codes + lossy
+    /// ranges), shared with the serving tier's cache keys via the `Arc`.
+    quant: Arc<QuantTables>,
+    /// Level-major u8 rank codes of `thr` (`u8::MAX` = dead slot);
+    /// empty when some feature has too many distinct cuts for u8.
+    thr_q8: Vec<u8>,
+    /// Level-major u16 rank codes of `thr` (`u16::MAX` = dead slot);
+    /// empty when the forest overflows u16 codes.
+    thr_q16: Vec<u16>,
+    /// Per-grove stable descending-live-depth tree permutation: grove
+    /// `g`'s segment `visit[grove_off[g]..grove_off[g+1]]` lists that
+    /// grove's tree ids deepest-first, so the tile kernel's per-level
+    /// live set is a prefix of each segment.
+    visit: Vec<u32>,
+    /// Inverse of `visit`: `visit_rank[t]` = position of tree `t` in the
+    /// visit permutation (callers that need "when does tree t run").
+    visit_rank: Vec<u32>,
 }
 
 impl ForestArena {
@@ -183,7 +267,15 @@ impl ForestArena {
             leaf[tree_leaf_off[ti]..tree_leaf_off[ti] + n_leaves * c]
                 .copy_from_slice(&t.leaf);
         }
-        ForestArena {
+        // Per-feature cut tables over every live split, then the parallel
+        // integer threshold arrays for each lane width the codes fit.
+        let quant = Arc::new(QuantTables::build(
+            f,
+            feat.iter().zip(&thr).filter(|(_, t)| is_live(**t)).map(|(&k, &t)| (k as usize, t)),
+        ));
+        let thr_q8 = quantize_thresholds::<u8>(&feat, &thr, &quant, quant.fits_u8());
+        let thr_q16 = quantize_thresholds::<u16>(&feat, &thr, &quant, quant.fits_u16());
+        let mut arena = ForestArena {
             depth,
             n_features: f,
             n_classes: c,
@@ -195,7 +287,14 @@ impl ForestArena {
             tree_leaf_off,
             grove_off: vec![0, n_trees],
             live_depth,
-        }
+            quant,
+            thr_q8,
+            thr_q16,
+            visit: Vec::new(),
+            visit_rank: Vec::new(),
+        };
+        arena.rebuild_visit_order();
+        arena
     }
 
     /// Pack a trained forest (flattened at `pad_depth`, clamped up to the
@@ -220,7 +319,27 @@ impl ForestArena {
             off.push(off.last().unwrap() + s);
         }
         self.grove_off = off;
+        // The depth-sorted visit order is per grove, so a new partition
+        // invalidates it.
+        self.rebuild_visit_order();
         self
+    }
+
+    /// Recompute the per-grove stable descending-live-depth visit
+    /// permutation and its inverse. Stability keeps equal-depth trees in
+    /// original order, so the permutation is deterministic.
+    fn rebuild_visit_order(&mut self) {
+        let mut visit: Vec<u32> = (0..self.n_trees as u32).collect();
+        for g in 0..self.n_groves() {
+            let (lo, hi) = self.grove_range(g);
+            visit[lo..hi].sort_by_key(|&t| std::cmp::Reverse(self.live_depth[t as usize]));
+        }
+        let mut rank = vec![0u32; self.n_trees];
+        for (pos, &t) in visit.iter().enumerate() {
+            rank[t as usize] = pos as u32;
+        }
+        self.visit = visit;
+        self.visit_rank = rank;
     }
 
     // --- shape accessors ---------------------------------------------------
@@ -269,6 +388,76 @@ impl ForestArena {
     /// level iterations the ragged tile kernel runs for that range.
     pub fn max_live_depth_range(&self, lo: usize, hi: usize) -> usize {
         self.live_depth[lo..hi].iter().map(|&d| d as usize).max().unwrap_or(0)
+    }
+
+    /// The per-feature threshold-code tables computed at pack time
+    /// (shared with the serving tier's cache keys through the `Arc`).
+    pub fn quant_tables(&self) -> &Arc<QuantTables> {
+        &self.quant
+    }
+
+    /// Narrowest integer lane whose exact rank codes fit this arena
+    /// (`"u8"` / `"u16"`), or `None` when only f32 lanes are exact.
+    pub fn quant_lane(&self) -> Option<&'static str> {
+        if !self.thr_q8.is_empty() {
+            Some("u8")
+        } else if !self.thr_q16.is_empty() {
+            Some("u16")
+        } else {
+            None
+        }
+    }
+
+    /// Level-major u8 rank codes of the threshold table, when they fit.
+    pub(crate) fn thr_q8(&self) -> Option<&[u8]> {
+        (!self.thr_q8.is_empty()).then_some(&self.thr_q8[..])
+    }
+
+    /// Level-major u16 rank codes of the threshold table, when they fit.
+    pub(crate) fn thr_q16(&self) -> Option<&[u16]> {
+        (!self.thr_q16.is_empty()).then_some(&self.thr_q16[..])
+    }
+
+    /// Build an owned lossy threshold table at `bits` (affine codes over
+    /// each feature's live-threshold range; dead slots keep the lane's
+    /// sentinel so they still route left).
+    pub(crate) fn lossy_thr<L: QuantizedLane>(&self, bits: u8) -> Vec<L> {
+        self.feat
+            .iter()
+            .zip(&self.thr)
+            .map(|(&k, &t)| {
+                if is_live(t) {
+                    L::from_usize(self.quant.lossy_code(k as usize, t, bits))
+                } else {
+                    L::DEAD
+                }
+            })
+            .collect()
+    }
+
+    /// The level-major f32 threshold table (the f32 lane's `thr_tab`).
+    pub(crate) fn thr_table(&self) -> &[f32] {
+        &self.thr
+    }
+
+    /// The per-grove stable descending-live-depth visit permutation.
+    pub fn visit_order(&self) -> &[u32] {
+        &self.visit
+    }
+
+    /// Inverse of [`visit_order`](ForestArena::visit_order):
+    /// `visit_rank(t)` = position of tree `t` within the permutation.
+    pub fn visit_rank(&self, t: usize) -> usize {
+        self.visit_rank[t] as usize
+    }
+
+    /// The grove-partition span `[glo, ghi)` exactly covering the tree
+    /// range `[lo, hi)`, or `None` when the range is not grove-aligned
+    /// (the kernel then keeps the per-tree live-depth branch).
+    fn grove_span(&self, lo: usize, hi: usize) -> Option<(usize, usize)> {
+        let glo = self.grove_off.binary_search(&lo).ok()?;
+        let ghi = self.grove_off.binary_search(&hi).ok()?;
+        (glo < ghi).then_some((glo, ghi))
     }
 
     // --- traversal ---------------------------------------------------------
@@ -393,10 +582,38 @@ impl ForestArena {
         cursors: &mut [C],
         padded_walk: bool,
     ) {
+        self.traverse_tile_lanes(lo, hi, xt, n, cursors, &self.thr, padded_walk);
+    }
+
+    /// The lane-generic kernel core: identical traversal over any
+    /// `PartialOrd` lane type `L` — f32 columns against `thr`, or
+    /// integer rank-code columns against `thr_q8`/`thr_q16` (same
+    /// level-major layout, `L::MAX` dead sentinel). Exact rank codes
+    /// preserve every `>` outcome, so the integer walk is byte-identical
+    /// to the f32 walk.
+    ///
+    /// Grove-aligned non-padded ranges iterate each grove's trees in the
+    /// depth-sorted [`visit_order`](ForestArena::visit_order): the live
+    /// set at level `ℓ` is then a prefix of the grove segment (one
+    /// `partition_point` per level, no per-tree live-depth branch in the
+    /// inner loop). Other ranges keep the original order with the
+    /// branch; cursor rows are written per original tree either way, so
+    /// downstream leaf/prob accumulation order never changes.
+    pub(crate) fn traverse_tile_lanes<C: CursorIdx, L: Copy + PartialOrd>(
+        &self,
+        lo: usize,
+        hi: usize,
+        xt: &[L],
+        n: usize,
+        cursors: &mut [C],
+        thr_tab: &[L],
+        padded_walk: bool,
+    ) {
         debug_assert!(lo <= hi && hi <= self.n_trees, "bad tree range {lo}..{hi}");
         let t_cnt = hi - lo;
         assert_eq!(xt.len(), n * self.n_features, "tile shape mismatch");
         assert_eq!(cursors.len(), t_cnt * n, "cursor buffer shape mismatch");
+        assert_eq!(thr_tab.len(), self.thr.len(), "threshold table shape mismatch");
         cursors.iter_mut().for_each(|ci| *ci = C::ZERO);
         let live = |j: usize| {
             if padded_walk {
@@ -406,25 +623,43 @@ impl ForestArena {
             }
         };
         let max_depth = if padded_walk { self.depth } else { self.max_live_depth_range(lo, hi) };
+        let span = if padded_walk { None } else { self.grove_span(lo, hi) };
         for lvl in 0..max_depth {
             let w = 1usize << lvl;
             let base = self.level_off[lvl];
-            for j in 0..t_cnt {
-                if live(j) <= lvl {
-                    continue; // only dead padding from here down
+            if let Some((glo, ghi)) = span {
+                for g in glo..ghi {
+                    let (g_lo, g_hi) = self.grove_range(g);
+                    let order = &self.visit[g_lo..g_hi];
+                    // Descending live depth ⇒ the still-live trees are
+                    // exactly this prefix of the grove's visit segment.
+                    let cnt =
+                        order.partition_point(|&t| self.live_depth[t as usize] as usize > lvl);
+                    for &t in &order[..cnt] {
+                        let t = t as usize;
+                        let off = base + t * w;
+                        step_level(
+                            xt,
+                            n,
+                            &self.feat[off..off + w],
+                            &thr_tab[off..off + w],
+                            &mut cursors[(t - lo) * n..(t - lo + 1) * n],
+                        );
+                    }
                 }
-                let off = base + (lo + j) * w;
-                let feat = &self.feat[off..off + w];
-                let thr = &self.thr[off..off + w];
-                let cur = &mut cursors[j * n..(j + 1) * n];
-                for (s, ci) in cur.iter_mut().enumerate() {
-                    let i = ci.as_usize();
-                    // Feature-major tile: the column of feat[i] is the
-                    // contiguous run xt[feat[i]·n ..][..n], so samples
-                    // sharing a cursor (all of them at level 0, most at
-                    // shallow levels) read stride-1.
-                    let go_right = xt[feat[i] as usize * n + s] > thr[i];
-                    *ci = C::from_usize(2 * i + go_right as usize);
+            } else {
+                for j in 0..t_cnt {
+                    if live(j) <= lvl {
+                        continue; // only dead padding from here down
+                    }
+                    let off = base + (lo + j) * w;
+                    step_level(
+                        xt,
+                        n,
+                        &self.feat[off..off + w],
+                        &thr_tab[off..off + w],
+                        &mut cursors[j * n..(j + 1) * n],
+                    );
                 }
             }
         }
@@ -787,6 +1022,90 @@ mod tests {
             arena.ops_per_eval_range(0, arena.n_trees()),
         );
         assert!(arena.skipped_ops_per_eval_range(0, arena.n_trees()) > 0);
+    }
+
+    #[test]
+    fn visit_order_is_a_stable_descending_permutation_per_grove() {
+        let (trees, _) = ragged_flats();
+        let n = trees.len();
+        let arena = ForestArena::from_flat_trees(&trees).with_grove_sizes(&[3, 3, n - 6]);
+        for g in 0..arena.n_groves() {
+            let (lo, hi) = arena.grove_range(g);
+            let seg = &arena.visit_order()[lo..hi];
+            let mut sorted: Vec<u32> = seg.to_vec();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (lo as u32..hi as u32).collect::<Vec<_>>(), "grove {g}");
+            for w in seg.windows(2) {
+                let (a, b) = (w[0] as usize, w[1] as usize);
+                let (da, db) = (arena.live_depth(a), arena.live_depth(b));
+                assert!(
+                    da > db || (da == db && a < b),
+                    "grove {g}: visit order not stable-descending at {a}→{b}"
+                );
+            }
+        }
+        // visit_rank is the inverse permutation.
+        for t in 0..n {
+            assert_eq!(arena.visit_order()[arena.visit_rank(t)] as usize, t);
+        }
+    }
+
+    #[test]
+    fn quantized_lanes_match_f32_walk_bitwise() {
+        // The in-module pin of the rank-code guarantee: quantizing the
+        // transposed tile through the pack-time tables and walking the
+        // u8 threshold codes reaches exactly the f32 walk's cursors.
+        let (trees, ds) = ragged_flats();
+        let arena = ForestArena::from_flat_trees(&trees);
+        let thr_q = arena.thr_q8().expect("demo forest fits u8 rank codes");
+        assert_eq!(arena.quant_lane(), Some("u8"));
+        let q = arena.quant_tables();
+        let n = 13.min(ds.test.len());
+        let f = arena.n_features();
+        let t_cnt = arena.n_trees();
+        let mut xt = vec![0.0f32; n * f];
+        for s in 0..n {
+            for k in 0..f {
+                xt[k * n + s] = ds.test.x[s * f + k];
+            }
+        }
+        let mut c_f32 = vec![0u16; t_cnt * n];
+        arena.traverse_tile_transposed(0, t_cnt, &xt, n, &mut c_f32, false);
+        let mut xq = vec![0u8; n * f];
+        for k in 0..f {
+            for s in 0..n {
+                xq[k * n + s] = u8::try_from(q.code(k, xt[k * n + s])).unwrap();
+            }
+        }
+        let mut c_q = vec![0u16; t_cnt * n];
+        arena.traverse_tile_lanes(0, t_cnt, &xq, n, &mut c_q, thr_q, false);
+        assert_eq!(c_q, c_f32, "u8 lanes diverged from the f32 walk");
+    }
+
+    #[test]
+    fn grove_aligned_and_fallback_ranges_agree() {
+        // Tree range (0, 4) spans groves 0–1 exactly (prefix-live visit
+        // path); (1, 3) straddles a grove boundary (per-tree-branch
+        // fallback). Both must reach the per-sample leaf indices.
+        let (trees, ds) = ragged_flats();
+        let n_trees = trees.len();
+        let arena = ForestArena::from_flat_trees(&trees).with_grove_sizes(&[2, 2, n_trees - 4]);
+        let n = 9.min(ds.test.len());
+        let f = arena.n_features();
+        for (lo, hi) in [(0usize, 4usize), (1, 3)] {
+            let mut cursors = vec![0u32; (hi - lo) * n];
+            arena.traverse_tile(lo, hi, &ds.test.x[..n * f], n, &mut cursors);
+            for s in 0..n {
+                let x = ds.test.row(s);
+                for j in 0..hi - lo {
+                    assert_eq!(
+                        cursors[j * n + s] as usize,
+                        arena.leaf_index(lo + j, x),
+                        "range {lo}..{hi} tree {j} row {s}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -37,6 +37,7 @@
 
 use super::arena::ForestArena;
 use super::batch::{BatchPlan, Reduce};
+use super::quant::QuantMode;
 use crate::api::ProbMatrix;
 use crate::energy::blocks::EnergyBlocks;
 use crate::fog::eval::content_start_grove;
@@ -170,7 +171,7 @@ pub trait Backend: Send + Sync {
 /// a FoG operating point over its grove ring.
 #[derive(Clone, Debug)]
 enum TilePlan {
-    Forest { arena: Arc<ForestArena>, reduce: Reduce },
+    Forest { arena: Arc<ForestArena>, reduce: Reduce, quant: QuantMode },
     Fog { fog: FieldOfGroves, params: FogParams },
 }
 
@@ -184,7 +185,23 @@ pub(crate) fn forest_tile(
     x: &[f32],
     n: usize,
 ) -> (ProbMatrix, ExecReport) {
-    let probs = BatchPlan::new(arena, reduce).execute(x, n);
+    forest_tile_quant(arena, reduce, QuantMode::Off, x, n)
+}
+
+/// [`forest_tile`] with an integer-lane selection: the [`BatchPlan`]
+/// codes the feature tile through the arena's per-feature rank tables
+/// ([`super::quant::QuantTables`]) and compares on u8/u16 lanes. Exact
+/// mode is answer-identical to the f32 kernel; accounting stays the
+/// padded-depth comparator count either way — quantization changes the
+/// lane width, never the number of comparisons.
+pub(crate) fn forest_tile_quant(
+    arena: &ForestArena,
+    reduce: Reduce,
+    quant: QuantMode,
+    x: &[f32],
+    n: usize,
+) -> (ProbMatrix, ExecReport) {
+    let probs = BatchPlan::new(arena, reduce).with_quant(quant).execute(x, n);
     // `comparator_ops` stays the padded-depth accounting number (the
     // μarch suites pin it); the ragged kernel's saving is reported
     // separately as `levels_skipped`.
@@ -246,12 +263,23 @@ pub struct SoftwareBackend {
 impl SoftwareBackend {
     /// Whole-forest reduction over `[0, n_trees)` of `arena`.
     pub fn forest(arena: Arc<ForestArena>, reduce: Reduce) -> SoftwareBackend {
-        SoftwareBackend { plan: TilePlan::Forest { arena, reduce } }
+        SoftwareBackend {
+            plan: TilePlan::Forest { arena, reduce, quant: QuantMode::Off },
+        }
     }
 
     /// A FoG operating point (threshold + hop cap + start-grove seed).
     pub fn fog(fog: FieldOfGroves, params: FogParams) -> SoftwareBackend {
         SoftwareBackend { plan: TilePlan::Fog { fog, params } }
+    }
+
+    /// Run forest tiles on quantized integer lanes (no-op for FoG plans
+    /// — the per-sample grove walk stays f32).
+    pub fn with_quant(mut self, mode: QuantMode) -> SoftwareBackend {
+        if let TilePlan::Forest { quant, .. } = &mut self.plan {
+            *quant = mode;
+        }
+        self
     }
 }
 
@@ -262,7 +290,9 @@ impl Backend for SoftwareBackend {
 
     fn evaluate_tile(&self, x: &[f32], n: usize) -> (ProbMatrix, ExecReport) {
         match &self.plan {
-            TilePlan::Forest { arena, reduce } => forest_tile(arena, *reduce, x, n),
+            TilePlan::Forest { arena, reduce, quant } => {
+                forest_tile_quant(arena, *reduce, *quant, x, n)
+            }
             TilePlan::Fog { fog, params } => fog_tile(fog, params, x, n),
         }
     }
@@ -288,9 +318,19 @@ impl UarchBackend {
     /// serially through one PE tile.
     pub fn forest(arena: Arc<ForestArena>, reduce: Reduce) -> UarchBackend {
         UarchBackend {
-            plan: TilePlan::Forest { arena, reduce },
+            plan: TilePlan::Forest { arena, reduce, quant: QuantMode::Off },
             eb: EnergyBlocks::default(),
         }
+    }
+
+    /// Run forest tiles on quantized integer lanes. Exact mode mirrors
+    /// the fixed-point datapath the paper's comparator hardware would
+    /// ship (arXiv 1703.05853); answers and accounting are unchanged.
+    pub fn with_quant(mut self, mode: QuantMode) -> UarchBackend {
+        if let TilePlan::Forest { quant, .. } = &mut self.plan {
+            *quant = mode;
+        }
+        self
     }
 
     /// A FoG operating point driven through the grove ring (§3.2.2,
@@ -313,12 +353,12 @@ impl Backend for UarchBackend {
 
     fn evaluate_tile(&self, x: &[f32], n: usize) -> (ProbMatrix, ExecReport) {
         match &self.plan {
-            TilePlan::Forest { arena, reduce } => {
+            TilePlan::Forest { arena, reduce, quant } => {
                 // Answers from the identical software kernel; accounting
                 // from the single-tile RF accelerator model: every sample
                 // walks all trees in parallel (PE latency is depth-bound),
                 // moving one Γ-byte queue word in and out.
-                let (probs, sw) = forest_tile(arena, *reduce, x, n);
+                let (probs, sw) = forest_tile_quant(arena, *reduce, *quant, x, n);
                 let grove = Grove::from_arena(Arc::clone(arena), 0, arena.n_trees());
                 let lat = PeModel::default().latency(&grove).max(1);
                 let gamma = (1 + arena.n_features() + 1 + arena.n_classes()) as u64;
@@ -426,6 +466,28 @@ mod tests {
         assert_eq!(r_sw.hops_total, r_ua.hops_total);
         assert!(r_ua.cycles > 0 && r_ua.energy_nj > 0.0);
         assert_eq!(r_sw.cycles, 0);
+    }
+
+    #[test]
+    fn quantized_backends_keep_answers_and_accounting() {
+        // Exact lanes on both backends: probabilities and the padded-
+        // depth comparator accounting are byte-identical to QuantMode::Off.
+        let (arena, _, ds) = setup();
+        let n = ds.test.len();
+        let (p_off, r_off) = SoftwareBackend::forest(Arc::clone(&arena), Reduce::ProbAverage)
+            .evaluate_tile(&ds.test.x, n);
+        let (p_q, r_q) = SoftwareBackend::forest(Arc::clone(&arena), Reduce::ProbAverage)
+            .with_quant(QuantMode::Exact)
+            .evaluate_tile(&ds.test.x, n);
+        assert_eq!(p_off, p_q, "exact quantization changed a software answer");
+        assert_eq!(r_off, r_q, "quantization changed software accounting");
+        let (u_off, ur_off) = UarchBackend::forest(Arc::clone(&arena), Reduce::ProbAverage)
+            .evaluate_tile(&ds.test.x, n);
+        let (u_q, ur_q) = UarchBackend::forest(Arc::clone(&arena), Reduce::ProbAverage)
+            .with_quant(QuantMode::Exact)
+            .evaluate_tile(&ds.test.x, n);
+        assert_eq!(u_off, u_q, "exact quantization changed a uarch answer");
+        assert_eq!(ur_off, ur_q, "quantization changed uarch accounting");
     }
 
     #[test]

@@ -25,6 +25,14 @@
 //!   depth allows (`depth ≤ 15`), halving the hot state, and is sized to
 //!   the worker chunk's actual rows, never the full-tile worst case.
 //!
+//! * **Quantized integer lanes** ([`BatchPlan::with_quant`]) — the tile
+//!   transpose runs each feature value through the arena's pack-time
+//!   threshold-code tables (`exec::quant`; the fixed-point comparator
+//!   datapath of arXiv 1703.05853) so the inner compare loop runs on
+//!   u8/u16 columns against `thr_q8`/`thr_q16`. Exact rank codes keep
+//!   the walk byte-identical to f32; lossy affine codes trade a bounded
+//!   accuracy delta for a fixed lane width.
+//!
 //! The floating-point reduction order is *identical* to the per-tree
 //! reference paths (`RandomForest::predict_proba`, per-tree majority
 //! votes): trees accumulate in index order and the average is applied
@@ -35,8 +43,10 @@
 //! baseline).
 
 use super::arena::{CursorIdx, ForestArena};
+use super::quant::{QuantMode, QuantizedLane};
 use crate::api::ProbMatrix;
 use crate::util::threadpool::{num_threads, par_row_chunks_mut};
+use std::borrow::Cow;
 
 /// Historical default tile; [`BatchPlan::auto_tile`] supersedes it but
 /// plans fall back to it if the footprint model degenerates.
@@ -73,6 +83,17 @@ pub enum Reduce {
     MajorityVote,
 }
 
+/// The resolved feature/threshold lane a plan's tiles run on: f32 (no
+/// quantization), or integer rank/affine codes. Exact lanes borrow the
+/// arena's pack-time tables; lossy lanes own a table built at
+/// [`BatchPlan::with_quant`] time.
+#[derive(Clone, Debug)]
+enum LanePlan<'a> {
+    F32,
+    U8(Cow<'a, [u8]>),
+    U16(Cow<'a, [u16]>),
+}
+
 /// A configured batch evaluation over a tree range of an arena.
 #[derive(Clone, Debug)]
 pub struct BatchPlan<'a> {
@@ -84,6 +105,10 @@ pub struct BatchPlan<'a> {
     /// Bench/conformance baseline: walk every padded level instead of
     /// exiting at each tree's live depth (results identical either way).
     padded_walk: bool,
+    /// Requested quantization mode (see [`BatchPlan::with_quant`]).
+    quant: QuantMode,
+    /// Lane resolved from `quant` and the arena's code widths.
+    lanes: LanePlan<'a>,
 }
 
 impl<'a> BatchPlan<'a> {
@@ -98,7 +123,16 @@ impl<'a> BatchPlan<'a> {
     pub fn over_range(arena: &'a ForestArena, lo: usize, hi: usize, reduce: Reduce) -> BatchPlan<'a> {
         assert!(lo < hi && hi <= arena.n_trees(), "bad tree range {lo}..{hi}");
         let tile = Self::auto_tile(arena, hi - lo);
-        BatchPlan { arena, lo, hi, reduce, tile, padded_walk: false }
+        BatchPlan {
+            arena,
+            lo,
+            hi,
+            reduce,
+            tile,
+            padded_walk: false,
+            quant: QuantMode::Off,
+            lanes: LanePlan::F32,
+        }
     }
 
     /// Pick a tile size from the plan's hot-scratch footprint — cursor
@@ -135,6 +169,57 @@ impl<'a> BatchPlan<'a> {
         self
     }
 
+    /// Run the tiles on quantized integer feature lanes. `Exact` picks
+    /// the narrowest lane whose pack-time rank codes fit this arena (u8,
+    /// then u16) and is byte-identical to the f32 walk — when neither
+    /// width fits, the plan silently keeps f32 lanes: the mode is a
+    /// *permission* to quantize, never a change of answers. `Lossy`
+    /// builds an owned affine threshold table here and may move answers
+    /// within the accuracy-delta bound pinned by `tests/quant.rs`.
+    pub fn with_quant(mut self, mode: QuantMode) -> BatchPlan<'a> {
+        self.quant = mode;
+        self.lanes = match mode {
+            QuantMode::Off => LanePlan::F32,
+            QuantMode::Exact => {
+                if let Some(t) = self.arena.thr_q8() {
+                    LanePlan::U8(Cow::Borrowed(t))
+                } else if let Some(t) = self.arena.thr_q16() {
+                    LanePlan::U16(Cow::Borrowed(t))
+                } else {
+                    LanePlan::F32
+                }
+            }
+            QuantMode::Lossy { bits } => {
+                if bits <= 8 {
+                    LanePlan::U8(Cow::Owned(self.arena.lossy_thr::<u8>(bits)))
+                } else {
+                    LanePlan::U16(Cow::Owned(self.arena.lossy_thr::<u16>(bits)))
+                }
+            }
+        };
+        self
+    }
+
+    /// The lane the tiles actually run on (`"f32"`, `"u8"`, `"u16"`) —
+    /// the BENCH_JSON / serve-log label.
+    pub fn lane_label(&self) -> &'static str {
+        match &self.lanes {
+            LanePlan::F32 => "f32",
+            LanePlan::U8(_) => "u8",
+            LanePlan::U16(_) => "u16",
+        }
+    }
+
+    /// Does an `n`-row batch skip the quantized transpose scratch?
+    /// Exact codes answer byte-identically on f32 lanes, so below the
+    /// parallel-grain clamp the per-tile quantizing transpose costs more
+    /// than it saves and the plan falls back to f32. Lossy lanes *are*
+    /// the answer, so they always quantize — results must not depend on
+    /// batch composition (a sharded replica sees arbitrary batch sizes).
+    fn quant_skipped_for_tiny_batch(&self, n: usize) -> bool {
+        !matches!(self.quant, QuantMode::Lossy { .. }) && n < MIN_GRAIN_ROWS
+    }
+
     /// The tile size this plan will cut batches into.
     pub fn tile(&self) -> usize {
         self.tile
@@ -159,13 +244,46 @@ impl<'a> BatchPlan<'a> {
     /// scratch across every tile of its chunk.
     pub fn execute(&self, x: &[f32], n: usize) -> ProbMatrix {
         if self.arena.depth() <= U16_MAX_DEPTH {
-            self.execute_with::<u16>(x, n)
+            self.execute_cursor::<u16>(x, n)
         } else {
-            self.execute_with::<u32>(x, n)
+            self.execute_cursor::<u32>(x, n)
         }
     }
 
-    fn execute_with<C: CursorIdx>(&self, x: &[f32], n: usize) -> ProbMatrix {
+    /// Dispatch on the resolved lane: the transpose loop doubles as the
+    /// quantization pass (one coding of each feature value per tile,
+    /// straight into the feature-major scratch — never a second
+    /// full-batch pass). Exact lanes fall back to f32 below the parallel
+    /// grain ([`BatchPlan::quant_skipped_for_tiny_batch`]).
+    fn execute_cursor<C: CursorIdx>(&self, x: &[f32], n: usize) -> ProbMatrix {
+        let q = self.arena.quant_tables();
+        match (&self.lanes, self.quant) {
+            (LanePlan::U8(t), QuantMode::Lossy { bits }) => {
+                self.execute_with::<C, u8, _>(x, n, t, |k, v| {
+                    u8::from_usize(q.lossy_code(k, v, bits))
+                })
+            }
+            (LanePlan::U8(t), _) if !self.quant_skipped_for_tiny_batch(n) => {
+                self.execute_with::<C, u8, _>(x, n, t, |k, v| u8::from_usize(q.code(k, v)))
+            }
+            (LanePlan::U16(t), QuantMode::Lossy { bits }) => {
+                self.execute_with::<C, u16, _>(x, n, t, |k, v| {
+                    u16::from_usize(q.lossy_code(k, v, bits))
+                })
+            }
+            (LanePlan::U16(t), _) if !self.quant_skipped_for_tiny_batch(n) => {
+                self.execute_with::<C, u16, _>(x, n, t, |k, v| u16::from_usize(q.code(k, v)))
+            }
+            _ => self.execute_with::<C, f32, _>(x, n, self.arena.thr_table(), |_, v| v),
+        }
+    }
+
+    fn execute_with<C, L, Q>(&self, x: &[f32], n: usize, thr_tab: &[L], code: Q) -> ProbMatrix
+    where
+        C: CursorIdx,
+        L: Copy + PartialOrd + Default + Send + Sync,
+        Q: Fn(usize, f32) -> L + Sync,
+    {
         let f = self.arena.n_features();
         let c = self.arena.n_classes();
         assert_eq!(x.len(), n * f, "batch shape mismatch");
@@ -179,24 +297,26 @@ impl<'a> BatchPlan<'a> {
             // chunk smaller than the tile never pays full-tile buffers.
             let t = tile.min(rows.max(1));
             let mut cursors = vec![C::ZERO; t_cnt * t];
-            let mut xt = vec![0.0f32; f * t];
+            let mut xt = vec![L::default(); f * t];
             let mut s0 = 0;
             while s0 < rows {
                 let s1 = (s0 + tile).min(rows);
                 let m = s1 - s0;
-                // Transpose the tile feature-major so each level's
-                // compare loop reads stride-1 columns.
+                // Transpose the tile feature-major (coding each value
+                // into the plan's lane) so each level's compare loop
+                // reads stride-1 columns.
                 let src = &x[(first_row + s0) * f..(first_row + s1) * f];
                 for (r, row) in src.chunks_exact(f).enumerate() {
                     for (k, &v) in row.iter().enumerate() {
-                        xt[k * m + r] = v;
+                        xt[k * m + r] = code(k, v);
                     }
                 }
-                self.run_tile::<C>(
+                self.run_tile::<C, L>(
                     &xt[..f * m],
                     m,
                     &mut cursors[..t_cnt * m],
                     &mut chunk[s0 * c..s1 * c],
+                    thr_tab,
                 );
                 s0 = s1;
             }
@@ -205,13 +325,20 @@ impl<'a> BatchPlan<'a> {
     }
 
     /// One tile: traverse level-synchronously over the feature-major
-    /// tile `xt`, then reduce leaves into `acc` (the tile's
-    /// zero-initialized output rows).
-    fn run_tile<C: CursorIdx>(&self, xt: &[f32], n: usize, cursors: &mut [C], acc: &mut [f32]) {
+    /// tile `xt` (any lane type), then reduce leaves into `acc` (the
+    /// tile's zero-initialized output rows).
+    fn run_tile<C: CursorIdx, L: Copy + PartialOrd>(
+        &self,
+        xt: &[L],
+        n: usize,
+        cursors: &mut [C],
+        acc: &mut [f32],
+        thr_tab: &[L],
+    ) {
         let a = self.arena;
         let c = a.n_classes();
         let t_cnt = self.hi - self.lo;
-        a.traverse_tile_transposed(self.lo, self.hi, xt, n, cursors, self.padded_walk);
+        a.traverse_tile_lanes(self.lo, self.hi, xt, n, cursors, thr_tab, self.padded_walk);
         let inv = 1.0 / t_cnt as f32;
         match self.reduce {
             Reduce::ProbAverage => {
@@ -443,5 +570,81 @@ mod tests {
         }
         let votes = BatchPlan::new(&arena, Reduce::MajorityVote).execute(&x, 2);
         assert_eq!(votes.row(0), &[0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn exact_quant_plan_matches_f32_bitwise() {
+        // Tentpole conformance at the plan level: exact rank-code lanes
+        // replay the identical walk, so probabilities are byte-for-byte
+        // the f32 kernel's — for both reductions and a ragged arena.
+        let (arena, ds) = ragged_arena();
+        assert_eq!(arena.quant_lane(), Some("u8"), "demo fixture should fit u8");
+        let n = ds.test.len();
+        for reduce in [Reduce::ProbAverage, Reduce::MajorityVote] {
+            let f32_plan = BatchPlan::new(&arena, reduce).execute(&ds.test.x, n);
+            let q = BatchPlan::new(&arena, reduce)
+                .with_quant(QuantMode::Exact)
+                .execute(&ds.test.x, n);
+            assert_eq!(f32_plan, q, "{reduce:?}");
+        }
+    }
+
+    #[test]
+    fn quant_lane_labels_reflect_mode() {
+        let (_, arena, _) = setup();
+        let plan = BatchPlan::new(&arena, Reduce::ProbAverage);
+        assert_eq!(plan.lane_label(), "f32");
+        assert_eq!(plan.with_quant(QuantMode::Exact).lane_label(), "u8");
+        let plan = BatchPlan::new(&arena, Reduce::ProbAverage);
+        assert_eq!(plan.with_quant(QuantMode::Lossy { bits: 12 }).lane_label(), "u16");
+        let plan = BatchPlan::new(&arena, Reduce::ProbAverage);
+        assert_eq!(plan.with_quant(QuantMode::Off).lane_label(), "f32");
+    }
+
+    #[test]
+    fn tiny_batches_skip_quant_transpose_and_stay_identical() {
+        // Satellite regression: below the parallel grain the exact path
+        // skips quantized transpose scratch (f32 fallback — identical
+        // answers by the exactness proof), while lossy always quantizes
+        // so shard splits can't change its answers.
+        let (_, arena, ds) = setup();
+        let plan = BatchPlan::new(&arena, Reduce::ProbAverage).with_quant(QuantMode::Exact);
+        for n in 1..MIN_GRAIN_ROWS {
+            assert!(plan.quant_skipped_for_tiny_batch(n), "n {n}");
+        }
+        assert!(!plan.quant_skipped_for_tiny_batch(MIN_GRAIN_ROWS));
+        let lossy =
+            BatchPlan::new(&arena, Reduce::ProbAverage).with_quant(QuantMode::Lossy { bits: 8 });
+        assert!(!lossy.quant_skipped_for_tiny_batch(1), "lossy must never skip");
+        // Batch-size independence across the skip boundary, bitwise.
+        let full = plan.execute(&ds.test.x, ds.test.len());
+        for n in [1usize, MIN_GRAIN_ROWS - 1, MIN_GRAIN_ROWS, MIN_GRAIN_ROWS + 5] {
+            let small = plan.execute(&ds.test.x[..n * arena.n_features()], n);
+            for i in 0..n {
+                assert_eq!(small.row(i), full.row(i), "n {n} row {i}");
+            }
+        }
+        let lossy_full = lossy.execute(&ds.test.x, ds.test.len());
+        for n in [1usize, 3] {
+            let small = lossy.execute(&ds.test.x[..n * arena.n_features()], n);
+            for i in 0..n {
+                assert_eq!(small.row(i), lossy_full.row(i), "lossy n {n} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn lossy_plan_yields_valid_distributions() {
+        let (_, arena, ds) = setup();
+        let n = ds.test.len();
+        let probs = BatchPlan::new(&arena, Reduce::ProbAverage)
+            .with_quant(QuantMode::Lossy { bits: 8 })
+            .execute(&ds.test.x, n);
+        for i in 0..n {
+            let row = probs.row(i);
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4, "row {i} sums to {sum}");
+            assert!(row.iter().all(|&p| (0.0..=1.0).contains(&p)), "row {i}");
+        }
     }
 }

@@ -57,11 +57,21 @@
 //! change *accounting*, never *answers* — `rust/tests/backend.rs` pins
 //! byte-identical probabilities across backends for every tree-based
 //! registry model.
+//!
+//! **Quantized lanes:** pack time also builds per-feature threshold
+//! rank tables ([`quant::QuantTables`]) and parallel u8/u16 threshold
+//! arrays; a [`BatchPlan`] with [`QuantMode`] on codes each feature
+//! tile through the tables during the transpose and runs the inner
+//! compare loop on integer lanes — exactly (rank codes replay the f32
+//! walk bit-for-bit) or lossily (affine codes at a chosen bit width).
+//! See the "Quantized fixed-point lanes" section of [`arena`].
 
 pub mod arena;
 pub mod backend;
 pub mod batch;
+pub mod quant;
 
 pub use arena::ForestArena;
 pub use backend::{Backend, ExecReport, SoftwareBackend, UarchBackend};
 pub use batch::{BatchPlan, Reduce, DEFAULT_TILE};
+pub use quant::{QuantMode, QuantTables};

@@ -1,0 +1,324 @@
+//! Fixed-point quantization for the arena kernel: the [`QuantMode`]
+//! serving knob, per-feature threshold-code tables ([`QuantTables`])
+//! computed at [`ForestArena`](super::ForestArena) pack time, and the
+//! [`QuantizedLane`] trait the integer tile path is generic over
+//! (mirroring the arena's crate-private `CursorIdx`).
+//!
+//! The embedded-energy literature (HOG-vs-CNN, arXiv 1703.05853) ships
+//! comparator datapaths as fixed point, not f32; this module is the
+//! software analogue. The key trick is that a tree walk never needs the
+//! feature *values* — only the outcomes of `x > t` against the finite set
+//! of thresholds the forest actually contains. So **exact** mode codes
+//! each feature value by its *rank* among that feature's sorted distinct
+//! live thresholds ("cuts"):
+//!
+//! ```text
+//! code(v) = #{ cuts strictly below v }        (partition_point)
+//! code(t) = rank(t)                           for a live threshold t
+//! ⟹  v > t  ⟺  code(v) > code(t)            for every f32 v, incl.
+//!                                             NaN (→0, goes left) and
+//!                                             ±inf (→0 / len)
+//! ```
+//!
+//! so integer-lane comparisons reproduce the f32 walk **bit for bit** —
+//! the conformance suites pin this for every registry model on both
+//! execution backends. A feature fits a `u8` lane when it has ≤ 254
+//! distinct cuts (`u8::MAX` is reserved as the dead-node sentinel), a
+//! `u16` lane up to 65534; wider forests fall back to the f32 lanes.
+//! **Lossy** mode trades that guarantee for a fixed `bits`-wide affine
+//! code over each feature's live-threshold range — bounded by an
+//! accuracy-delta test rather than byte identity.
+
+use std::sync::Arc;
+
+/// How (and whether) the tile kernel quantizes feature lanes.
+///
+/// Parsed from the CLI / surfaced through
+/// [`ServingSpec`](crate::api::spec::ServingSpec) like the other serving
+/// knobs ([`RouterPolicy`](crate::coordinator::RouterPolicy) et al.).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QuantMode {
+    /// f32 lanes (the pre-quantization kernel).
+    #[default]
+    Off,
+    /// Threshold-rank codes: integer lanes pinned byte-identical to the
+    /// f32 walk. Lane width (u8 / u16) is chosen per arena from the cut
+    /// counts; arenas too wide for u16 fall back to f32 silently — the
+    /// mode is a *permission* to quantize, never a change of answers.
+    Exact,
+    /// Affine fixed-point codes at `bits` ≤ 16 bits per feature
+    /// (`bits` ≤ 8 runs in u8 lanes). Answers may drift within the
+    /// accuracy-delta bound pinned by `tests/quant.rs`.
+    Lossy { bits: u8 },
+}
+
+impl QuantMode {
+    /// CLI spellings accepted by [`QuantMode::parse`].
+    pub const NAMES: &'static [&'static str] = &["off", "u8", "u16", "exact", "lossy8", "lossy16"];
+
+    /// Parse a CLI spelling. `u8`/`u16`/`exact` all select exact
+    /// rank-code quantization (the lane width is an arena property — the
+    /// narrowest width whose codes fit — so the spellings are synonyms;
+    /// `serve --quant u8` is pinned answer-identical to `--quant off`).
+    pub fn parse(s: &str) -> Option<QuantMode> {
+        match s {
+            "off" => Some(QuantMode::Off),
+            "u8" | "u16" | "exact" => Some(QuantMode::Exact),
+            "lossy8" => Some(QuantMode::Lossy { bits: 8 }),
+            "lossy16" => Some(QuantMode::Lossy { bits: 16 }),
+            _ => None,
+        }
+    }
+
+    /// Canonical label for CLI echo / BENCH_JSON.
+    pub fn label(self) -> &'static str {
+        match self {
+            QuantMode::Off => "off",
+            QuantMode::Exact => "exact",
+            QuantMode::Lossy { bits } if bits <= 8 => "lossy8",
+            QuantMode::Lossy { .. } => "lossy16",
+        }
+    }
+
+    /// Any quantization requested (exact or lossy)?
+    pub fn is_on(self) -> bool {
+        self != QuantMode::Off
+    }
+}
+
+/// Per-feature threshold-code tables, computed once at arena pack time
+/// and shared (via `Arc`) by the tile kernel and the serving tier's
+/// [`ProbCache`](crate::coordinator::ProbCache) keys — one quantization
+/// scheme per model, never two.
+#[derive(Clone, Debug, Default)]
+pub struct QuantTables {
+    n_features: usize,
+    /// Prefix offsets: feature `k`'s sorted distinct live thresholds are
+    /// `cuts[cut_off[k]..cut_off[k + 1]]`.
+    cut_off: Vec<usize>,
+    cuts: Vec<f32>,
+    /// Largest per-feature cut count — decides the exact lane width.
+    max_cuts: usize,
+    /// Per-feature live-threshold range for lossy affine codes
+    /// (`lo == hi` when a feature has at most one live threshold).
+    lo: Vec<f32>,
+    hi: Vec<f32>,
+}
+
+impl QuantTables {
+    /// Build tables from every **live** `(feature, threshold)` node of a
+    /// packed forest (the caller filters dead/leaf sentinels).
+    pub fn build(n_features: usize, nodes: impl Iterator<Item = (usize, f32)>) -> QuantTables {
+        let mut per: Vec<Vec<f32>> = vec![Vec::new(); n_features];
+        for (k, t) in nodes {
+            per[k].push(t);
+        }
+        let mut cut_off = Vec::with_capacity(n_features + 1);
+        cut_off.push(0usize);
+        let mut cuts = Vec::new();
+        let mut lo = vec![0.0f32; n_features];
+        let mut hi = vec![0.0f32; n_features];
+        let mut max_cuts = 0usize;
+        for (k, mut v) in per.into_iter().enumerate() {
+            // Live thresholds are finite, so total_cmp == partial order.
+            v.sort_by(f32::total_cmp);
+            v.dedup();
+            if let (Some(&a), Some(&b)) = (v.first(), v.last()) {
+                lo[k] = a;
+                hi[k] = b;
+            }
+            max_cuts = max_cuts.max(v.len());
+            cuts.extend_from_slice(&v);
+            cut_off.push(cuts.len());
+        }
+        QuantTables { n_features, cut_off, cuts, max_cuts, lo, hi }
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    /// Feature `k`'s sorted distinct live thresholds.
+    #[inline]
+    pub fn cuts(&self, k: usize) -> &[f32] {
+        &self.cuts[self.cut_off[k]..self.cut_off[k + 1]]
+    }
+
+    /// Largest per-feature distinct-threshold count in the forest.
+    pub fn max_cuts(&self) -> usize {
+        self.max_cuts
+    }
+
+    /// Do exact value codes (0..=cuts) stay below the u8 dead sentinel?
+    pub fn fits_u8(&self) -> bool {
+        self.max_cuts < u8::MAX as usize
+    }
+
+    /// Do exact value codes stay below the u16 dead sentinel?
+    pub fn fits_u16(&self) -> bool {
+        self.max_cuts < u16::MAX as usize
+    }
+
+    /// Exact rank code of a feature value: the number of feature-`k` cuts
+    /// strictly below `v`. NaN compares false against every cut, so it
+    /// codes to 0 and walks left — exactly like the f32 `>` comparison.
+    #[inline]
+    pub fn code(&self, k: usize, v: f32) -> usize {
+        self.cuts(k).partition_point(|c| *c < v)
+    }
+
+    /// Exact rank code of a **live threshold**: its index among the cuts
+    /// (the threshold must be present — packing inserts every live one).
+    #[inline]
+    pub fn thr_code(&self, k: usize, t: f32) -> usize {
+        let cuts = self.cuts(k);
+        let r = cuts.partition_point(|c| *c < t);
+        debug_assert!(r < cuts.len() && cuts[r] == t, "threshold missing from cut table");
+        r
+    }
+
+    /// Lossy affine code of a feature value at `bits` ≤ 16: `v` clamped
+    /// to the feature's live-threshold range, scaled onto
+    /// `0..=2^bits - 2` (the lane MAX — `2^bits - 1` at bits = 8/16 —
+    /// stays reserved for the dead-node sentinel). NaN saturates to 0
+    /// via the `as` cast — left, like the exact path.
+    #[inline]
+    pub fn lossy_code(&self, k: usize, v: f32, bits: u8) -> usize {
+        let levels = ((1u32 << bits.clamp(1, 16)) - 2).max(1) as f32;
+        let (lo, hi) = (self.lo[k], self.hi[k]);
+        if hi <= lo {
+            // Constant (or cut-free) feature: one bucket.
+            return if v > lo { 1 } else { 0 };
+        }
+        let t = ((v - lo) / (hi - lo)).clamp(0.0, 1.0);
+        (t * levels) as usize
+    }
+}
+
+/// An integer lane type the quantized tile kernel runs on — the feature
+/// side of the arena's crate-private `CursorIdx`. `MAX` is the dead-node
+/// sentinel: value codes never reach it, so `x_q > MAX` is false and
+/// dead slots walk left exactly like `x > f32::INFINITY`.
+pub trait QuantizedLane: Copy + Ord + Send + Sync + 'static {
+    /// Dead-node threshold sentinel (the lane's maximum).
+    const DEAD: Self;
+    /// Canonical BENCH_JSON / log label for the lane width.
+    const LABEL: &'static str;
+
+    fn from_usize(v: usize) -> Self;
+}
+
+impl QuantizedLane for u8 {
+    const DEAD: u8 = u8::MAX;
+    const LABEL: &'static str = "u8";
+
+    #[inline]
+    fn from_usize(v: usize) -> u8 {
+        debug_assert!(v < u8::MAX as usize, "u8 lane overflow");
+        v as u8
+    }
+}
+
+impl QuantizedLane for u16 {
+    const DEAD: u16 = u16::MAX;
+    const LABEL: &'static str = "u16";
+
+    #[inline]
+    fn from_usize(v: usize) -> u16 {
+        debug_assert!(v < u16::MAX as usize, "u16 lane overflow");
+        v as u16
+    }
+}
+
+/// Shared handle alias — the tables ride the arena behind an `Arc` so the
+/// serving tier (cache keys) and the kernel quantize through one table.
+pub type SharedQuantTables = Arc<QuantTables>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tables() -> QuantTables {
+        // Feature 0: cuts {1.0, 2.5, 7.0}; feature 1: none; feature 2:
+        // one repeated cut {4.0}.
+        QuantTables::build(
+            3,
+            vec![(0, 2.5), (0, 1.0), (0, 7.0), (0, 2.5), (2, 4.0), (2, 4.0)].into_iter(),
+        )
+    }
+
+    #[test]
+    fn rank_codes_order_values_against_every_cut() {
+        let t = tables();
+        assert_eq!(t.cuts(0), &[1.0, 2.5, 7.0]);
+        assert_eq!(t.max_cuts(), 3);
+        // v > cut  ⟺  code(v) > thr_code(cut), exhaustively around the
+        // cut grid.
+        for &cut in t.cuts(0) {
+            let r = t.thr_code(0, cut);
+            for v in [-1.0f32, 0.0, 1.0, 1.5, 2.5, 3.0, 7.0, 9.0] {
+                assert_eq!(v > cut, t.code(0, v) > r, "v={v} cut={cut}");
+            }
+        }
+    }
+
+    #[test]
+    fn non_finite_values_walk_like_f32() {
+        let t = tables();
+        for &cut in t.cuts(0) {
+            let r = t.thr_code(0, cut);
+            assert!(t.code(0, f32::NAN) <= r, "NaN must go left");
+            assert!(t.code(0, f32::NEG_INFINITY) <= r, "-inf must go left");
+            assert!(t.code(0, f32::INFINITY) > r, "+inf must go right");
+        }
+    }
+
+    #[test]
+    fn cut_free_and_single_cut_features() {
+        let t = tables();
+        // No cuts: every value codes to 0 (no comparison can fire).
+        assert_eq!(t.cuts(1), &[] as &[f32]);
+        assert_eq!(t.code(1, 123.0), 0);
+        // Repeated threshold dedups to a single cut.
+        assert_eq!(t.cuts(2), &[4.0]);
+        assert_eq!(t.thr_code(2, 4.0), 0);
+        assert_eq!(t.code(2, 3.9), 0);
+        assert_eq!(t.code(2, 4.0), 0);
+        assert_eq!(t.code(2, 4.1), 1);
+    }
+
+    #[test]
+    fn lane_fit_bounds_respect_dead_sentinel() {
+        // 254 cuts: codes reach 254 == u8 dead sentinel - 1 → fits.
+        let t = QuantTables::build(1, (0..254).map(|i| (0usize, i as f32)));
+        assert!(t.fits_u8() && t.fits_u16());
+        // 255 cuts: a value above every cut would code to 255 == DEAD.
+        let t = QuantTables::build(1, (0..255).map(|i| (0usize, i as f32)));
+        assert!(!t.fits_u8() && t.fits_u16());
+    }
+
+    #[test]
+    fn lossy_codes_clamp_and_saturate() {
+        let t = tables();
+        assert_eq!(t.lossy_code(0, f32::NEG_INFINITY, 8), 0);
+        assert_eq!(t.lossy_code(0, f32::INFINITY, 8), 254, "lane MAX stays the dead sentinel");
+        assert_eq!(t.lossy_code(0, f32::NAN, 8), 0, "NaN saturates left");
+        // Constant feature: everything at/below the cut is bucket 0.
+        assert_eq!(t.lossy_code(2, 4.0, 8), 0);
+        assert_eq!(t.lossy_code(2, 5.0, 8), 1);
+        // Monotone over the range.
+        assert!(t.lossy_code(0, 2.0, 8) <= t.lossy_code(0, 6.0, 8));
+    }
+
+    #[test]
+    fn mode_labels_roundtrip() {
+        for &name in QuantMode::NAMES {
+            let m = QuantMode::parse(name).expect("listed name parses");
+            assert!(QuantMode::parse(m.label()).is_some());
+        }
+        assert_eq!(QuantMode::parse("u8"), Some(QuantMode::Exact));
+        assert_eq!(QuantMode::parse("bogus"), None);
+        assert_eq!(QuantMode::default(), QuantMode::Off);
+        assert!(!QuantMode::Off.is_on() && QuantMode::Exact.is_on());
+    }
+}

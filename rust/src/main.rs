@@ -22,6 +22,10 @@
 //!                                                  replica (uarch = grove-ring
 //!                                                  simulator in the loop: live
 //!                                                  energy-per-classification)
+//!              [--quant off|u8|u16|lossy8|lossy16] kernel-lane quantization for
+//!                                                  forest models (u8/u16 = exact
+//!                                                  rank codes, answer-identical
+//!                                                  to off; lossyN = affine N-bit)
 //!              [--cache-quant q] [--cache-cap N] [--no-cache] [--rounds R]
 //!                                                  sharded tier: N replicas of the
 //!                                                  model behind a shared router and
@@ -56,7 +60,7 @@ use fog::coordinator::{
 use fog::data::synthetic::DatasetProfile;
 use fog::energy::aladdin;
 use fog::energy::blocks::{AreaBlocks, EnergyBlocks};
-use fog::exec::ExecReport;
+use fog::exec::{ExecReport, QuantMode};
 use fog::experiments::{fig4, fig5, suite, table1};
 use fog::fog::FieldOfGroves;
 use fog::uarch::{RingConfig, RingSim};
@@ -212,6 +216,33 @@ fn parse_exec_backend(args: &Args) -> BackendKind {
     })
 }
 
+/// Parse `--quant off|u8|u16|lossy8|lossy16` (kernel-lane quantization
+/// for forest-backed models) or exit with a friendly error listing the
+/// valid spellings.
+fn parse_quant_or_exit(args: &Args) -> QuantMode {
+    let spelled = args.get_or("quant", "off");
+    QuantMode::parse(spelled).unwrap_or_else(|| {
+        eprintln!(
+            "error: unknown quant mode '{spelled}'; valid names: {}",
+            QuantMode::NAMES.join(", ")
+        );
+        std::process::exit(2);
+    })
+}
+
+/// FNV-1a over probability rows' f32 bit patterns in response order — a
+/// cheap conformance fingerprint so CI can assert `--quant u8` answers
+/// equal `--quant off` byte-for-byte.
+fn prob_checksum(responses: &[fog::coordinator::Response]) -> u64 {
+    let mut hash = 0xCBF29CE484222325u64;
+    for r in responses {
+        for &p in &r.prob {
+            hash = (hash ^ p.to_bits() as u64).wrapping_mul(0x100000001B3);
+        }
+    }
+    hash
+}
+
 /// Parse `--router` or exit with a friendly error listing the valid
 /// policies.
 fn parse_router_or_exit(args: &Args) -> RouterPolicy {
@@ -316,7 +347,8 @@ fn cmd_serve(args: &Args, seed: u64) {
     }
     // Any sharded-tier flag selects the sharded path, so no knob is ever
     // silently ignored by the single-queue server or the FoG ring.
-    let sharded_flags = ["replicas", "router", "cache-quant", "cache-cap", "no-cache", "rounds"];
+    let sharded_flags =
+        ["replicas", "router", "quant", "cache-quant", "cache-cap", "no-cache", "rounds"];
     let wants_sharded = sharded_flags.iter().any(|k| args.get(k).is_some());
     if let Some(model_name) = args.get("model") {
         // With --model, --backend selects the *execution* backend
@@ -330,7 +362,7 @@ fn cmd_serve(args: &Args, seed: u64) {
     }
     if wants_sharded {
         eprintln!(
-            "error: --replicas/--router/--cache-quant/--cache-cap/--no-cache/--rounds \
+            "error: --replicas/--router/--quant/--cache-quant/--cache-cap/--no-cache/--rounds \
              need --model <registry name> (the sharded tier serves registry models; \
              valid names: {})",
             REGISTRY.join(", ")
@@ -436,6 +468,7 @@ fn cmd_serve_sharded(args: &Args, model_name: &str, seed: u64) {
     let profile = profile_or_exit(args.get_or("dataset", "demo"));
     let router = parse_router_or_exit(args);
     let backend = parse_exec_backend(args);
+    let quant = parse_quant_or_exit(args);
     let mut spec = ModelSpec::for_shape(model_name, profile.n_features, profile.n_classes)
         .unwrap_or_else(|| {
             eprintln!(
@@ -447,6 +480,7 @@ fn cmd_serve_sharded(args: &Args, model_name: &str, seed: u64) {
         .with_replicas(args.get_usize("replicas", 2))
         .with_router(router)
         .with_backend(backend)
+        .with_quant(quant)
         .with_cache_capacity(args.get_usize("cache-cap", 4096));
     if !args.get_bool("no-cache") {
         spec = spec.with_cache_quant(args.get_f64("cache-quant", 0.0) as f32);
@@ -488,11 +522,12 @@ fn cmd_serve_sharded(args: &Args, model_name: &str, seed: u64) {
     let n_total = responses.len() * rounds;
 
     println!(
-        "== serving: {model_name} on {} via ShardedServer x{} ({}, backend={}) ==",
+        "== serving: {model_name} on {} via ShardedServer x{} ({}, backend={}, quant={}) ==",
         profile.name,
         server.n_replicas(),
         cfg.router.label(),
-        backend.label()
+        backend.label(),
+        quant.label()
     );
     println!("requests   : {} ({} per round x {rounds})", snap.requests, responses.len());
     println!("accuracy   : {:.1}%", acc * 100.0);
@@ -519,6 +554,7 @@ fn cmd_serve_sharded(args: &Args, model_name: &str, seed: u64) {
     println!(
         "BENCH_JSON {{\"bench\":\"serve_sharded\",\"model\":\"{model_name}\",\
          \"dataset\":\"{}\",\"replicas\":{},\"router\":\"{}\",\"backend\":\"{}\",\
+         \"quant\":\"{}\",\"prob_checksum\":{},\
          \"rounds\":{rounds},\"requests\":{},\"throughput_per_s\":{:.1},\
          \"cache_hit_rate\":{:.4},\"cache_quant\":{:.6},\"accuracy\":{:.4},\
          \"energy_per_class_nj\":{:.6},\"energy_per_response_nj\":{:.6},\
@@ -528,6 +564,8 @@ fn cmd_serve_sharded(args: &Args, model_name: &str, seed: u64) {
         server.n_replicas(),
         cfg.router.label(),
         backend.label(),
+        quant.label(),
+        prob_checksum(&responses),
         snap.requests,
         n_total as f64 / wall,
         snap.cache_hit_rate(),
@@ -590,19 +628,20 @@ fn cmd_serve_fleet(args: &Args, fleet_spec: &str, seed: u64) {
     }
     let router = parse_router_or_exit(args);
     let backend = parse_exec_backend(args);
+    let quant = parse_quant_or_exit(args);
     let policy = parse_fleet_policy_or_exit(args);
     let specs: Vec<ModelSpec> = names
         .iter()
         .map(|name| {
-            ModelSpec::for_shape(name, profile.n_features, profile.n_classes).unwrap_or_else(
-                || {
+            ModelSpec::for_shape(name, profile.n_features, profile.n_classes)
+                .unwrap_or_else(|| {
                     eprintln!(
                         "error: unknown model '{name}'; valid names: {}",
                         REGISTRY.join(", ")
                     );
                     std::process::exit(2);
-                },
-            )
+                })
+                .with_quant(quant)
         })
         .collect();
 

@@ -1,0 +1,212 @@
+//! Conformance tests for the quantized fixed-point arena pipeline: exact
+//! u8/u16 rank-code lanes must return probability rows **byte-identical**
+//! to the f32 kernel for every tree-based registry model, on both
+//! execution backends and through the full `ModelSpec` serving surface —
+//! quantization changes the lane width, never an answer or a comparator
+//! count. Lossy lanes are bounded by an accuracy-delta check, and the
+//! quantizer's edge cases (non-finite features, constant features,
+//! out-of-range thresholds, leaf-only forests) walk exactly like f32.
+
+use fog::api::{BackendKind, Classifier, Estimator, ModelSpec, RfModel};
+use fog::data::synthetic::{generate, DatasetProfile};
+use fog::data::Dataset;
+use fog::dt::FlatTree;
+use fog::exec::{BatchPlan, ForestArena, QuantMode, Reduce};
+use fog::forest::{ForestParams, RandomForest, VoteMode};
+
+const TREE_MODELS: &[&str] = &["fog_opt", "fog_max", "rf", "rf_prob"];
+
+fn data() -> Dataset {
+    generate(&DatasetProfile::demo(), 733)
+}
+
+/// A single hand-built tree whose feature-0 cut count forces the u16
+/// lane: `2^depth - 1` distinct live thresholds on one feature (255 cuts
+/// at depth 8 — one past the u8 fit bound of 254).
+fn wide_cut_tree(depth: usize, n_classes: usize) -> FlatTree {
+    let n_nodes = (1usize << depth) - 1;
+    let n_leaves = 1usize << depth;
+    let thr: Vec<f32> = (0..n_nodes).map(|i| i as f32 * 0.37 - 20.0).collect();
+    let mut leaf = vec![0.0f32; n_leaves * n_classes];
+    for (i, row) in leaf.chunks_exact_mut(n_classes).enumerate() {
+        row[i % n_classes] = 1.0;
+    }
+    FlatTree { depth, n_features: 2, n_classes, feat: vec![0; n_nodes], thr, leaf }
+}
+
+/// (a) Exact quantization is answer-identical end to end: for every
+/// tree-based registry model, a `--quant`-enabled spec returns rows
+/// byte-identical to the plain spec through the direct batch path and
+/// both execution backends (FoG specs ignore the knob, so equality there
+/// pins the no-op).
+#[test]
+fn exact_quant_byte_identical_for_all_registry_models() {
+    let ds = data();
+    let n = ds.test.len();
+    for name in TREE_MODELS {
+        let make = |quant: QuantMode| {
+            ModelSpec::for_shape(name, ds.n_features(), ds.n_classes())
+                .unwrap_or_else(|| panic!("registry name '{name}' missing"))
+                .fast()
+                .with_quant(quant)
+                .fit(&ds.train, 57)
+        };
+        let plain = make(QuantMode::Off);
+        let quantized = make(QuantMode::Exact);
+        let want = plain.predict_proba_batch(&ds.test.x, n);
+        let got = quantized.predict_proba_batch(&ds.test.x, n);
+        assert_eq!(want, got, "{name}: exact quantization changed the direct path");
+        for kind in [BackendKind::Software, BackendKind::Uarch] {
+            let be = quantized
+                .exec_backend(kind)
+                .unwrap_or_else(|| panic!("{name}: no {} backend", kind.label()));
+            let (probs, _) = be.evaluate_tile(&ds.test.x, n);
+            assert_eq!(
+                want, probs,
+                "{name}: exact quantization changed a {} backend answer",
+                kind.label()
+            );
+        }
+    }
+}
+
+/// (b) Accounting is quantization-invariant: comparator ops stay the
+/// padded-depth hardware charge and `levels_skipped` the ragged saving,
+/// byte-for-byte equal between `--quant off` and exact lanes on both
+/// backends (Table 1 / Fig 4–5 inputs unchanged).
+#[test]
+fn quantization_leaves_comparator_accounting_unchanged() {
+    let ds = data();
+    let n = ds.test.len();
+    let rf = RandomForest::fit(&ds.train, &ForestParams::small(), 21);
+    for kind in [BackendKind::Software, BackendKind::Uarch] {
+        let plain = RfModel::new(rf.clone(), VoteMode::ProbAverage);
+        let quantized =
+            RfModel::new(rf.clone(), VoteMode::ProbAverage).with_quant(QuantMode::Exact);
+        let (_, r_off) = plain.exec_backend(kind).unwrap().evaluate_tile(&ds.test.x, n);
+        let (_, r_q) = quantized.exec_backend(kind).unwrap().evaluate_tile(&ds.test.x, n);
+        assert_eq!(r_off, r_q, "{}: quantization changed accounting", kind.label());
+        assert!(r_q.comparator_ops > 0, "fixture evaluated nothing");
+    }
+}
+
+/// (c) The u16 lane: a forest whose per-feature cut count exceeds the u8
+/// bound packs only `thr_q16`, and its exact walk is still byte-identical
+/// to f32.
+#[test]
+fn u16_lane_covers_wide_cut_forests_bitwise() {
+    let tree = wide_cut_tree(8, 3);
+    let arena = ForestArena::from_flat_trees(&[tree.clone(), tree]);
+    assert_eq!(arena.quant_lane(), Some("u16"), "255 cuts must overflow the u8 lane");
+    // Rows probing below/above every cut, between cuts, and exactly on
+    // cut values (the `>` boundary the rank codes must preserve).
+    let mut x = Vec::new();
+    for i in 0..300 {
+        x.extend_from_slice(&[i as f32 * 0.37 - 20.0, 0.0]);
+        x.extend_from_slice(&[i as f32 * 0.37 - 20.185, 1.0]);
+    }
+    let n = x.len() / 2;
+    let want = BatchPlan::new(&arena, Reduce::ProbAverage).execute(&x, n);
+    let got = BatchPlan::new(&arena, Reduce::ProbAverage)
+        .with_quant(QuantMode::Exact)
+        .execute(&x, n);
+    assert_eq!(want, got, "u16 lane diverged from the f32 walk");
+}
+
+/// (d) Non-finite features walk identically: NaN routes left like the
+/// f32 `>` (false on NaN), +inf routes right past every live cut, -inf
+/// left — all byte-identical through the quantized path.
+#[test]
+fn non_finite_features_walk_like_f32() {
+    let ds = data();
+    let rf = RandomForest::fit(&ds.train, &ForestParams::small(), 5);
+    let arena = ForestArena::from_forest(&rf, rf.max_depth());
+    let f = ds.n_features();
+    let mut x = ds.test.x[..8 * f].to_vec();
+    x[0] = f32::NAN;
+    x[f + 1] = f32::INFINITY;
+    x[2 * f + 2] = f32::NEG_INFINITY;
+    x[3 * f] = f32::NAN;
+    x[3 * f + 1] = f32::INFINITY;
+    for reduce in [Reduce::ProbAverage, Reduce::MajorityVote] {
+        let want = BatchPlan::new(&arena, reduce).execute(&x, 8);
+        let got = BatchPlan::new(&arena, reduce).with_quant(QuantMode::Exact).execute(&x, 8);
+        assert_eq!(want, got, "{reduce:?}: non-finite features diverged");
+    }
+}
+
+/// (e) Thresholds outside the observed feature range and constant
+/// features: every sample routes left of an unreachable cut (and lossy's
+/// zero-range branch stays a valid walk), byte-identical for exact.
+#[test]
+fn out_of_range_thresholds_and_constant_features() {
+    // Feature 0 splits at +100 (unreachable for inputs in [-1, 1]);
+    // feature 1 is never split on (cut-free → every value codes to 0).
+    let n_nodes = 3;
+    let tree = FlatTree {
+        depth: 2,
+        n_features: 2,
+        n_classes: 2,
+        feat: vec![0; n_nodes],
+        thr: vec![100.0, -100.0, 100.0],
+        leaf: vec![1.0, 0.0, 0.0, 1.0, 1.0, 0.0, 0.0, 1.0],
+    };
+    let arena = ForestArena::from_flat_trees(&[tree.clone(), tree]);
+    let x: Vec<f32> = (0..12).flat_map(|i| [i as f32 * 0.1 - 0.5, 7.0]).collect();
+    let n = x.len() / 2;
+    let want = BatchPlan::new(&arena, Reduce::ProbAverage).execute(&x, n);
+    let got =
+        BatchPlan::new(&arena, Reduce::ProbAverage).with_quant(QuantMode::Exact).execute(&x, n);
+    assert_eq!(want, got, "out-of-range thresholds diverged");
+    let lossy = BatchPlan::new(&arena, Reduce::ProbAverage)
+        .with_quant(QuantMode::Lossy { bits: 8 })
+        .execute(&x, n);
+    for i in 0..n {
+        let sum: f32 = lossy.row(i).iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "lossy row {i} not a distribution");
+    }
+}
+
+/// (f) Depth-0 leaf-only forests: zero live levels, zero cuts — the
+/// quantized path runs the same zero-level walk and returns the leaf
+/// averages bitwise.
+#[test]
+fn leaf_only_forest_through_quantized_path() {
+    let leaf_tree = FlatTree {
+        depth: 0,
+        n_features: 2,
+        n_classes: 3,
+        feat: vec![],
+        thr: vec![],
+        leaf: vec![0.0, 1.0, 0.0],
+    };
+    let arena = ForestArena::from_flat_trees(&[leaf_tree.clone(), leaf_tree]);
+    let x = [1.0f32, 2.0, f32::NAN, -3.0];
+    for quant in [QuantMode::Exact, QuantMode::Lossy { bits: 8 }] {
+        let probs =
+            BatchPlan::new(&arena, Reduce::ProbAverage).with_quant(quant).execute(&x, 2);
+        for i in 0..2 {
+            assert_eq!(probs.row(i), &[0.0, 1.0, 0.0], "{quant:?} row {i}");
+        }
+    }
+}
+
+/// (g) Lossy lanes are bounded: 8-bit affine codes stay within a small
+/// accuracy delta of the f32 model on the demo suite (the knob trades
+/// precision for lane width, not correctness).
+#[test]
+fn lossy_accuracy_delta_is_bounded() {
+    let ds = data();
+    let rf = RandomForest::fit(&ds.train, &ForestParams::small(), 11);
+    let plain = RfModel::new(rf.clone(), VoteMode::ProbAverage);
+    let acc_plain = Classifier::accuracy(&plain, &ds.test);
+    for bits in [8u8, 16] {
+        let lossy = RfModel::new(rf.clone(), VoteMode::ProbAverage)
+            .with_quant(QuantMode::Lossy { bits });
+        let acc = Classifier::accuracy(&lossy, &ds.test);
+        assert!(
+            (acc_plain - acc).abs() <= 0.05,
+            "lossy{bits} accuracy {acc} drifted from {acc_plain}"
+        );
+    }
+}

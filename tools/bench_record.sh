@@ -19,10 +19,13 @@
 #       recent comparable (fast-tagged) point in BENCH_PALLAS.json:
 #       fail on a drop larger than --max-regress (default 15%). The
 #       3-run median keeps the gate green on noisy runners. Also
-#       enforces the ragged early-exit floor: the live median
-#       ragged_speedup_x must stay above the floor recorded in the
-#       trajectory file's "gate" block. Passes with a notice when the
-#       trajectory has no comparable baseline yet.
+#       enforces the armed absolute floors from the trajectory file's
+#       "gate" block: the live median ragged_speedup_x must stay above
+#       the ragged floor, and the live median quant_speedup_x (exact
+#       u8/u16 tiles vs f32) above the quant floor. Passes with a notice
+#       when the trajectory has no comparable baseline yet; baseline
+#       points tagged "estimated" (seeded off-toolchain) are skipped for
+#       the throughput diff.
 #
 # Requires: a Rust toolchain (cargo) and python3.
 set -euo pipefail
@@ -134,8 +137,10 @@ gate_metrics = gate_cfg.get("metrics", ["batch_tiled_per_s", "software_per_s"])
 # the real acceptance target at record time.
 if fast:
     speedup_floor = float(gate_cfg.get("ragged_speedup_floor_fast", 0.95))
+    quant_floor = float(gate_cfg.get("quant_speedup_floor_fast", 0.8))
 else:
     speedup_floor = float(gate_cfg.get("ragged_speedup_floor", 1.1))
+    quant_floor = float(gate_cfg.get("quant_speedup_floor", 2.0))
 
 if mode == "record":
     trajectory.setdefault("points", []).append(
@@ -156,21 +161,29 @@ if mode == "record":
     sys.exit(0)
 
 # --- gate ---
+# Estimated points are placeholders seeded where no toolchain ran the
+# benches; they arm the absolute floors but must never serve as a
+# throughput baseline.
 baseline = None
 for point in reversed(trajectory.get("points", [])):
-    if bool(point.get("fast")) == fast:
+    if bool(point.get("fast")) == fast and not point.get("estimated"):
         baseline = point
         break
 
 failures = []
 
-# Absolute floor: the ragged early-exit win must be present in the live
-# run regardless of any baseline.
+# Absolute floors: the ragged early-exit win and the quantized-lane win
+# must be present in the live run regardless of any baseline.
 for key, metrics in folded.items():
     if "ragged_speedup_x" in metrics and metrics["ragged_speedup_x"] < speedup_floor:
         failures.append(
             f"{key}: ragged_speedup_x {metrics['ragged_speedup_x']:.3f} "
             f"< floor {speedup_floor:.2f}"
+        )
+    if "quant_speedup_x" in metrics and metrics["quant_speedup_x"] < quant_floor:
+        failures.append(
+            f"{key}: quant_speedup_x {metrics['quant_speedup_x']:.3f} "
+            f"< floor {quant_floor:.2f}"
         )
 
 if baseline is None:
