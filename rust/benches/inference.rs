@@ -228,4 +228,49 @@ fn main() {
         quant_tiled.median_ns,
         quant_tiled.throughput_per_s.unwrap_or(0.0)
     );
+
+    // --- adaptive confidence early exit on the ragged_mix arena --------
+    // Per-sample accumulation stops once the running margin clears the
+    // threshold (arXiv 2205.13838); t = 1.0 is conformance-asserted
+    // byte-identical (and skip-free) before the t = 0.6 point is timed.
+    let adaptive_t = 0.6f32;
+    let full_plan = BatchPlan::new(&arena, Reduce::ProbAverage);
+    let pinned_plan = BatchPlan::new(&arena, Reduce::ProbAverage).with_adaptive(Some(1.0));
+    let adaptive_plan =
+        BatchPlan::new(&arena, Reduce::ProbAverage).with_adaptive(Some(adaptive_t));
+    let (pinned_probs, pinned_skips) = pinned_plan.execute_counting(&x, batch);
+    assert_eq!(
+        full_plan.execute(&x, batch),
+        pinned_probs,
+        "t = 1.0 diverged from full evaluation"
+    );
+    assert_eq!(pinned_skips, 0, "t = 1.0 must not skip a tree");
+    let (_, skipped) = adaptive_plan.execute_counting(&x, batch);
+    let skipped_per_class = skipped as f64 / batch as f64;
+    b.bench(&format!("adaptive_exit/full_eval/n{batch}"), batch, || {
+        black_box(full_plan.execute(black_box(&x), batch));
+    });
+    let full_eval = b.results.last().unwrap().clone();
+    b.bench(&format!("adaptive_exit/t{adaptive_t}/n{batch}"), batch, || {
+        black_box(adaptive_plan.execute(black_box(&x), batch));
+    });
+    let adaptive = b.results.last().unwrap().clone();
+    let adaptive_speedup = full_eval.median_ns / adaptive.median_ns.max(1.0);
+    println!();
+    println!(
+        "speedup adaptive_exit batch {batch}: {adaptive_speedup:.2}x vs full evaluation \
+         (full {:.0} ns, t={adaptive_t} {:.0} ns, {skipped_per_class:.2} of {t_cnt} trees \
+         skipped per classification on the ragged_mix arena)",
+        full_eval.median_ns,
+        adaptive.median_ns
+    );
+    println!(
+        "BENCH_JSON {{\"bench\":\"inference\",\"model\":\"adaptive_exit\",\"batch\":{batch},\
+         \"adaptive_conf\":{adaptive_t:.4},\"full_eval_ns\":{:.0},\"adaptive_ns\":{:.0},\
+         \"adaptive_speedup_x\":{adaptive_speedup:.3},\"trees_skipped_per_class\":{skipped_per_class:.2},\
+         \"batch_tiled_per_s\":{:.1}}}",
+        full_eval.median_ns,
+        adaptive.median_ns,
+        adaptive.throughput_per_s.unwrap_or(0.0)
+    );
 }

@@ -176,6 +176,17 @@ pub trait Classifier: Send + Sync {
     fn quant_tables(&self) -> Option<Arc<crate::exec::QuantTables>> {
         None
     }
+
+    /// The adaptive confidence early-exit threshold active on this
+    /// model's batch paths (Daghero et al., arXiv 2205.13838), already
+    /// filtered to the effective range: `None` means full evaluation —
+    /// either no knob was set or it was `≥ 1.0`, which is full
+    /// evaluation by definition. The serving tier uses this to tag
+    /// [`ProbCache`](crate::coordinator::ProbCache) keys so rows
+    /// computed under one threshold never answer a request at another.
+    fn adaptive_conf(&self) -> Option<f32> {
+        None
+    }
 }
 
 /// Config → trained model: anything that can train a [`Classifier`] from

@@ -12,7 +12,7 @@ use crate::data::Split;
 use crate::dt::{DecisionTree, FlatTree};
 use crate::energy::blocks::{AreaBlocks, EnergyBlocks};
 use crate::energy::model::{fog_cost, rf_cost, ClassifierKind, CostReport, FogStats, RfStats};
-use crate::exec::backend::{fog_tile, forest_tile_quant};
+use crate::exec::backend::{fog_tile, forest_tile_adaptive};
 use crate::exec::{
     Backend, ForestArena, QuantMode, QuantTables, Reduce, SoftwareBackend, UarchBackend,
 };
@@ -153,12 +153,16 @@ pub struct RfModel {
     /// Kernel-lane quantization every prediction path runs under
     /// (`Exact` is answer-identical to f32 by the rank-code argument).
     quant: QuantMode,
+    /// Adaptive confidence early-exit threshold, pre-filtered to the
+    /// effective range (`None` = full evaluation; thresholds ≥ 1.0 are
+    /// full evaluation by definition and filter out at the builder).
+    adaptive: Option<f32>,
 }
 
 impl RfModel {
     pub fn new(rf: RandomForest, mode: VoteMode) -> RfModel {
         let arena = Arc::new(ForestArena::from_forest(&rf, rf.max_depth()));
-        RfModel { rf, mode, arena, quant: QuantMode::Off }
+        RfModel { rf, mode, arena, quant: QuantMode::Off, adaptive: None }
     }
 
     /// Run this model's batch paths (direct and backend-served) on
@@ -166,6 +170,22 @@ impl RfModel {
     pub fn with_quant(mut self, mode: QuantMode) -> RfModel {
         self.quant = mode;
         self
+    }
+
+    /// Enable adaptive confidence early exit on this model's batch paths
+    /// (Daghero et al., arXiv 2205.13838): a sample stops accumulating
+    /// tree votes once its running margin reaches `t`. Thresholds
+    /// outside `(0, 1)` (incl. `1.0` and non-finite) are filtered to
+    /// `None` — full evaluation — so `t = 1.0` is byte-identical to the
+    /// plain model by construction.
+    pub fn with_adaptive(mut self, t: Option<f32>) -> RfModel {
+        self.adaptive = t.filter(|v| v.is_finite() && *v < 1.0);
+        self
+    }
+
+    /// The effective adaptive threshold (`None` = full evaluation).
+    pub fn adaptive(&self) -> Option<f32> {
+        self.adaptive
     }
 
     /// The active kernel-lane quantization mode.
@@ -242,11 +262,12 @@ impl Classifier for RfModel {
         // ProbAverage rows equal `RandomForest::predict_proba` bit-for-bit
         // (same per-tree accumulation order); Majority rows are vote
         // fractions — a valid distribution whose argmax is the
-        // majority-vote winner. `forest_tile_quant` is the single kernel
-        // entry point shared with the execution backends, so direct,
-        // software- and uarch-served answers are identical by
-        // construction (under the model's one quant mode).
-        forest_tile_quant(&self.arena, self.reduce(), self.quant, x, n).0
+        // majority-vote winner. `forest_tile_adaptive` is the single
+        // kernel entry point shared with the execution backends, so
+        // direct, software- and uarch-served answers are identical by
+        // construction (under the model's one quant mode and adaptive
+        // threshold).
+        forest_tile_adaptive(&self.arena, self.reduce(), self.quant, self.adaptive, x, n).0
     }
 
     // `predict_batch` keeps the trait default (argmax of the probability
@@ -268,11 +289,13 @@ impl Classifier for RfModel {
         let backend: Arc<dyn Backend> = match kind {
             BackendKind::Software => Arc::new(
                 SoftwareBackend::forest(Arc::clone(&self.arena), self.reduce())
-                    .with_quant(self.quant),
+                    .with_quant(self.quant)
+                    .with_adaptive(self.adaptive),
             ),
             BackendKind::Uarch => Arc::new(
                 UarchBackend::forest(Arc::clone(&self.arena), self.reduce())
-                    .with_quant(self.quant),
+                    .with_quant(self.quant)
+                    .with_adaptive(self.adaptive),
             ),
         };
         Some(backend)
@@ -280,6 +303,10 @@ impl Classifier for RfModel {
 
     fn quant_tables(&self) -> Option<Arc<QuantTables>> {
         self.quant.is_on().then(|| Arc::clone(self.arena.quant_tables()))
+    }
+
+    fn adaptive_conf(&self) -> Option<f32> {
+        self.adaptive
     }
 }
 
@@ -319,13 +346,17 @@ pub struct FogModel {
     pub fog: FieldOfGroves,
     pub params: FogParams,
     kind: ClassifierKind,
+    /// Serving-tier adaptive confidence threshold, pre-filtered to
+    /// `t < 1.0` (see [`FogModel::with_adaptive`]); `None` keeps the
+    /// operating point's own threshold untouched.
+    adaptive: Option<f32>,
 }
 
 impl FogModel {
     pub fn new(fog: FieldOfGroves, params: FogParams, kind: ClassifierKind) -> FogModel {
         let mut params = params;
         params.max_hops = params.max_hops.clamp(1, fog.n_groves());
-        FogModel { fog, params, kind }
+        FogModel { fog, params, kind, adaptive: None }
     }
 
     /// The FoG_max configuration: threshold above 1 forces every grove to
@@ -333,6 +364,35 @@ impl FogModel {
     pub fn fog_max(fog: FieldOfGroves, seed: u64) -> FogModel {
         let n = fog.n_groves();
         FogModel::new(fog, FogParams { seed, ..FogParams::fog_max(n) }, ClassifierKind::FogMax)
+    }
+
+    /// Serving-tier adaptive confidence knob (Daghero et al., arXiv
+    /// 2205.13838). FoG's hop walk *is* already confidence-gated early
+    /// exit, so here the knob composes by lowering the effective hop
+    /// threshold to `min(params.threshold, t)` — looser serving
+    /// confidence stops sooner; the model's own tighter threshold is
+    /// never loosened. Thresholds ≥ 1.0 filter to `None`, leaving the
+    /// operating point untouched (crucial for FoG_max, whose threshold
+    /// sits just above 1), so `t = 1.0` is byte-identical to the plain
+    /// model.
+    pub fn with_adaptive(mut self, t: Option<f32>) -> FogModel {
+        self.adaptive = t.filter(|v| v.is_finite() && *v < 1.0);
+        self
+    }
+
+    /// The effective adaptive threshold (`None` = operating point as-is).
+    pub fn adaptive(&self) -> Option<f32> {
+        self.adaptive
+    }
+
+    /// The operating point every evaluation path runs: the model's own
+    /// params, with the hop threshold capped by the serving-tier adaptive
+    /// knob when one is set.
+    fn effective_params(&self) -> FogParams {
+        match self.adaptive {
+            Some(t) => FogParams { threshold: self.params.threshold.min(t), ..self.params },
+            None => self.params,
+        }
     }
 
     /// Content-derived start grove (batch-position independent). Public
@@ -344,10 +404,12 @@ impl FogModel {
         content_start_grove(self.params.seed, row, self.fog.n_groves())
     }
 
-    /// Algorithm 2 for one input at this operating point.
+    /// Algorithm 2 for one input at this operating point (adaptive knob
+    /// applied when set).
     pub fn eval_row(&self, row: &[f32]) -> InputOutcome {
+        let p = self.effective_params();
         let start = self.start_grove(row);
-        self.fog.evaluate_one(row, start, self.params.threshold, self.params.max_hops)
+        self.fog.evaluate_one(row, start, p.threshold, p.max_hops)
     }
 
     /// Algorithm 2 over a row-major batch (parallel).
@@ -385,7 +447,7 @@ impl Classifier for FogModel {
         // with the execution backends (content-hashed start groves +
         // `evaluate_one`), so direct, software- and uarch-served answers
         // are identical by construction.
-        fog_tile(&self.fog, &self.params, x, n).0
+        fog_tile(&self.fog, &self.effective_params(), x, n).0
     }
 
     fn cost_report(
@@ -403,9 +465,10 @@ impl Classifier for FogModel {
     }
 
     fn exec_backend(&self, kind: BackendKind) -> Option<Arc<dyn Backend>> {
+        let p = self.effective_params();
         let backend: Arc<dyn Backend> = match kind {
-            BackendKind::Software => Arc::new(SoftwareBackend::fog(self.fog.clone(), self.params)),
-            BackendKind::Uarch => Arc::new(UarchBackend::fog(self.fog.clone(), self.params)),
+            BackendKind::Software => Arc::new(SoftwareBackend::fog(self.fog.clone(), p)),
+            BackendKind::Uarch => Arc::new(UarchBackend::fog(self.fog.clone(), p)),
         };
         Some(backend)
     }
@@ -414,6 +477,10 @@ impl Classifier for FogModel {
     // f32 because `content_start_grove` hashes the raw f32 feature bits —
     // keying the cache on rank codes would collide rows that draw
     // different start groves.
+
+    fn adaptive_conf(&self) -> Option<f32> {
+        self.adaptive
+    }
 }
 
 #[cfg(test)]
@@ -471,6 +538,60 @@ mod tests {
             let tables = q.quant_tables().expect("quantized model exposes tables");
             assert!(Arc::ptr_eq(&tables, q.arena().quant_tables()), "tables not shared");
         }
+    }
+
+    #[test]
+    fn adaptive_rf_model_full_threshold_is_plain() {
+        // t = 1.0 (and anything out of range) filters to None: same
+        // bytes, no adaptive_conf advertised, so the serving tier shares
+        // cache rows with the no-flag model.
+        let (rf, ds) = setup();
+        let plain = RfModel::new(rf.clone(), VoteMode::ProbAverage);
+        let one = RfModel::new(rf.clone(), VoteMode::ProbAverage).with_adaptive(Some(1.0));
+        assert_eq!(one.adaptive(), None);
+        assert_eq!(one.adaptive_conf(), None);
+        assert_eq!(
+            plain.predict_proba_batch(&ds.test.x, ds.test.len()),
+            one.predict_proba_batch(&ds.test.x, ds.test.len()),
+        );
+        let active = RfModel::new(rf, VoteMode::ProbAverage).with_adaptive(Some(0.6));
+        assert_eq!(active.adaptive_conf(), Some(0.6));
+    }
+
+    #[test]
+    fn adaptive_fog_model_caps_threshold_without_loosening() {
+        let (rf, ds) = setup();
+        let fog = FieldOfGroves::from_forest(&rf, 4);
+        // fog_max's threshold sits above 1.0: t = 1.0 must leave it
+        // untouched (byte-identity), while t < 1.0 caps it.
+        let fmax = FogModel::fog_max(fog.clone(), 0);
+        let fmax_one = FogModel::fog_max(fog.clone(), 0).with_adaptive(Some(1.0));
+        assert_eq!(
+            fmax.predict_proba_batch(&ds.test.x, ds.test.len()),
+            fmax_one.predict_proba_batch(&ds.test.x, ds.test.len()),
+        );
+        let capped = FogModel::fog_max(fog.clone(), 0).with_adaptive(Some(0.3));
+        assert_eq!(capped.effective_params().threshold, 0.3);
+        // A model already tighter than the serving knob stays tighter.
+        let tight = FogModel::new(
+            fog,
+            FogParams { threshold: 0.1, max_hops: 4, seed: 9 },
+            ClassifierKind::FogOpt,
+        )
+        .with_adaptive(Some(0.5));
+        assert_eq!(tight.effective_params().threshold, 0.1);
+    }
+
+    #[test]
+    fn adaptive_fog_model_saves_hops() {
+        let (rf, ds) = setup();
+        let fog = FieldOfGroves::from_forest(&rf, 4);
+        let full = FogModel::fog_max(fog.clone(), 2);
+        let adaptive = FogModel::fog_max(fog, 2).with_adaptive(Some(0.4));
+        let h_full = full.avg_hops_on(&ds.test);
+        let h_adapt = adaptive.avg_hops_on(&ds.test);
+        assert!(h_adapt <= h_full, "adaptive hops {h_adapt} vs full {h_full}");
+        assert!(h_adapt < full.fog.n_groves() as f64, "no sample exited early");
     }
 
     #[test]

@@ -212,6 +212,12 @@ pub struct ServingSpec {
     /// Fleet-tier rolling energy budget per classification, nanojoules;
     /// `None` = unlimited (every request admitted).
     pub energy_budget_nj: Option<f64>,
+    /// Adaptive confidence early-exit threshold `t ∈ (0, 1]` (Daghero et
+    /// al., arXiv 2205.13838): a sample stops accumulating tree votes
+    /// once its running margin reaches `t`. `None` or `1.0` = full
+    /// evaluation (`1.0` is pinned byte-identical). Tree-family models
+    /// only.
+    pub adaptive_conf: Option<f32>,
 }
 
 impl Default for ServingSpec {
@@ -225,6 +231,7 @@ impl Default for ServingSpec {
             cache_capacity: 4096,
             fleet_policy: FleetPolicyKind::default(),
             energy_budget_nj: None,
+            adaptive_conf: None,
         }
     }
 }
@@ -424,6 +431,16 @@ impl ModelSpec {
         self
     }
 
+    /// Adaptive confidence early-exit threshold `t ∈ (0, 1]` for the
+    /// serving paths of tree-family models (no-op for the dense
+    /// baselines). `1.0` = full evaluation, byte-identical to not
+    /// setting the knob; the CLI validates the range before calling
+    /// this.
+    pub fn with_adaptive(mut self, t: f32) -> Self {
+        self.serving.adaptive_conf = Some(t);
+        self
+    }
+
     /// Shrink training budgets for fast tests and doc examples (smaller
     /// ensembles, fewer epochs, fewer support vectors). Accuracy drops a
     /// little; determinism and interfaces are unchanged.
@@ -460,7 +477,8 @@ impl ModelSpec {
         };
         if spec.force_max {
             let rf = RandomForest::fit(data, &spec.forest, seed);
-            return FogModel::fog_max(split_fog(&rf), seed);
+            return FogModel::fog_max(split_fog(&rf), seed)
+                .with_adaptive(self.serving.adaptive_conf);
         }
         let threshold = match spec.threshold {
             Some(t) => t,
@@ -494,6 +512,7 @@ impl ModelSpec {
             FogParams { threshold, max_hops, seed },
             ClassifierKind::FogOpt,
         )
+        .with_adaptive(self.serving.adaptive_conf)
     }
 }
 
@@ -509,7 +528,8 @@ impl Estimator for ModelSpec {
             ModelConfig::Fog(spec) => Box::new(self.fit_fog(spec, data, seed)),
             ModelConfig::Rf { forest, mode } => Box::new(
                 RfModel::new(RandomForest::fit(data, forest, seed), *mode)
-                    .with_quant(self.serving.quant),
+                    .with_quant(self.serving.quant)
+                    .with_adaptive(self.serving.adaptive_conf),
             ),
             ModelConfig::SvmLinear(p) => Box::new(LinearSvm::fit(data, p, seed)),
             ModelConfig::SvmRbf(p) => Box::new(RbfSvm::fit(data, p, seed)),
@@ -561,7 +581,8 @@ mod tests {
             .with_cache_quant(0.25)
             .with_cache_capacity(128)
             .with_fleet_policy(FleetPolicyKind::Strict)
-            .with_energy_budget_nj(1.5);
+            .with_energy_budget_nj(1.5)
+            .with_adaptive(0.7);
         assert_eq!(spec.serving.replicas, 4);
         assert_eq!(spec.serving.router, RouterPolicy::RoundRobin);
         assert_eq!(spec.serving.backend, BackendKind::Uarch);
@@ -570,6 +591,7 @@ mod tests {
         assert_eq!(spec.serving.cache_capacity, 128);
         assert_eq!(spec.serving.fleet_policy, FleetPolicyKind::Strict);
         assert_eq!(spec.serving.energy_budget_nj, Some(1.5));
+        assert_eq!(spec.serving.adaptive_conf, Some(0.7));
         // Defaults: unsharded, software backend, no cache, unlimited
         // fleet budget — training is never affected.
         let plain = ModelSpec::by_name("rf").unwrap();
@@ -579,6 +601,7 @@ mod tests {
         assert!(plain.serving.cache_quant.is_none());
         assert_eq!(plain.serving.fleet_policy, FleetPolicyKind::Downgrade);
         assert!(plain.serving.energy_budget_nj.is_none());
+        assert!(plain.serving.adaptive_conf.is_none());
         assert_eq!(ModelSpec::by_name("rf").unwrap().with_replicas(0).serving.replicas, 1);
         // A negative budget is clamped to the shed-everything floor of 0.
         let zero = ModelSpec::by_name("rf").unwrap().with_energy_budget_nj(-2.0);

@@ -26,6 +26,15 @@
 //! the serving tier quantizes each request once, and two rows that the
 //! exact-quantized kernel cannot distinguish share an entry (semantically
 //! lossless for rank-code-pure models).
+//!
+//! A cached row is only as reusable as the evaluation mode that produced
+//! it: rows computed under an adaptive early-exit threshold `t < 1.0`
+//! are approximations at that specific `t`, so the serving tier folds a
+//! generation tag ([`ProbCache::with_tag`], the threshold's bit pattern)
+//! into every key — a request served at a different threshold can never
+//! be answered with a stale row. Full evaluation (no knob, or `t = 1.0`)
+//! keeps tag 0 and shares rows freely, which is correct because those
+//! modes are byte-identical.
 
 use crate::exec::QuantTables;
 use std::collections::HashMap;
@@ -115,6 +124,9 @@ pub struct ProbCache {
     /// instead of `quant_step` buckets (one quantization scheme shared
     /// with the kernel).
     tables: Option<Arc<QuantTables>>,
+    /// Evaluation-mode generation tag folded into every key (0 = full
+    /// evaluation); see [`ProbCache::with_tag`].
+    tag: u64,
     insertions: AtomicU64,
     evictions: AtomicU64,
 }
@@ -129,6 +141,7 @@ impl ProbCache {
             per_shard_cap: cfg.capacity / n_shards,
             quant_step: cfg.quant_step,
             tables: None,
+            tag: 0,
             insertions: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
         }
@@ -147,16 +160,35 @@ impl ProbCache {
         self.quant_step
     }
 
+    /// Fold an evaluation-mode generation tag into every key (part of
+    /// key *equality*, not just the hash, so aliasing is impossible).
+    /// The serving tier passes the adaptive threshold's bit pattern, so
+    /// rows computed under one `t < 1.0` never answer a request at
+    /// another; the default tag 0 (full evaluation) keeps the plain and
+    /// `t = 1.0` modes sharing rows — they are byte-identical.
+    pub fn with_tag(mut self, tag: u64) -> ProbCache {
+        self.tag = tag;
+        self
+    }
+
+    /// The active evaluation-mode tag (0 = full evaluation).
+    pub fn tag(&self) -> u64 {
+        self.tag
+    }
+
     /// Quantize a feature row into its cache key (FNV-1a over the
     /// per-feature codes: shared rank codes when the arena's tables are
     /// attached, `quant_step` buckets otherwise).
     pub fn key(&self, row: &[f32]) -> CacheKey {
-        let quant: Vec<u64> = match &self.tables {
+        let mut quant: Vec<u64> = match &self.tables {
             Some(t) => {
                 row.iter().enumerate().map(|(k, &v)| t.code(k, v) as u64).collect()
             }
             None => row.iter().map(|&v| quantize(v, self.quant_step)).collect(),
         };
+        // The tag rides in the code vector itself so it participates in
+        // both the hash and the equality check.
+        quant.push(self.tag);
         let mut hash = 0xCBF29CE484222325u64;
         for &q in &quant {
             hash = (hash ^ q).wrapping_mul(0x100000001B3);
@@ -393,6 +425,33 @@ mod tests {
         // baseline behavior).
         let plain = cache(64, 0.0);
         assert_ne!(plain.key(&[0.2, 0.1]), plain.key(&[0.9, 0.3]));
+    }
+
+    #[test]
+    fn generation_tags_partition_the_key_space() {
+        // Rows cached under one evaluation-mode tag (adaptive threshold
+        // bit pattern) must never answer a request keyed under another —
+        // and equality, not just the hash, must differ.
+        let row = [1.0f32, -2.5, 0.75];
+        let plain = cache(64, 0.0);
+        let t06 = cache(64, 0.0).with_tag(0.6f32.to_bits() as u64);
+        let t08 = cache(64, 0.0).with_tag(0.8f32.to_bits() as u64);
+        assert_eq!(plain.tag(), 0);
+        assert_ne!(t06.key(&row), t08.key(&row));
+        assert_ne!(plain.key(&row), t06.key(&row));
+        // Tag 0 is the untagged semantics: full-evaluation instances
+        // (no knob, or t = 1.0 filtered to None) produce equal keys.
+        assert_eq!(plain.key(&row), cache(64, 0.0).with_tag(0).key(&row));
+        // Within one instance, hit mechanics are unchanged.
+        let key = t06.key(&row);
+        t06.insert(key.clone(), vec![0.2, 0.8]);
+        assert_eq!(t06.get(&key), Some(vec![0.2, 0.8]));
+        // Tags compose with rank-code tables too.
+        let tables =
+            Arc::new(QuantTables::build(2, [(0usize, 1.0f32), (1, 0.5)].into_iter()));
+        let a = cache(64, 0.0).with_tables(Some(Arc::clone(&tables))).with_tag(1);
+        let b = cache(64, 0.0).with_tables(Some(tables)).with_tag(2);
+        assert_ne!(a.key(&[0.2, 0.1]), b.key(&[0.2, 0.1]));
     }
 
     #[test]

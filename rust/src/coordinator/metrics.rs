@@ -53,6 +53,11 @@ pub struct Metrics {
     /// Dead padded levels the ragged software kernel skipped (live-depth
     /// early exit; 0 under the depth-bound μarch backend).
     pub exec_levels_skipped: AtomicU64,
+    /// Whole trees the adaptive confidence early exit did not evaluate
+    /// (0 with the knob off and for FoG models, whose effort gauge is
+    /// `hops_total`). Both backends report the same count — the μarch
+    /// forest arm overlays the software kernel's number.
+    pub exec_trees_skipped: AtomicU64,
     /// Simulated clock cycles (0 under the software backend).
     pub exec_cycles: AtomicU64,
     /// Simulated dynamic energy in femtojoules (1 fJ = 1e-6 nJ; integer
@@ -73,6 +78,7 @@ impl Metrics {
         self.exec_samples.fetch_add(r.samples, Ordering::Relaxed);
         self.exec_comparator_ops.fetch_add(r.comparator_ops, Ordering::Relaxed);
         self.exec_levels_skipped.fetch_add(r.levels_skipped, Ordering::Relaxed);
+        self.exec_trees_skipped.fetch_add(r.trees_skipped, Ordering::Relaxed);
         self.exec_cycles.fetch_add(r.cycles, Ordering::Relaxed);
         let fj = (r.energy_nj * 1e6).max(0.0).round() as u64;
         self.exec_energy_fj.fetch_add(fj, Ordering::Relaxed);
@@ -122,6 +128,7 @@ impl Metrics {
             exec_samples: self.exec_samples.load(Ordering::Relaxed),
             exec_comparator_ops: self.exec_comparator_ops.load(Ordering::Relaxed),
             exec_levels_skipped: self.exec_levels_skipped.load(Ordering::Relaxed),
+            exec_trees_skipped: self.exec_trees_skipped.load(Ordering::Relaxed),
             exec_cycles: self.exec_cycles.load(Ordering::Relaxed),
             exec_energy_fj: self.exec_energy_fj.load(Ordering::Relaxed),
         }
@@ -145,6 +152,7 @@ pub struct MetricsSnapshot {
     pub exec_samples: u64,
     pub exec_comparator_ops: u64,
     pub exec_levels_skipped: u64,
+    pub exec_trees_skipped: u64,
     pub exec_cycles: u64,
     pub exec_energy_fj: u64,
 }
@@ -169,6 +177,8 @@ impl MetricsSnapshot {
             self.exec_comparator_ops.saturating_add(other.exec_comparator_ops);
         self.exec_levels_skipped =
             self.exec_levels_skipped.saturating_add(other.exec_levels_skipped);
+        self.exec_trees_skipped =
+            self.exec_trees_skipped.saturating_add(other.exec_trees_skipped);
         self.exec_cycles = self.exec_cycles.saturating_add(other.exec_cycles);
         self.exec_energy_fj = self.exec_energy_fj.saturating_add(other.exec_energy_fj);
     }
@@ -261,6 +271,17 @@ impl MetricsSnapshot {
             self.exec_levels_skipped as f64 / self.exec_samples as f64
         }
     }
+
+    /// Trees skipped per evaluated classification by the adaptive
+    /// confidence early exit (0 with the knob off; FoG models report
+    /// their saving through `avg_hops` instead).
+    pub fn trees_skipped_per_class(&self) -> f64 {
+        if self.exec_samples == 0 {
+            0.0
+        } else {
+            self.exec_trees_skipped as f64 / self.exec_samples as f64
+        }
+    }
 }
 
 /// Latency summary computed from response records.
@@ -333,6 +354,7 @@ mod tests {
             samples: 4,
             comparator_ops: 400,
             levels_skipped: 40,
+            trees_skipped: 8,
             cycles: 100,
             energy_nj: 2.0,
             ..Default::default()
@@ -347,6 +369,7 @@ mod tests {
         assert!((s.cycles_per_class() - 25.0).abs() < 1e-12);
         assert!((s.comparator_ops_per_class() - 100.0).abs() < 1e-12);
         assert!((s.levels_skipped_per_class() - 10.0).abs() < 1e-12);
+        assert!((s.trees_skipped_per_class() - 2.0).abs() < 1e-12);
     }
 
     #[test]

@@ -135,12 +135,18 @@ impl ShardedServer {
         // A zero-capacity cache config means caching off, not a cache
         // that misses every lookup. Quantized models hand the cache their
         // arena's rank tables so request rows are coded once, with the
-        // same per-feature codes the kernel compares on.
-        let cache = cfg
-            .cache
-            .as_ref()
-            .filter(|c| c.capacity > 0)
-            .map(|c| Arc::new(ProbCache::new(c).with_tables(model.quant_tables())));
+        // same per-feature codes the kernel compares on. Adaptive models
+        // tag every key with their threshold's bit pattern: rows computed
+        // under one early-exit threshold must never answer a request at
+        // another (full evaluation keeps tag 0 and shares rows, which is
+        // safe — t = 1.0 is byte-identical to no knob at all).
+        let cache = cfg.cache.as_ref().filter(|c| c.capacity > 0).map(|c| {
+            Arc::new(
+                ProbCache::new(c)
+                    .with_tables(model.quant_tables())
+                    .with_tag(model.adaptive_conf().map_or(0, |t| t.to_bits() as u64)),
+            )
+        });
         let n_features = model.n_features();
         let replicas = (0..n_replicas)
             .map(|r| {

@@ -74,6 +74,14 @@ pub struct ExecReport {
     /// the padded-depth hardware number. 0 for the μarch backend: the
     /// simulated PE is depth-bound and walks the padding.
     pub levels_skipped: u64,
+    /// Whole trees the adaptive confidence early exit
+    /// ([`BatchPlan::with_adaptive`]) *did not* evaluate, summed over
+    /// samples. Like `levels_skipped` this is a savings gauge reported
+    /// beside — never subtracted from — `comparator_ops`, which stays at
+    /// the paper-faithful padded-depth charge at every threshold. 0 for
+    /// full evaluation and for FoG plans (their effort knob is the hop
+    /// count, already visible as `hops_total`).
+    pub trees_skipped: u64,
     /// Dynamic evaluation energy in nanojoules (0 for software).
     pub energy_nj: f64,
 }
@@ -91,8 +99,11 @@ impl ExecReport {
             handshakes: s.handshakes,
             hops_total: s.total_hops,
             // The simulated PE is depth-bound: hardware clocks through
-            // padding, so the μarch backend never skips a level.
+            // padding, so the μarch backend never skips a level, and the
+            // simulator has no adaptive-exit notion (the forest arm
+            // overlays the software kernel's tree-skip count on top).
             levels_skipped: 0,
+            trees_skipped: 0,
             energy_nj: s.dynamic_energy_nj(eb),
         }
     }
@@ -109,6 +120,7 @@ impl ExecReport {
         self.handshakes = self.handshakes.saturating_add(other.handshakes);
         self.hops_total = self.hops_total.saturating_add(other.hops_total);
         self.levels_skipped = self.levels_skipped.saturating_add(other.levels_skipped);
+        self.trees_skipped = self.trees_skipped.saturating_add(other.trees_skipped);
         self.energy_nj += other.energy_nj;
     }
 
@@ -149,6 +161,16 @@ impl ExecReport {
             self.levels_skipped as f64 / self.samples as f64
         }
     }
+
+    /// Trees skipped per evaluated classification by the adaptive
+    /// confidence early exit (0 when adaptive mode is off).
+    pub fn trees_skipped_per_class(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.trees_skipped as f64 / self.samples as f64
+        }
+    }
 }
 
 /// A pluggable execution engine over a compiled forest: evaluates
@@ -171,7 +193,12 @@ pub trait Backend: Send + Sync {
 /// a FoG operating point over its grove ring.
 #[derive(Clone, Debug)]
 enum TilePlan {
-    Forest { arena: Arc<ForestArena>, reduce: Reduce, quant: QuantMode },
+    Forest {
+        arena: Arc<ForestArena>,
+        reduce: Reduce,
+        quant: QuantMode,
+        adaptive: Option<f32>,
+    },
     Fog { fog: FieldOfGroves, params: FogParams },
 }
 
@@ -201,16 +228,39 @@ pub(crate) fn forest_tile_quant(
     x: &[f32],
     n: usize,
 ) -> (ProbMatrix, ExecReport) {
-    let probs = BatchPlan::new(arena, reduce).with_quant(quant).execute(x, n);
+    forest_tile_adaptive(arena, reduce, quant, None, x, n)
+}
+
+/// [`forest_tile_quant`] with an adaptive confidence early-exit
+/// threshold: `Some(t < 1.0)` switches the plan to the per-sample
+/// vote-accumulation walk ([`BatchPlan::with_adaptive`]) and surfaces
+/// the trees it did not evaluate as `ExecReport::trees_skipped`.
+/// `comparator_ops` / `levels_skipped` stay the padded-depth accounting
+/// numbers at every threshold — the μarch suites and Table 1 / Fig 4–5
+/// pin them, so adaptive savings are reported beside, never subtracted.
+pub(crate) fn forest_tile_adaptive(
+    arena: &ForestArena,
+    reduce: Reduce,
+    quant: QuantMode,
+    adaptive: Option<f32>,
+    x: &[f32],
+    n: usize,
+) -> (ProbMatrix, ExecReport) {
+    let (probs, trees_skipped) = BatchPlan::new(arena, reduce)
+        .with_quant(quant)
+        .with_adaptive(adaptive)
+        .execute_counting(x, n);
     // `comparator_ops` stays the padded-depth accounting number (the
     // μarch suites pin it); the ragged kernel's saving is reported
-    // separately as `levels_skipped`.
+    // separately as `levels_skipped`, the adaptive exit's as
+    // `trees_skipped`.
     let report = ExecReport {
         samples: n as u64,
         comparator_ops: (n as u64)
             .saturating_mul(arena.ops_per_eval_range(0, arena.n_trees()) as u64),
         levels_skipped: (n as u64)
             .saturating_mul(arena.skipped_ops_per_eval_range(0, arena.n_trees()) as u64),
+        trees_skipped,
         hops_total: n as u64,
         ..Default::default()
     };
@@ -264,7 +314,7 @@ impl SoftwareBackend {
     /// Whole-forest reduction over `[0, n_trees)` of `arena`.
     pub fn forest(arena: Arc<ForestArena>, reduce: Reduce) -> SoftwareBackend {
         SoftwareBackend {
-            plan: TilePlan::Forest { arena, reduce, quant: QuantMode::Off },
+            plan: TilePlan::Forest { arena, reduce, quant: QuantMode::Off, adaptive: None },
         }
     }
 
@@ -281,6 +331,17 @@ impl SoftwareBackend {
         }
         self
     }
+
+    /// Enable adaptive confidence early exit on forest tiles (no-op for
+    /// FoG plans — their early exit already lives in `FogParams`, see
+    /// `FogModel::with_adaptive`). Same effective-range filter as
+    /// [`BatchPlan::with_adaptive`]: `t ≥ 1.0` keeps full evaluation.
+    pub fn with_adaptive(mut self, t: Option<f32>) -> SoftwareBackend {
+        if let TilePlan::Forest { adaptive, .. } = &mut self.plan {
+            *adaptive = t;
+        }
+        self
+    }
 }
 
 impl Backend for SoftwareBackend {
@@ -290,8 +351,8 @@ impl Backend for SoftwareBackend {
 
     fn evaluate_tile(&self, x: &[f32], n: usize) -> (ProbMatrix, ExecReport) {
         match &self.plan {
-            TilePlan::Forest { arena, reduce, quant } => {
-                forest_tile_quant(arena, *reduce, *quant, x, n)
+            TilePlan::Forest { arena, reduce, quant, adaptive } => {
+                forest_tile_adaptive(arena, *reduce, *quant, *adaptive, x, n)
             }
             TilePlan::Fog { fog, params } => fog_tile(fog, params, x, n),
         }
@@ -318,7 +379,7 @@ impl UarchBackend {
     /// serially through one PE tile.
     pub fn forest(arena: Arc<ForestArena>, reduce: Reduce) -> UarchBackend {
         UarchBackend {
-            plan: TilePlan::Forest { arena, reduce, quant: QuantMode::Off },
+            plan: TilePlan::Forest { arena, reduce, quant: QuantMode::Off, adaptive: None },
             eb: EnergyBlocks::default(),
         }
     }
@@ -329,6 +390,18 @@ impl UarchBackend {
     pub fn with_quant(mut self, mode: QuantMode) -> UarchBackend {
         if let TilePlan::Forest { quant, .. } = &mut self.plan {
             *quant = mode;
+        }
+        self
+    }
+
+    /// Enable adaptive confidence early exit on forest tiles (no-op for
+    /// FoG plans). Answers come from the identical software kernel, so
+    /// both backends agree on probabilities *and* `trees_skipped` at
+    /// every threshold; the cycle/energy accounting stays the
+    /// depth-bound accelerator model.
+    pub fn with_adaptive(mut self, t: Option<f32>) -> UarchBackend {
+        if let TilePlan::Forest { adaptive, .. } = &mut self.plan {
+            *adaptive = t;
         }
         self
     }
@@ -353,12 +426,12 @@ impl Backend for UarchBackend {
 
     fn evaluate_tile(&self, x: &[f32], n: usize) -> (ProbMatrix, ExecReport) {
         match &self.plan {
-            TilePlan::Forest { arena, reduce, quant } => {
+            TilePlan::Forest { arena, reduce, quant, adaptive } => {
                 // Answers from the identical software kernel; accounting
                 // from the single-tile RF accelerator model: every sample
                 // walks all trees in parallel (PE latency is depth-bound),
                 // moving one Γ-byte queue word in and out.
-                let (probs, sw) = forest_tile_quant(arena, *reduce, *quant, x, n);
+                let (probs, sw) = forest_tile_adaptive(arena, *reduce, *quant, *adaptive, x, n);
                 let grove = Grove::from_arena(Arc::clone(arena), 0, arena.n_trees());
                 let lat = PeModel::default().latency(&grove).max(1);
                 let gamma = (1 + arena.n_features() + 1 + arena.n_classes()) as u64;
@@ -375,7 +448,13 @@ impl Backend for UarchBackend {
                     total_hops: nn,
                     grove_busy_cycles: vec![nn.saturating_mul(lat)],
                 };
-                (probs, ExecReport::from_stats(&stats, &self.eb))
+                let mut report = ExecReport::from_stats(&stats, &self.eb);
+                // The simulator knows nothing of the adaptive exit;
+                // overlay the software kernel's count so both backends
+                // report identical savings (the conformance suite pins
+                // this).
+                report.trees_skipped = sw.trees_skipped;
+                (probs, report)
             }
             TilePlan::Fog { fog, params } => {
                 let f = fog.n_features;
@@ -488,6 +567,40 @@ mod tests {
             .evaluate_tile(&ds.test.x, n);
         assert_eq!(u_off, u_q, "exact quantization changed a uarch answer");
         assert_eq!(ur_off, ur_q, "quantization changed uarch accounting");
+    }
+
+    #[test]
+    fn adaptive_backends_agree_and_keep_accounting() {
+        // Adaptive early exit changes neither the comparator-op charge
+        // nor backend agreement: software and uarch report identical
+        // probabilities and trees_skipped, and the padded-depth
+        // accounting is byte-equal to the full-evaluation report.
+        let (arena, _, ds) = setup();
+        let n = ds.test.len();
+        let (_, full) = SoftwareBackend::forest(Arc::clone(&arena), Reduce::ProbAverage)
+            .evaluate_tile(&ds.test.x, n);
+        assert_eq!(full.trees_skipped, 0);
+        let (p_sw, r_sw) = SoftwareBackend::forest(Arc::clone(&arena), Reduce::ProbAverage)
+            .with_adaptive(Some(0.5))
+            .evaluate_tile(&ds.test.x, n);
+        let (p_ua, r_ua) = UarchBackend::forest(Arc::clone(&arena), Reduce::ProbAverage)
+            .with_adaptive(Some(0.5))
+            .evaluate_tile(&ds.test.x, n);
+        assert_eq!(p_sw, p_ua, "adaptive answers diverged across backends");
+        assert!(r_sw.trees_skipped > 0, "demo forest should early-exit at t = 0.5");
+        assert_eq!(r_sw.trees_skipped, r_ua.trees_skipped, "skip accounting diverged");
+        assert_eq!(r_sw.comparator_ops, full.comparator_ops, "adaptive changed the charge");
+        assert_eq!(r_sw.levels_skipped, full.levels_skipped);
+        assert!((r_sw.trees_skipped_per_class() - r_sw.trees_skipped as f64 / n as f64).abs()
+            < 1e-12);
+        // t = 1.0 routes to the plain kernel: whole report byte-equal.
+        let (p_one, r_one) = SoftwareBackend::forest(Arc::clone(&arena), Reduce::ProbAverage)
+            .with_adaptive(Some(1.0))
+            .evaluate_tile(&ds.test.x, n);
+        let (p_full, _) = SoftwareBackend::forest(Arc::clone(&arena), Reduce::ProbAverage)
+            .evaluate_tile(&ds.test.x, n);
+        assert_eq!(p_one, p_full, "t = 1.0 must be byte-identical to full evaluation");
+        assert_eq!(r_one, full);
     }
 
     #[test]

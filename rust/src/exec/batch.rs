@@ -41,6 +41,23 @@
 //! early exit are all pure work-savers ([`BatchPlan::with_padded_walk`]
 //! keeps the pre-exit full-depth walk around as the bench/conformance
 //! baseline).
+//!
+//! **Adaptive confidence early exit** ([`BatchPlan::with_adaptive`],
+//! Daghero et al., arXiv 2205.13838): an orthogonal, *per-sample* effort
+//! knob. Trees still accumulate in index order, but after each tree the
+//! running average's confidence margin
+//! ([`crate::fog::confidence::max_diff`]) is checked against a threshold
+//! `t`; once it crosses, the remaining trees are skipped and the sample's
+//! row is the average over the trees actually evaluated. `t = 1.0` (or
+//! any `t ≥ 1.0`) disables the mode and routes through the plain tiled
+//! kernel, so full-threshold results are byte-identical to non-adaptive
+//! evaluation by construction — the conformance pin `rust/tests/adaptive.rs`
+//! holds this across models, backends and quant lanes. Each sample's exit
+//! point depends only on its own feature row and the tree order, never on
+//! tile or batch packing, so adaptive results stay batch-composition
+//! independent. Comparator-op *accounting* stays at the padded-depth
+//! hardware charge (Table 1 / Fig 4–5 stable); the saved work is
+//! reported separately as `ExecReport::trees_skipped`.
 
 use super::arena::{CursorIdx, ForestArena};
 use super::quant::{QuantMode, QuantizedLane};
@@ -109,6 +126,10 @@ pub struct BatchPlan<'a> {
     quant: QuantMode,
     /// Lane resolved from `quant` and the arena's code widths.
     lanes: LanePlan<'a>,
+    /// Adaptive early-exit confidence threshold, already filtered to the
+    /// effective range (see [`BatchPlan::with_adaptive`]): `None` = full
+    /// evaluation.
+    adaptive: Option<f32>,
 }
 
 impl<'a> BatchPlan<'a> {
@@ -132,6 +153,7 @@ impl<'a> BatchPlan<'a> {
             padded_walk: false,
             quant: QuantMode::Off,
             lanes: LanePlan::F32,
+            adaptive: None,
         }
     }
 
@@ -200,6 +222,29 @@ impl<'a> BatchPlan<'a> {
         self
     }
 
+    /// Enable Daghero-style adaptive early exit (arXiv 2205.13838):
+    /// accumulate tree votes in index order and stop a sample once the
+    /// running average's confidence margin
+    /// ([`crate::fog::confidence::max_diff`]) reaches `t`. Thresholds
+    /// `≥ 1.0` (and non-finite values) are filtered out here, so the
+    /// full-threshold plan *is* the plain tiled kernel — `t = 1.0`
+    /// results are byte-identical to non-adaptive evaluation by
+    /// construction, the house conformance pin. Adaptive plans walk the
+    /// f32 thresholds per sample regardless of the quant lane: exact
+    /// rank codes answer identically anyway, and lossy modes evaluate
+    /// exactly under adaptive (the per-sample walk has no integer tile).
+    pub fn with_adaptive(mut self, t: Option<f32>) -> BatchPlan<'a> {
+        self.adaptive = t.filter(|v| v.is_finite() && *v < 1.0);
+        self
+    }
+
+    /// The effective adaptive threshold (`None` when the plan runs the
+    /// plain full-evaluation kernel — including when `with_adaptive` was
+    /// called with `t ≥ 1.0`).
+    pub fn adaptive_threshold(&self) -> Option<f32> {
+        self.adaptive
+    }
+
     /// The lane the tiles actually run on (`"f32"`, `"u8"`, `"u16"`) —
     /// the BENCH_JSON / serve-log label.
     pub fn lane_label(&self) -> &'static str {
@@ -243,11 +288,93 @@ impl<'a> BatchPlan<'a> {
     /// disjoint row ranges of it, each reusing one cursor + transpose
     /// scratch across every tile of its chunk.
     pub fn execute(&self, x: &[f32], n: usize) -> ProbMatrix {
+        self.execute_counting(x, n).0
+    }
+
+    /// [`BatchPlan::execute`] plus the adaptive early-exit work counter:
+    /// the second element is the total number of trees *not* evaluated
+    /// because samples crossed the confidence threshold (always 0 for
+    /// non-adaptive plans, where every sample walks the full tree range).
+    pub fn execute_counting(&self, x: &[f32], n: usize) -> (ProbMatrix, u64) {
+        match self.adaptive {
+            Some(t) => self.execute_adaptive(x, n, t),
+            None => (self.execute_plain(x, n), 0),
+        }
+    }
+
+    /// The full-evaluation tiled kernel (every sample walks every tree
+    /// of the range).
+    fn execute_plain(&self, x: &[f32], n: usize) -> ProbMatrix {
         if self.arena.depth() <= U16_MAX_DEPTH {
             self.execute_cursor::<u16>(x, n)
         } else {
             self.execute_cursor::<u32>(x, n)
         }
+    }
+
+    /// The adaptive early-exit kernel: a per-sample scalar walk in tree
+    /// index order (confidence gating is inherently per-sample, like
+    /// Algorithm 2's grove walk). After each tree — once past a warm-up
+    /// floor of a quarter of the range, Daghero's patience guard against
+    /// a single pure leaf faking certainty — the running average is
+    /// checked and the sample exits at the first tree where
+    /// `max_diff ≥ t` (ties on the threshold exit deterministically via
+    /// `≥`). The margin sequence is a pure function of the feature row
+    /// and the tree order, so raising `t` can only move the exit later
+    /// (monotonicity) and results never depend on tile or batch packing.
+    fn execute_adaptive(&self, x: &[f32], n: usize, t: f32) -> (ProbMatrix, u64) {
+        use crate::fog::confidence::max_diff;
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let f = self.arena.n_features();
+        let c = self.arena.n_classes();
+        assert_eq!(x.len(), n * f, "batch shape mismatch");
+        let t_cnt = self.hi - self.lo;
+        let min_evals = (t_cnt / 4).max(1);
+        let skipped = AtomicU64::new(0);
+        let block = self.grain_rows(n);
+        let mut data = vec![0.0f32; n * c];
+        par_row_chunks_mut(&mut data, c, block, |first_row, chunk| {
+            let mut local_skipped = 0u64;
+            let mut acc = vec![0.0f32; c];
+            let mut norm = vec![0.0f32; c];
+            for (s, out) in chunk.chunks_exact_mut(c).enumerate() {
+                let row = &x[(first_row + s) * f..(first_row + s + 1) * f];
+                acc.iter_mut().for_each(|v| *v = 0.0);
+                let mut k = 0usize;
+                while k < t_cnt {
+                    let tree = self.lo + k;
+                    let leaf = self.arena.leaf_slice(tree, self.arena.leaf_index(tree, row));
+                    match self.reduce {
+                        Reduce::ProbAverage => {
+                            for (a, &p) in acc.iter_mut().zip(leaf) {
+                                *a += p;
+                            }
+                        }
+                        Reduce::MajorityVote => acc[crate::util::argmax(leaf)] += 1.0,
+                    }
+                    k += 1;
+                    if k >= min_evals && k < t_cnt {
+                        let inv = 1.0 / k as f32;
+                        for (v, &a) in norm.iter_mut().zip(&acc) {
+                            *v = a * inv;
+                        }
+                        if max_diff(&norm) >= t {
+                            break;
+                        }
+                    }
+                }
+                local_skipped += (t_cnt - k) as u64;
+                // Same reduction order as the tiled kernel: accumulate in
+                // tree index order, one final multiply — a sample that
+                // walks every tree produces the byte-identical row.
+                let inv = 1.0 / k as f32;
+                for (o, &a) in out.iter_mut().zip(&acc) {
+                    *o = a * inv;
+                }
+            }
+            skipped.fetch_add(local_skipped, Ordering::Relaxed);
+        });
+        (ProbMatrix::new(data, c), skipped.into_inner())
     }
 
     /// Dispatch on the resolved lane: the transpose loop doubles as the
@@ -631,6 +758,107 @@ mod tests {
                 assert_eq!(small.row(i), lossy_full.row(i), "lossy n {n} row {i}");
             }
         }
+    }
+
+    #[test]
+    fn adaptive_full_threshold_is_plain_kernel() {
+        // The conformance pin at the plan level: `with_adaptive(1.0)` (and
+        // anything ≥ 1.0 or non-finite) filters to None, so the plan runs
+        // the plain tiled kernel — byte-identical rows, zero skip count —
+        // for both reductions on a ragged arena.
+        let (arena, ds) = ragged_arena();
+        let n = ds.test.len();
+        for reduce in [Reduce::ProbAverage, Reduce::MajorityVote] {
+            let plain = BatchPlan::new(&arena, reduce).execute(&ds.test.x, n);
+            for t in [1.0f32, 1.5, f32::INFINITY, f32::NAN] {
+                let plan = BatchPlan::new(&arena, reduce).with_adaptive(Some(t));
+                assert_eq!(plan.adaptive_threshold(), None, "t {t} not filtered");
+                let (probs, skipped) = plan.execute_counting(&ds.test.x, n);
+                assert_eq!(probs, plain, "{reduce:?} t {t}");
+                assert_eq!(skipped, 0, "{reduce:?} t {t}");
+            }
+            let (_, skipped) =
+                BatchPlan::new(&arena, reduce).with_adaptive(None).execute_counting(&ds.test.x, n);
+            assert_eq!(skipped, 0);
+        }
+    }
+
+    #[test]
+    fn adaptive_skips_work_and_keeps_valid_rows() {
+        let (arena, ds) = ragged_arena();
+        let n = ds.test.len();
+        let plan = BatchPlan::new(&arena, Reduce::ProbAverage).with_adaptive(Some(0.6));
+        assert_eq!(plan.adaptive_threshold(), Some(0.6));
+        let (probs, skipped) = plan.execute_counting(&ds.test.x, n);
+        assert!(skipped > 0, "demo forest should early-exit at t = 0.6");
+        for i in 0..n {
+            let row = probs.row(i);
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4, "row {i} sums to {sum}");
+            assert!(row.iter().all(|&p| (0.0..=1.0).contains(&p)), "row {i}");
+        }
+    }
+
+    #[test]
+    fn adaptive_trees_evaluated_monotone_in_threshold() {
+        // Satellite property: each sample's margin sequence is fixed, so
+        // raising `t` can only move its exit later — total trees skipped
+        // is non-increasing in the threshold.
+        let (arena, ds) = ragged_arena();
+        let n = ds.test.len();
+        let mut last = u64::MAX;
+        for t in [0.1f32, 0.3, 0.5, 0.7, 0.9] {
+            let (_, skipped) = BatchPlan::new(&arena, Reduce::ProbAverage)
+                .with_adaptive(Some(t))
+                .execute_counting(&ds.test.x, n);
+            assert!(skipped <= last, "t {t}: skipped {skipped} rose past {last}");
+            last = skipped;
+        }
+    }
+
+    #[test]
+    fn adaptive_results_independent_of_batch_packing() {
+        // Satellite conformance: a sample exits at the same tree count
+        // whether it arrives alone, in a small batch, or in the full
+        // split, and whatever the tile size — rows byte-identical, skip
+        // totals additive.
+        let (arena, ds) = ragged_arena();
+        let f = arena.n_features();
+        let n = ds.test.len();
+        let plan = BatchPlan::new(&arena, Reduce::ProbAverage).with_adaptive(Some(0.5));
+        let (full, full_skipped) = plan.execute_counting(&ds.test.x, n);
+        for tile in [1usize, 7, 256] {
+            let tiled = BatchPlan::new(&arena, Reduce::ProbAverage)
+                .with_adaptive(Some(0.5))
+                .with_tile(tile)
+                .execute_counting(&ds.test.x, n);
+            assert_eq!(tiled.0, full, "tile {tile}");
+            assert_eq!(tiled.1, full_skipped, "tile {tile} skip count");
+        }
+        let mut summed = 0u64;
+        for i in 0..n {
+            let (one, skipped) = plan.execute_counting(&ds.test.x[i * f..(i + 1) * f], 1);
+            assert_eq!(one.row(0), full.row(i), "row {i}");
+            summed += skipped;
+        }
+        assert_eq!(summed, full_skipped, "per-row skips don't sum to the batch total");
+    }
+
+    #[test]
+    fn adaptive_warmup_floor_prevents_single_tree_exit() {
+        // A pure (one-hot) leaf has margin 1.0; without the quarter-range
+        // warm-up floor every such sample would exit after one tree. The
+        // floor forces at least ceil-free t_cnt/4 (≥ 1) evaluations.
+        let (arena, ds) = ragged_arena();
+        let t_cnt = arena.n_trees() as u64;
+        let min_evals = (t_cnt / 4).max(1);
+        let n = ds.test.len() as u64;
+        let (_, skipped) = BatchPlan::new(&arena, Reduce::ProbAverage)
+            .with_adaptive(Some(1e-6))
+            .execute_counting(&ds.test.x, n as usize);
+        // Even at a near-zero threshold no sample skips past the floor.
+        assert!(skipped <= n * (t_cnt - min_evals), "warm-up floor violated");
+        assert!(skipped > 0, "near-zero threshold should exit at the floor");
     }
 
     #[test]

@@ -6,6 +6,18 @@
 //! (0.85). For multi-output classification the paper takes the **minimum**
 //! of the per-output differences ("minimum difference of maximum values",
 //! footnote 1) — the ensemble must be confident about *every* output.
+//!
+//! The same margin also drives the serving tier's **adaptive early-exit**
+//! mode (Daghero et al., "Dynamic Decision Tree Ensembles", arXiv
+//! 2205.13838): the batch kernel
+//! ([`BatchPlan::with_adaptive`](crate::exec::BatchPlan::with_adaptive))
+//! evaluates [`max_diff`] on a sample's *running* tree-vote average and
+//! stops accumulating once it reaches the threshold. Exit uses the same
+//! `>=` comparison as Algorithm 2 line 9, so a margin landing exactly on
+//! the threshold exits deterministically, and raising the threshold can
+//! only move a sample's exit later (the margin sequence per sample is
+//! fixed) — both properties are pinned by the tests below and
+//! `rust/tests/adaptive.rs`.
 
 use crate::util::two_max;
 
@@ -31,6 +43,23 @@ pub fn max_diff_multi(probs: &[&[f32]]) -> f32 {
 #[inline]
 pub fn confident(prob: &[f32], threshold: f32) -> bool {
     max_diff(prob) >= threshold
+}
+
+/// [`max_diff`] with input validation for untrusted probability rows
+/// (request ingress, test fixtures): rejects empty rows and rows with a
+/// non-finite entry with a friendly message instead of silently
+/// propagating a NaN margin into an exit decision.
+pub fn checked_max_diff(prob: &[f32]) -> crate::util::error::Result<f32> {
+    crate::ensure!(
+        !prob.is_empty(),
+        "confidence undefined for an empty probability row"
+    );
+    if let Some((i, v)) = prob.iter().enumerate().find(|(_, v)| !v.is_finite()) {
+        crate::bail!(
+            "probability row is degenerate: entry {i} is {v} (every entry must be finite)"
+        );
+    }
+    Ok(max_diff(prob))
 }
 
 #[cfg(test)]
@@ -74,5 +103,53 @@ mod tests {
         assert!((max_diff(&[0.7, 0.3]) - 0.4).abs() < 1e-6);
         // single-class degenerate array: confidence 0 (max1 == max2)
         assert_eq!(max_diff(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn threshold_tie_exits_deterministically() {
+        // Algorithm 2 line 9 is `>=`: a margin landing *exactly* on the
+        // threshold is confident — every run, every backend. Exact f32
+        // values (0.75 - 0.25 = 0.5 exactly) make this a true tie.
+        let row = [0.75f32, 0.25];
+        assert_eq!(max_diff(&row), 0.5);
+        assert!(confident(&row, 0.5), "exact tie must exit");
+        assert!(!confident(&row, f32::from_bits(0.5f32.to_bits() + 1)));
+        for _ in 0..3 {
+            assert!(confident(&row, 0.5), "tie resolution must be deterministic");
+        }
+    }
+
+    #[test]
+    fn exit_index_monotone_in_threshold() {
+        // The property the adaptive kernel leans on: for a fixed margin
+        // sequence, the first index where `confident` holds never moves
+        // *earlier* as the threshold rises — raising `t` can only
+        // increase trees evaluated.
+        let margins: Vec<[f32; 2]> = [0.1f32, 0.3, 0.25, 0.6, 0.8, 0.95]
+            .iter()
+            .map(|&d| [(1.0 + d) / 2.0, (1.0 - d) / 2.0])
+            .collect();
+        let exit_at = |t: f32| margins.iter().position(|m| confident(m, t));
+        let mut last = 0usize;
+        for t in [0.05f32, 0.2, 0.4, 0.7, 0.9] {
+            let k = exit_at(t).expect("grid tops out below the max margin");
+            assert!(k >= last, "t {t}: exit moved earlier ({k} < {last})");
+            last = k;
+        }
+        assert_eq!(exit_at(0.99), None, "unreachable threshold must never exit");
+    }
+
+    #[test]
+    fn checked_max_diff_rejects_degenerate_rows() {
+        // Friendly errors, not NaN margins, for untrusted rows.
+        let e = checked_max_diff(&[]).unwrap_err();
+        assert!(e.to_string().contains("empty"), "unhelpful message: {e}");
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let e = checked_max_diff(&[0.5, bad, 0.2]).unwrap_err();
+            assert!(e.to_string().contains("entry 1"), "unhelpful message: {e}");
+        }
+        // The happy path is exactly max_diff.
+        let row = [0.32f32, 0.35, 0.33];
+        assert_eq!(checked_max_diff(&row).unwrap(), max_diff(&row));
     }
 }

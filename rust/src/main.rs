@@ -13,6 +13,10 @@
 //! fog eval     [--models all|rf,mlp] [--dataset d] any registry model: accuracy + PPA
 //!              [--backend software|uarch]          uarch: add hardware-in-the-loop
 //!                                                  sim columns (nJ + cycles / class)
+//!              [--adaptive-sweep] [--model rf_prob] live accuracy-vs-effort sweep of
+//!                                                  the adaptive early-exit threshold
+//!                                                  (Fig-5 style at the serving tier;
+//!                                                  emits eval_adaptive BENCH_JSON)
 //! fog sim      [--dataset penbase] [--threshold T] cycle-level μarch sim
 //! fog serve    [--dataset demo] [--backend native|pjrt]
 //!              [--model <registry name>]           serving demo (FoG ring, or any
@@ -26,6 +30,13 @@
 //!                                                  forest models (u8/u16 = exact
 //!                                                  rank codes, answer-identical
 //!                                                  to off; lossyN = affine N-bit)
+//!              [--adaptive-conf t]                 adaptive confidence early exit,
+//!                                                  t in (0, 1]: a sample stops
+//!                                                  accumulating tree votes once its
+//!                                                  running margin reaches t (1.0 =
+//!                                                  full evaluation, byte-identical
+//!                                                  to omitting the flag; savings
+//!                                                  surface as trees_skipped_per_class)
 //!              [--cache-quant q] [--cache-cap N] [--no-cache] [--rounds R]
 //!                                                  sharded tier: N replicas of the
 //!                                                  model behind a shared router and
@@ -136,6 +147,9 @@ fn main() {
 /// unified `Classifier` interface — one uniform loop, no per-model-type
 /// dispatch.
 fn cmd_eval(args: &Args, seed: u64) {
+    if args.get_bool("adaptive-sweep") {
+        return cmd_eval_adaptive_sweep(args, seed);
+    }
     let profile = profile_or_exit(args.get_or("dataset", "demo"));
     let spec_names: Vec<String> = match args.get_or("models", "all") {
         "all" => REGISTRY.iter().map(|s| s.to_string()).collect(),
@@ -189,7 +203,7 @@ fn cmd_eval(args: &Args, seed: u64) {
             // through the μarch backend and report measured (simulated)
             // per-classification energy and cycles next to the
             // analytical model's numbers.
-            match eval_through_backend(model.as_ref(), &data.test) {
+            match eval_through_backend(model.as_ref(), &data.test, BackendKind::Uarch) {
                 Some(total) => print!(
                     "{:>14.3}{:>14.1}",
                     total.energy_per_class_nj(),
@@ -199,6 +213,71 @@ fn cmd_eval(args: &Args, seed: u64) {
             }
         }
         println!();
+    }
+}
+
+/// `fog eval --adaptive-sweep`: live accuracy-vs-effort trade-off curve
+/// for the adaptive confidence early-exit path. Fits one forest-backed
+/// model per threshold (same seed → same forest every row, so only the
+/// exit policy varies), streams the test split through the chosen
+/// execution backend, and reports accuracy next to the trees skipped per
+/// classification. The `t=1.00` row is the full-evaluation anchor: its
+/// accuracy and accounting must match a run without the flag.
+fn cmd_eval_adaptive_sweep(args: &Args, seed: u64) {
+    let profile = profile_or_exit(args.get_or("dataset", "demo"));
+    let name = args.get_or("model", "rf_prob");
+    let quant = parse_quant_or_exit(args);
+    let kind = parse_exec_backend(args);
+    let spec = ModelSpec::for_shape(name, profile.n_features, profile.n_classes)
+        .unwrap_or_else(|| {
+            eprintln!(
+                "error: unknown model '{name}'; valid names: {}",
+                REGISTRY.join(", ")
+            );
+            std::process::exit(2);
+        })
+        .with_quant(quant);
+    eprintln!("[eval] generating {} ...", profile.name);
+    let data = suite::prepare_data(&profile, seed);
+    println!(
+        "== adaptive early-exit sweep: {} on '{}' (backend {}, quant {}, seed {seed}) ==",
+        name, profile.name, kind.label(), quant.label()
+    );
+    println!(
+        "{:<8}{:>11}{:>16}{:>16}{:>14}",
+        "t", "accuracy%", "trees skip/cls", "cmp ops/cls", "lvl skip/cls"
+    );
+    for t in [0.2f32, 0.4, 0.6, 0.8, 1.0] {
+        let model = spec.clone().with_adaptive(t).fit(&data.train, seed);
+        let acc = model.accuracy(&data.test);
+        let report = eval_through_backend(model.as_ref(), &data.test, kind)
+            .unwrap_or_else(|| {
+                eprintln!("error: model '{name}' has no arena execution backend");
+                std::process::exit(2);
+            });
+        println!(
+            "{:<8.2}{:>11.1}{:>16.2}{:>16.1}{:>14.2}",
+            t,
+            acc * 100.0,
+            report.trees_skipped_per_class(),
+            report.comparator_ops_per_class(),
+            report.levels_skipped_per_class()
+        );
+        println!(
+            "BENCH_JSON {{\"bench\":\"eval_adaptive\",\"dataset\":\"{}\",\"model\":\"{}\",\
+             \"backend\":\"{}\",\"quant\":\"{}\",\"adaptive_conf\":{:.4},\"accuracy\":{:.4},\
+             \"trees_skipped_per_class\":{:.2},\"comparator_ops_per_class\":{:.1},\
+             \"levels_skipped_per_class\":{:.2}}}",
+            profile.name,
+            name,
+            kind.label(),
+            quant.label(),
+            t,
+            acc,
+            report.trees_skipped_per_class(),
+            report.comparator_ops_per_class(),
+            report.levels_skipped_per_class()
+        );
     }
 }
 
@@ -228,6 +307,24 @@ fn parse_quant_or_exit(args: &Args) -> QuantMode {
         );
         std::process::exit(2);
     })
+}
+
+/// Parse `--adaptive-conf t` (adaptive confidence early-exit threshold)
+/// or exit with a friendly error when the value is not a number in
+/// `(0, 1]`. `None` when the flag is absent; `1.0` is accepted and means
+/// full evaluation (byte-identical to omitting the flag — the models
+/// filter it out downstream).
+fn parse_adaptive_or_exit(args: &Args) -> Option<f32> {
+    let spelled = args.get("adaptive-conf")?;
+    let t = spelled.parse::<f32>().unwrap_or(f32::NAN);
+    if !(t > 0.0 && t <= 1.0) {
+        eprintln!(
+            "error: --adaptive-conf must be a confidence threshold in (0, 1], got \
+             '{spelled}' (1.0 = full evaluation; lower = earlier exit)"
+        );
+        std::process::exit(2);
+    }
+    Some(t)
 }
 
 /// FNV-1a over probability rows' f32 bit patterns in response order — a
@@ -272,8 +369,12 @@ fn parse_fleet_policy_or_exit(args: &Args) -> FleetPolicyKind {
 /// Stream a labelled split through the model's μarch execution backend
 /// in serving-sized tiles, merging the per-tile reports. `None` when the
 /// model family has no arena engine (dense baselines).
-fn eval_through_backend(model: &dyn Classifier, split: &fog::data::Split) -> Option<ExecReport> {
-    let backend = model.exec_backend(BackendKind::Uarch)?;
+fn eval_through_backend(
+    model: &dyn Classifier,
+    split: &fog::data::Split,
+    kind: BackendKind,
+) -> Option<ExecReport> {
+    let backend = model.exec_backend(kind)?;
     let f = model.n_features();
     let n = split.len();
     let tile = 64;
@@ -347,8 +448,16 @@ fn cmd_serve(args: &Args, seed: u64) {
     }
     // Any sharded-tier flag selects the sharded path, so no knob is ever
     // silently ignored by the single-queue server or the FoG ring.
-    let sharded_flags =
-        ["replicas", "router", "quant", "cache-quant", "cache-cap", "no-cache", "rounds"];
+    let sharded_flags = [
+        "replicas",
+        "router",
+        "quant",
+        "adaptive-conf",
+        "cache-quant",
+        "cache-cap",
+        "no-cache",
+        "rounds",
+    ];
     let wants_sharded = sharded_flags.iter().any(|k| args.get(k).is_some());
     if let Some(model_name) = args.get("model") {
         // With --model, --backend selects the *execution* backend
@@ -362,9 +471,9 @@ fn cmd_serve(args: &Args, seed: u64) {
     }
     if wants_sharded {
         eprintln!(
-            "error: --replicas/--router/--quant/--cache-quant/--cache-cap/--no-cache/--rounds \
-             need --model <registry name> (the sharded tier serves registry models; \
-             valid names: {})",
+            "error: --replicas/--router/--quant/--adaptive-conf/--cache-quant/--cache-cap/\
+             --no-cache/--rounds need --model <registry name> (the sharded tier serves \
+             registry models; valid names: {})",
             REGISTRY.join(", ")
         );
         std::process::exit(2);
@@ -482,6 +591,9 @@ fn cmd_serve_sharded(args: &Args, model_name: &str, seed: u64) {
         .with_backend(backend)
         .with_quant(quant)
         .with_cache_capacity(args.get_usize("cache-cap", 4096));
+    if let Some(t) = parse_adaptive_or_exit(args) {
+        spec = spec.with_adaptive(t);
+    }
     if !args.get_bool("no-cache") {
         spec = spec.with_cache_quant(args.get_f64("cache-quant", 0.0) as f32);
     }
@@ -539,6 +651,14 @@ fn cmd_serve_sharded(args: &Args, model_name: &str, seed: u64) {
         snap.cache_misses
     );
     println!("throughput : {:.0} req/s", n_total as f64 / wall);
+    if let Some(t) = spec.serving.adaptive_conf {
+        // Paper-faithful accounting is threshold-invariant; the adaptive
+        // saving is its own gauge (trees the early exit never evaluated).
+        println!(
+            "adaptive   : t={t} -> {:.2} trees skipped/classification",
+            snap.trees_skipped_per_class()
+        );
+    }
     if snap.exec_samples > 0 {
         // Hardware in the loop: per-classification dynamic energy and
         // cycles measured by the grove-ring simulator inside every
@@ -559,7 +679,8 @@ fn cmd_serve_sharded(args: &Args, model_name: &str, seed: u64) {
          \"cache_hit_rate\":{:.4},\"cache_quant\":{:.6},\"accuracy\":{:.4},\
          \"energy_per_class_nj\":{:.6},\"energy_per_response_nj\":{:.6},\
          \"cycles_per_class\":{:.2},\"comparator_ops_per_class\":{:.2},\
-         \"levels_skipped_per_class\":{:.2}}}",
+         \"levels_skipped_per_class\":{:.2},\"trees_skipped_per_class\":{:.2},\
+         \"adaptive_conf\":{:.4}}}",
         profile.name,
         server.n_replicas(),
         cfg.router.label(),
@@ -575,7 +696,9 @@ fn cmd_serve_sharded(args: &Args, model_name: &str, seed: u64) {
         snap.energy_per_response_nj(),
         snap.cycles_per_class(),
         snap.comparator_ops_per_class(),
-        snap.levels_skipped_per_class()
+        snap.levels_skipped_per_class(),
+        snap.trees_skipped_per_class(),
+        spec.serving.adaptive_conf.unwrap_or(-1.0)
     );
     for r in 0..server.n_replicas() {
         let rs = server.replica_metrics(r).snapshot();
@@ -629,19 +752,25 @@ fn cmd_serve_fleet(args: &Args, fleet_spec: &str, seed: u64) {
     let router = parse_router_or_exit(args);
     let backend = parse_exec_backend(args);
     let quant = parse_quant_or_exit(args);
+    let adaptive = parse_adaptive_or_exit(args);
     let policy = parse_fleet_policy_or_exit(args);
     let specs: Vec<ModelSpec> = names
         .iter()
         .map(|name| {
-            ModelSpec::for_shape(name, profile.n_features, profile.n_classes)
-                .unwrap_or_else(|| {
-                    eprintln!(
-                        "error: unknown model '{name}'; valid names: {}",
-                        REGISTRY.join(", ")
-                    );
-                    std::process::exit(2);
-                })
-                .with_quant(quant)
+            let mut spec =
+                ModelSpec::for_shape(name, profile.n_features, profile.n_classes)
+                    .unwrap_or_else(|| {
+                        eprintln!(
+                            "error: unknown model '{name}'; valid names: {}",
+                            REGISTRY.join(", ")
+                        );
+                        std::process::exit(2);
+                    })
+                    .with_quant(quant);
+            if let Some(t) = adaptive {
+                spec = spec.with_adaptive(t);
+            }
+            spec
         })
         .collect();
 
@@ -781,7 +910,7 @@ fn cmd_serve_fleet(args: &Args, fleet_spec: &str, seed: u64) {
          \"replicas\":{},\"router\":\"{}\",\"backend\":\"{}\",\"policy\":\"{}\",\
          \"energy_budget_nj\":{:.6},\"loadgen_seed\":{},\"offered\":{},\"served\":{},\
          \"downgraded\":{},\"shed\":{},\"shed_rate\":{:.4},\"throughput_per_s\":{:.1},\
-         \"energy_per_class_nj\":{:.6}}}",
+         \"energy_per_class_nj\":{:.6},\"adaptive_conf\":{:.4}}}",
         names.join("+"),
         profile.name,
         (0..fleet.n_models()).map(|m| fleet.server(m).n_replicas()).sum::<usize>(),
@@ -796,7 +925,8 @@ fn cmd_serve_fleet(args: &Args, fleet_spec: &str, seed: u64) {
         report.shed,
         report.shed_rate,
         report.offered as f64 / wall,
-        snap.total.energy_per_class_nj()
+        snap.total.energy_per_class_nj(),
+        adaptive.unwrap_or(-1.0)
     );
     for (m, pm) in report.per_model.iter().enumerate() {
         let stats = &snap.per_model[m];
@@ -805,7 +935,8 @@ fn cmd_serve_fleet(args: &Args, fleet_spec: &str, seed: u64) {
              \"backend\":\"{}\",\"requested\":{},\"served\":{},\"downgraded_away\":{},\
              \"downgraded_into\":{},\"shed\":{},\"shed_rate\":{:.4},\
              \"req_p50_us\":{:.1},\"req_p99_us\":{:.1},\"batch_p50_us\":{:.1},\
-             \"batch_p99_us\":{:.1},\"energy_per_class_nj\":{:.6},\"cycles_per_class\":{:.2}}}",
+             \"batch_p99_us\":{:.1},\"energy_per_class_nj\":{:.6},\"cycles_per_class\":{:.2},\
+             \"trees_skipped_per_class\":{:.2}}}",
             pm.name,
             names.join("+"),
             backend.label(),
@@ -820,7 +951,8 @@ fn cmd_serve_fleet(args: &Args, fleet_spec: &str, seed: u64) {
             stats.batch_latency.p50_us,
             stats.batch_latency.p99_us,
             stats.snapshot.energy_per_class_nj(),
-            stats.snapshot.cycles_per_class()
+            stats.snapshot.cycles_per_class(),
+            stats.snapshot.trees_skipped_per_class()
         );
     }
     fleet.shutdown();

@@ -1,0 +1,314 @@
+//! Conformance + property tests for the adaptive confidence early-exit
+//! serving path (`--adaptive-conf`, Daghero et al., arXiv 2205.13838):
+//!
+//! * **Full-threshold pin** — `t = 1.0` is byte-identical to running
+//!   without the flag for every tree-based registry model, on both
+//!   execution backends, with quantization off *and* on, including the
+//!   whole accounting report.
+//! * **Accounting split** — at every threshold `comparator_ops` stays
+//!   the paper-faithful padded-depth charge (Table 1 / Fig 4–5 inputs
+//!   unchanged); the saving surfaces only in the separate
+//!   `trees_skipped` gauge, on which both backends agree.
+//! * **Batch composition** — answers for a sample depend only on that
+//!   sample, never on how the batch around it was packed.
+//! * **Cache tagging** — a sharded server caches early-exit rows under
+//!   a threshold tag, so differently-thresholded servers can never
+//!   replay each other's rows; `t = 1.0` shares the full-evaluation
+//!   key space, and capacity-0 / no-cache configs still serve.
+//! * **Fleet replay** — seeded open-loop outcome counters are
+//!   bit-identical across worker counts with adaptive mode on, and the
+//!   skip gauge surfaces in the merged fleet metrics.
+
+use fog::api::{BackendKind, Classifier, Estimator, ModelSpec};
+use fog::coordinator::{
+    loadgen, CacheConfig, Fleet, FleetConfig, FleetRequest, LoadgenConfig, LoadgenReport,
+    RouterPolicy, ShardedServer, ShardedServerConfig,
+};
+use fog::data::synthetic::{generate, DatasetProfile};
+use fog::data::Dataset;
+use fog::exec::QuantMode;
+use std::sync::Arc;
+
+const TREE_MODELS: &[&str] = &["fog_opt", "fog_max", "rf", "rf_prob"];
+
+fn data() -> Dataset {
+    generate(&DatasetProfile::demo(), 733)
+}
+
+fn fit(name: &str, ds: &Dataset, quant: QuantMode, adaptive: Option<f32>) -> Box<dyn Classifier> {
+    let mut spec = ModelSpec::for_shape(name, ds.n_features(), ds.n_classes())
+        .unwrap_or_else(|| panic!("registry name '{name}' missing"))
+        .fast()
+        .with_quant(quant);
+    if let Some(t) = adaptive {
+        spec = spec.with_adaptive(t);
+    }
+    spec.fit(&ds.train, 57)
+}
+
+/// (a) The conformance matrix: `t = 1.0` must be indistinguishable from
+/// full evaluation for every tree-based registry model × both execution
+/// backends × quantization off|on — byte-identical probability rows
+/// through the direct batch path and `evaluate_tile`, and an *equal
+/// whole report* (zero `trees_skipped`, untouched comparator charge).
+#[test]
+fn full_threshold_is_byte_identical_for_all_registry_models() {
+    let ds = data();
+    let n = ds.test.len();
+    for name in TREE_MODELS {
+        for quant in [QuantMode::Off, QuantMode::Exact] {
+            let plain = fit(name, &ds, quant, None);
+            let pinned = fit(name, &ds, quant, Some(1.0));
+            assert!(
+                pinned.adaptive_conf().is_none(),
+                "{name}: t = 1.0 must filter to full evaluation"
+            );
+            let want = plain.predict_proba_batch(&ds.test.x, n);
+            let got = pinned.predict_proba_batch(&ds.test.x, n);
+            assert_eq!(want, got, "{name}/{quant:?}: t = 1.0 changed the direct path");
+            for kind in [BackendKind::Software, BackendKind::Uarch] {
+                let (p0, r0) = plain.exec_backend(kind).unwrap().evaluate_tile(&ds.test.x, n);
+                let (p1, r1) = pinned.exec_backend(kind).unwrap().evaluate_tile(&ds.test.x, n);
+                assert_eq!(
+                    p0,
+                    p1,
+                    "{name}/{quant:?}: t = 1.0 changed a {} backend answer",
+                    kind.label()
+                );
+                assert_eq!(
+                    r0,
+                    r1,
+                    "{name}/{quant:?}: t = 1.0 changed {} accounting",
+                    kind.label()
+                );
+                assert_eq!(r1.trees_skipped, 0, "{name}: full evaluation skipped a tree");
+            }
+        }
+    }
+}
+
+/// (b) A real threshold saves whole trees without moving the hardware
+/// charge: at `t = 0.6` the forest path reports nonzero `trees_skipped`
+/// on which both backends agree byte-for-byte (rows too), every other
+/// counter matches the full-evaluation report, and test accuracy stays
+/// within the acceptance delta.
+#[test]
+fn early_exit_saves_trees_and_keeps_the_comparator_charge() {
+    let ds = data();
+    let n = ds.test.len();
+    let plain = fit("rf_prob", &ds, QuantMode::Off, None);
+    let adaptive = fit("rf_prob", &ds, QuantMode::Off, Some(0.6));
+    assert_eq!(adaptive.adaptive_conf(), Some(0.6));
+
+    let acc_plain = plain.accuracy(&ds.test);
+    let acc_adaptive = adaptive.accuracy(&ds.test);
+    assert!(
+        (acc_plain - acc_adaptive).abs() <= 0.02,
+        "t = 0.6 accuracy {acc_adaptive:.4} drifted more than 0.02 from {acc_plain:.4}"
+    );
+
+    let (sw_probs, sw) =
+        adaptive.exec_backend(BackendKind::Software).unwrap().evaluate_tile(&ds.test.x, n);
+    let (ua_probs, ua) =
+        adaptive.exec_backend(BackendKind::Uarch).unwrap().evaluate_tile(&ds.test.x, n);
+    assert!(sw.trees_skipped > 0, "t = 0.6 on the demo suite must skip trees");
+    assert_eq!(sw_probs, ua_probs, "backends disagree on adaptive rows");
+    assert_eq!(sw.trees_skipped, ua.trees_skipped, "backends disagree on the skip gauge");
+
+    // Zeroing the gauge must recover the full-evaluation report exactly:
+    // the saving is reported *beside* the padded-depth charge, never
+    // subtracted from it.
+    for (kind, report) in [(BackendKind::Software, sw), (BackendKind::Uarch, ua)] {
+        let (_, full) = plain.exec_backend(kind).unwrap().evaluate_tile(&ds.test.x, n);
+        let mut scrubbed = report;
+        scrubbed.trees_skipped = 0;
+        assert_eq!(
+            scrubbed,
+            full,
+            "{}: adaptive mode moved a counter other than trees_skipped",
+            kind.label()
+        );
+    }
+}
+
+/// (c) Batch-composition independence: a sample's early exit consults
+/// only its own running margin, so slicing the same rows into batches of
+/// 1, 7, or all-at-once returns byte-identical probability rows.
+#[test]
+fn answers_are_independent_of_batch_composition() {
+    let ds = data();
+    let f = ds.n_features();
+    let n = ds.test.len();
+    let model = fit("rf_prob", &ds, QuantMode::Off, Some(0.5));
+    let want = model.predict_proba_batch(&ds.test.x, n);
+    for chunk in [1usize, 7] {
+        let mut row = 0;
+        let mut start = 0;
+        while start < n {
+            let end = (start + chunk).min(n);
+            let got = model.predict_proba_batch(&ds.test.x[start * f..end * f], end - start);
+            for i in 0..end - start {
+                assert_eq!(
+                    want.row(row + i),
+                    got.row(i),
+                    "chunk {chunk}: row {} depends on its batch neighbours",
+                    row + i
+                );
+            }
+            row += end - start;
+            start = end;
+        }
+    }
+}
+
+/// (d) Cache rows are tagged by threshold: a sharded server built from
+/// an adaptive model keys its cache under the threshold's bit pattern
+/// (so differently-thresholded servers partition the key space), `t =
+/// 1.0` keeps the full-evaluation tag 0, warm passes replay
+/// byte-identically, and capacity-0 / no-cache configs serve cold.
+#[test]
+fn sharded_cache_rows_are_tagged_by_threshold() {
+    let ds = data();
+    let cfg = |cache: Option<CacheConfig>| ShardedServerConfig {
+        replicas: 2,
+        router: RouterPolicy::RoundRobin,
+        router_seed: 0,
+        cache,
+        ..Default::default()
+    };
+    let cache = Some(CacheConfig { quant_step: 0.0, ..Default::default() });
+
+    // t = 0.6: the cache carries the threshold tag and warm hits replay
+    // the cold rows byte-identically.
+    let model: Arc<dyn Classifier> = Arc::from(fit("rf_prob", &ds, QuantMode::Off, Some(0.6)));
+    let mut server = ShardedServer::start(Arc::clone(&model), &cfg(cache));
+    assert_eq!(
+        server.cache().expect("cache configured").tag(),
+        0.6f32.to_bits() as u64,
+        "adaptive server must tag cached rows with its threshold"
+    );
+    let cold = server.classify(&ds.test.x).expect("aligned batch");
+    let warm = server.classify(&ds.test.x).expect("aligned batch");
+    for (c, w) in cold.iter().zip(&warm) {
+        assert_eq!(c.prob, w.prob, "warm cache replay diverged for id {}", c.id);
+    }
+    let snap = server.snapshot();
+    assert!(snap.cache_hits > 0, "warm pass must hit the cache");
+    assert!(snap.exec_trees_skipped > 0, "skip gauge must flow into serving metrics");
+    server.shutdown();
+
+    // t = 1.0 filters to full evaluation → tag 0, sharing the plain key
+    // space (safe: the rows are byte-identical by test (a)).
+    let pinned: Arc<dyn Classifier> = Arc::from(fit("rf_prob", &ds, QuantMode::Off, Some(1.0)));
+    let mut server = ShardedServer::start(pinned, &cfg(cache));
+    assert_eq!(server.cache().expect("cache configured").tag(), 0);
+    server.shutdown();
+
+    // Capacity 0 and `--no-cache` both serve every request cold.
+    for cache in [Some(CacheConfig { capacity: 0, ..Default::default() }), None] {
+        let mut server = ShardedServer::start(Arc::clone(&model), &cfg(cache));
+        assert!(server.cache().is_none(), "capacity 0 must disable the cache");
+        let r1 = server.classify(&ds.test.x).expect("aligned batch");
+        let r2 = server.classify(&ds.test.x).expect("aligned batch");
+        for (a, b) in r1.iter().zip(&r2) {
+            assert_eq!(a.prob, b.prob, "cold passes must still be deterministic");
+        }
+        let snap = server.snapshot();
+        assert_eq!(snap.cache_hits, 0, "a disabled cache can never hit");
+        server.shutdown();
+    }
+}
+
+/// Every outcome counter of a loadgen report, fleet-wide then per
+/// model; the deterministic fingerprint a seed replay must reproduce.
+fn outcome_counts(r: &LoadgenReport) -> Vec<u64> {
+    let mut v = vec![r.offered, r.served, r.downgraded, r.shed, r.ticks];
+    for m in &r.per_model {
+        v.extend([m.requested, m.served, m.downgraded_away, m.downgraded_into, m.shed]);
+    }
+    v
+}
+
+/// (e) Seed-replay regression: with adaptive mode on, the seeded
+/// open-loop schedule produces bit-identical outcome counters whether
+/// the fleet runs 1 worker or 4 — the early exit is a per-sample
+/// property, invisible to admission — and the merged fleet metrics
+/// surface a nonzero skip gauge.
+#[test]
+fn fleet_loadgen_replays_identically_across_worker_counts() {
+    let ds = data();
+    let lg = LoadgenConfig {
+        qps_start: 300.0,
+        qps_end: 700.0,
+        duration_s: 0.4,
+        seed: 7,
+        tick_us: 20_000,
+        pace: false,
+    };
+    let run = |replicas: usize| {
+        let models: Vec<(String, Arc<dyn Classifier>)> = vec![
+            ("rf".to_string(), Arc::from(fit("rf", &ds, QuantMode::Off, Some(0.6)))),
+            ("rf_prob".to_string(), Arc::from(fit("rf_prob", &ds, QuantMode::Off, Some(0.6)))),
+        ];
+        let cfg = FleetConfig { total_replicas: replicas, ..Default::default() };
+        let mut fleet = Fleet::start(models, &cfg).expect("fleet start");
+        let report = loadgen::run(&mut fleet, &ds.test.x, &lg).expect("loadgen run");
+        let snap = fleet.snapshot();
+        fleet.shutdown();
+        (report, snap)
+    };
+    let (r1, s1) = run(1);
+    let (r4, s4) = run(4);
+    assert!(r1.offered > 0 && r1.served > 0, "the schedule must offer traffic");
+    assert_eq!(
+        outcome_counts(&r1),
+        outcome_counts(&r4),
+        "adaptive mode made loadgen outcomes depend on the worker count"
+    );
+    for snap in [&s1, &s4] {
+        assert!(
+            snap.total.exec_trees_skipped > 0,
+            "adaptive fleet must surface the skip gauge in merged metrics"
+        );
+    }
+    assert_eq!(
+        s1.total.exec_trees_skipped, s4.total.exec_trees_skipped,
+        "the skip gauge must replay with the schedule, independent of workers"
+    );
+}
+
+/// (f) Requests round-trip through the fleet with adaptive on exactly
+/// like the sharded reference: byte-identical rows (the fleet wraps the
+/// same server, and the early exit is deterministic).
+#[test]
+fn adaptive_fleet_matches_sharded_reference_rows() {
+    let ds = data();
+    let model: Arc<dyn Classifier> = Arc::from(fit("rf_prob", &ds, QuantMode::Off, Some(0.6)));
+    let shard_cfg = ShardedServerConfig {
+        replicas: 2,
+        router: RouterPolicy::RoundRobin,
+        router_seed: 0,
+        cache: None,
+        ..Default::default()
+    };
+    let mut reference = ShardedServer::start(Arc::clone(&model), &shard_cfg);
+    let want = reference.classify(&ds.test.x).expect("aligned batch");
+    reference.shutdown();
+
+    let cfg = FleetConfig {
+        total_replicas: 2,
+        router: RouterPolicy::RoundRobin,
+        router_seed: 0,
+        cache: None,
+        ..Default::default()
+    };
+    let mut fleet =
+        Fleet::start(vec![("rf_prob".to_string(), model)], &cfg).expect("fleet start");
+    let reqs = FleetRequest::batch(0, &ds.test.x, ds.n_features()).expect("aligned");
+    let got = fleet.classify(&reqs).expect("classify");
+    for (r, f) in want.iter().zip(&got) {
+        let resp = f.response.as_ref().expect("unlimited budget serves everything");
+        assert_eq!(r.prob, resp.prob, "fleet adaptive row diverged for id {}", r.id);
+    }
+    fleet.shutdown();
+}
