@@ -27,7 +27,10 @@
 //! tile path against the f32 tile path on the same arena, conformance-
 //! asserted byte-identical before timing. The recorded target is ≥ 2×
 //! (`quant_speedup_floor` in `BENCH_PALLAS.json`; CI's fast smoke uses
-//! the lenient `quant_speedup_floor_fast`).
+//! the lenient `quant_speedup_floor_fast`). The same section also times
+//! the integer tiles under the host's vector kernel against the forced
+//! scalar loop (`simd_speedup_x`, `simd` label; `simd_speedup_floor` /
+//! `_fast` gates) — again conformance-asserted byte-identical first.
 //!
 //! Besides the human-readable `bench ...` lines, each model emits one
 //! `BENCH_JSON {...}` line; `tools/bench_record.sh` folds those into the
@@ -196,11 +199,21 @@ fn main() {
     let f32_plan = BatchPlan::new(&wide_arena, Reduce::ProbAverage);
     let quant_plan =
         BatchPlan::new(&wide_arena, Reduce::ProbAverage).with_quant(fog::exec::QuantMode::Exact);
-    // Conformance smoke before timing: exact lanes must not move a byte.
+    let scalar_plan = BatchPlan::new(&wide_arena, Reduce::ProbAverage)
+        .with_quant(fog::exec::QuantMode::Exact)
+        .with_simd(fog::exec::SimdLevel::Scalar);
+    let simd = quant_plan.simd_label();
+    // Conformance smoke before timing: exact lanes must not move a byte,
+    // under native vector dispatch or the forced scalar loop.
     assert_eq!(
         f32_plan.execute(&x, batch),
         quant_plan.execute(&x, batch),
         "exact quantized tile diverged from the f32 kernel"
+    );
+    assert_eq!(
+        scalar_plan.execute(&x, batch),
+        quant_plan.execute(&x, batch),
+        "vector dispatch ({simd}) diverged from the forced-scalar lane"
     );
     b.bench(&format!("quant_wide/f32_tiled/n{batch}"), batch, || {
         black_box(f32_plan.execute(black_box(&x), batch));
@@ -210,22 +223,40 @@ fn main() {
         black_box(quant_plan.execute(black_box(&x), batch));
     });
     let quant_tiled = b.results.last().unwrap().clone();
+    b.bench(&format!("quant_wide/quant_scalar_{lane}/n{batch}"), batch, || {
+        black_box(scalar_plan.execute(black_box(&x), batch));
+    });
+    let quant_scalar = b.results.last().unwrap().clone();
     let quant_speedup = f32_tiled.median_ns / quant_tiled.median_ns.max(1.0);
+    // The vector kernel against its own scalar reference on identical
+    // integer tiles — isolates the SIMD win from the lane-narrowing win.
+    // 1.0 by construction when dispatch resolves to scalar (f32 lanes,
+    // FOG_FORCE_SCALAR=1, or no vector unit), so the floor gate only
+    // arms on hosts with a vector kernel.
+    let simd_speedup = if simd == "scalar" {
+        1.0
+    } else {
+        quant_scalar.median_ns / quant_tiled.median_ns.max(1.0)
+    };
     println!();
     println!(
-        "speedup quant_wide batch {batch}: {quant_speedup:.2}x vs f32 tiles \
-         (f32 {:.0} ns, {lane} {:.0} ns, {} trees depth {})",
+        "speedup quant_wide batch {batch}: {quant_speedup:.2}x vs f32 tiles, \
+         {simd_speedup:.2}x {simd} vs forced scalar (f32 {:.0} ns, {lane} {:.0} ns, \
+         scalar {lane} {:.0} ns, {} trees depth {})",
         f32_tiled.median_ns,
         quant_tiled.median_ns,
+        quant_scalar.median_ns,
         wide_arena.n_trees(),
         wide_arena.depth()
     );
     println!(
         "BENCH_JSON {{\"bench\":\"inference\",\"model\":\"quant_wide\",\"batch\":{batch},\
-         \"lanes\":\"{lane}\",\"f32_tiled_ns\":{:.0},\"quant_tiled_ns\":{:.0},\
-         \"quant_speedup_x\":{quant_speedup:.3},\"batch_tiled_per_s\":{:.1}}}",
+         \"lanes\":\"{lane}\",\"simd\":\"{simd}\",\"f32_tiled_ns\":{:.0},\"quant_tiled_ns\":{:.0},\
+         \"quant_scalar_ns\":{:.0},\"quant_speedup_x\":{quant_speedup:.3},\
+         \"simd_speedup_x\":{simd_speedup:.3},\"batch_tiled_per_s\":{:.1}}}",
         f32_tiled.median_ns,
         quant_tiled.median_ns,
+        quant_scalar.median_ns,
         quant_tiled.throughput_per_s.unwrap_or(0.0)
     );
 

@@ -177,6 +177,15 @@ pub trait Classifier: Send + Sync {
         None
     }
 
+    /// The vector ISA level this model's quantized batch paths dispatch
+    /// to ([`SimdLevel`](crate::exec::SimdLevel)) — `Scalar` for f32
+    /// lanes, non-arena families, and hosts without a matching kernel.
+    /// Observability only: every level is answer-identical by
+    /// construction (pinned in `exec::simd` / `rust/tests/quant.rs`).
+    fn simd_level(&self) -> crate::exec::SimdLevel {
+        crate::exec::SimdLevel::Scalar
+    }
+
     /// The adaptive confidence early-exit threshold active on this
     /// model's batch paths (Daghero et al., arXiv 2205.13838), already
     /// filtered to the effective range: `None` means full evaluation —

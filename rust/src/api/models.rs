@@ -14,7 +14,8 @@ use crate::energy::blocks::{AreaBlocks, EnergyBlocks};
 use crate::energy::model::{fog_cost, rf_cost, ClassifierKind, CostReport, FogStats, RfStats};
 use crate::exec::backend::{fog_tile, forest_tile_adaptive};
 use crate::exec::{
-    Backend, ForestArena, QuantMode, QuantTables, Reduce, SoftwareBackend, UarchBackend,
+    Backend, BatchPlan, ForestArena, QuantMode, QuantTables, Reduce, SimdLevel, SoftwareBackend,
+    UarchBackend,
 };
 use crate::fog::eval::{content_start_grove, InputOutcome};
 use crate::fog::{FieldOfGroves, FogParams};
@@ -303,6 +304,15 @@ impl Classifier for RfModel {
 
     fn quant_tables(&self) -> Option<Arc<QuantTables>> {
         self.quant.is_on().then(|| Arc::clone(self.arena.quant_tables()))
+    }
+
+    fn simd_level(&self) -> SimdLevel {
+        // Resolve exactly the plan the prediction paths build, so the
+        // reported label always matches the kernel that actually ran.
+        BatchPlan::new(&self.arena, self.reduce())
+            .with_quant(self.quant)
+            .with_adaptive(self.adaptive)
+            .simd_level()
     }
 
     fn adaptive_conf(&self) -> Option<f32> {

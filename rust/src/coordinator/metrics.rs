@@ -63,6 +63,12 @@ pub struct Metrics {
     /// Simulated dynamic energy in femtojoules (1 fJ = 1e-6 nJ; integer
     /// so workers can accumulate it lock-free).
     pub exec_energy_fj: AtomicU64,
+    /// Highest vector ISA rank the serving models dispatch their
+    /// quantized kernels to ([`SimdLevel::rank`](crate::exec::SimdLevel)
+    /// — 0 = scalar). A gauge, not a counter: recorded once per model at
+    /// server start and max-merged across replicas, so recorded
+    /// trajectory points stay comparable across hosts.
+    pub exec_simd_level: AtomicU64,
     /// Per-batch evaluation latency samples (µs), bounded reservoir.
     batch_latency_us: Mutex<Vec<u64>>,
     /// Overwrite cursor once the latency reservoir is full.
@@ -82,6 +88,12 @@ impl Metrics {
         self.exec_cycles.fetch_add(r.cycles, Ordering::Relaxed);
         let fj = (r.energy_nj * 1e6).max(0.0).round() as u64;
         self.exec_energy_fj.fetch_add(fj, Ordering::Relaxed);
+    }
+
+    /// Record the vector ISA level a serving model dispatches to
+    /// (`fetch_max`, so a mixed fleet reports its best lane).
+    pub fn record_simd_level(&self, level: crate::exec::SimdLevel) {
+        self.exec_simd_level.fetch_max(level.rank(), Ordering::Relaxed);
     }
 
     /// Record one batch evaluation's wall-clock latency.
@@ -131,6 +143,7 @@ impl Metrics {
             exec_trees_skipped: self.exec_trees_skipped.load(Ordering::Relaxed),
             exec_cycles: self.exec_cycles.load(Ordering::Relaxed),
             exec_energy_fj: self.exec_energy_fj.load(Ordering::Relaxed),
+            exec_simd_level: self.exec_simd_level.load(Ordering::Relaxed),
         }
     }
 }
@@ -155,6 +168,9 @@ pub struct MetricsSnapshot {
     pub exec_trees_skipped: u64,
     pub exec_cycles: u64,
     pub exec_energy_fj: u64,
+    /// Highest [`SimdLevel::rank`](crate::exec::SimdLevel) gauge (0 =
+    /// scalar); render with [`MetricsSnapshot::simd_label`].
+    pub exec_simd_level: u64,
 }
 
 impl MetricsSnapshot {
@@ -181,6 +197,15 @@ impl MetricsSnapshot {
             self.exec_trees_skipped.saturating_add(other.exec_trees_skipped);
         self.exec_cycles = self.exec_cycles.saturating_add(other.exec_cycles);
         self.exec_energy_fj = self.exec_energy_fj.saturating_add(other.exec_energy_fj);
+        // A gauge, not a counter: the aggregate reports the best lane any
+        // replica dispatches to.
+        self.exec_simd_level = self.exec_simd_level.max(other.exec_simd_level);
+    }
+
+    /// The vector ISA label for the recorded dispatch gauge
+    /// (`"scalar"` when nothing recorded — dense baselines, f32 lanes).
+    pub fn simd_label(&self) -> &'static str {
+        crate::exec::SimdLevel::label_of_rank(self.exec_simd_level)
     }
 
     pub fn avg_hops(&self) -> f64 {
@@ -397,6 +422,26 @@ mod tests {
         assert_eq!(a.cache_hits, 0, "cache hits double-counted");
         assert_eq!(a.fleet_served, 0, "fleet outcomes double-counted");
         assert_eq!(a.fleet_shed, 0, "fleet outcomes double-counted");
+    }
+
+    #[test]
+    fn simd_level_gauge_maxes_and_labels() {
+        use crate::exec::SimdLevel;
+        let m = Metrics::default();
+        assert_eq!(m.snapshot().simd_label(), "scalar");
+        m.record_simd_level(SimdLevel::detect());
+        let s = m.snapshot();
+        assert_eq!(s.simd_label(), SimdLevel::detect().label());
+        // Recording Scalar afterwards never downgrades the gauge.
+        m.record_simd_level(SimdLevel::Scalar);
+        assert_eq!(m.snapshot().exec_simd_level, s.exec_simd_level);
+        // merge_worker takes the max across replicas.
+        let mut a = MetricsSnapshot::default();
+        a.merge_worker(&s);
+        assert_eq!(a.exec_simd_level, s.exec_simd_level);
+        // Unknown ranks render as the safe fallback label.
+        let weird = MetricsSnapshot { exec_simd_level: 99, ..Default::default() };
+        assert_eq!(weird.simd_label(), "scalar");
     }
 
     #[test]

@@ -160,15 +160,12 @@ impl ShardedServer {
                 )
             })
             .collect();
-        ShardedServer {
-            replicas,
-            resp_rx,
-            router,
-            cache,
-            front: Arc::new(Metrics::default()),
-            n_features,
-            next_id: 0,
-        }
+        let front = Arc::new(Metrics::default());
+        // Record the model's vector dispatch level once, on the front-end
+        // gauge: every replica clones the same model, so the per-replica
+        // level is identical by construction.
+        front.record_simd_level(model.simd_level());
+        ShardedServer { replicas, resp_rx, router, cache, front, n_features, next_id: 0 }
     }
 
     pub fn n_replicas(&self) -> usize {

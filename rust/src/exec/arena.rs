@@ -67,8 +67,17 @@
 //! range, dropping the per-tree live-depth branch from the inner loop;
 //! cursor rows stay indexed by original tree, so leaf/prob accumulation
 //! order — and therefore every f32 sum — is unchanged.
+//!
+//! The integer lanes optionally run under explicit vector kernels
+//! (`exec::simd`): `traverse_tile_lanes` takes a pre-resolved
+//! [`SimdLevel`] and `step_level` hands the whole per-tree level slice
+//! to the matching u8/u16 compare/advance kernel, falling back to the
+//! scalar loop for f32 lanes, u32 cursors, and hosts without vector
+//! support. The vector path is pinned byte-identical to the scalar one
+//! (same tree paths, same accumulation order).
 
 use super::quant::{QuantTables, QuantizedLane};
+use super::simd::{SimdLane, SimdLevel};
 use crate::dt::FlatTree;
 use crate::forest::RandomForest;
 use std::sync::Arc;
@@ -107,15 +116,22 @@ fn quantize_thresholds<L: QuantizedLane>(
 }
 
 /// One tree-level step of the tiled walk over lane type `L`: advance the
-/// tile's cursors through this tree's `w = 2^lvl` node slots.
+/// tile's cursors through this tree's `w = 2^lvl` node slots. With a
+/// vector `simd` level and an integer lane, the whole slice goes to the
+/// `exec::simd` kernel (byte-identical by construction); otherwise —
+/// f32 lanes, u32 cursors, `Scalar` — the scalar loop below runs.
 #[inline(always)]
-fn step_level<C: CursorIdx, L: Copy + PartialOrd>(
+fn step_level<C: CursorIdx, L: SimdLane>(
+    simd: SimdLevel,
     xt: &[L],
     n: usize,
     feat: &[i32],
     thr: &[L],
     cur: &mut [C],
 ) {
+    if simd != SimdLevel::Scalar && L::step_simd(simd, xt, n, feat, thr, cur) {
+        return;
+    }
     for (s, ci) in cur.iter_mut().enumerate() {
         let i = ci.as_usize();
         // Feature-major tile: the column of feat[i] is the contiguous
@@ -136,6 +152,11 @@ pub(crate) trait CursorIdx: Copy + Send + Sync + 'static {
     /// `v` must fit the cursor width — callers guarantee `v < 2^depth`
     /// with the width chosen from the arena depth.
     fn from_usize(v: usize) -> Self;
+    /// View the cursor slice as u16 lanes when `Self` *is* u16 — the
+    /// only width the `exec::simd` vector kernels advance. Stands in
+    /// for specialization: the kernel asks at runtime, monomorphization
+    /// makes the answer a constant.
+    fn as_u16_mut(cur: &mut [Self]) -> Option<&mut [u16]>;
 }
 
 impl CursorIdx for u16 {
@@ -149,6 +170,10 @@ impl CursorIdx for u16 {
         debug_assert!(v <= u16::MAX as usize);
         v as u16
     }
+    #[inline]
+    fn as_u16_mut(cur: &mut [Self]) -> Option<&mut [u16]> {
+        Some(cur)
+    }
 }
 
 impl CursorIdx for u32 {
@@ -161,6 +186,10 @@ impl CursorIdx for u32 {
     fn from_usize(v: usize) -> Self {
         debug_assert!(v <= u32::MAX as usize);
         v as u32
+    }
+    #[inline]
+    fn as_u16_mut(_cur: &mut [Self]) -> Option<&mut [u16]> {
+        None
     }
 }
 
@@ -582,7 +611,9 @@ impl ForestArena {
         cursors: &mut [C],
         padded_walk: bool,
     ) {
-        self.traverse_tile_lanes(lo, hi, xt, n, cursors, &self.thr, padded_walk);
+        // f32 lanes have no vector kernel; `Scalar` keeps the call site
+        // honest about which path runs.
+        self.traverse_tile_lanes(lo, hi, xt, n, cursors, &self.thr, padded_walk, SimdLevel::Scalar);
     }
 
     /// The lane-generic kernel core: identical traversal over any
@@ -599,7 +630,13 @@ impl ForestArena {
     /// inner loop). Other ranges keep the original order with the
     /// branch; cursor rows are written per original tree either way, so
     /// downstream leaf/prob accumulation order never changes.
-    pub(crate) fn traverse_tile_lanes<C: CursorIdx, L: Copy + PartialOrd>(
+    ///
+    /// `simd` is the pre-resolved vector level for the integer lanes
+    /// (see `exec::simd`); pass [`SimdLevel::Scalar`] for the reference
+    /// scalar walk. Dispatch happens per `step_level` slice, so the
+    /// choice costs nothing on the per-tile path.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn traverse_tile_lanes<C: CursorIdx, L: SimdLane>(
         &self,
         lo: usize,
         hi: usize,
@@ -608,6 +645,7 @@ impl ForestArena {
         cursors: &mut [C],
         thr_tab: &[L],
         padded_walk: bool,
+        simd: SimdLevel,
     ) {
         debug_assert!(lo <= hi && hi <= self.n_trees, "bad tree range {lo}..{hi}");
         let t_cnt = hi - lo;
@@ -639,6 +677,7 @@ impl ForestArena {
                         let t = t as usize;
                         let off = base + t * w;
                         step_level(
+                            simd,
                             xt,
                             n,
                             &self.feat[off..off + w],
@@ -654,6 +693,7 @@ impl ForestArena {
                     }
                     let off = base + (lo + j) * w;
                     step_level(
+                        simd,
                         xt,
                         n,
                         &self.feat[off..off + w],
@@ -1078,8 +1118,106 @@ mod tests {
             }
         }
         let mut c_q = vec![0u16; t_cnt * n];
-        arena.traverse_tile_lanes(0, t_cnt, &xq, n, &mut c_q, thr_q, false);
+        arena.traverse_tile_lanes(0, t_cnt, &xq, n, &mut c_q, thr_q, false, SimdLevel::Scalar);
         assert_eq!(c_q, c_f32, "u8 lanes diverged from the f32 walk");
+    }
+
+    /// Quantize a row-major test slice into a feature-major u8 tile.
+    fn quantized_tile_u8(arena: &ForestArena, x: &[f32], n: usize) -> Vec<u8> {
+        let f = arena.n_features();
+        let q = arena.quant_tables();
+        let mut xq = vec![0u8; n * f];
+        for s in 0..n {
+            for k in 0..f {
+                xq[k * n + s] = u8::try_from(q.code(k, x[s * f + k])).unwrap();
+            }
+        }
+        xq
+    }
+
+    #[test]
+    fn simd_levels_match_scalar_walk_bitwise() {
+        // Whole-kernel pin of the vector path: for every level this host
+        // supports, the u8-lane walk over the ragged fixture (deep +
+        // shallow + leaf-only trees, grove-aligned and straddling
+        // ranges, padded and ragged) reaches exactly the scalar lane's
+        // cursors — including tile widths that exercise the vector
+        // kernels' scalar tails.
+        let (trees, ds) = ragged_flats();
+        let n_trees = trees.len();
+        let arena = ForestArena::from_flat_trees(&trees).with_grove_sizes(&[2, 2, n_trees - 4]);
+        let thr_q = arena.thr_q8().expect("demo forest fits u8 rank codes");
+        let f = arena.n_features();
+        for level in [SimdLevel::Sse2, SimdLevel::Avx2, SimdLevel::Neon] {
+            if !level.supported() {
+                continue;
+            }
+            for n in [1usize, 7, 16, 19.min(ds.test.len())] {
+                let xq = quantized_tile_u8(&arena, &ds.test.x[..n * f], n);
+                for (lo, hi) in [(0usize, n_trees), (0, 4), (1, 3)] {
+                    for padded in [false, true] {
+                        let t_cnt = hi - lo;
+                        let mut c_ref = vec![0u16; t_cnt * n];
+                        arena.traverse_tile_lanes(
+                            lo,
+                            hi,
+                            &xq,
+                            n,
+                            &mut c_ref,
+                            thr_q,
+                            padded,
+                            SimdLevel::Scalar,
+                        );
+                        let mut c_vec = vec![0u16; t_cnt * n];
+                        arena.traverse_tile_lanes(
+                            lo,
+                            hi,
+                            &xq,
+                            n,
+                            &mut c_vec,
+                            thr_q,
+                            padded,
+                            level,
+                        );
+                        assert_eq!(
+                            c_vec,
+                            c_ref,
+                            "{} diverged: n={n} range {lo}..{hi} padded={padded}",
+                            level.label()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_on_depth_zero_forest_is_identical() {
+        // Leaf-only arena: no levels to step, so every dispatch level
+        // must agree trivially (and not touch the cursor buffer shape).
+        let mut s = crate::data::Split::new(2, 3);
+        for _ in 0..6 {
+            s.push(&[0.0, 1.0], 2);
+        }
+        let mut rng = crate::util::rng::Rng::new(5);
+        let tree = crate::dt::builder::fit_tree(
+            &s,
+            &[0, 1, 2, 3, 4, 5],
+            &crate::dt::builder::TreeParams::default(),
+            &mut rng,
+        );
+        let flat = FlatTree::from_tree(&tree, 0);
+        let arena = ForestArena::from_flat_trees(&[flat.clone(), flat]);
+        assert_eq!(arena.depth(), 0);
+        // No internal nodes ⇒ the (empty) u8 threshold table is `&[]`.
+        let thr_q: &[u8] = &[];
+        let n = 5;
+        let xq = vec![0u8; n * arena.n_features()];
+        for level in [SimdLevel::Scalar, SimdLevel::detect()] {
+            let mut cur = vec![7u16; 2 * n];
+            arena.traverse_tile_lanes(0, 2, &xq, n, &mut cur, thr_q, false, level);
+            assert_eq!(cur, vec![0u16; 2 * n], "{}", level.label());
+        }
     }
 
     #[test]

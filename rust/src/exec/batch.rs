@@ -32,6 +32,13 @@
 //!   u8/u16 columns against `thr_q8`/`thr_q16`. Exact rank codes keep
 //!   the walk byte-identical to f32; lossy affine codes trade a bounded
 //!   accuracy delta for a fixed lane width.
+//! * **SIMD dispatch on the integer lanes** — [`BatchPlan::with_quant`]
+//!   also resolves a [`SimdLevel`] (best host ISA, `FOG_FORCE_SCALAR=1`
+//!   pins scalar; [`BatchPlan::with_simd`] overrides for benches/tests)
+//!   and the per-level compare/advance then runs 8–32 samples per
+//!   instruction through `exec::simd` — byte-identical to the scalar
+//!   loop, which remains the fallback for f32 lanes, u32 cursors and
+//!   vector-width tails.
 //!
 //! The floating-point reduction order is *identical* to the per-tree
 //! reference paths (`RandomForest::predict_proba`, per-tree majority
@@ -61,6 +68,7 @@
 
 use super::arena::{CursorIdx, ForestArena};
 use super::quant::{QuantMode, QuantizedLane};
+use super::simd::{SimdLane, SimdLevel};
 use crate::api::ProbMatrix;
 use crate::util::threadpool::{num_threads, par_row_chunks_mut};
 use std::borrow::Cow;
@@ -126,6 +134,10 @@ pub struct BatchPlan<'a> {
     quant: QuantMode,
     /// Lane resolved from `quant` and the arena's code widths.
     lanes: LanePlan<'a>,
+    /// Vector dispatch level for the integer lanes, resolved once at
+    /// [`BatchPlan::with_quant`] time (zero per-tile dispatch cost);
+    /// always `Scalar` for f32 lanes.
+    simd: SimdLevel,
     /// Adaptive early-exit confidence threshold, already filtered to the
     /// effective range (see [`BatchPlan::with_adaptive`]): `None` = full
     /// evaluation.
@@ -153,6 +165,7 @@ impl<'a> BatchPlan<'a> {
             padded_walk: false,
             quant: QuantMode::Off,
             lanes: LanePlan::F32,
+            simd: SimdLevel::Scalar,
             adaptive: None,
         }
     }
@@ -219,7 +232,52 @@ impl<'a> BatchPlan<'a> {
                 }
             }
         };
+        // Integer lanes get the best vector kernel this host supports
+        // (`FOG_FORCE_SCALAR=1` pins the scalar reference); f32 lanes
+        // have no vector form. Resolved here, once per plan.
+        self.simd = match self.lanes {
+            LanePlan::F32 => SimdLevel::Scalar,
+            _ => SimdLevel::detect(),
+        };
         self
+    }
+
+    /// Override the vector dispatch level — a bench/conformance knob:
+    /// the `quant_wide` bench times native dispatch against
+    /// forced-scalar tiles in-process, and test suites pin every
+    /// supported level against `Scalar`. Apply *after*
+    /// [`BatchPlan::with_quant`], which (re)resolves the level. Levels
+    /// this host can't execute — and any level on f32 lanes, which have
+    /// no vector kernel — clamp to `Scalar`, so the `unsafe` kernels
+    /// stay unreachable where they would fault.
+    pub fn with_simd(mut self, level: SimdLevel) -> BatchPlan<'a> {
+        self.simd = if level.supported() && !matches!(self.lanes, LanePlan::F32) {
+            level
+        } else {
+            SimdLevel::Scalar
+        };
+        self
+    }
+
+    /// The vector ISA level the plan's tiles actually run at: `Scalar`
+    /// unless integer lanes are active, cursors are u16
+    /// (`depth ≤ U16_MAX_DEPTH`), and the plan is non-adaptive (the
+    /// adaptive path is a per-sample scalar walk). This is the
+    /// observability surface behind the serve/fleet `simd` label.
+    pub fn simd_level(&self) -> SimdLevel {
+        if self.adaptive.is_some()
+            || self.arena.depth() > U16_MAX_DEPTH
+            || matches!(self.lanes, LanePlan::F32)
+        {
+            SimdLevel::Scalar
+        } else {
+            self.simd
+        }
+    }
+
+    /// [`BatchPlan::simd_level`] as its BENCH_JSON label.
+    pub fn simd_label(&self) -> &'static str {
+        self.simd_level().label()
     }
 
     /// Enable Daghero-style adaptive early exit (arXiv 2205.13838):
@@ -408,7 +466,7 @@ impl<'a> BatchPlan<'a> {
     fn execute_with<C, L, Q>(&self, x: &[f32], n: usize, thr_tab: &[L], code: Q) -> ProbMatrix
     where
         C: CursorIdx,
-        L: Copy + PartialOrd + Default + Send + Sync,
+        L: SimdLane + Default + Send + Sync,
         Q: Fn(usize, f32) -> L + Sync,
     {
         let f = self.arena.n_features();
@@ -454,7 +512,7 @@ impl<'a> BatchPlan<'a> {
     /// One tile: traverse level-synchronously over the feature-major
     /// tile `xt` (any lane type), then reduce leaves into `acc` (the
     /// tile's zero-initialized output rows).
-    fn run_tile<C: CursorIdx, L: Copy + PartialOrd>(
+    fn run_tile<C: CursorIdx, L: SimdLane>(
         &self,
         xt: &[L],
         n: usize,
@@ -465,7 +523,16 @@ impl<'a> BatchPlan<'a> {
         let a = self.arena;
         let c = a.n_classes();
         let t_cnt = self.hi - self.lo;
-        a.traverse_tile_lanes(self.lo, self.hi, xt, n, cursors, thr_tab, self.padded_walk);
+        a.traverse_tile_lanes(
+            self.lo,
+            self.hi,
+            xt,
+            n,
+            cursors,
+            thr_tab,
+            self.padded_walk,
+            self.simd,
+        );
         let inv = 1.0 / t_cnt as f32;
         match self.reduce {
             Reduce::ProbAverage => {
@@ -726,6 +793,75 @@ mod tests {
         assert_eq!(plan.with_quant(QuantMode::Lossy { bits: 12 }).lane_label(), "u16");
         let plan = BatchPlan::new(&arena, Reduce::ProbAverage);
         assert_eq!(plan.with_quant(QuantMode::Off).lane_label(), "f32");
+    }
+
+    #[test]
+    fn simd_dispatch_is_byte_identical_to_forced_scalar() {
+        // The in-process form of the FOG_FORCE_SCALAR conformance leg:
+        // native vector dispatch answers byte-for-byte the forced-scalar
+        // plan — for exact and lossy lanes, both reductions, and every
+        // level this host supports.
+        let (arena, ds) = ragged_arena();
+        let n = ds.test.len();
+        for mode in [QuantMode::Exact, QuantMode::Lossy { bits: 8 }, QuantMode::Lossy { bits: 12 }]
+        {
+            for reduce in [Reduce::ProbAverage, Reduce::MajorityVote] {
+                let scalar = BatchPlan::new(&arena, reduce)
+                    .with_quant(mode)
+                    .with_simd(SimdLevel::Scalar)
+                    .execute(&ds.test.x, n);
+                let native =
+                    BatchPlan::new(&arena, reduce).with_quant(mode).execute(&ds.test.x, n);
+                assert_eq!(native, scalar, "native dispatch {mode:?} {reduce:?}");
+                for level in [SimdLevel::Sse2, SimdLevel::Avx2, SimdLevel::Neon] {
+                    if !level.supported() {
+                        continue;
+                    }
+                    let vec = BatchPlan::new(&arena, reduce)
+                        .with_quant(mode)
+                        .with_simd(level)
+                        .execute(&ds.test.x, n);
+                    assert_eq!(vec, scalar, "{} {mode:?} {reduce:?}", level.label());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_level_reports_the_effective_path() {
+        let (_, arena, _) = setup();
+        // f32 lanes never report a vector level, whatever is requested.
+        let plan = BatchPlan::new(&arena, Reduce::ProbAverage);
+        assert_eq!(plan.simd_level(), SimdLevel::Scalar);
+        assert_eq!(plan.simd_label(), "scalar");
+        let plan = BatchPlan::new(&arena, Reduce::ProbAverage).with_simd(SimdLevel::detect());
+        assert_eq!(plan.simd_level(), SimdLevel::Scalar, "no vector kernel on f32 lanes");
+        // Integer lanes resolve to a level the host can execute.
+        let plan = BatchPlan::new(&arena, Reduce::ProbAverage).with_quant(QuantMode::Exact);
+        assert!(plan.simd_level().supported());
+        assert_eq!(plan.simd_label(), plan.simd_level().label());
+        // Foreign levels clamp to Scalar (at most one of x86/arm wins).
+        for level in [SimdLevel::Avx2, SimdLevel::Neon] {
+            let plan = BatchPlan::new(&arena, Reduce::ProbAverage)
+                .with_quant(QuantMode::Exact)
+                .with_simd(level);
+            if level.supported() {
+                assert_eq!(plan.simd_level(), level);
+            } else {
+                assert_eq!(plan.simd_level(), SimdLevel::Scalar);
+            }
+        }
+        // The adaptive path is a per-sample scalar walk.
+        let plan = BatchPlan::new(&arena, Reduce::ProbAverage)
+            .with_quant(QuantMode::Exact)
+            .with_adaptive(Some(0.5));
+        assert_eq!(plan.simd_level(), SimdLevel::Scalar);
+        // Deep arenas use u32 cursors, which no vector kernel advances.
+        let deep: Vec<FlatTree> =
+            (0..arena.n_trees()).map(|t| arena.tree(t).repad(16)).collect();
+        let deep_arena = ForestArena::from_flat_trees(&deep);
+        let plan = BatchPlan::new(&deep_arena, Reduce::ProbAverage).with_quant(QuantMode::Exact);
+        assert_eq!(plan.simd_level(), SimdLevel::Scalar);
     }
 
     #[test]

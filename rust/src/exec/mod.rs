@@ -65,13 +65,24 @@
 //! compare loop on integer lanes — exactly (rank codes replay the f32
 //! walk bit-for-bit) or lossily (affine codes at a chosen bit width).
 //! See the "Quantized fixed-point lanes" section of [`arena`].
+//!
+//! **SIMD dispatch:** the integer lanes run under explicit vector
+//! kernels ([`simd`]) when the host supports them — AVX2/SSE2 on
+//! x86_64, NEON on aarch64, 8–32 samples per compare/advance
+//! instruction — selected once per [`BatchPlan`] as a [`SimdLevel`]
+//! (`FOG_FORCE_SCALAR=1` pins the scalar reference lane). Every vector
+//! path is conformance-pinned byte-identical to the scalar loop, all
+//! intrinsic `unsafe` lives in `exec/simd.rs`, and comparator-op/energy
+//! accounting is dispatch-invariant.
 
 pub mod arena;
 pub mod backend;
 pub mod batch;
 pub mod quant;
+pub mod simd;
 
 pub use arena::ForestArena;
 pub use backend::{Backend, ExecReport, SoftwareBackend, UarchBackend};
 pub use batch::{BatchPlan, Reduce, DEFAULT_TILE};
 pub use quant::{QuantMode, QuantTables};
+pub use simd::SimdLevel;

@@ -1,0 +1,702 @@
+//! Runtime-dispatched SIMD kernels for the quantized rank-code lanes.
+//!
+//! The exact u8/u16 rank codes (see `exec::quant`) turn the per-level
+//! comparator loop into stride-1 unsigned integer compares; this module
+//! replaces the body of that loop (`arena`'s `step_level`) with explicit
+//! vector kernels that process 8–32 samples per instruction:
+//!
+//! 1. **Gather** (scalar): each sample's cursor names a different node,
+//!    so its threshold code `thr[cur]` and transposed feature code
+//!    `xt[feat[cur] * n + s]` are loaded with plain bounds-checked
+//!    indexing into small stack arrays.
+//! 2. **Compare** (vector): unsigned `>` over a full register. x86 has
+//!    no unsigned byte/word compare, so both sides are sign-biased
+//!    (`x ^ MIN`) and compared signed; NEON compares unsigned natively.
+//! 3. **Advance** (vector): `cur' = 2*cur + (x > thr)` becomes
+//!    `2*cur - mask` — an all-ones u16 mask is `-1` mod 2^16, and
+//!    cursors stay below 2^15 at depth ≤ 15 so the doubling never
+//!    wraps. Byte masks are sign-extended (not zero-extended) to u16
+//!    lanes so the subtract sees `0xFFFF`, in sample order.
+//!
+//! Dispatch: [`SimdLevel::detect`] probes the host once (cached) —
+//! AVX2 else SSE2 on x86_64 via `is_x86_feature_detected!`, NEON on
+//! aarch64 (baseline), scalar elsewhere — honoring `FOG_FORCE_SCALAR=1`
+//! for conformance runs. `BatchPlan::with_quant` resolves the level
+//! once per plan, so the per-tile path pays zero dispatch cost. The
+//! scalar loop remains the always-available fallback: f32 lanes, u32
+//! cursors (depth > 15), vector-width tails, and unsupported levels
+//! all take it via [`SimdLane::step_simd`] returning `false`.
+//!
+//! Conformance: every kernel is pinned byte-identical to the scalar
+//! lane — identical tree paths, and the caller accumulates
+//! probabilities in original tree order either way, so FP reductions
+//! stay bit-stable. Dead-slot sentinel codes (`u8::MAX`/`u16::MAX`)
+//! route left under `>` exactly as in the scalar loop. All
+//! intrinsic-touching `unsafe` lives in this module, behind safe
+//! wrappers: the `#[target_feature]` kernels are only reachable through
+//! a `SimdLevel` the host was probed to support.
+
+use super::arena::CursorIdx;
+use std::sync::OnceLock;
+
+/// Vector ISA tier the quantized kernel runs at. Resolved once per
+/// `BatchPlan` (at `with_quant` time); `Scalar` is always available.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SimdLevel {
+    /// Plain scalar loop — the reference every vector path is pinned to.
+    Scalar,
+    /// x86_64 SSE2 (baseline): 16 u8 / 8 u16 codes per compare.
+    Sse2,
+    /// x86_64 AVX2: 32 u8 / 16 u16 codes per compare.
+    Avx2,
+    /// aarch64 NEON (baseline): 16 u8 / 8 u16 codes per compare.
+    Neon,
+}
+
+impl SimdLevel {
+    /// Stable numeric rank for metrics plumbing (atomic max-merge
+    /// across replicas; decode with [`SimdLevel::label_of_rank`]).
+    pub fn rank(self) -> u64 {
+        match self {
+            SimdLevel::Scalar => 0,
+            SimdLevel::Sse2 => 1,
+            SimdLevel::Avx2 => 2,
+            SimdLevel::Neon => 3,
+        }
+    }
+
+    /// Human-readable label for BENCH_JSON and log lines.
+    pub fn label(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Sse2 => "sse2",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+
+    /// Decode a [`SimdLevel::rank`] back to its label; unknown ranks
+    /// (e.g. a zeroed metrics snapshot) read as `"scalar"`.
+    pub fn label_of_rank(rank: u64) -> &'static str {
+        match rank {
+            1 => "sse2",
+            2 => "avx2",
+            3 => "neon",
+            _ => "scalar",
+        }
+    }
+
+    /// Best level this host supports, honoring `FOG_FORCE_SCALAR`
+    /// (nonempty and not `"0"` forces the scalar reference lane).
+    /// Probed once per process and cached.
+    pub fn detect() -> SimdLevel {
+        static DETECTED: OnceLock<SimdLevel> = OnceLock::new();
+        *DETECTED.get_or_init(|| SimdLevel::resolve(env_force_scalar(), SimdLevel::native()))
+    }
+
+    /// Pure dispatch rule behind [`SimdLevel::detect`], split out so
+    /// tests cover it without mutating the process environment.
+    pub(crate) fn resolve(force_scalar: bool, native: SimdLevel) -> SimdLevel {
+        if force_scalar {
+            SimdLevel::Scalar
+        } else {
+            native
+        }
+    }
+
+    /// Whether the running host can execute this level's kernels.
+    /// `BatchPlan::with_simd` clamps unsupported requests to `Scalar`,
+    /// so the `unsafe` kernels stay unreachable on hosts that would
+    /// fault on them.
+    pub fn supported(self) -> bool {
+        match self {
+            SimdLevel::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Sse2 => true,
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "aarch64")]
+            SimdLevel::Neon => true,
+            _ => false,
+        }
+    }
+
+    /// Best level the host CPU supports, ignoring the env override.
+    fn native() -> SimdLevel {
+        #[cfg(target_arch = "x86_64")]
+        {
+            return if std::arch::is_x86_feature_detected!("avx2") {
+                SimdLevel::Avx2
+            } else {
+                SimdLevel::Sse2
+            };
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            return SimdLevel::Neon;
+        }
+        #[allow(unreachable_code)]
+        SimdLevel::Scalar
+    }
+}
+
+/// `FOG_FORCE_SCALAR` set to anything nonempty other than `"0"`.
+fn env_force_scalar() -> bool {
+    match std::env::var("FOG_FORCE_SCALAR") {
+        Ok(v) => !v.is_empty() && v != "0",
+        Err(_) => false,
+    }
+}
+
+/// Lane types `step_level` can hand to a vector kernel. `step_simd`
+/// returns `true` when a vector kernel fully handled the level
+/// (including its scalar tail), `false` when the caller must run the
+/// scalar loop instead (f32 lanes, u32 cursors, `Scalar` level, or a
+/// level this host/arch has no kernel for).
+pub(crate) trait SimdLane: Copy + PartialOrd {
+    fn step_simd<C: CursorIdx>(
+        level: SimdLevel,
+        xt: &[Self],
+        n: usize,
+        feat: &[i32],
+        thr: &[Self],
+        cur: &mut [C],
+    ) -> bool;
+}
+
+impl SimdLane for f32 {
+    #[inline(always)]
+    fn step_simd<C: CursorIdx>(
+        _level: SimdLevel,
+        _xt: &[f32],
+        _n: usize,
+        _feat: &[i32],
+        _thr: &[f32],
+        _cur: &mut [C],
+    ) -> bool {
+        false
+    }
+}
+
+impl SimdLane for u8 {
+    #[inline(always)]
+    fn step_simd<C: CursorIdx>(
+        level: SimdLevel,
+        xt: &[u8],
+        n: usize,
+        feat: &[i32],
+        thr: &[u8],
+        cur: &mut [C],
+    ) -> bool {
+        match C::as_u16_mut(cur) {
+            Some(c16) => step_u8(level, xt, n, feat, thr, c16),
+            None => false,
+        }
+    }
+}
+
+impl SimdLane for u16 {
+    #[inline(always)]
+    fn step_simd<C: CursorIdx>(
+        level: SimdLevel,
+        xt: &[u16],
+        n: usize,
+        feat: &[i32],
+        thr: &[u16],
+        cur: &mut [C],
+    ) -> bool {
+        match C::as_u16_mut(cur) {
+            Some(c16) => step_u16(level, xt, n, feat, thr, c16),
+            None => false,
+        }
+    }
+}
+
+/// Dispatch one u8-lane level step to the host kernel for `level`.
+fn step_u8(
+    level: SimdLevel,
+    xt: &[u8],
+    n: usize,
+    feat: &[i32],
+    thr: &[u8],
+    cur: &mut [u16],
+) -> bool {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => {
+            // SAFETY: SSE2 is baseline on x86_64.
+            unsafe { x86::step_u8_sse2(xt, n, feat, thr, cur) };
+            true
+        }
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => {
+            // SAFETY: `level` only reaches Avx2 through `detect()` or a
+            // `supported()`-clamped override, both of which probed AVX2.
+            unsafe { x86::step_u8_avx2(xt, n, feat, thr, cur) };
+            true
+        }
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => {
+            // SAFETY: NEON is baseline on aarch64.
+            unsafe { neon::step_u8_neon(xt, n, feat, thr, cur) };
+            true
+        }
+        _ => {
+            let _ = (xt, n, feat, thr, cur);
+            false
+        }
+    }
+}
+
+/// Dispatch one u16-lane level step to the host kernel for `level`.
+fn step_u16(
+    level: SimdLevel,
+    xt: &[u16],
+    n: usize,
+    feat: &[i32],
+    thr: &[u16],
+    cur: &mut [u16],
+) -> bool {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => {
+            // SAFETY: SSE2 is baseline on x86_64.
+            unsafe { x86::step_u16_sse2(xt, n, feat, thr, cur) };
+            true
+        }
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => {
+            // SAFETY: `level` only reaches Avx2 through `detect()` or a
+            // `supported()`-clamped override, both of which probed AVX2.
+            unsafe { x86::step_u16_avx2(xt, n, feat, thr, cur) };
+            true
+        }
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => {
+            // SAFETY: NEON is baseline on aarch64.
+            unsafe { neon::step_u16_neon(xt, n, feat, thr, cur) };
+            true
+        }
+        _ => {
+            let _ = (xt, n, feat, thr, cur);
+            false
+        }
+    }
+}
+
+/// Scalar gather for one vector block starting at sample `s`: cursors
+/// diverge per sample, so the per-sample threshold/feature code loads
+/// stay scalar (bounds-checked) and feed the vector compare from small
+/// stack arrays. Returns `(feature codes, threshold codes)`.
+#[inline(always)]
+fn gather<L: Copy + Default, const V: usize>(
+    xt: &[L],
+    n: usize,
+    feat: &[i32],
+    thr: &[L],
+    cur: &[u16],
+    s: usize,
+) -> ([L; V], [L; V]) {
+    let mut tf = [L::default(); V];
+    let mut tt = [L::default(); V];
+    for j in 0..V {
+        let i = cur[s + j] as usize;
+        tt[j] = thr[i];
+        tf[j] = xt[feat[i] as usize * n + s + j];
+    }
+    (tf, tt)
+}
+
+/// Scalar remainder for the samples past the last full vector block —
+/// the same body as the arena's scalar loop, so tails are
+/// byte-identical to the reference lane.
+#[inline(always)]
+fn scalar_tail<L: Copy + PartialOrd>(
+    xt: &[L],
+    n: usize,
+    feat: &[i32],
+    thr: &[L],
+    cur: &mut [u16],
+    from: usize,
+) {
+    for (s, ci) in cur.iter_mut().enumerate().skip(from) {
+        let i = *ci as usize;
+        let go_right = xt[feat[i] as usize * n + s] > thr[i];
+        *ci = (2 * i + go_right as usize) as u16;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! x86_64 kernels. x86 integer compares are signed, so unsigned
+    //! rank codes are sign-biased (`x ^ MIN`) on both sides first; the
+    //! dead-slot sentinel (`MAX`) biases to the largest signed value,
+    //! so `>` stays false and dead lanes route left like the scalar
+    //! loop. Advance uses `add(c, c)` for the doubling (no
+    //! immediate-operand shift needed) and subtracts the compare mask.
+
+    use super::{gather, scalar_tail};
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must ensure SSE2 (baseline on x86_64).
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn step_u8_sse2(
+        xt: &[u8],
+        n: usize,
+        feat: &[i32],
+        thr: &[u8],
+        cur: &mut [u16],
+    ) {
+        const V: usize = 16;
+        let len = cur.len();
+        let bias = _mm_set1_epi8(i8::MIN);
+        let mut s = 0;
+        while s + V <= len {
+            let (tf, tt) = gather::<u8, V>(xt, n, feat, thr, cur, s);
+            let a = _mm_xor_si128(_mm_loadu_si128(tf.as_ptr() as *const __m128i), bias);
+            let b = _mm_xor_si128(_mm_loadu_si128(tt.as_ptr() as *const __m128i), bias);
+            let gt = _mm_cmpgt_epi8(a, b);
+            // Duplicating each mask byte widens it to a u16 lane of
+            // 0x0000/0xFFFF, preserving sample order across halves.
+            let m_lo = _mm_unpacklo_epi8(gt, gt);
+            let m_hi = _mm_unpackhi_epi8(gt, gt);
+            let p = cur.as_mut_ptr().add(s) as *mut __m128i;
+            let c_lo = _mm_loadu_si128(p);
+            let c_hi = _mm_loadu_si128(p.add(1));
+            _mm_storeu_si128(p, _mm_sub_epi16(_mm_add_epi16(c_lo, c_lo), m_lo));
+            _mm_storeu_si128(p.add(1), _mm_sub_epi16(_mm_add_epi16(c_hi, c_hi), m_hi));
+            s += V;
+        }
+        scalar_tail(xt, n, feat, thr, cur, s);
+    }
+
+    /// # Safety
+    /// Caller must ensure SSE2 (baseline on x86_64).
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn step_u16_sse2(
+        xt: &[u16],
+        n: usize,
+        feat: &[i32],
+        thr: &[u16],
+        cur: &mut [u16],
+    ) {
+        const V: usize = 8;
+        let len = cur.len();
+        let bias = _mm_set1_epi16(i16::MIN);
+        let mut s = 0;
+        while s + V <= len {
+            let (tf, tt) = gather::<u16, V>(xt, n, feat, thr, cur, s);
+            let a = _mm_xor_si128(_mm_loadu_si128(tf.as_ptr() as *const __m128i), bias);
+            let b = _mm_xor_si128(_mm_loadu_si128(tt.as_ptr() as *const __m128i), bias);
+            let gt = _mm_cmpgt_epi16(a, b);
+            let p = cur.as_mut_ptr().add(s) as *mut __m128i;
+            let c = _mm_loadu_si128(p);
+            _mm_storeu_si128(p, _mm_sub_epi16(_mm_add_epi16(c, c), gt));
+            s += V;
+        }
+        scalar_tail(xt, n, feat, thr, cur, s);
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 (`is_x86_feature_detected!("avx2")`).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn step_u8_avx2(
+        xt: &[u8],
+        n: usize,
+        feat: &[i32],
+        thr: &[u8],
+        cur: &mut [u16],
+    ) {
+        const V: usize = 32;
+        let len = cur.len();
+        let bias = _mm256_set1_epi8(i8::MIN);
+        let mut s = 0;
+        while s + V <= len {
+            let (tf, tt) = gather::<u8, V>(xt, n, feat, thr, cur, s);
+            let a = _mm256_xor_si256(_mm256_loadu_si256(tf.as_ptr() as *const __m256i), bias);
+            let b = _mm256_xor_si256(_mm256_loadu_si256(tt.as_ptr() as *const __m256i), bias);
+            let gt = _mm256_cmpgt_epi8(a, b);
+            // Sign-extend each mask byte to a u16 lane in sample order
+            // (256-bit unpack would interleave within 128-bit halves).
+            let m_lo = _mm256_cvtepi8_epi16(_mm256_castsi256_si128(gt));
+            let m_hi = _mm256_cvtepi8_epi16(_mm256_extracti128_si256::<1>(gt));
+            let p = cur.as_mut_ptr().add(s) as *mut __m256i;
+            let c_lo = _mm256_loadu_si256(p);
+            let c_hi = _mm256_loadu_si256(p.add(1));
+            _mm256_storeu_si256(p, _mm256_sub_epi16(_mm256_add_epi16(c_lo, c_lo), m_lo));
+            _mm256_storeu_si256(p.add(1), _mm256_sub_epi16(_mm256_add_epi16(c_hi, c_hi), m_hi));
+            s += V;
+        }
+        scalar_tail(xt, n, feat, thr, cur, s);
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 (`is_x86_feature_detected!("avx2")`).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn step_u16_avx2(
+        xt: &[u16],
+        n: usize,
+        feat: &[i32],
+        thr: &[u16],
+        cur: &mut [u16],
+    ) {
+        const V: usize = 16;
+        let len = cur.len();
+        let bias = _mm256_set1_epi16(i16::MIN);
+        let mut s = 0;
+        while s + V <= len {
+            let (tf, tt) = gather::<u16, V>(xt, n, feat, thr, cur, s);
+            let a = _mm256_xor_si256(_mm256_loadu_si256(tf.as_ptr() as *const __m256i), bias);
+            let b = _mm256_xor_si256(_mm256_loadu_si256(tt.as_ptr() as *const __m256i), bias);
+            let gt = _mm256_cmpgt_epi16(a, b);
+            let p = cur.as_mut_ptr().add(s) as *mut __m256i;
+            let c = _mm256_loadu_si256(p);
+            _mm256_storeu_si256(p, _mm256_sub_epi16(_mm256_add_epi16(c, c), gt));
+            s += V;
+        }
+        scalar_tail(xt, n, feat, thr, cur, s);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! aarch64 kernels. NEON compares unsigned natively (`vcgtq_u8` /
+    //! `vcgtq_u16`), so no sign-bias is needed; byte masks are
+    //! sign-extended to u16 lanes (`vmovl_s8` — the unsigned widen
+    //! would zero-extend `0xFF` to `0x00FF` and break the
+    //! subtract-mask advance).
+
+    use super::{gather, scalar_tail};
+    use std::arch::aarch64::*;
+
+    /// # Safety
+    /// Caller must ensure NEON (baseline on aarch64).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn step_u8_neon(
+        xt: &[u8],
+        n: usize,
+        feat: &[i32],
+        thr: &[u8],
+        cur: &mut [u16],
+    ) {
+        const V: usize = 16;
+        let len = cur.len();
+        let mut s = 0;
+        while s + V <= len {
+            let (tf, tt) = gather::<u8, V>(xt, n, feat, thr, cur, s);
+            let gt = vcgtq_u8(vld1q_u8(tf.as_ptr()), vld1q_u8(tt.as_ptr()));
+            let gs = vreinterpretq_s8_u8(gt);
+            let m_lo = vreinterpretq_u16_s16(vmovl_s8(vget_low_s8(gs)));
+            let m_hi = vreinterpretq_u16_s16(vmovl_s8(vget_high_s8(gs)));
+            let c_lo = vld1q_u16(cur.as_ptr().add(s));
+            let c_hi = vld1q_u16(cur.as_ptr().add(s + 8));
+            vst1q_u16(cur.as_mut_ptr().add(s), vsubq_u16(vaddq_u16(c_lo, c_lo), m_lo));
+            vst1q_u16(cur.as_mut_ptr().add(s + 8), vsubq_u16(vaddq_u16(c_hi, c_hi), m_hi));
+            s += V;
+        }
+        scalar_tail(xt, n, feat, thr, cur, s);
+    }
+
+    /// # Safety
+    /// Caller must ensure NEON (baseline on aarch64).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn step_u16_neon(
+        xt: &[u16],
+        n: usize,
+        feat: &[i32],
+        thr: &[u16],
+        cur: &mut [u16],
+    ) {
+        const V: usize = 8;
+        let len = cur.len();
+        let mut s = 0;
+        while s + V <= len {
+            let (tf, tt) = gather::<u16, V>(xt, n, feat, thr, cur, s);
+            let gt = vcgtq_u16(vld1q_u16(tf.as_ptr()), vld1q_u16(tt.as_ptr()));
+            let c = vld1q_u16(cur.as_ptr().add(s));
+            vst1q_u16(cur.as_mut_ptr().add(s), vsubq_u16(vaddq_u16(c, c), gt));
+            s += V;
+        }
+        scalar_tail(xt, n, feat, thr, cur, s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lcg(state: &mut u64) -> u64 {
+        *state = state
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        *state >> 33
+    }
+
+    /// Every vector level this host can actually run.
+    fn vector_levels() -> Vec<SimdLevel> {
+        [SimdLevel::Sse2, SimdLevel::Avx2, SimdLevel::Neon]
+            .into_iter()
+            .filter(|l| l.supported())
+            .collect()
+    }
+
+    /// One synthetic tree level: `w` nodes over `f` features, `n`
+    /// samples, cursors spread across the nodes.
+    fn level_case_u8(
+        w: usize,
+        f: usize,
+        n: usize,
+        seed: u64,
+    ) -> (Vec<u8>, Vec<i32>, Vec<u8>, Vec<u16>) {
+        let mut st = seed;
+        let xt: Vec<u8> = (0..f * n).map(|_| lcg(&mut st) as u8).collect();
+        let feat: Vec<i32> = (0..w).map(|_| (lcg(&mut st) as usize % f) as i32).collect();
+        let thr: Vec<u8> = (0..w).map(|_| lcg(&mut st) as u8).collect();
+        let cur: Vec<u16> = (0..n).map(|_| (lcg(&mut st) as usize % w) as u16).collect();
+        (xt, feat, thr, cur)
+    }
+
+    /// u16-lane variant with codes past the u8 range (255-cut shape).
+    fn level_case_u16(
+        w: usize,
+        f: usize,
+        n: usize,
+        seed: u64,
+    ) -> (Vec<u16>, Vec<i32>, Vec<u16>, Vec<u16>) {
+        let mut st = seed;
+        let xt: Vec<u16> = (0..f * n).map(|_| (lcg(&mut st) % 1021) as u16).collect();
+        let feat: Vec<i32> = (0..w).map(|_| (lcg(&mut st) as usize % f) as i32).collect();
+        let thr: Vec<u16> = (0..w).map(|_| (lcg(&mut st) % 1021) as u16).collect();
+        let cur: Vec<u16> = (0..n).map(|_| (lcg(&mut st) as usize % w) as u16).collect();
+        (xt, feat, thr, cur)
+    }
+
+    /// The scalar reference body (same as the arena's loop).
+    fn step_ref<L: Copy + PartialOrd>(
+        xt: &[L],
+        n: usize,
+        feat: &[i32],
+        thr: &[L],
+        cur: &mut [u16],
+    ) {
+        for (s, ci) in cur.iter_mut().enumerate() {
+            let i = *ci as usize;
+            let go_right = xt[feat[i] as usize * n + s] > thr[i];
+            *ci = (2 * i + go_right as usize) as u16;
+        }
+    }
+
+    const WIDTHS: [usize; 14] = [1, 3, 7, 8, 15, 16, 17, 31, 32, 33, 63, 64, 65, 100];
+
+    #[test]
+    fn u8_kernels_match_scalar_at_every_width() {
+        for level in vector_levels() {
+            for &n in &WIDTHS {
+                let (xt, feat, thr, cur0) = level_case_u8(16, 5, n, 0x5eed + n as u64);
+                let mut want = cur0.clone();
+                step_ref(&xt, n, &feat, &thr, &mut want);
+                let mut got = cur0.clone();
+                assert!(u8::step_simd(level, &xt, n, &feat, &thr, &mut got));
+                assert_eq!(got, want, "u8 {} n={n}", level.label());
+            }
+        }
+    }
+
+    #[test]
+    fn u16_kernels_match_scalar_at_every_width() {
+        for level in vector_levels() {
+            for &n in &WIDTHS {
+                let (xt, feat, thr, cur0) = level_case_u16(16, 5, n, 0xfeed + n as u64);
+                let mut want = cur0.clone();
+                step_ref(&xt, n, &feat, &thr, &mut want);
+                let mut got = cur0.clone();
+                assert!(u16::step_simd(level, &xt, n, &feat, &thr, &mut got));
+                assert_eq!(got, want, "u16 {} n={n}", level.label());
+            }
+        }
+    }
+
+    #[test]
+    fn dead_slot_sentinels_route_left() {
+        for level in vector_levels() {
+            let n = 40;
+            let (xt, feat, _, cur0) = level_case_u8(8, 4, n, 99);
+            let thr = vec![u8::MAX; 8];
+            let mut got = cur0.clone();
+            assert!(u8::step_simd(level, &xt, n, &feat, &thr, &mut got));
+            for (s, &c) in got.iter().enumerate() {
+                assert_eq!(c, 2 * cur0[s], "{} sentinel s={s}", level.label());
+            }
+            let (xt, feat, _, cur0) = level_case_u16(8, 4, n, 99);
+            let thr = vec![u16::MAX; 8];
+            let mut got = cur0.clone();
+            assert!(u16::step_simd(level, &xt, n, &feat, &thr, &mut got));
+            for (s, &c) in got.iter().enumerate() {
+                assert_eq!(c, 2 * cur0[s], "{} u16 sentinel s={s}", level.label());
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_equal_codes_route_left() {
+        // `>` must stay strict in the vector form: equal code pairs
+        // (the common case — rank codes collide exactly on cut values)
+        // go left.
+        for level in vector_levels() {
+            let n = 33;
+            let xt = vec![7u8; n];
+            let feat = vec![0i32; 4];
+            let thr = vec![7u8; 4];
+            let mut cur: Vec<u16> = (0..n).map(|s| (s % 4) as u16).collect();
+            let want: Vec<u16> = cur.iter().map(|&c| 2 * c).collect();
+            assert!(u8::step_simd(level, &xt, n, &feat, &thr, &mut cur));
+            assert_eq!(cur, want, "{} equal codes", level.label());
+        }
+    }
+
+    #[test]
+    fn u32_cursors_and_f32_lanes_fall_back_to_scalar() {
+        let n = 32;
+        let (xt, feat, thr, cur0) = level_case_u8(8, 4, n, 7);
+        let mut cur32: Vec<u32> = cur0.iter().map(|&c| c as u32).collect();
+        for level in vector_levels() {
+            assert!(!u8::step_simd(level, &xt, n, &feat, &thr, &mut cur32));
+        }
+        let xf: Vec<f32> = xt.iter().map(|&v| v as f32).collect();
+        let tf: Vec<f32> = thr.iter().map(|&v| v as f32).collect();
+        let mut c16 = cur0.clone();
+        assert!(!f32::step_simd(SimdLevel::detect(), &xf, n, &feat, &tf, &mut c16));
+        assert_eq!(c16, cur0, "fallback must not touch cursors");
+    }
+
+    #[test]
+    fn scalar_level_is_never_vector_handled() {
+        let n = 24;
+        let (xt, feat, thr, cur0) = level_case_u8(8, 4, n, 3);
+        let mut cur = cur0;
+        assert!(!u8::step_simd(SimdLevel::Scalar, &xt, n, &feat, &thr, &mut cur));
+    }
+
+    #[test]
+    fn resolve_honors_force_scalar() {
+        assert_eq!(SimdLevel::resolve(true, SimdLevel::Avx2), SimdLevel::Scalar);
+        assert_eq!(SimdLevel::resolve(false, SimdLevel::Avx2), SimdLevel::Avx2);
+        assert_eq!(SimdLevel::resolve(false, SimdLevel::Scalar), SimdLevel::Scalar);
+    }
+
+    #[test]
+    fn detect_returns_a_supported_level() {
+        assert!(SimdLevel::detect().supported());
+        // Cached: a second call agrees.
+        assert_eq!(SimdLevel::detect(), SimdLevel::detect());
+    }
+
+    #[test]
+    fn rank_label_roundtrip() {
+        for l in [SimdLevel::Scalar, SimdLevel::Sse2, SimdLevel::Avx2, SimdLevel::Neon] {
+            assert_eq!(SimdLevel::label_of_rank(l.rank()), l.label());
+        }
+        assert_eq!(SimdLevel::label_of_rank(99), "scalar");
+    }
+}

@@ -13,6 +13,10 @@
 //! fog eval     [--models all|rf,mlp] [--dataset d] any registry model: accuracy + PPA
 //!              [--backend software|uarch]          uarch: add hardware-in-the-loop
 //!                                                  sim columns (nJ + cycles / class)
+//!              [--quant off|u8|u16|lossy8|lossy16] Fig-5-style quantization axis:
+//!                                                  run forest-backed rows on the
+//!                                                  chosen kernel lanes (dense
+//!                                                  baselines ignore the flag)
 //!              [--adaptive-sweep] [--model rf_prob] live accuracy-vs-effort sweep of
 //!                                                  the adaptive early-exit threshold
 //!                                                  (Fig-5 style at the serving tier;
@@ -155,18 +159,19 @@ fn cmd_eval(args: &Args, seed: u64) {
         "all" => REGISTRY.iter().map(|s| s.to_string()).collect(),
         list => list.split(',').map(|s| s.trim().to_string()).collect(),
     };
+    let quant = parse_quant_or_exit(args);
     let specs: Vec<ModelSpec> = spec_names
         .iter()
         .map(|name| {
-            ModelSpec::for_shape(name, profile.n_features, profile.n_classes).unwrap_or_else(
-                || {
+            ModelSpec::for_shape(name, profile.n_features, profile.n_classes)
+                .unwrap_or_else(|| {
                     eprintln!(
                         "error: unknown model '{name}'; valid names: {}",
                         REGISTRY.join(", ")
                     );
                     std::process::exit(2);
-                },
-            )
+                })
+                .with_quant(quant)
         })
         .collect();
 
@@ -175,7 +180,11 @@ fn cmd_eval(args: &Args, seed: u64) {
     let data = suite::prepare_data(&profile, seed);
     let eb = EnergyBlocks::default();
     let ab = AreaBlocks::default();
-    println!("== registry eval on '{}' (seed {seed}) ==", profile.name);
+    println!(
+        "== registry eval on '{}' (seed {seed}, quant {}) ==",
+        profile.name,
+        quant.label()
+    );
     print!(
         "{:<10}{:>11}{:>15}{:>13}{:>11}{:>12}",
         "model", "accuracy%", "energy nJ", "latency ns", "area mm2", "train s"
@@ -634,12 +643,14 @@ fn cmd_serve_sharded(args: &Args, model_name: &str, seed: u64) {
     let n_total = responses.len() * rounds;
 
     println!(
-        "== serving: {model_name} on {} via ShardedServer x{} ({}, backend={}, quant={}) ==",
+        "== serving: {model_name} on {} via ShardedServer x{} ({}, backend={}, quant={}, \
+         simd={}) ==",
         profile.name,
         server.n_replicas(),
         cfg.router.label(),
         backend.label(),
-        quant.label()
+        quant.label(),
+        snap.simd_label()
     );
     println!("requests   : {} ({} per round x {rounds})", snap.requests, responses.len());
     println!("accuracy   : {:.1}%", acc * 100.0);
@@ -674,7 +685,7 @@ fn cmd_serve_sharded(args: &Args, model_name: &str, seed: u64) {
     println!(
         "BENCH_JSON {{\"bench\":\"serve_sharded\",\"model\":\"{model_name}\",\
          \"dataset\":\"{}\",\"replicas\":{},\"router\":\"{}\",\"backend\":\"{}\",\
-         \"quant\":\"{}\",\"prob_checksum\":{},\
+         \"quant\":\"{}\",\"simd\":\"{}\",\"prob_checksum\":{},\
          \"rounds\":{rounds},\"requests\":{},\"throughput_per_s\":{:.1},\
          \"cache_hit_rate\":{:.4},\"cache_quant\":{:.6},\"accuracy\":{:.4},\
          \"energy_per_class_nj\":{:.6},\"energy_per_response_nj\":{:.6},\
@@ -686,6 +697,7 @@ fn cmd_serve_sharded(args: &Args, model_name: &str, seed: u64) {
         cfg.router.label(),
         backend.label(),
         quant.label(),
+        snap.simd_label(),
         prob_checksum(&responses),
         snap.requests,
         n_total as f64 / wall,
@@ -857,12 +869,14 @@ fn cmd_serve_fleet(args: &Args, fleet_spec: &str, seed: u64) {
         None => "unlimited".to_string(),
     };
     println!(
-        "== serving: fleet [{}] on {} x{} replicas ({}, backend={}, policy={}, budget={}) ==",
+        "== serving: fleet [{}] on {} x{} replicas ({}, backend={}, simd={}, policy={}, \
+         budget={}) ==",
         names.join(", "),
         profile.name,
         (0..fleet.n_models()).map(|m| fleet.server(m).n_replicas()).sum::<usize>(),
         cfg.router.label(),
         backend.label(),
+        snap.total.simd_label(),
         fleet.policy_label(),
         budget_label
     );
@@ -907,7 +921,7 @@ fn cmd_serve_fleet(args: &Args, fleet_spec: &str, seed: u64) {
 
     println!(
         "BENCH_JSON {{\"bench\":\"serve_fleet\",\"model\":\"{}\",\"dataset\":\"{}\",\
-         \"replicas\":{},\"router\":\"{}\",\"backend\":\"{}\",\"policy\":\"{}\",\
+         \"replicas\":{},\"router\":\"{}\",\"backend\":\"{}\",\"simd\":\"{}\",\"policy\":\"{}\",\
          \"energy_budget_nj\":{:.6},\"loadgen_seed\":{},\"offered\":{},\"served\":{},\
          \"downgraded\":{},\"shed\":{},\"shed_rate\":{:.4},\"throughput_per_s\":{:.1},\
          \"energy_per_class_nj\":{:.6},\"adaptive_conf\":{:.4}}}",
@@ -916,6 +930,7 @@ fn cmd_serve_fleet(args: &Args, fleet_spec: &str, seed: u64) {
         (0..fleet.n_models()).map(|m| fleet.server(m).n_replicas()).sum::<usize>(),
         cfg.router.label(),
         backend.label(),
+        snap.total.simd_label(),
         fleet.policy_label(),
         budget.energy_per_class_nj.unwrap_or(-1.0),
         lg.seed,
@@ -932,7 +947,8 @@ fn cmd_serve_fleet(args: &Args, fleet_spec: &str, seed: u64) {
         let stats = &snap.per_model[m];
         println!(
             "BENCH_JSON {{\"bench\":\"serve_fleet_model\",\"model\":\"{}\",\"fleet\":\"{}\",\
-             \"backend\":\"{}\",\"requested\":{},\"served\":{},\"downgraded_away\":{},\
+             \"backend\":\"{}\",\"simd\":\"{}\",\"requested\":{},\"served\":{},\
+             \"downgraded_away\":{},\
              \"downgraded_into\":{},\"shed\":{},\"shed_rate\":{:.4},\
              \"req_p50_us\":{:.1},\"req_p99_us\":{:.1},\"batch_p50_us\":{:.1},\
              \"batch_p99_us\":{:.1},\"energy_per_class_nj\":{:.6},\"cycles_per_class\":{:.2},\
@@ -940,6 +956,7 @@ fn cmd_serve_fleet(args: &Args, fleet_spec: &str, seed: u64) {
             pm.name,
             names.join("+"),
             backend.label(),
+            stats.snapshot.simd_label(),
             pm.requested,
             pm.served,
             pm.downgraded_away,

@@ -6,12 +6,18 @@
 //! count. Lossy lanes are bounded by an accuracy-delta check, and the
 //! quantizer's edge cases (non-finite features, constant features,
 //! out-of-range thresholds, leaf-only forests) walk exactly like f32.
+//!
+//! The same discipline holds one dispatch level down: the integer lanes
+//! run under explicitly vectorized kernels (`exec::simd`) when the host
+//! has them, and tests (h)/(i) pin native vector dispatch — and every
+//! individually-supported [`SimdLevel`] — byte-identical to the forced
+//! scalar loop through the model surface and both backends.
 
 use fog::api::{BackendKind, Classifier, Estimator, ModelSpec, RfModel};
 use fog::data::synthetic::{generate, DatasetProfile};
 use fog::data::Dataset;
 use fog::dt::FlatTree;
-use fog::exec::{BatchPlan, ForestArena, QuantMode, Reduce};
+use fog::exec::{BatchPlan, ForestArena, QuantMode, Reduce, SimdLevel};
 use fog::forest::{ForestParams, RandomForest, VoteMode};
 
 const TREE_MODELS: &[&str] = &["fog_opt", "fog_max", "rf", "rf_prob"];
@@ -188,6 +194,78 @@ fn leaf_only_forest_through_quantized_path() {
         for i in 0..2 {
             assert_eq!(probs.row(i), &[0.0, 1.0, 0.0], "{quant:?} row {i}");
         }
+    }
+}
+
+/// (h) Vector dispatch is answer-invariant through the model surface:
+/// the natively-dispatched exact lanes — direct batch path and both
+/// execution backends, both vote modes — must match a forced-scalar
+/// `BatchPlan` on the same arena byte for byte. (Test (a) extends the
+/// pin to all four tree registry models: its quantized models dispatch
+/// natively, so equality with the plain f32 path pins SIMD transitively;
+/// FoG specs ignore the knob and stay on scalar f32 lanes.) Accounting
+/// is dispatch-invariant by test (b): the backends there also resolve
+/// native dispatch, and their reports equal the `--quant off` run's.
+#[test]
+fn simd_dispatch_byte_identical_through_model_surface() {
+    let ds = data();
+    let n = ds.test.len();
+    let rf = RandomForest::fit(&ds.train, &ForestParams::small(), 31);
+    for (mode, reduce) in [
+        (VoteMode::ProbAverage, Reduce::ProbAverage),
+        (VoteMode::Majority, Reduce::MajorityVote),
+    ] {
+        let model = RfModel::new(rf.clone(), mode).with_quant(QuantMode::Exact);
+        assert!(
+            Classifier::simd_level(&model).supported(),
+            "model must resolve a level its host can execute"
+        );
+        let scalar = BatchPlan::new(model.arena(), reduce)
+            .with_quant(QuantMode::Exact)
+            .with_simd(SimdLevel::Scalar)
+            .execute(&ds.test.x, n);
+        let direct = Classifier::predict_proba_batch(&model, &ds.test.x, n);
+        assert_eq!(direct, scalar, "{mode:?}: native dispatch changed the direct path");
+        for kind in [BackendKind::Software, BackendKind::Uarch] {
+            let (probs, _) = model.exec_backend(kind).unwrap().evaluate_tile(&ds.test.x, n);
+            assert_eq!(
+                probs,
+                scalar,
+                "{mode:?}: native dispatch changed a {} backend answer",
+                kind.label()
+            );
+        }
+    }
+}
+
+/// (i) The 255-cut u16-lane hand forest under every vector level this
+/// host supports: byte-identical to the forced-scalar lane, including
+/// rows landing exactly on cut values (the `>` boundary the sign-biased
+/// vector compares must preserve).
+#[test]
+fn u16_wide_cut_forest_simd_matches_scalar_at_every_level() {
+    let tree = wide_cut_tree(8, 3);
+    let arena = ForestArena::from_flat_trees(&[tree.clone(), tree]);
+    assert_eq!(arena.quant_lane(), Some("u16"), "255 cuts must overflow the u8 lane");
+    let mut x = Vec::new();
+    for i in 0..300 {
+        x.extend_from_slice(&[i as f32 * 0.37 - 20.0, 0.0]);
+        x.extend_from_slice(&[i as f32 * 0.37 - 20.185, 1.0]);
+    }
+    let n = x.len() / 2;
+    let scalar = BatchPlan::new(&arena, Reduce::ProbAverage)
+        .with_quant(QuantMode::Exact)
+        .with_simd(SimdLevel::Scalar)
+        .execute(&x, n);
+    for level in [SimdLevel::Sse2, SimdLevel::Avx2, SimdLevel::Neon, SimdLevel::detect()] {
+        if !level.supported() {
+            continue;
+        }
+        let got = BatchPlan::new(&arena, Reduce::ProbAverage)
+            .with_quant(QuantMode::Exact)
+            .with_simd(level)
+            .execute(&x, n);
+        assert_eq!(scalar, got, "{} diverged on the u16 wide-cut forest", level.label());
     }
 }
 

@@ -21,8 +21,12 @@
 #       3-run median keeps the gate green on noisy runners. Also
 #       enforces the armed absolute floors from the trajectory file's
 #       "gate" block: the live median ragged_speedup_x must stay above
-#       the ragged floor, and the live median quant_speedup_x (exact
-#       u8/u16 tiles vs f32) above the quant floor. Passes with a notice
+#       the ragged floor, the live median quant_speedup_x (exact
+#       u8/u16 tiles vs f32) above the quant floor, and the live median
+#       simd_speedup_x (vector dispatch vs forced-scalar quant tiles)
+#       above the simd floor — the simd floor only arms when the host
+#       actually dispatched a vector kernel (simd != "scalar"), so
+#       scalar-only runners stay green. Passes with a notice
 #       when the trajectory has no comparable baseline yet; baseline
 #       points tagged "estimated" (seeded off-toolchain) are skipped for
 #       the throughput diff.
@@ -118,8 +122,16 @@ with open(os.environ["LINES"]) as fh:
         for metric, value in rec.items():
             if isinstance(value, (int, float)) and metric not in ("batch",):
                 bucket.setdefault(metric, []).append(float(value))
+        # Dispatch labels ride along so recorded points say which lane /
+        # vector ISA produced their numbers (host-comparability).
+        for metric in ("lanes", "simd"):
+            if isinstance(rec.get(metric), str):
+                bucket.setdefault(metric, []).append(rec[metric])
 folded = {
-    key: {metric: statistics.median(vals) for metric, vals in metrics.items()}
+    key: {
+        metric: statistics.median(vals) if isinstance(vals[0], float) else vals[-1]
+        for metric, vals in metrics.items()
+    }
     for key, metrics in sorted(samples.items())
 }
 
@@ -138,9 +150,11 @@ gate_metrics = gate_cfg.get("metrics", ["batch_tiled_per_s", "software_per_s"])
 if fast:
     speedup_floor = float(gate_cfg.get("ragged_speedup_floor_fast", 0.95))
     quant_floor = float(gate_cfg.get("quant_speedup_floor_fast", 0.8))
+    simd_floor = float(gate_cfg.get("simd_speedup_floor_fast", 0.9))
 else:
     speedup_floor = float(gate_cfg.get("ragged_speedup_floor", 1.1))
     quant_floor = float(gate_cfg.get("quant_speedup_floor", 2.0))
+    simd_floor = float(gate_cfg.get("simd_speedup_floor", 1.5))
 
 if mode == "record":
     trajectory.setdefault("points", []).append(
@@ -184,6 +198,18 @@ for key, metrics in folded.items():
         failures.append(
             f"{key}: quant_speedup_x {metrics['quant_speedup_x']:.3f} "
             f"< floor {quant_floor:.2f}"
+        )
+    # The simd floor arms only when a vector kernel actually dispatched
+    # (simd_speedup_x is 1.0 by construction under scalar dispatch, so a
+    # scalar-only runner — or FOG_FORCE_SCALAR=1 — must stay green).
+    if (
+        "simd_speedup_x" in metrics
+        and metrics.get("simd", "scalar") != "scalar"
+        and metrics["simd_speedup_x"] < simd_floor
+    ):
+        failures.append(
+            f"{key}: simd_speedup_x {metrics['simd_speedup_x']:.3f} "
+            f"({metrics['simd']}) < floor {simd_floor:.2f}"
         )
 
 if baseline is None:
