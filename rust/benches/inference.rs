@@ -30,7 +30,13 @@
 //! the lenient `quant_speedup_floor_fast`). The same section also times
 //! the integer tiles under the host's vector kernel against the forced
 //! scalar loop (`simd_speedup_x`, `simd` label; `simd_speedup_floor` /
-//! `_fast` gates) — again conformance-asserted byte-identical first.
+//! `_fast` gates) — again conformance-asserted byte-identical first —
+//! plus the two operand-path splits of that win: the vector index
+//! gather against the in-kernel scalar gather stage (`gather_speedup_x`,
+//! `gather` label) and the vectorized lossy affine coding pass against
+//! the per-value scalar closure (`coding_speedup_x`, `coding` label),
+//! each reporting 1.0 when its vector form did not dispatch so the
+//! floors only arm where the kernels actually ran.
 //!
 //! Besides the human-readable `bench ...` lines, each model emits one
 //! `BENCH_JSON {...}` line; `tools/bench_record.sh` folds those into the
@@ -238,6 +244,59 @@ fn main() {
     } else {
         quant_scalar.median_ns / quant_tiled.median_ns.max(1.0)
     };
+
+    // The vector index gather against the in-kernel scalar gather stage
+    // on identical vector tiles — isolates the operand-load win from the
+    // compare/advance win. 1.0 by construction when no vector gather
+    // dispatched (scalar/SSE2 hosts, FOG_FORCE_SCALAR_GATHER=1), so the
+    // `gather_speedup_floor` gate only arms where a gather kernel ran.
+    let scalar_gather_plan = BatchPlan::new(&wide_arena, Reduce::ProbAverage)
+        .with_quant(fog::exec::QuantMode::Exact)
+        .with_gather(fog::exec::GatherMode::Scalar);
+    let gather = quant_plan.gather_label();
+    assert_eq!(
+        scalar_gather_plan.execute(&x, batch),
+        quant_plan.execute(&x, batch),
+        "vector gather ({gather}) diverged from the scalar gather stage"
+    );
+    b.bench(&format!("quant_wide/scalar_gather_{lane}/n{batch}"), batch, || {
+        black_box(scalar_gather_plan.execute(black_box(&x), batch));
+    });
+    let scalar_gather = b.results.last().unwrap().clone();
+    let gather_speedup = if gather == "scalar" {
+        1.0
+    } else {
+        scalar_gather.median_ns / quant_tiled.median_ns.max(1.0)
+    };
+
+    // The vectorized lossy affine coding pass against the per-value
+    // scalar closure, on a lossy plan of the same arena (exact plans
+    // have no affine pass). Same arming rule: 1.0 under scalar dispatch.
+    let lossy_plan = BatchPlan::new(&wide_arena, Reduce::ProbAverage)
+        .with_quant(fog::exec::QuantMode::Lossy { bits: 8 });
+    let scalar_coding_plan = BatchPlan::new(&wide_arena, Reduce::ProbAverage)
+        .with_quant(fog::exec::QuantMode::Lossy { bits: 8 })
+        .with_scalar_coding(true);
+    let coding = lossy_plan.coding_label();
+    assert_eq!(
+        scalar_coding_plan.execute(&x, batch),
+        lossy_plan.execute(&x, batch),
+        "vector coding ({coding}) diverged from the scalar coding closure"
+    );
+    b.bench(&format!("quant_wide/lossy_tiled/n{batch}"), batch, || {
+        black_box(lossy_plan.execute(black_box(&x), batch));
+    });
+    let lossy_tiled = b.results.last().unwrap().clone();
+    b.bench(&format!("quant_wide/lossy_scalar_coding/n{batch}"), batch, || {
+        black_box(scalar_coding_plan.execute(black_box(&x), batch));
+    });
+    let lossy_scalar = b.results.last().unwrap().clone();
+    let coding_speedup = if coding == "scalar" {
+        1.0
+    } else {
+        lossy_scalar.median_ns / lossy_tiled.median_ns.max(1.0)
+    };
+
     println!();
     println!(
         "speedup quant_wide batch {batch}: {quant_speedup:.2}x vs f32 tiles, \
@@ -250,13 +309,28 @@ fn main() {
         wide_arena.depth()
     );
     println!(
+        "speedup quant_wide gather/coding: {gather_speedup:.2}x {gather} gather vs scalar \
+         stage ({:.0} ns vs {:.0} ns), {coding_speedup:.2}x {coding} lossy coding vs \
+         per-value closure ({:.0} ns vs {:.0} ns)",
+        quant_tiled.median_ns,
+        scalar_gather.median_ns,
+        lossy_tiled.median_ns,
+        lossy_scalar.median_ns
+    );
+    println!(
         "BENCH_JSON {{\"bench\":\"inference\",\"model\":\"quant_wide\",\"batch\":{batch},\
-         \"lanes\":\"{lane}\",\"simd\":\"{simd}\",\"f32_tiled_ns\":{:.0},\"quant_tiled_ns\":{:.0},\
-         \"quant_scalar_ns\":{:.0},\"quant_speedup_x\":{quant_speedup:.3},\
-         \"simd_speedup_x\":{simd_speedup:.3},\"batch_tiled_per_s\":{:.1}}}",
+         \"lanes\":\"{lane}\",\"simd\":\"{simd}\",\"gather\":\"{gather}\",\"coding\":\"{coding}\",\
+         \"f32_tiled_ns\":{:.0},\"quant_tiled_ns\":{:.0},\
+         \"quant_scalar_ns\":{:.0},\"scalar_gather_ns\":{:.0},\"lossy_tiled_ns\":{:.0},\
+         \"lossy_scalar_coding_ns\":{:.0},\"quant_speedup_x\":{quant_speedup:.3},\
+         \"simd_speedup_x\":{simd_speedup:.3},\"gather_speedup_x\":{gather_speedup:.3},\
+         \"coding_speedup_x\":{coding_speedup:.3},\"batch_tiled_per_s\":{:.1}}}",
         f32_tiled.median_ns,
         quant_tiled.median_ns,
         quant_scalar.median_ns,
+        scalar_gather.median_ns,
+        lossy_tiled.median_ns,
+        lossy_scalar.median_ns,
         quant_tiled.throughput_per_s.unwrap_or(0.0)
     );
 

@@ -186,6 +186,16 @@ pub trait Classifier: Send + Sync {
         crate::exec::SimdLevel::Scalar
     }
 
+    /// The ISA whose index-gather kernel this model's quantized batch
+    /// paths dispatch to — `Scalar` wherever a vector gather can't (or
+    /// was pinned not to) run: f32 lanes, non-arena families, SSE2-only
+    /// hosts, `FOG_FORCE_SCALAR_GATHER=1`. Observability only, like
+    /// [`Classifier::simd_level`]: every gather stage is
+    /// answer-identical by construction.
+    fn gather_level(&self) -> crate::exec::SimdLevel {
+        crate::exec::SimdLevel::Scalar
+    }
+
     /// The adaptive confidence early-exit threshold active on this
     /// model's batch paths (Daghero et al., arXiv 2205.13838), already
     /// filtered to the effective range: `None` means full evaluation —

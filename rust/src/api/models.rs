@@ -315,6 +315,13 @@ impl Classifier for RfModel {
             .simd_level()
     }
 
+    fn gather_level(&self) -> SimdLevel {
+        BatchPlan::new(&self.arena, self.reduce())
+            .with_quant(self.quant)
+            .with_adaptive(self.adaptive)
+            .gather_level()
+    }
+
     fn adaptive_conf(&self) -> Option<f32> {
         self.adaptive
     }

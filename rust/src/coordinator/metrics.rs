@@ -69,6 +69,11 @@ pub struct Metrics {
     /// server start and max-merged across replicas, so recorded
     /// trajectory points stay comparable across hosts.
     pub exec_simd_level: AtomicU64,
+    /// Highest index-gather ISA rank the serving models dispatch to
+    /// (same rank scale as `exec_simd_level`; 0 = scalar gather stage).
+    /// Recorded and merged the same way — once per model at server
+    /// start, max across replicas.
+    pub exec_gather_level: AtomicU64,
     /// Per-batch evaluation latency samples (µs), bounded reservoir.
     batch_latency_us: Mutex<Vec<u64>>,
     /// Overwrite cursor once the latency reservoir is full.
@@ -94,6 +99,12 @@ impl Metrics {
     /// (`fetch_max`, so a mixed fleet reports its best lane).
     pub fn record_simd_level(&self, level: crate::exec::SimdLevel) {
         self.exec_simd_level.fetch_max(level.rank(), Ordering::Relaxed);
+    }
+
+    /// Record the index-gather ISA level a serving model dispatches to
+    /// (`fetch_max`, mirroring [`Metrics::record_simd_level`]).
+    pub fn record_gather_level(&self, level: crate::exec::SimdLevel) {
+        self.exec_gather_level.fetch_max(level.rank(), Ordering::Relaxed);
     }
 
     /// Record one batch evaluation's wall-clock latency.
@@ -144,6 +155,7 @@ impl Metrics {
             exec_cycles: self.exec_cycles.load(Ordering::Relaxed),
             exec_energy_fj: self.exec_energy_fj.load(Ordering::Relaxed),
             exec_simd_level: self.exec_simd_level.load(Ordering::Relaxed),
+            exec_gather_level: self.exec_gather_level.load(Ordering::Relaxed),
         }
     }
 }
@@ -171,6 +183,9 @@ pub struct MetricsSnapshot {
     /// Highest [`SimdLevel::rank`](crate::exec::SimdLevel) gauge (0 =
     /// scalar); render with [`MetricsSnapshot::simd_label`].
     pub exec_simd_level: u64,
+    /// Highest index-gather ISA rank gauge (0 = scalar gather stage);
+    /// render with [`MetricsSnapshot::gather_label`].
+    pub exec_gather_level: u64,
 }
 
 impl MetricsSnapshot {
@@ -197,15 +212,22 @@ impl MetricsSnapshot {
             self.exec_trees_skipped.saturating_add(other.exec_trees_skipped);
         self.exec_cycles = self.exec_cycles.saturating_add(other.exec_cycles);
         self.exec_energy_fj = self.exec_energy_fj.saturating_add(other.exec_energy_fj);
-        // A gauge, not a counter: the aggregate reports the best lane any
-        // replica dispatches to.
+        // Gauges, not counters: the aggregate reports the best lane /
+        // gather stage any replica dispatches to.
         self.exec_simd_level = self.exec_simd_level.max(other.exec_simd_level);
+        self.exec_gather_level = self.exec_gather_level.max(other.exec_gather_level);
     }
 
     /// The vector ISA label for the recorded dispatch gauge
     /// (`"scalar"` when nothing recorded — dense baselines, f32 lanes).
     pub fn simd_label(&self) -> &'static str {
         crate::exec::SimdLevel::label_of_rank(self.exec_simd_level)
+    }
+
+    /// The index-gather ISA label for the recorded dispatch gauge
+    /// (`"scalar"` when nothing recorded or no vector gather ran).
+    pub fn gather_label(&self) -> &'static str {
+        crate::exec::SimdLevel::label_of_rank(self.exec_gather_level)
     }
 
     pub fn avg_hops(&self) -> f64 {
@@ -442,6 +464,27 @@ mod tests {
         // Unknown ranks render as the safe fallback label.
         let weird = MetricsSnapshot { exec_simd_level: 99, ..Default::default() };
         assert_eq!(weird.simd_label(), "scalar");
+    }
+
+    #[test]
+    fn gather_level_gauge_maxes_and_labels() {
+        use crate::exec::SimdLevel;
+        let m = Metrics::default();
+        assert_eq!(m.snapshot().gather_label(), "scalar");
+        m.record_gather_level(SimdLevel::Avx2);
+        let s = m.snapshot();
+        assert_eq!(s.gather_label(), "avx2");
+        // Recording Scalar afterwards never downgrades the gauge, and
+        // the simd gauge is untouched — the two are independent.
+        m.record_gather_level(SimdLevel::Scalar);
+        assert_eq!(m.snapshot().exec_gather_level, s.exec_gather_level);
+        assert_eq!(m.snapshot().exec_simd_level, 0);
+        // merge_worker takes the max across replicas.
+        let mut a = MetricsSnapshot::default();
+        a.merge_worker(&s);
+        assert_eq!(a.exec_gather_level, s.exec_gather_level);
+        let weird = MetricsSnapshot { exec_gather_level: 99, ..Default::default() };
+        assert_eq!(weird.gather_label(), "scalar");
     }
 
     #[test]

@@ -161,10 +161,11 @@ impl ShardedServer {
             })
             .collect();
         let front = Arc::new(Metrics::default());
-        // Record the model's vector dispatch level once, on the front-end
-        // gauge: every replica clones the same model, so the per-replica
-        // level is identical by construction.
+        // Record the model's vector dispatch and gather levels once, on
+        // the front-end gauges: every replica clones the same model, so
+        // the per-replica levels are identical by construction.
         front.record_simd_level(model.simd_level());
+        front.record_gather_level(model.gather_level());
         ShardedServer { replicas, resp_rx, router, cache, front, n_features, next_id: 0 }
     }
 

@@ -75,9 +75,22 @@
 //! scalar loop for f32 lanes, u32 cursors, and hosts without vector
 //! support. The vector path is pinned byte-identical to the scalar one
 //! (same tree paths, same accumulation order).
+//!
+//! For the kernels' *gather* stage, packing additionally emits
+//! level-major **packed gather node records** beside each integer code
+//! table: one `u32` per node slot, `(feat << 16) | code`, sharing
+//! `level_off` so a level's records are the same contiguous window as
+//! its codes. One AVX2 dword index-gather over that window fetches both
+//! operands of the per-level compare (threshold code in the low half,
+//! feature id — hence the transposed-column address — in the high
+//! half); the layout also keeps the scalar gather's operand pair on one
+//! cache line per node. The tables are empty when a lane has no code
+//! table or feature ids overflow the packed high half (> 2^16
+//! features); `traverse_tile_lanes` then keeps the scalar gather stage,
+//! byte-identically.
 
 use super::quant::{QuantTables, QuantizedLane};
-use super::simd::{SimdLane, SimdLevel};
+use super::simd::{GatherMode, SimdLane, SimdLevel, GATHER_PAD};
 use crate::dt::FlatTree;
 use crate::forest::RandomForest;
 use std::sync::Arc;
@@ -115,21 +128,40 @@ fn quantize_thresholds<L: QuantizedLane>(
         .collect()
 }
 
+/// Pack the level-major `(feature, threshold-code)` pairs into one u32
+/// gather record per node slot — `(feat << 16) | code` — so one AVX2
+/// dword gather fetches both operands of the per-level compare. Empty
+/// when the lane has no code table or a feature id would overflow the
+/// packed high half.
+fn pack_gather_nodes<L: QuantizedLane>(feat: &[i32], codes: &[L], n_features: usize) -> Vec<u32> {
+    if codes.is_empty() || n_features > (1usize << 16) {
+        return Vec::new();
+    }
+    feat.iter().zip(codes).map(|(&k, &c)| ((k as u32) << 16) | c.as_u32()).collect()
+}
+
 /// One tree-level step of the tiled walk over lane type `L`: advance the
 /// tile's cursors through this tree's `w = 2^lvl` node slots. With a
 /// vector `simd` level and an integer lane, the whole slice goes to the
 /// `exec::simd` kernel (byte-identical by construction); otherwise —
 /// f32 lanes, u32 cursors, `Scalar` — the scalar loop below runs.
+/// `nodes` is the matching packed-gather-record window (empty unless
+/// `vector_gather`, which asserts the caller proved the gather-safety
+/// contract — see `SimdLane`).
 #[inline(always)]
+#[allow(clippy::too_many_arguments)]
 fn step_level<C: CursorIdx, L: SimdLane>(
     simd: SimdLevel,
     xt: &[L],
     n: usize,
     feat: &[i32],
     thr: &[L],
+    nodes: &[u32],
+    vector_gather: bool,
     cur: &mut [C],
 ) {
-    if simd != SimdLevel::Scalar && L::step_simd(simd, xt, n, feat, thr, cur) {
+    if simd != SimdLevel::Scalar && L::step_simd(simd, xt, n, feat, thr, nodes, vector_gather, cur)
+    {
         return;
     }
     for (s, ci) in cur.iter_mut().enumerate() {
@@ -226,6 +258,11 @@ pub struct ForestArena {
     /// Level-major u16 rank codes of `thr` (`u16::MAX` = dead slot);
     /// empty when the forest overflows u16 codes.
     thr_q16: Vec<u16>,
+    /// Packed `(feat << 16) | code` gather records parallel to `thr_q8`
+    /// — one dword index-gather fetches both per-level compare operands.
+    gather_q8: Vec<u32>,
+    /// Packed gather records parallel to `thr_q16`.
+    gather_q16: Vec<u32>,
     /// Per-grove stable descending-live-depth tree permutation: grove
     /// `g`'s segment `visit[grove_off[g]..grove_off[g+1]]` lists that
     /// grove's tree ids deepest-first, so the tile kernel's per-level
@@ -304,6 +341,8 @@ impl ForestArena {
         ));
         let thr_q8 = quantize_thresholds::<u8>(&feat, &thr, &quant, quant.fits_u8());
         let thr_q16 = quantize_thresholds::<u16>(&feat, &thr, &quant, quant.fits_u16());
+        let gather_q8 = pack_gather_nodes(&feat, &thr_q8, f);
+        let gather_q16 = pack_gather_nodes(&feat, &thr_q16, f);
         let mut arena = ForestArena {
             depth,
             n_features: f,
@@ -319,6 +358,8 @@ impl ForestArena {
             quant,
             thr_q8,
             thr_q16,
+            gather_q8,
+            gather_q16,
             visit: Vec::new(),
             visit_rank: Vec::new(),
         };
@@ -445,6 +486,25 @@ impl ForestArena {
     /// Level-major u16 rank codes of the threshold table, when they fit.
     pub(crate) fn thr_q16(&self) -> Option<&[u16]> {
         (!self.thr_q16.is_empty()).then_some(&self.thr_q16[..])
+    }
+
+    /// Packed `(feat << 16) | code` gather records parallel to
+    /// [`thr_q8`](ForestArena::thr_q8); empty when that lane has no
+    /// codes (or > 2^16 features overflow the packed high half).
+    pub(crate) fn gather_q8(&self) -> &[u32] {
+        &self.gather_q8
+    }
+
+    /// Packed gather records parallel to [`thr_q16`](ForestArena::thr_q16).
+    pub(crate) fn gather_q16(&self) -> &[u32] {
+        &self.gather_q16
+    }
+
+    /// Pack caller-built level-major codes (the owned lossy tables) into
+    /// gather records under this arena's feature layout.
+    pub(crate) fn pack_gather<L: QuantizedLane>(&self, codes: &[L]) -> Vec<u32> {
+        debug_assert_eq!(codes.len(), self.thr.len(), "codes not level-major");
+        pack_gather_nodes(&self.feat, codes, self.n_features)
     }
 
     /// Build an owned lossy threshold table at `bits` (affine codes over
@@ -613,7 +673,18 @@ impl ForestArena {
     ) {
         // f32 lanes have no vector kernel; `Scalar` keeps the call site
         // honest about which path runs.
-        self.traverse_tile_lanes(lo, hi, xt, n, cursors, &self.thr, padded_walk, SimdLevel::Scalar);
+        self.traverse_tile_lanes(
+            lo,
+            hi,
+            xt,
+            n,
+            cursors,
+            &self.thr,
+            &[],
+            GatherMode::Scalar,
+            padded_walk,
+            SimdLevel::Scalar,
+        );
     }
 
     /// The lane-generic kernel core: identical traversal over any
@@ -635,6 +706,16 @@ impl ForestArena {
     /// (see `exec::simd`); pass [`SimdLevel::Scalar`] for the reference
     /// scalar walk. Dispatch happens per `step_level` slice, so the
     /// choice costs nothing on the per-tile path.
+    ///
+    /// `nodes_tab` / `gather` arm the kernels' index-gather stage: when
+    /// `gather` is [`GatherMode::Vector`], the packed records are
+    /// present, the tile carries [`GATHER_PAD`] slack elements past
+    /// `n_features · n` (dword gathers over-read at the buffer's end)
+    /// and the transposed addresses fit `i32`, per-level record windows
+    /// flow to `step_level` with the vector-gather flag set — this is
+    /// where the kernels' gather-safety contract is proved. Any failed
+    /// precondition (exactly-sized tiles included) silently keeps the
+    /// scalar gather stage, which is byte-identical.
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn traverse_tile_lanes<C: CursorIdx, L: SimdLane>(
         &self,
@@ -644,14 +725,21 @@ impl ForestArena {
         n: usize,
         cursors: &mut [C],
         thr_tab: &[L],
+        nodes_tab: &[u32],
+        gather: GatherMode,
         padded_walk: bool,
         simd: SimdLevel,
     ) {
         debug_assert!(lo <= hi && hi <= self.n_trees, "bad tree range {lo}..{hi}");
         let t_cnt = hi - lo;
-        assert_eq!(xt.len(), n * self.n_features, "tile shape mismatch");
+        assert!(xt.len() >= n * self.n_features, "tile shape mismatch");
         assert_eq!(cursors.len(), t_cnt * n, "cursor buffer shape mismatch");
         assert_eq!(thr_tab.len(), self.thr.len(), "threshold table shape mismatch");
+        let vector_gather = gather == GatherMode::Vector
+            && !nodes_tab.is_empty()
+            && nodes_tab.len() == thr_tab.len()
+            && xt.len() >= n * self.n_features + GATHER_PAD
+            && n * self.n_features <= i32::MAX as usize;
         cursors.iter_mut().for_each(|ci| *ci = C::ZERO);
         let live = |j: usize| {
             if padded_walk {
@@ -682,6 +770,8 @@ impl ForestArena {
                             n,
                             &self.feat[off..off + w],
                             &thr_tab[off..off + w],
+                            if vector_gather { &nodes_tab[off..off + w] } else { &[] },
+                            vector_gather,
                             &mut cursors[(t - lo) * n..(t - lo + 1) * n],
                         );
                     }
@@ -698,6 +788,8 @@ impl ForestArena {
                         n,
                         &self.feat[off..off + w],
                         &thr_tab[off..off + w],
+                        if vector_gather { &nodes_tab[off..off + w] } else { &[] },
+                        vector_gather,
                         &mut cursors[j * n..(j + 1) * n],
                     );
                 }
@@ -1118,7 +1210,18 @@ mod tests {
             }
         }
         let mut c_q = vec![0u16; t_cnt * n];
-        arena.traverse_tile_lanes(0, t_cnt, &xq, n, &mut c_q, thr_q, false, SimdLevel::Scalar);
+        arena.traverse_tile_lanes(
+            0,
+            t_cnt,
+            &xq,
+            n,
+            &mut c_q,
+            thr_q,
+            &[],
+            GatherMode::Scalar,
+            false,
+            SimdLevel::Scalar,
+        );
         assert_eq!(c_q, c_f32, "u8 lanes diverged from the f32 walk");
     }
 
@@ -1165,6 +1268,8 @@ mod tests {
                             n,
                             &mut c_ref,
                             thr_q,
+                            &[],
+                            GatherMode::Scalar,
                             padded,
                             SimdLevel::Scalar,
                         );
@@ -1176,6 +1281,8 @@ mod tests {
                             n,
                             &mut c_vec,
                             thr_q,
+                            &[],
+                            GatherMode::Scalar,
                             padded,
                             level,
                         );
@@ -1215,8 +1322,106 @@ mod tests {
         let xq = vec![0u8; n * arena.n_features()];
         for level in [SimdLevel::Scalar, SimdLevel::detect()] {
             let mut cur = vec![7u16; 2 * n];
-            arena.traverse_tile_lanes(0, 2, &xq, n, &mut cur, thr_q, false, level);
+            arena.traverse_tile_lanes(
+                0,
+                2,
+                &xq,
+                n,
+                &mut cur,
+                thr_q,
+                &[],
+                GatherMode::Scalar,
+                false,
+                level,
+            );
             assert_eq!(cur, vec![0u16; 2 * n], "{}", level.label());
+        }
+    }
+
+    #[test]
+    fn vector_gather_matches_scalar_gather_bitwise() {
+        // The gather-stage pin: for every level this host supports, the
+        // index-gathered walk over the packed (feat, code) records — on
+        // a GATHER_PAD-padded tile — reaches exactly the cursors of the
+        // scalar-gather walk, over grove-aligned and straddling ranges.
+        // An exactly-sized tile under GatherMode::Vector must silently
+        // keep the scalar gather stage and still agree.
+        let (trees, ds) = ragged_flats();
+        let n_trees = trees.len();
+        let arena = ForestArena::from_flat_trees(&trees).with_grove_sizes(&[2, 2, n_trees - 4]);
+        let thr_q = arena.thr_q8().expect("demo forest fits u8 rank codes");
+        assert_eq!(arena.gather_q8().len(), thr_q.len(), "gather records track the code table");
+        assert_eq!(
+            arena.gather_q16().len(),
+            arena.thr_q16().map_or(0, <[u16]>::len),
+            "u16 gather records track the u16 code table"
+        );
+        let f = arena.n_features();
+        for level in [SimdLevel::Sse2, SimdLevel::Avx2, SimdLevel::Neon] {
+            if !level.supported() {
+                continue;
+            }
+            for n in [1usize, 7, 16, 19.min(ds.test.len())] {
+                let xq = quantized_tile_u8(&arena, &ds.test.x[..n * f], n);
+                let mut padded_xq = xq.clone();
+                padded_xq.resize(n * f + GATHER_PAD, 0);
+                for (lo, hi) in [(0usize, n_trees), (0, 4), (1, 3)] {
+                    let t_cnt = hi - lo;
+                    let mut c_ref = vec![0u16; t_cnt * n];
+                    arena.traverse_tile_lanes(
+                        lo,
+                        hi,
+                        &xq,
+                        n,
+                        &mut c_ref,
+                        thr_q,
+                        &[],
+                        GatherMode::Scalar,
+                        false,
+                        SimdLevel::Scalar,
+                    );
+                    let mut c_vec = vec![0u16; t_cnt * n];
+                    arena.traverse_tile_lanes(
+                        lo,
+                        hi,
+                        &padded_xq,
+                        n,
+                        &mut c_vec,
+                        thr_q,
+                        arena.gather_q8(),
+                        GatherMode::Vector,
+                        false,
+                        level,
+                    );
+                    assert_eq!(
+                        c_vec,
+                        c_ref,
+                        "{} gather diverged: n={n} range {lo}..{hi}",
+                        level.label()
+                    );
+                    // Unpadded tile: Vector request degrades to the
+                    // scalar gather stage, never to wrong answers.
+                    let mut c_un = vec![0u16; t_cnt * n];
+                    arena.traverse_tile_lanes(
+                        lo,
+                        hi,
+                        &xq,
+                        n,
+                        &mut c_un,
+                        thr_q,
+                        arena.gather_q8(),
+                        GatherMode::Vector,
+                        false,
+                        level,
+                    );
+                    assert_eq!(
+                        c_un,
+                        c_ref,
+                        "{} unpadded-gather fallback diverged: n={n} range {lo}..{hi}",
+                        level.label()
+                    );
+                }
+            }
         }
     }
 

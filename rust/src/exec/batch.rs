@@ -39,6 +39,21 @@
 //!   instruction through `exec::simd` — byte-identical to the scalar
 //!   loop, which remains the fallback for f32 lanes, u32 cursors and
 //!   vector-width tails.
+//! * **Vectorized gather** ([`BatchPlan::with_gather`],
+//!   `FOG_FORCE_SCALAR_GATHER=1` pins scalar) — integer-lane plans also
+//!   carry the arena's packed `(feat << 16) | code` gather records and
+//!   over-allocate the transposed tile by `GATHER_PAD` slack elements,
+//!   so the vector kernels' per-sample operand loads become AVX2
+//!   `vpgatherdd` index gathers (NEON: a `tbl` threshold lookup on
+//!   shallow levels) instead of scalar loops — again byte-identical,
+//!   with the scalar gather stage as the everywhere-else fallback.
+//! * **Vectorized lossy coding** ([`BatchPlan::with_scalar_coding`]
+//!   pins the per-value reference) — lossy plans run the affine
+//!   `(x − lo)/(hi − lo) → clamp → scale → truncate` chain through
+//!   `exec::simd::code_lossy_row` (8 features/instruction on AVX2, 4 on
+//!   NEON) per source row during the tile transpose, byte-identical to
+//!   the per-value scalar coding (NaN→left, saturation and degenerate
+//!   ranges preserved exactly).
 //!
 //! The floating-point reduction order is *identical* to the per-tree
 //! reference paths (`RandomForest::predict_proba`, per-tree majority
@@ -67,8 +82,8 @@
 //! reported separately as `ExecReport::trees_skipped`.
 
 use super::arena::{CursorIdx, ForestArena};
-use super::quant::{QuantMode, QuantizedLane};
-use super::simd::{SimdLane, SimdLevel};
+use super::quant::{lossy_levels, QuantMode, QuantizedLane};
+use super::simd::{code_lossy_row, GatherMode, SimdLane, SimdLevel, GATHER_PAD};
 use crate::api::ProbMatrix;
 use crate::util::threadpool::{num_threads, par_row_chunks_mut};
 use std::borrow::Cow;
@@ -138,6 +153,18 @@ pub struct BatchPlan<'a> {
     /// [`BatchPlan::with_quant`] time (zero per-tile dispatch cost);
     /// always `Scalar` for f32 lanes.
     simd: SimdLevel,
+    /// Packed `(feat << 16) | code` gather records matching `lanes`
+    /// (exact lanes borrow the arena's pack-time tables, lossy lanes own
+    /// a table built beside their threshold codes); empty for f32 lanes.
+    nodes: Cow<'a, [u32]>,
+    /// Gather-stage mode for the vector kernels, resolved once at
+    /// [`BatchPlan::with_quant`] time (`FOG_FORCE_SCALAR_GATHER=1` pins
+    /// scalar; [`BatchPlan::with_gather`] overrides for benches/tests).
+    gather: GatherMode,
+    /// Bench/conformance pin: force the per-value scalar coding closure
+    /// in the tile transpose instead of the vectorized lossy-affine row
+    /// pass (results identical either way).
+    scalar_coding: bool,
     /// Adaptive early-exit confidence threshold, already filtered to the
     /// effective range (see [`BatchPlan::with_adaptive`]): `None` = full
     /// evaluation.
@@ -166,6 +193,9 @@ impl<'a> BatchPlan<'a> {
             quant: QuantMode::Off,
             lanes: LanePlan::F32,
             simd: SimdLevel::Scalar,
+            nodes: Cow::Borrowed(&[]),
+            gather: GatherMode::Scalar,
+            scalar_coding: false,
             adaptive: None,
         }
     }
@@ -239,6 +269,25 @@ impl<'a> BatchPlan<'a> {
             LanePlan::F32 => SimdLevel::Scalar,
             _ => SimdLevel::detect(),
         };
+        // Matching packed gather records: exact lanes borrow the arena's
+        // pack-time tables, lossy lanes pack their own codes once here.
+        // Empty (no vector gather, scalar stage only) when the arena
+        // built none — e.g. > 2^16 features.
+        self.nodes = match &self.lanes {
+            LanePlan::F32 => Cow::Borrowed(&[]),
+            LanePlan::U8(t) => match mode {
+                QuantMode::Exact => Cow::Borrowed(self.arena.gather_q8()),
+                _ => Cow::Owned(self.arena.pack_gather(t.as_ref())),
+            },
+            LanePlan::U16(t) => match mode {
+                QuantMode::Exact => Cow::Borrowed(self.arena.gather_q16()),
+                _ => Cow::Owned(self.arena.pack_gather(t.as_ref())),
+            },
+        };
+        self.gather = match self.lanes {
+            LanePlan::F32 => GatherMode::Scalar,
+            _ => GatherMode::detect(),
+        };
         self
     }
 
@@ -278,6 +327,77 @@ impl<'a> BatchPlan<'a> {
     /// [`BatchPlan::simd_level`] as its BENCH_JSON label.
     pub fn simd_label(&self) -> &'static str {
         self.simd_level().label()
+    }
+
+    /// Override the gather-stage mode — a bench/conformance knob mirroring
+    /// [`BatchPlan::with_simd`]: the `quant_wide` bench times the native
+    /// index-gather against the scalar gather stage in-process, and the
+    /// plan-equality tests pin the two byte-identical. Apply *after*
+    /// [`BatchPlan::with_quant`], which (re)resolves the mode. f32 lanes
+    /// (no vector kernel, hence no gather stage) clamp to `Scalar`.
+    pub fn with_gather(mut self, mode: GatherMode) -> BatchPlan<'a> {
+        self.gather = if matches!(self.lanes, LanePlan::F32) { GatherMode::Scalar } else { mode };
+        self
+    }
+
+    /// The ISA whose *index-gather* kernel the plan's tiles actually
+    /// dispatch: `Avx2` (`vpgatherdd`, both lane widths) or `Neon` (the
+    /// `tbl` threshold lookup, u8 lanes — it covers levels of ≤ 16
+    /// nodes, deeper ones keep the in-kernel scalar stage), and `Scalar`
+    /// everywhere a vector gather can't or was pinned not to run
+    /// (forced-scalar gather, SSE2, f32 lanes, missing record tables,
+    /// adaptive/deep-arena scalar plans). This is the observability
+    /// surface behind the serve/fleet `gather` label, and the
+    /// `gather_speedup_x` floor arms only when it is non-scalar.
+    pub fn gather_level(&self) -> SimdLevel {
+        if self.gather != GatherMode::Vector || self.nodes.is_empty() {
+            return SimdLevel::Scalar;
+        }
+        match (self.simd_level(), &self.lanes) {
+            (SimdLevel::Avx2, LanePlan::U8(_) | LanePlan::U16(_)) => SimdLevel::Avx2,
+            (SimdLevel::Neon, LanePlan::U8(_)) => SimdLevel::Neon,
+            _ => SimdLevel::Scalar,
+        }
+    }
+
+    /// [`BatchPlan::gather_level`] as its BENCH_JSON label.
+    pub fn gather_label(&self) -> &'static str {
+        self.gather_level().label()
+    }
+
+    /// Pin the tile transpose to the per-value scalar coding closure —
+    /// the reference the vectorized lossy-affine row pass is benched and
+    /// conformance-tested against (results identical either way; exact
+    /// lanes are unaffected, their rank coding is not an affine pass).
+    pub fn with_scalar_coding(mut self, scalar: bool) -> BatchPlan<'a> {
+        self.scalar_coding = scalar;
+        self
+    }
+
+    /// The ISA the lossy affine coding pass actually runs at: the plan's
+    /// resolved vector level for lossy integer-lane plans (AVX2/NEON
+    /// have coding kernels; SSE2 codes scalar), `Scalar` for everything
+    /// else — exact/f32 lanes (no affine pass), a pinned
+    /// [`BatchPlan::with_scalar_coding`], or the adaptive per-sample
+    /// walk (which never builds a tile).
+    pub fn coding_level(&self) -> SimdLevel {
+        if self.scalar_coding
+            || self.adaptive.is_some()
+            || !matches!(self.quant, QuantMode::Lossy { .. })
+            || matches!(self.lanes, LanePlan::F32)
+        {
+            return SimdLevel::Scalar;
+        }
+        match self.simd {
+            SimdLevel::Avx2 => SimdLevel::Avx2,
+            SimdLevel::Neon => SimdLevel::Neon,
+            _ => SimdLevel::Scalar,
+        }
+    }
+
+    /// [`BatchPlan::coding_level`] as its BENCH_JSON label.
+    pub fn coding_label(&self) -> &'static str {
+        self.coding_level().label()
     }
 
     /// Enable Daghero-style adaptive early exit (arXiv 2205.13838):
@@ -442,28 +562,55 @@ impl<'a> BatchPlan<'a> {
     /// grain ([`BatchPlan::quant_skipped_for_tiny_batch`]).
     fn execute_cursor<C: CursorIdx>(&self, x: &[f32], n: usize) -> ProbMatrix {
         let q = self.arena.quant_tables();
+        let nodes = self.nodes.as_ref();
         match (&self.lanes, self.quant) {
             (LanePlan::U8(t), QuantMode::Lossy { bits }) => {
-                self.execute_with::<C, u8, _>(x, n, t, |k, v| {
+                // The lossy affine pass codes whole source rows through
+                // `code_lossy_row` unless pinned scalar, in which case
+                // the per-value closure (the reference body) runs.
+                let rowwise = (!self.scalar_coding)
+                    .then(|| (q.lo_table(), q.hi_table(), lossy_levels(bits)));
+                self.execute_with::<C, u8, _>(x, n, t, nodes, rowwise, |k, v| {
                     u8::from_usize(q.lossy_code(k, v, bits))
                 })
             }
             (LanePlan::U8(t), _) if !self.quant_skipped_for_tiny_batch(n) => {
-                self.execute_with::<C, u8, _>(x, n, t, |k, v| u8::from_usize(q.code(k, v)))
+                self.execute_with::<C, u8, _>(x, n, t, nodes, None, |k, v| {
+                    u8::from_usize(q.code(k, v))
+                })
             }
             (LanePlan::U16(t), QuantMode::Lossy { bits }) => {
-                self.execute_with::<C, u16, _>(x, n, t, |k, v| {
+                let rowwise = (!self.scalar_coding)
+                    .then(|| (q.lo_table(), q.hi_table(), lossy_levels(bits)));
+                self.execute_with::<C, u16, _>(x, n, t, nodes, rowwise, |k, v| {
                     u16::from_usize(q.lossy_code(k, v, bits))
                 })
             }
             (LanePlan::U16(t), _) if !self.quant_skipped_for_tiny_batch(n) => {
-                self.execute_with::<C, u16, _>(x, n, t, |k, v| u16::from_usize(q.code(k, v)))
+                self.execute_with::<C, u16, _>(x, n, t, nodes, None, |k, v| {
+                    u16::from_usize(q.code(k, v))
+                })
             }
-            _ => self.execute_with::<C, f32, _>(x, n, self.arena.thr_table(), |_, v| v),
+            _ => {
+                self.execute_with::<C, f32, _>(x, n, self.arena.thr_table(), &[], None, |_, v| v)
+            }
         }
     }
 
-    fn execute_with<C, L, Q>(&self, x: &[f32], n: usize, thr_tab: &[L], code: Q) -> ProbMatrix
+    /// `rowwise` carries the lossy affine coding tables `(lo, hi,
+    /// levels)` when the transpose should code whole rows through the
+    /// vectorized pass; `None` codes per value through `code` (the
+    /// exact/f32 paths, and the pinned scalar-coding reference).
+    #[allow(clippy::too_many_arguments)]
+    fn execute_with<C, L, Q>(
+        &self,
+        x: &[f32],
+        n: usize,
+        thr_tab: &[L],
+        nodes_tab: &[u32],
+        rowwise: Option<(&[f32], &[f32], f32)>,
+        code: Q,
+    ) -> ProbMatrix
     where
         C: CursorIdx,
         L: SimdLane + Default + Send + Sync,
@@ -475,14 +622,20 @@ impl<'a> BatchPlan<'a> {
         let tile = self.effective_tile(n);
         let t_cnt = self.hi - self.lo;
         let block = self.grain_rows(n);
+        let coding_level = self.coding_level();
         let mut data = vec![0.0f32; n * c];
         par_row_chunks_mut(&mut data, c, block, |first_row, chunk| {
             let rows = chunk.len() / c;
             // Scratch sized to what this chunk can actually use — a
             // chunk smaller than the tile never pays full-tile buffers.
+            // GATHER_PAD slack elements past the transposed tile keep
+            // the dword index-gathers in bounds at the buffer's end
+            // (pad contents never reach a compare — the kernels mask
+            // gathered dwords to the lane width).
             let t = tile.min(rows.max(1));
             let mut cursors = vec![C::ZERO; t_cnt * t];
-            let mut xt = vec![L::default(); f * t];
+            let mut xt = vec![L::default(); f * t + GATHER_PAD];
+            let mut rowbuf = vec![0u32; if rowwise.is_some() { f } else { 0 }];
             let mut s0 = 0;
             while s0 < rows {
                 let s1 = (s0 + tile).min(rows);
@@ -491,17 +644,30 @@ impl<'a> BatchPlan<'a> {
                 // into the plan's lane) so each level's compare loop
                 // reads stride-1 columns.
                 let src = &x[(first_row + s0) * f..(first_row + s1) * f];
-                for (r, row) in src.chunks_exact(f).enumerate() {
-                    for (k, &v) in row.iter().enumerate() {
-                        xt[k * m + r] = code(k, v);
+                match rowwise {
+                    Some((lo_t, hi_t, levels)) => {
+                        for (r, row) in src.chunks_exact(f).enumerate() {
+                            code_lossy_row(coding_level, lo_t, hi_t, levels, row, &mut rowbuf);
+                            for (k, &cv) in rowbuf.iter().enumerate() {
+                                xt[k * m + r] = L::from_code(cv);
+                            }
+                        }
+                    }
+                    None => {
+                        for (r, row) in src.chunks_exact(f).enumerate() {
+                            for (k, &v) in row.iter().enumerate() {
+                                xt[k * m + r] = code(k, v);
+                            }
+                        }
                     }
                 }
                 self.run_tile::<C, L>(
-                    &xt[..f * m],
+                    &xt[..f * m + GATHER_PAD],
                     m,
                     &mut cursors[..t_cnt * m],
                     &mut chunk[s0 * c..s1 * c],
                     thr_tab,
+                    nodes_tab,
                 );
                 s0 = s1;
             }
@@ -510,8 +676,10 @@ impl<'a> BatchPlan<'a> {
     }
 
     /// One tile: traverse level-synchronously over the feature-major
-    /// tile `xt` (any lane type), then reduce leaves into `acc` (the
+    /// tile `xt` (any lane type; carries `GATHER_PAD` slack elements
+    /// past `n_features · n`), then reduce leaves into `acc` (the
     /// tile's zero-initialized output rows).
+    #[allow(clippy::too_many_arguments)]
     fn run_tile<C: CursorIdx, L: SimdLane>(
         &self,
         xt: &[L],
@@ -519,6 +687,7 @@ impl<'a> BatchPlan<'a> {
         cursors: &mut [C],
         acc: &mut [f32],
         thr_tab: &[L],
+        nodes_tab: &[u32],
     ) {
         let a = self.arena;
         let c = a.n_classes();
@@ -530,6 +699,8 @@ impl<'a> BatchPlan<'a> {
             n,
             cursors,
             thr_tab,
+            nodes_tab,
+            self.gather,
             self.padded_walk,
             self.simd,
         );
@@ -995,6 +1166,152 @@ mod tests {
         // Even at a near-zero threshold no sample skips past the floor.
         assert!(skipped <= n * (t_cnt - min_evals), "warm-up floor violated");
         assert!(skipped > 0, "near-zero threshold should exit at the floor");
+    }
+
+    #[test]
+    fn vector_gather_plan_is_byte_identical_to_scalar_gather() {
+        // The in-process form of the FOG_FORCE_SCALAR_GATHER conformance
+        // leg: a plan with the vector gather stage answers byte-for-byte
+        // the scalar-gather plan — exact and lossy lanes, both
+        // reductions, every level this host supports. (On hosts whose
+        // best level has no gather kernel both plans run the same code;
+        // the assert is then trivially true, never wrong.)
+        let (arena, ds) = ragged_arena();
+        let n = ds.test.len();
+        for mode in [QuantMode::Exact, QuantMode::Lossy { bits: 8 }, QuantMode::Lossy { bits: 12 }]
+        {
+            for reduce in [Reduce::ProbAverage, Reduce::MajorityVote] {
+                let scalar = BatchPlan::new(&arena, reduce)
+                    .with_quant(mode)
+                    .with_gather(GatherMode::Scalar)
+                    .execute(&ds.test.x, n);
+                let vector = BatchPlan::new(&arena, reduce)
+                    .with_quant(mode)
+                    .with_gather(GatherMode::Vector)
+                    .execute(&ds.test.x, n);
+                assert_eq!(vector, scalar, "gather {mode:?} {reduce:?}");
+                for level in [SimdLevel::Sse2, SimdLevel::Avx2, SimdLevel::Neon] {
+                    if !level.supported() {
+                        continue;
+                    }
+                    let vec = BatchPlan::new(&arena, reduce)
+                        .with_quant(mode)
+                        .with_simd(level)
+                        .with_gather(GatherMode::Vector)
+                        .execute(&ds.test.x, n);
+                    assert_eq!(vec, scalar, "gather {} {mode:?} {reduce:?}", level.label());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vector_coding_plan_is_byte_identical_to_scalar_coding() {
+        // The vectorized lossy-affine row pass against the per-value
+        // scalar coding closure, at every supported level and lane
+        // width — byte identity is the house rule for every fast path.
+        let (arena, ds) = ragged_arena();
+        let n = ds.test.len();
+        for mode in [QuantMode::Lossy { bits: 8 }, QuantMode::Lossy { bits: 12 }] {
+            for reduce in [Reduce::ProbAverage, Reduce::MajorityVote] {
+                let scalar = BatchPlan::new(&arena, reduce)
+                    .with_quant(mode)
+                    .with_scalar_coding(true)
+                    .execute(&ds.test.x, n);
+                let vector =
+                    BatchPlan::new(&arena, reduce).with_quant(mode).execute(&ds.test.x, n);
+                assert_eq!(vector, scalar, "coding {mode:?} {reduce:?}");
+                for level in [SimdLevel::Sse2, SimdLevel::Avx2, SimdLevel::Neon] {
+                    if !level.supported() {
+                        continue;
+                    }
+                    let vec = BatchPlan::new(&arena, reduce)
+                        .with_quant(mode)
+                        .with_simd(level)
+                        .execute(&ds.test.x, n);
+                    assert_eq!(vec, scalar, "coding {} {mode:?} {reduce:?}", level.label());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_level_reports_the_effective_path() {
+        let (_, arena, _) = setup();
+        // f32 lanes: no vector kernel, no gather stage.
+        let plan = BatchPlan::new(&arena, Reduce::ProbAverage);
+        assert_eq!(plan.gather_level(), SimdLevel::Scalar);
+        assert_eq!(plan.gather_label(), "scalar");
+        let plan =
+            BatchPlan::new(&arena, Reduce::ProbAverage).with_gather(GatherMode::Vector);
+        assert_eq!(plan.gather_level(), SimdLevel::Scalar, "f32 lanes clamp the gather");
+        // A pinned scalar gather always reports scalar.
+        let plan = BatchPlan::new(&arena, Reduce::ProbAverage)
+            .with_quant(QuantMode::Exact)
+            .with_gather(GatherMode::Scalar);
+        assert_eq!(plan.gather_level(), SimdLevel::Scalar);
+        // The adaptive per-sample walk has no tile, hence no gather.
+        let plan = BatchPlan::new(&arena, Reduce::ProbAverage)
+            .with_quant(QuantMode::Exact)
+            .with_gather(GatherMode::Vector)
+            .with_adaptive(Some(0.5));
+        assert_eq!(plan.gather_level(), SimdLevel::Scalar);
+        // With vector gather requested, the level tracks the dispatch:
+        // AVX2 gathers both widths, NEON only u8, SSE2/Scalar neither.
+        for level in [SimdLevel::Scalar, SimdLevel::Sse2, SimdLevel::Avx2, SimdLevel::Neon] {
+            if !level.supported() {
+                continue;
+            }
+            let plan = BatchPlan::new(&arena, Reduce::ProbAverage)
+                .with_quant(QuantMode::Exact)
+                .with_simd(level)
+                .with_gather(GatherMode::Vector);
+            let want = match level {
+                SimdLevel::Avx2 => SimdLevel::Avx2,
+                SimdLevel::Neon if plan.lane_label() == "u8" => SimdLevel::Neon,
+                _ => SimdLevel::Scalar,
+            };
+            assert_eq!(plan.gather_level(), want, "{}", level.label());
+            assert_eq!(plan.gather_label(), want.label());
+        }
+    }
+
+    #[test]
+    fn coding_level_reports_the_effective_path() {
+        let (_, arena, _) = setup();
+        // Exact and f32 plans have no affine pass.
+        let plan = BatchPlan::new(&arena, Reduce::ProbAverage);
+        assert_eq!(plan.coding_level(), SimdLevel::Scalar);
+        assert_eq!(plan.coding_label(), "scalar");
+        let plan = BatchPlan::new(&arena, Reduce::ProbAverage).with_quant(QuantMode::Exact);
+        assert_eq!(plan.coding_level(), SimdLevel::Scalar);
+        // A pinned scalar coding always reports scalar.
+        let plan = BatchPlan::new(&arena, Reduce::ProbAverage)
+            .with_quant(QuantMode::Lossy { bits: 8 })
+            .with_scalar_coding(true);
+        assert_eq!(plan.coding_level(), SimdLevel::Scalar);
+        // The adaptive walk never builds a tile, hence never codes rows.
+        let plan = BatchPlan::new(&arena, Reduce::ProbAverage)
+            .with_quant(QuantMode::Lossy { bits: 8 })
+            .with_adaptive(Some(0.5));
+        assert_eq!(plan.coding_level(), SimdLevel::Scalar);
+        // Lossy plans track the resolved level where a coding kernel
+        // exists (AVX2/NEON); SSE2 codes scalar.
+        for level in [SimdLevel::Scalar, SimdLevel::Sse2, SimdLevel::Avx2, SimdLevel::Neon] {
+            if !level.supported() {
+                continue;
+            }
+            let plan = BatchPlan::new(&arena, Reduce::ProbAverage)
+                .with_quant(QuantMode::Lossy { bits: 8 })
+                .with_simd(level);
+            let want = match level {
+                SimdLevel::Avx2 => SimdLevel::Avx2,
+                SimdLevel::Neon => SimdLevel::Neon,
+                _ => SimdLevel::Scalar,
+            };
+            assert_eq!(plan.coding_level(), want, "{}", level.label());
+            assert_eq!(plan.coding_label(), want.label());
+        }
     }
 
     #[test]

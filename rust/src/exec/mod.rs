@@ -70,9 +70,15 @@
 //! kernels ([`simd`]) when the host supports them — AVX2/SSE2 on
 //! x86_64, NEON on aarch64, 8–32 samples per compare/advance
 //! instruction — selected once per [`BatchPlan`] as a [`SimdLevel`]
-//! (`FOG_FORCE_SCALAR=1` pins the scalar reference lane). Every vector
-//! path is conformance-pinned byte-identical to the scalar loop, all
-//! intrinsic `unsafe` lives in `exec/simd.rs`, and comparator-op/energy
+//! (`FOG_FORCE_SCALAR=1` pins the scalar reference lane). The vector
+//! kernels' per-sample operand loads run as AVX2 `vpgatherdd` index
+//! gathers over the arena's packed level-major `(feat, code)` records
+//! (NEON: a `tbl` threshold lookup on shallow levels), selected as a
+//! [`GatherMode`] with its own `FOG_FORCE_SCALAR_GATHER=1` pin, and the
+//! lossy affine coding pass inside the tile transpose is vectorized the
+//! same way (`simd::code_lossy_row`). Every vector path is
+//! conformance-pinned byte-identical to the scalar loop, all intrinsic
+//! `unsafe` lives in `exec/simd.rs`, and comparator-op/energy
 //! accounting is dispatch-invariant.
 
 pub mod arena;
@@ -85,4 +91,4 @@ pub use arena::ForestArena;
 pub use backend::{Backend, ExecReport, SoftwareBackend, UarchBackend};
 pub use batch::{BatchPlan, Reduce, DEFAULT_TILE};
 pub use quant::{QuantMode, QuantTables};
-pub use simd::SimdLevel;
+pub use simd::{GatherMode, SimdLevel};

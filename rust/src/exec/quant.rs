@@ -184,15 +184,45 @@ impl QuantTables {
     /// via the `as` cast — left, like the exact path.
     #[inline]
     pub fn lossy_code(&self, k: usize, v: f32, bits: u8) -> usize {
-        let levels = ((1u32 << bits.clamp(1, 16)) - 2).max(1) as f32;
-        let (lo, hi) = (self.lo[k], self.hi[k]);
-        if hi <= lo {
-            // Constant (or cut-free) feature: one bucket.
-            return if v > lo { 1 } else { 0 };
-        }
-        let t = ((v - lo) / (hi - lo)).clamp(0.0, 1.0);
-        (t * levels) as usize
+        lossy_affine(self.lo[k], self.hi[k], lossy_levels(bits), v)
     }
+
+    /// Per-feature range minima backing the lossy affine codes — fed to
+    /// the vectorized coding pass (`exec::simd::code_lossy_row`) as one
+    /// contiguous load per 8 features.
+    #[inline]
+    pub(crate) fn lo_table(&self) -> &[f32] {
+        &self.lo
+    }
+
+    /// Per-feature range maxima backing the lossy affine codes.
+    #[inline]
+    pub(crate) fn hi_table(&self) -> &[f32] {
+        &self.hi
+    }
+}
+
+/// Bucket count for a lossy affine width: `2^bits - 2` codes (lane MAX
+/// stays the dead sentinel), at least one.
+#[inline]
+pub(crate) fn lossy_levels(bits: u8) -> f32 {
+    ((1u32 << bits.clamp(1, 16)) - 2).max(1) as f32
+}
+
+/// The scalar lossy affine code body, shared verbatim by
+/// [`QuantTables::lossy_code`] and the vector coding pass's scalar
+/// reference/tail (`exec::simd::code_lossy_row`) so the two can never
+/// drift: `(v - lo) / (hi - lo)` clamped to `[0, 1]`, scaled, truncated.
+/// NaN falls through the clamp (Rust `clamp` propagates it) and the `as`
+/// cast saturates it to 0 — left, like the exact path.
+#[inline(always)]
+pub(crate) fn lossy_affine(lo: f32, hi: f32, levels: f32, v: f32) -> usize {
+    if hi <= lo {
+        // Constant (or cut-free) feature: one bucket.
+        return if v > lo { 1 } else { 0 };
+    }
+    let t = ((v - lo) / (hi - lo)).clamp(0.0, 1.0);
+    (t * levels) as usize
 }
 
 /// An integer lane type the quantized tile kernel runs on — the feature
@@ -206,6 +236,10 @@ pub trait QuantizedLane: Copy + Ord + Send + Sync + 'static {
     const LABEL: &'static str;
 
     fn from_usize(v: usize) -> Self;
+
+    /// Widen a code losslessly — the low half of a packed `(feat, code)`
+    /// gather record (see `ForestArena`'s level-major gather tables).
+    fn as_u32(self) -> u32;
 }
 
 impl QuantizedLane for u8 {
@@ -217,6 +251,11 @@ impl QuantizedLane for u8 {
         debug_assert!(v < u8::MAX as usize, "u8 lane overflow");
         v as u8
     }
+
+    #[inline]
+    fn as_u32(self) -> u32 {
+        self as u32
+    }
 }
 
 impl QuantizedLane for u16 {
@@ -227,6 +266,11 @@ impl QuantizedLane for u16 {
     fn from_usize(v: usize) -> u16 {
         debug_assert!(v < u16::MAX as usize, "u16 lane overflow");
         v as u16
+    }
+
+    #[inline]
+    fn as_u32(self) -> u32 {
+        self as u32
     }
 }
 

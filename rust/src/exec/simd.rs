@@ -5,27 +5,44 @@
 //! replaces the body of that loop (`arena`'s `step_level`) with explicit
 //! vector kernels that process 8–32 samples per instruction:
 //!
-//! 1. **Gather** (scalar): each sample's cursor names a different node,
-//!    so its threshold code `thr[cur]` and transposed feature code
-//!    `xt[feat[cur] * n + s]` are loaded with plain bounds-checked
-//!    indexing into small stack arrays.
+//! 1. **Gather**: each sample's cursor names a different node, so its
+//!    threshold code `thr[cur]` and transposed feature code
+//!    `xt[feat[cur] * n + s]` are indexed loads. On AVX2 both become
+//!    `vpgatherdd` index gathers over the arena's level-major packed
+//!    `(feat << 16) | code` node records ([`GatherMode`], one gather
+//!    fetches both operands per 8 samples); NEON uses a `tbl` register
+//!    lookup for the threshold side on shallow (≤ 16-node) levels; SSE2
+//!    and every fallback keep the scalar bounds-checked gather into
+//!    small stack arrays.
 //! 2. **Compare** (vector): unsigned `>` over a full register. x86 has
 //!    no unsigned byte/word compare, so both sides are sign-biased
-//!    (`x ^ MIN`) and compared signed; NEON compares unsigned natively.
+//!    (`x ^ MIN`) and compared signed (the gathered path compares at
+//!    i32 width, where zero-extended codes are non-negative and signed
+//!    `>` equals unsigned); NEON compares unsigned natively.
 //! 3. **Advance** (vector): `cur' = 2*cur + (x > thr)` becomes
 //!    `2*cur - mask` — an all-ones u16 mask is `-1` mod 2^16, and
 //!    cursors stay below 2^15 at depth ≤ 15 so the doubling never
 //!    wraps. Byte masks are sign-extended (not zero-extended) to u16
 //!    lanes so the subtract sees `0xFFFF`, in sample order.
 //!
+//! The module also vectorizes the **lossy affine coding pass**
+//! ([`code_lossy_row`]): the `(x - lo) / (hi - lo) → clamp → scale →
+//! truncate` chain of `QuantTables::lossy_code` runs 8 features per
+//! instruction on AVX2 (4 on NEON) during `BatchPlan`'s tile transpose,
+//! with NaN→left, ±inf saturation and the degenerate `hi <= lo` bucket
+//! preserved exactly (the scalar tail shares `quant::lossy_affine`
+//! verbatim).
+//!
 //! Dispatch: [`SimdLevel::detect`] probes the host once (cached) —
 //! AVX2 else SSE2 on x86_64 via `is_x86_feature_detected!`, NEON on
 //! aarch64 (baseline), scalar elsewhere — honoring `FOG_FORCE_SCALAR=1`
-//! for conformance runs. `BatchPlan::with_quant` resolves the level
-//! once per plan, so the per-tile path pays zero dispatch cost. The
-//! scalar loop remains the always-available fallback: f32 lanes, u32
-//! cursors (depth > 15), vector-width tails, and unsupported levels
-//! all take it via [`SimdLane::step_simd`] returning `false`.
+//! for conformance runs; [`GatherMode::detect`] independently honors
+//! `FOG_FORCE_SCALAR_GATHER=1` to pin the vector-compare kernels to the
+//! scalar gather stage. `BatchPlan::with_quant` resolves both once per
+//! plan, so the per-tile path pays zero dispatch cost. The scalar loop
+//! remains the always-available fallback: f32 lanes, u32 cursors
+//! (depth > 15), vector-width tails, and unsupported levels all take it
+//! via [`SimdLane::step_simd`] returning `false`.
 //!
 //! Conformance: every kernel is pinned byte-identical to the scalar
 //! lane — identical tree paths, and the caller accumulates
@@ -37,6 +54,7 @@
 //! a `SimdLevel` the host was probed to support.
 
 use super::arena::CursorIdx;
+use super::quant::lossy_affine;
 use std::sync::OnceLock;
 
 /// Vector ISA tier the quantized kernel runs at. Resolved once per
@@ -140,6 +158,52 @@ impl SimdLevel {
     }
 }
 
+/// How the per-level operand loads feeding the vector compare are
+/// performed. `Vector` is a *request*: an index-gather kernel actually
+/// dispatches only where one exists (AVX2 `vpgatherdd`; the NEON `tbl`
+/// threshold lookup on ≤ 16-node levels) and the caller proved the
+/// gather-safety preconditions (packed node records present, transposed
+/// tile padded by [`GATHER_PAD`]); everywhere else the vector compare
+/// kernels keep their scalar gather stage, byte-identically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GatherMode {
+    /// Scalar bounds-checked loads feed the vector compare — the
+    /// reference gather stage every index-gather path is pinned to.
+    Scalar,
+    /// Index-gather the `(feat, code)` node records and transposed
+    /// feature codes where the host ISA can.
+    Vector,
+}
+
+impl GatherMode {
+    /// Human-readable label for log lines (the *effective* per-plan
+    /// gather label in BENCH_JSON is an ISA name — see
+    /// `BatchPlan::gather_label`).
+    pub fn label(self) -> &'static str {
+        match self {
+            GatherMode::Scalar => "scalar",
+            GatherMode::Vector => "vector",
+        }
+    }
+
+    /// Default gather mode, honoring `FOG_FORCE_SCALAR_GATHER`
+    /// (nonempty and not `"0"` pins the scalar gather stage while the
+    /// compare/advance stay vector). Probed once per process and cached.
+    pub fn detect() -> GatherMode {
+        static DETECTED: OnceLock<GatherMode> = OnceLock::new();
+        *DETECTED.get_or_init(|| GatherMode::resolve(env_force_scalar_gather()))
+    }
+
+    /// Pure rule behind [`GatherMode::detect`], split out for tests.
+    pub(crate) fn resolve(force_scalar_gather: bool) -> GatherMode {
+        if force_scalar_gather {
+            GatherMode::Scalar
+        } else {
+            GatherMode::Vector
+        }
+    }
+}
+
 /// `FOG_FORCE_SCALAR` set to anything nonempty other than `"0"`.
 fn env_force_scalar() -> bool {
     match std::env::var("FOG_FORCE_SCALAR") {
@@ -148,20 +212,55 @@ fn env_force_scalar() -> bool {
     }
 }
 
+/// `FOG_FORCE_SCALAR_GATHER` set to anything nonempty other than `"0"`.
+fn env_force_scalar_gather() -> bool {
+    match std::env::var("FOG_FORCE_SCALAR_GATHER") {
+        Ok(v) => !v.is_empty() && v != "0",
+        Err(_) => false,
+    }
+}
+
+/// Slack elements the index-gather kernels need past the last
+/// addressable transposed-tile element: `vpgatherdd` reads a full dword
+/// at `base + index`, so gathering the final u8/u16 code would
+/// otherwise read past the buffer. `BatchPlan` over-allocates its tile
+/// scratch by this much; callers that pass exactly-sized tiles simply
+/// keep the scalar gather stage (checked per call, never unsafe).
+pub(crate) const GATHER_PAD: usize = 4;
+
 /// Lane types `step_level` can hand to a vector kernel. `step_simd`
 /// returns `true` when a vector kernel fully handled the level
 /// (including its scalar tail), `false` when the caller must run the
 /// scalar loop instead (f32 lanes, u32 cursors, `Scalar` level, or a
 /// level this host/arch has no kernel for).
+///
+/// `nodes` is the level's window of packed `(feat << 16) | code` gather
+/// records (parallel to `thr`; empty when the arena built none) and
+/// `vector_gather` asks for the index-gather stage. Callers must only
+/// pass `vector_gather = true` after proving the gather-safety
+/// contract: every record encodes `feat < n_features`,
+/// `xt.len() >= n_features * n + GATHER_PAD`, and
+/// `n_features * n <= i32::MAX` (see `ForestArena::traverse_tile_lanes`
+/// — the only production call site).
 pub(crate) trait SimdLane: Copy + PartialOrd {
+    #[allow(clippy::too_many_arguments)]
     fn step_simd<C: CursorIdx>(
         level: SimdLevel,
         xt: &[Self],
         n: usize,
         feat: &[i32],
         thr: &[Self],
+        nodes: &[u32],
+        vector_gather: bool,
         cur: &mut [C],
     ) -> bool;
+
+    /// Narrow a lossy affine code produced by [`code_lossy_row`] back
+    /// into this lane. Codes stay below the lane's dead sentinel by
+    /// construction (`lossy_levels` caps them at `MAX - 1`); f32 lanes
+    /// never take the rowwise coding path, so their impl is a plain
+    /// cast kept only for symmetry.
+    fn from_code(code: u32) -> Self;
 }
 
 impl SimdLane for f32 {
@@ -172,9 +271,16 @@ impl SimdLane for f32 {
         _n: usize,
         _feat: &[i32],
         _thr: &[f32],
+        _nodes: &[u32],
+        _vector_gather: bool,
         _cur: &mut [C],
     ) -> bool {
         false
+    }
+
+    #[inline(always)]
+    fn from_code(code: u32) -> f32 {
+        code as f32
     }
 }
 
@@ -186,12 +292,20 @@ impl SimdLane for u8 {
         n: usize,
         feat: &[i32],
         thr: &[u8],
+        nodes: &[u32],
+        vector_gather: bool,
         cur: &mut [C],
     ) -> bool {
         match C::as_u16_mut(cur) {
-            Some(c16) => step_u8(level, xt, n, feat, thr, c16),
+            Some(c16) => step_u8(level, xt, n, feat, thr, nodes, vector_gather, c16),
             None => false,
         }
+    }
+
+    #[inline(always)]
+    fn from_code(code: u32) -> u8 {
+        debug_assert!(code < u8::MAX as u32, "u8 lane overflow");
+        code as u8
     }
 }
 
@@ -203,58 +317,86 @@ impl SimdLane for u16 {
         n: usize,
         feat: &[i32],
         thr: &[u16],
+        nodes: &[u32],
+        vector_gather: bool,
         cur: &mut [C],
     ) -> bool {
         match C::as_u16_mut(cur) {
-            Some(c16) => step_u16(level, xt, n, feat, thr, c16),
+            Some(c16) => step_u16(level, xt, n, feat, thr, nodes, vector_gather, c16),
             None => false,
         }
+    }
+
+    #[inline(always)]
+    fn from_code(code: u32) -> u16 {
+        debug_assert!(code < u16::MAX as u32, "u16 lane overflow");
+        code as u16
     }
 }
 
 /// Dispatch one u8-lane level step to the host kernel for `level`.
+#[allow(clippy::too_many_arguments)]
 fn step_u8(
     level: SimdLevel,
     xt: &[u8],
     n: usize,
     feat: &[i32],
     thr: &[u8],
+    nodes: &[u32],
+    vector_gather: bool,
     cur: &mut [u16],
 ) -> bool {
     match level {
         #[cfg(target_arch = "x86_64")]
         SimdLevel::Sse2 => {
-            // SAFETY: SSE2 is baseline on x86_64.
+            // SAFETY: SSE2 is baseline on x86_64. (No gather instruction
+            // at this tier — the scalar gather stage is the kernel.)
             unsafe { x86::step_u8_sse2(xt, n, feat, thr, cur) };
             true
         }
         #[cfg(target_arch = "x86_64")]
         SimdLevel::Avx2 => {
-            // SAFETY: `level` only reaches Avx2 through `detect()` or a
-            // `supported()`-clamped override, both of which probed AVX2.
-            unsafe { x86::step_u8_avx2(xt, n, feat, thr, cur) };
+            if vector_gather && nodes.len() == thr.len() {
+                // SAFETY: AVX2 probed (as below); the caller vouched for
+                // the gather contract on `nodes`/`xt` (see `SimdLane`).
+                unsafe { x86::step_u8_avx2_gather(xt, n, feat, thr, nodes, cur) };
+            } else {
+                // SAFETY: `level` only reaches Avx2 through `detect()`
+                // or a `supported()`-clamped override, both of which
+                // probed AVX2.
+                unsafe { x86::step_u8_avx2(xt, n, feat, thr, cur) };
+            }
             true
         }
         #[cfg(target_arch = "aarch64")]
         SimdLevel::Neon => {
-            // SAFETY: NEON is baseline on aarch64.
-            unsafe { neon::step_u8_neon(xt, n, feat, thr, cur) };
+            if vector_gather && !thr.is_empty() && thr.len() <= 16 {
+                // SAFETY: NEON is baseline on aarch64; the ≤ 16-node
+                // window fits one `tbl` table register.
+                unsafe { neon::step_u8_neon_tbl(xt, n, feat, thr, cur) };
+            } else {
+                // SAFETY: NEON is baseline on aarch64.
+                unsafe { neon::step_u8_neon(xt, n, feat, thr, cur) };
+            }
             true
         }
         _ => {
-            let _ = (xt, n, feat, thr, cur);
+            let _ = (xt, n, feat, thr, nodes, vector_gather, cur);
             false
         }
     }
 }
 
 /// Dispatch one u16-lane level step to the host kernel for `level`.
+#[allow(clippy::too_many_arguments)]
 fn step_u16(
     level: SimdLevel,
     xt: &[u16],
     n: usize,
     feat: &[i32],
     thr: &[u16],
+    nodes: &[u32],
+    vector_gather: bool,
     cur: &mut [u16],
 ) -> bool {
     match level {
@@ -266,20 +408,69 @@ fn step_u16(
         }
         #[cfg(target_arch = "x86_64")]
         SimdLevel::Avx2 => {
-            // SAFETY: `level` only reaches Avx2 through `detect()` or a
-            // `supported()`-clamped override, both of which probed AVX2.
-            unsafe { x86::step_u16_avx2(xt, n, feat, thr, cur) };
+            if vector_gather && nodes.len() == thr.len() {
+                // SAFETY: AVX2 probed (as below); the caller vouched for
+                // the gather contract on `nodes`/`xt` (see `SimdLane`).
+                unsafe { x86::step_u16_avx2_gather(xt, n, feat, thr, nodes, cur) };
+            } else {
+                // SAFETY: `level` only reaches Avx2 through `detect()`
+                // or a `supported()`-clamped override, both of which
+                // probed AVX2.
+                unsafe { x86::step_u16_avx2(xt, n, feat, thr, cur) };
+            }
             true
         }
         #[cfg(target_arch = "aarch64")]
         SimdLevel::Neon => {
+            // No u16 `tbl` variant: byte-pair index expansion costs more
+            // than the scalar gather it would replace.
+            let _ = (nodes, vector_gather);
             // SAFETY: NEON is baseline on aarch64.
             unsafe { neon::step_u16_neon(xt, n, feat, thr, cur) };
             true
         }
         _ => {
-            let _ = (xt, n, feat, thr, cur);
+            let _ = (xt, n, feat, thr, nodes, vector_gather, cur);
             false
+        }
+    }
+}
+
+/// Lossy affine coding for one row-major sample row: `out[k]` gets
+/// `lossy_affine(lo[k], hi[k], levels, row[k])` for every feature `k`.
+/// AVX2 codes 8 features per instruction, NEON 4; every other level
+/// (including SSE2 — no 8-wide divide worth the shuffle there) runs the
+/// scalar body, and the vector paths are pinned byte-identical to it
+/// (NaN→0, ±inf clamped, `hi <= lo` degenerate bucket, truncating
+/// narrow — see the module tests).
+pub(crate) fn code_lossy_row(
+    level: SimdLevel,
+    lo: &[f32],
+    hi: &[f32],
+    levels: f32,
+    row: &[f32],
+    out: &mut [u32],
+) {
+    debug_assert!(
+        lo.len() >= row.len() && hi.len() >= row.len() && out.len() >= row.len(),
+        "coding tables shorter than the feature row"
+    );
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => {
+            // SAFETY: `level` only reaches Avx2 through `detect()` or a
+            // `supported()`-clamped override, both of which probed AVX2.
+            unsafe { x86::code_lossy_row_avx2(lo, hi, levels, row, out) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => {
+            // SAFETY: NEON is baseline on aarch64.
+            unsafe { neon::code_lossy_row_neon(lo, hi, levels, row, out) }
+        }
+        _ => {
+            for (j, &v) in row.iter().enumerate() {
+                out[j] = lossy_affine(lo[j], hi[j], levels, v) as u32;
+            }
         }
     }
 }
@@ -334,8 +525,18 @@ mod x86 {
     //! so `>` stays false and dead lanes route left like the scalar
     //! loop. Advance uses `add(c, c)` for the doubling (no
     //! immediate-operand shift needed) and subtracts the compare mask.
+    //!
+    //! The `_gather` variants replace the scalar gather stage with
+    //! `vpgatherdd`: one dword gather over the arena's packed
+    //! `(feat << 16) | code` node records fetches both operands for 8
+    //! samples, a second gathers the transposed feature codes at the
+    //! computed `feat * n + s` offsets. They run the compare at i32
+    //! width (zero-extended codes are non-negative, so signed `>` is
+    //! unsigned `>` — no bias needed; the `MAX` sentinel is just the
+    //! largest code) and pack the two 8-lane masks back to u16 lanes in
+    //! sample order for the same subtract-mask advance.
 
-    use super::{gather, scalar_tail};
+    use super::{gather, lossy_affine, scalar_tail};
     use std::arch::x86_64::*;
 
     /// # Safety
@@ -457,6 +658,152 @@ mod x86 {
         }
         scalar_tail(xt, n, feat, thr, cur, s);
     }
+
+    /// One full index-gathered block of 16 samples at i32 lane width:
+    /// widen 16 u16 cursors, `vpgatherdd` the node records and feature
+    /// codes, compare, and pack the masks back to u16 lanes in sample
+    /// order. Shared by the u8/u16 gather kernels (`MASK` selects the
+    /// code width, `SCALE` the xt element size).
+    ///
+    /// # Safety
+    /// AVX2, plus the `SimdLane` gather contract: every record's
+    /// `feat < n_features`, the xt buffer extends `GATHER_PAD` elements
+    /// past `n_features * n`, and `n_features * n <= i32::MAX`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn gather_block<const MASK: i32, const SCALE: i32>(
+        xt_ptr: *const i32,
+        n: usize,
+        nodes: *const i32,
+        cur: *mut u16,
+        s: usize,
+    ) {
+        let code_mask = _mm256_set1_epi32(MASK);
+        let iota = _mm256_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7);
+        let nv = _mm256_set1_epi32(n as i32);
+        let p = cur.add(s) as *mut __m256i;
+        let c = _mm256_loadu_si256(p);
+        let idx_lo = _mm256_cvtepu16_epi32(_mm256_castsi256_si128(c));
+        let idx_hi = _mm256_cvtepu16_epi32(_mm256_extracti128_si256::<1>(c));
+        // One gather fetches both operands' halves: thr code in the low
+        // 16 bits, feature id in the high 16.
+        let rec_lo = _mm256_i32gather_epi32::<4>(nodes, idx_lo);
+        let rec_hi = _mm256_i32gather_epi32::<4>(nodes, idx_hi);
+        let col_lo = _mm256_add_epi32(_mm256_set1_epi32(s as i32), iota);
+        let col_hi = _mm256_add_epi32(_mm256_set1_epi32((s + 8) as i32), iota);
+        let row_lo = _mm256_mullo_epi32(_mm256_srli_epi32::<16>(rec_lo), nv);
+        let row_hi = _mm256_mullo_epi32(_mm256_srli_epi32::<16>(rec_hi), nv);
+        let addr_lo = _mm256_add_epi32(row_lo, col_lo);
+        let addr_hi = _mm256_add_epi32(row_hi, col_hi);
+        let x_lo = _mm256_and_si256(_mm256_i32gather_epi32::<SCALE>(xt_ptr, addr_lo), code_mask);
+        let x_hi = _mm256_and_si256(_mm256_i32gather_epi32::<SCALE>(xt_ptr, addr_hi), code_mask);
+        let t_lo = _mm256_and_si256(rec_lo, code_mask);
+        let t_hi = _mm256_and_si256(rec_hi, code_mask);
+        // Zero-extended codes are non-negative i32s: signed > is
+        // unsigned >, and the MAX sentinel stays the largest code.
+        let gt_lo = _mm256_cmpgt_epi32(x_lo, t_lo);
+        let gt_hi = _mm256_cmpgt_epi32(x_hi, t_hi);
+        // packs interleaves 128-bit lanes ([lo0..3, hi0..3 | lo4..7,
+        // hi4..7]); permute the 64-bit quarters back to sample order.
+        let mask = _mm256_permute4x64_epi64::<0b1101_1000>(_mm256_packs_epi32(gt_lo, gt_hi));
+        _mm256_storeu_si256(p, _mm256_sub_epi16(_mm256_add_epi16(c, c), mask));
+    }
+
+    /// # Safety
+    /// AVX2 plus the `SimdLane` gather contract (see [`gather_block`]).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn step_u8_avx2_gather(
+        xt: &[u8],
+        n: usize,
+        feat: &[i32],
+        thr: &[u8],
+        nodes: &[u32],
+        cur: &mut [u16],
+    ) {
+        const V: usize = 16;
+        let len = cur.len();
+        let mut s = 0;
+        while s + V <= len {
+            // SCALE = 1: u8 element offsets are byte offsets.
+            gather_block::<0xFF, 1>(
+                xt.as_ptr() as *const i32,
+                n,
+                nodes.as_ptr() as *const i32,
+                cur.as_mut_ptr(),
+                s,
+            );
+            s += V;
+        }
+        scalar_tail(xt, n, feat, thr, cur, s);
+    }
+
+    /// # Safety
+    /// AVX2 plus the `SimdLane` gather contract (see [`gather_block`]).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn step_u16_avx2_gather(
+        xt: &[u16],
+        n: usize,
+        feat: &[i32],
+        thr: &[u16],
+        nodes: &[u32],
+        cur: &mut [u16],
+    ) {
+        const V: usize = 16;
+        let len = cur.len();
+        let mut s = 0;
+        while s + V <= len {
+            // SCALE = 2: element offsets over u16 storage.
+            gather_block::<0xFFFF, 2>(
+                xt.as_ptr() as *const i32,
+                n,
+                nodes.as_ptr() as *const i32,
+                cur.as_mut_ptr(),
+                s,
+            );
+            s += V;
+        }
+        scalar_tail(xt, n, feat, thr, cur, s);
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2; `lo`/`hi`/`out` must be at least
+    /// `row.len()` long (debug-asserted by the safe dispatcher).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn code_lossy_row_avx2(
+        lo: &[f32],
+        hi: &[f32],
+        levels: f32,
+        row: &[f32],
+        out: &mut [u32],
+    ) {
+        const V: usize = 8;
+        let f = row.len();
+        let zero = _mm256_setzero_ps();
+        let one = _mm256_set1_ps(1.0);
+        let lv = _mm256_set1_ps(levels);
+        let onei = _mm256_set1_epi32(1);
+        let mut k = 0;
+        while k + V <= f {
+            let l = _mm256_loadu_ps(lo.as_ptr().add(k));
+            let h = _mm256_loadu_ps(hi.as_ptr().add(k));
+            let x = _mm256_loadu_ps(row.as_ptr().add(k));
+            let t = _mm256_div_ps(_mm256_sub_ps(x, l), _mm256_sub_ps(h, l));
+            // max(t, 0) first: maxps yields its *second* operand on NaN,
+            // so a NaN ratio collapses to 0 — the same code the scalar
+            // `clamp → * levels → as` chain produces for NaN.
+            let t = _mm256_min_ps(_mm256_max_ps(t, zero), one);
+            let code = _mm256_cvttps_epi32(_mm256_mul_ps(t, lv));
+            // Degenerate `hi <= lo` features take the scalar one-bucket
+            // rule `(v > lo) as code` instead, per lane.
+            let degen = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_LE_OQ>(h, l));
+            let above = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_GT_OQ>(x, l));
+            let sel = _mm256_blendv_epi8(code, _mm256_and_si256(above, onei), degen);
+            _mm256_storeu_si256(out.as_mut_ptr().add(k) as *mut __m256i, sel);
+            k += V;
+        }
+        for j in k..f {
+            out[j] = lossy_affine(lo[j], hi[j], levels, row[j]) as u32;
+        }
+    }
 }
 
 #[cfg(target_arch = "aarch64")]
@@ -466,8 +813,14 @@ mod neon {
     //! sign-extended to u16 lanes (`vmovl_s8` — the unsigned widen
     //! would zero-extend `0xFF` to `0x00FF` and break the
     //! subtract-mask advance).
+    //!
+    //! NEON has no index-gather instruction; the `_tbl` variant covers
+    //! the threshold side of shallow levels instead: a ≤ 16-entry u8
+    //! threshold window fits one `tbl` table register, so the per-sample
+    //! `thr[cur]` loads become a single register lookup (the transposed
+    //! feature loads stay scalar).
 
-    use super::{gather, scalar_tail};
+    use super::{gather, lossy_affine, scalar_tail};
     use std::arch::aarch64::*;
 
     /// # Safety
@@ -498,6 +851,47 @@ mod neon {
         scalar_tail(xt, n, feat, thr, cur, s);
     }
 
+    /// Shallow-level variant: the whole ≤ 16-entry threshold window
+    /// rides in one table register and `tbl` replaces the per-sample
+    /// `thr[cur]` loads (cursors < 16 narrow losslessly to u8 indices).
+    ///
+    /// # Safety
+    /// Caller must ensure NEON and `1 <= thr.len() <= 16`.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn step_u8_neon_tbl(
+        xt: &[u8],
+        n: usize,
+        feat: &[i32],
+        thr: &[u8],
+        cur: &mut [u16],
+    ) {
+        const V: usize = 16;
+        let len = cur.len();
+        let mut tab = [0u8; 16];
+        tab[..thr.len()].copy_from_slice(thr);
+        let table = vld1q_u8(tab.as_ptr());
+        let mut s = 0;
+        while s + V <= len {
+            let c_lo = vld1q_u16(cur.as_ptr().add(s));
+            let c_hi = vld1q_u16(cur.as_ptr().add(s + 8));
+            let idx = vcombine_u8(vmovn_u16(c_lo), vmovn_u16(c_hi));
+            let tt = vqtbl1q_u8(table, idx);
+            let mut tf = [0u8; V];
+            for (j, slot) in tf.iter_mut().enumerate() {
+                let i = cur[s + j] as usize;
+                *slot = xt[feat[i] as usize * n + s + j];
+            }
+            let gt = vcgtq_u8(vld1q_u8(tf.as_ptr()), tt);
+            let gs = vreinterpretq_s8_u8(gt);
+            let m_lo = vreinterpretq_u16_s16(vmovl_s8(vget_low_s8(gs)));
+            let m_hi = vreinterpretq_u16_s16(vmovl_s8(vget_high_s8(gs)));
+            vst1q_u16(cur.as_mut_ptr().add(s), vsubq_u16(vaddq_u16(c_lo, c_lo), m_lo));
+            vst1q_u16(cur.as_mut_ptr().add(s + 8), vsubq_u16(vaddq_u16(c_hi, c_hi), m_hi));
+            s += V;
+        }
+        scalar_tail(xt, n, feat, thr, cur, s);
+    }
+
     /// # Safety
     /// Caller must ensure NEON (baseline on aarch64).
     #[target_feature(enable = "neon")]
@@ -519,6 +913,43 @@ mod neon {
             s += V;
         }
         scalar_tail(xt, n, feat, thr, cur, s);
+    }
+
+    /// # Safety
+    /// Caller must ensure NEON; `lo`/`hi`/`out` must be at least
+    /// `row.len()` long (debug-asserted by the safe dispatcher).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn code_lossy_row_neon(
+        lo: &[f32],
+        hi: &[f32],
+        levels: f32,
+        row: &[f32],
+        out: &mut [u32],
+    ) {
+        const V: usize = 4;
+        let f = row.len();
+        let zero = vdupq_n_f32(0.0);
+        let one = vdupq_n_f32(1.0);
+        let lv = vdupq_n_f32(levels);
+        let onei = vdupq_n_u32(1);
+        let mut k = 0;
+        while k + V <= f {
+            let l = vld1q_f32(lo.as_ptr().add(k));
+            let h = vld1q_f32(hi.as_ptr().add(k));
+            let x = vld1q_f32(row.as_ptr().add(k));
+            let t = vdivq_f32(vsubq_f32(x, l), vsubq_f32(h, l));
+            // FMIN/FMAX propagate NaN; `fcvtzu` then maps NaN to 0 and
+            // saturates — exactly the scalar `clamp → * levels → as`.
+            let t = vminq_f32(vmaxq_f32(t, zero), one);
+            let code = vcvtq_u32_f32(vmulq_f32(t, lv));
+            let degen = vcleq_f32(h, l);
+            let dcode = vandq_u32(vcgtq_f32(x, l), onei);
+            vst1q_u32(out.as_mut_ptr().add(k), vbslq_u32(degen, dcode, code));
+            k += V;
+        }
+        for j in k..f {
+            out[j] = lossy_affine(lo[j], hi[j], levels, row[j]) as u32;
+        }
     }
 }
 
@@ -572,6 +1003,15 @@ mod tests {
         (xt, feat, thr, cur)
     }
 
+    /// Packed `(feat << 16) | code` gather records for a level window —
+    /// the same layout `ForestArena` builds at pack time.
+    fn nodes_of<L: crate::exec::quant::QuantizedLane>(feat: &[i32], thr: &[L]) -> Vec<u32> {
+        feat.iter()
+            .zip(thr)
+            .map(|(&f, &c)| ((f as u32) << 16) | c.as_u32())
+            .collect()
+    }
+
     /// The scalar reference body (same as the arena's loop).
     fn step_ref<L: Copy + PartialOrd>(
         xt: &[L],
@@ -597,7 +1037,7 @@ mod tests {
                 let mut want = cur0.clone();
                 step_ref(&xt, n, &feat, &thr, &mut want);
                 let mut got = cur0.clone();
-                assert!(u8::step_simd(level, &xt, n, &feat, &thr, &mut got));
+                assert!(u8::step_simd(level, &xt, n, &feat, &thr, &[], false, &mut got));
                 assert_eq!(got, want, "u8 {} n={n}", level.label());
             }
         }
@@ -611,9 +1051,86 @@ mod tests {
                 let mut want = cur0.clone();
                 step_ref(&xt, n, &feat, &thr, &mut want);
                 let mut got = cur0.clone();
-                assert!(u16::step_simd(level, &xt, n, &feat, &thr, &mut got));
+                assert!(u16::step_simd(level, &xt, n, &feat, &thr, &[], false, &mut got));
                 assert_eq!(got, want, "u16 {} n={n}", level.label());
             }
+        }
+    }
+
+    #[test]
+    fn gather_kernels_match_scalar_at_every_width() {
+        // Exhaustive width sweep 1..=100: every non-multiple-of-V tail
+        // for both lane widths, with the index-gather stage requested.
+        // The xt buffer carries the GATHER_PAD slack the vector gathers
+        // require (as `BatchPlan`'s tile scratch does).
+        for level in vector_levels() {
+            for n in 1..=100usize {
+                let (mut xt, feat, thr, cur0) = level_case_u8(16, 5, n, 0xa11 + n as u64);
+                let nodes = nodes_of(&feat, &thr);
+                let mut want = cur0.clone();
+                step_ref(&xt, n, &feat, &thr, &mut want);
+                xt.resize(xt.len() + GATHER_PAD, 0);
+                let mut got = cur0.clone();
+                assert!(u8::step_simd(level, &xt, n, &feat, &thr, &nodes, true, &mut got));
+                assert_eq!(got, want, "u8 gather {} n={n}", level.label());
+
+                let (mut xt, feat, thr, cur0) = level_case_u16(16, 5, n, 0xb22 + n as u64);
+                let nodes = nodes_of(&feat, &thr);
+                let mut want = cur0.clone();
+                step_ref(&xt, n, &feat, &thr, &mut want);
+                xt.resize(xt.len() + GATHER_PAD, 0);
+                let mut got = cur0.clone();
+                assert!(u16::step_simd(level, &xt, n, &feat, &thr, &nodes, true, &mut got));
+                assert_eq!(got, want, "u16 gather {} n={n}", level.label());
+            }
+        }
+    }
+
+    #[test]
+    fn gather_dead_slot_sentinels_route_left_at_block_boundaries() {
+        // Dead-slot sentinel codes placed so sentinel-holding samples
+        // land exactly on the gather blocks' lane boundaries (sample
+        // positions 0, 7, 8, 15, 16, ... for the 8-lane gathers).
+        for level in vector_levels() {
+            let n = 41;
+            let w = 8;
+            let (mut xt, feat, _, _) = level_case_u8(w, 4, n, 7);
+            let mut thr = vec![3u8; w];
+            for dead in [0usize, 3, 7] {
+                thr[dead] = u8::MAX;
+            }
+            // Cursor pattern pinning sentinels to boundary samples.
+            let cur0: Vec<u16> =
+                (0..n).map(|s| if s % 8 == 0 || s % 8 == 7 { 0 } else { (s % w) as u16 }).collect();
+            let nodes = nodes_of(&feat, &thr);
+            let mut want = cur0.clone();
+            step_ref(&xt, n, &feat, &thr, &mut want);
+            xt.resize(xt.len() + GATHER_PAD, 0);
+            let mut got = cur0.clone();
+            assert!(u8::step_simd(level, &xt, n, &feat, &thr, &nodes, true, &mut got));
+            assert_eq!(got, want, "{} sentinel boundaries", level.label());
+            for (s, &c) in got.iter().enumerate() {
+                if thr[cur0[s] as usize] == u8::MAX {
+                    assert_eq!(c, 2 * cur0[s], "{} dead slot s={s}", level.label());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_request_without_tables_keeps_scalar_gather() {
+        // An unpadded tile / missing node table must silently keep the
+        // scalar gather stage (mismatched `nodes` length) and stay
+        // byte-identical — this is the safety valve `traverse_tile_lanes`
+        // relies on.
+        for level in vector_levels() {
+            let n = 50;
+            let (xt, feat, thr, cur0) = level_case_u8(16, 5, n, 0xc0de);
+            let mut want = cur0.clone();
+            step_ref(&xt, n, &feat, &thr, &mut want);
+            let mut got = cur0.clone();
+            assert!(u8::step_simd(level, &xt, n, &feat, &thr, &[], true, &mut got));
+            assert_eq!(got, want, "{} gather w/o tables", level.label());
         }
     }
 
@@ -624,14 +1141,14 @@ mod tests {
             let (xt, feat, _, cur0) = level_case_u8(8, 4, n, 99);
             let thr = vec![u8::MAX; 8];
             let mut got = cur0.clone();
-            assert!(u8::step_simd(level, &xt, n, &feat, &thr, &mut got));
+            assert!(u8::step_simd(level, &xt, n, &feat, &thr, &[], false, &mut got));
             for (s, &c) in got.iter().enumerate() {
                 assert_eq!(c, 2 * cur0[s], "{} sentinel s={s}", level.label());
             }
             let (xt, feat, _, cur0) = level_case_u16(8, 4, n, 99);
             let thr = vec![u16::MAX; 8];
             let mut got = cur0.clone();
-            assert!(u16::step_simd(level, &xt, n, &feat, &thr, &mut got));
+            assert!(u16::step_simd(level, &xt, n, &feat, &thr, &[], false, &mut got));
             for (s, &c) in got.iter().enumerate() {
                 assert_eq!(c, 2 * cur0[s], "{} u16 sentinel s={s}", level.label());
             }
@@ -650,8 +1167,15 @@ mod tests {
             let thr = vec![7u8; 4];
             let mut cur: Vec<u16> = (0..n).map(|s| (s % 4) as u16).collect();
             let want: Vec<u16> = cur.iter().map(|&c| 2 * c).collect();
-            assert!(u8::step_simd(level, &xt, n, &feat, &thr, &mut cur));
+            assert!(u8::step_simd(level, &xt, n, &feat, &thr, &[], false, &mut cur));
             assert_eq!(cur, want, "{} equal codes", level.label());
+            // Same strictness through the index-gather stage.
+            let nodes = nodes_of(&feat, &thr);
+            let mut xt = xt.clone();
+            xt.resize(n + GATHER_PAD, 0);
+            let mut cur: Vec<u16> = (0..n).map(|s| (s % 4) as u16).collect();
+            assert!(u8::step_simd(level, &xt, n, &feat, &thr, &nodes, true, &mut cur));
+            assert_eq!(cur, want, "{} equal codes (gather)", level.label());
         }
     }
 
@@ -661,12 +1185,12 @@ mod tests {
         let (xt, feat, thr, cur0) = level_case_u8(8, 4, n, 7);
         let mut cur32: Vec<u32> = cur0.iter().map(|&c| c as u32).collect();
         for level in vector_levels() {
-            assert!(!u8::step_simd(level, &xt, n, &feat, &thr, &mut cur32));
+            assert!(!u8::step_simd(level, &xt, n, &feat, &thr, &[], false, &mut cur32));
         }
         let xf: Vec<f32> = xt.iter().map(|&v| v as f32).collect();
         let tf: Vec<f32> = thr.iter().map(|&v| v as f32).collect();
         let mut c16 = cur0.clone();
-        assert!(!f32::step_simd(SimdLevel::detect(), &xf, n, &feat, &tf, &mut c16));
+        assert!(!f32::step_simd(SimdLevel::detect(), &xf, n, &feat, &tf, &[], false, &mut c16));
         assert_eq!(c16, cur0, "fallback must not touch cursors");
     }
 
@@ -675,7 +1199,7 @@ mod tests {
         let n = 24;
         let (xt, feat, thr, cur0) = level_case_u8(8, 4, n, 3);
         let mut cur = cur0;
-        assert!(!u8::step_simd(SimdLevel::Scalar, &xt, n, &feat, &thr, &mut cur));
+        assert!(!u8::step_simd(SimdLevel::Scalar, &xt, n, &feat, &thr, &[], false, &mut cur));
     }
 
     #[test]
@@ -683,6 +1207,16 @@ mod tests {
         assert_eq!(SimdLevel::resolve(true, SimdLevel::Avx2), SimdLevel::Scalar);
         assert_eq!(SimdLevel::resolve(false, SimdLevel::Avx2), SimdLevel::Avx2);
         assert_eq!(SimdLevel::resolve(false, SimdLevel::Scalar), SimdLevel::Scalar);
+    }
+
+    #[test]
+    fn gather_mode_resolve_honors_force_scalar_gather() {
+        assert_eq!(GatherMode::resolve(true), GatherMode::Scalar);
+        assert_eq!(GatherMode::resolve(false), GatherMode::Vector);
+        assert_eq!(GatherMode::Scalar.label(), "scalar");
+        assert_eq!(GatherMode::Vector.label(), "vector");
+        // Cached: a second probe agrees.
+        assert_eq!(GatherMode::detect(), GatherMode::detect());
     }
 
     #[test]
@@ -698,5 +1232,89 @@ mod tests {
             assert_eq!(SimdLevel::label_of_rank(l.rank()), l.label());
         }
         assert_eq!(SimdLevel::label_of_rank(99), "scalar");
+    }
+
+    /// Feature-value edge cases the lossy coding chain must map exactly
+    /// like the scalar body: non-finite, signed zero, denormal,
+    /// out-of-range, and boundary values.
+    const CODING_EDGE_VALUES: [f32; 12] = [
+        f32::NAN,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        -0.0,
+        0.0,
+        1.0e-42, // denormal
+        -3.0e38,
+        3.0e38,
+        -1.5,
+        0.5,
+        7.0,
+        123456.0,
+    ];
+
+    #[test]
+    fn lossy_coding_vector_matches_scalar() {
+        // Rows mixing normal features, a degenerate `hi == lo` feature,
+        // an inverted `hi < lo` pair and a huge range, against every
+        // edge value, at several widths (vector blocks + scalar tails)
+        // and bit depths — byte-identical to `lossy_affine` everywhere.
+        let lo_pat = [0.0f32, -1.0, 5.0, 5.0, -3.0e38, 0.25, 2.0, -7.5];
+        let hi_pat = [1.0f32, 2.0, 5.0, 4.0, 3.0e38, 0.75, 2.0 + 1.0e-6, 8.25];
+        for f in [1usize, 4, 7, 8, 9, 16, 23, 64] {
+            let lo: Vec<f32> = (0..f).map(|k| lo_pat[k % lo_pat.len()]).collect();
+            let hi: Vec<f32> = (0..f).map(|k| hi_pat[k % hi_pat.len()]).collect();
+            for bits in [1u8, 4, 8, 12, 16] {
+                let levels = crate::exec::quant::lossy_levels(bits);
+                for (vi, &v) in CODING_EDGE_VALUES.iter().enumerate() {
+                    // Rotate the edge value across lanes so every lane
+                    // position sees every edge case.
+                    let row: Vec<f32> = (0..f)
+                        .map(|k| {
+                            if k % CODING_EDGE_VALUES.len() == vi {
+                                v
+                            } else {
+                                CODING_EDGE_VALUES[k % CODING_EDGE_VALUES.len()]
+                            }
+                        })
+                        .collect();
+                    let want: Vec<u32> = (0..f)
+                        .map(|k| lossy_affine(lo[k], hi[k], levels, row[k]) as u32)
+                        .collect();
+                    for level in vector_levels() {
+                        let mut got = vec![u32::MAX; f];
+                        code_lossy_row(level, &lo, &hi, levels, &row, &mut got);
+                        assert_eq!(
+                            got,
+                            want,
+                            "{} f={f} bits={bits} edge={v}",
+                            level.label()
+                        );
+                    }
+                    let mut got = vec![u32::MAX; f];
+                    code_lossy_row(SimdLevel::Scalar, &lo, &hi, levels, &row, &mut got);
+                    assert_eq!(got, want, "scalar f={f} bits={bits}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lossy_coding_agrees_with_quant_tables() {
+        // `code_lossy_row` over the tables' own lo/hi must reproduce
+        // `QuantTables::lossy_code` for arbitrary values.
+        let t = crate::exec::quant::QuantTables::build(
+            3,
+            vec![(0, 2.5), (0, 1.0), (0, 7.0), (2, 4.0)].into_iter(),
+        );
+        let mut st = 0xdecaf_u64;
+        let row: Vec<f32> = (0..3).map(|_| (lcg(&mut st) % 1000) as f32 / 37.0 - 9.0).collect();
+        for bits in [8u8, 16] {
+            let levels = crate::exec::quant::lossy_levels(bits);
+            let mut got = vec![0u32; 3];
+            code_lossy_row(SimdLevel::detect(), t.lo_table(), t.hi_table(), levels, &row, &mut got);
+            for k in 0..3 {
+                assert_eq!(got[k] as usize, t.lossy_code(k, row[k], bits), "k={k} bits={bits}");
+            }
+        }
     }
 }

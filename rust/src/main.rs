@@ -186,8 +186,8 @@ fn cmd_eval(args: &Args, seed: u64) {
         quant.label()
     );
     print!(
-        "{:<10}{:>11}{:>15}{:>13}{:>11}{:>12}",
-        "model", "accuracy%", "energy nJ", "latency ns", "area mm2", "train s"
+        "{:<10}{:>11}{:>15}{:>13}{:>11}{:>12}{:>9}{:>9}",
+        "model", "accuracy%", "energy nJ", "latency ns", "area mm2", "train s", "simd", "gather"
     );
     if backend == BackendKind::Uarch {
         print!("{:>14}{:>14}", "sim nJ/cls", "sim cyc/cls");
@@ -199,13 +199,15 @@ fn cmd_eval(args: &Args, seed: u64) {
         let train_s = t0.elapsed().as_secs_f64();
         let report = model.cost_report(Some(&data.test), &eb, &ab);
         print!(
-            "{:<10}{:>11.1}{:>15.2}{:>13.1}{:>11.2}{:>12.2}",
+            "{:<10}{:>11.1}{:>15.2}{:>13.1}{:>11.2}{:>12.2}{:>9}{:>9}",
             spec.name,
             model.accuracy(&data.test) * 100.0,
             report.energy_nj,
             report.latency_ns,
             report.area_mm2,
-            train_s
+            train_s,
+            model.simd_level().label(),
+            model.gather_level().label()
         );
         if backend == BackendKind::Uarch {
             // Hardware in the loop: stream the test split tile-by-tile
@@ -525,6 +527,13 @@ fn cmd_serve(args: &Args, seed: u64) {
     let lat = FogServer::latency_summary(&responses);
     let snap = server.metrics().snapshot();
     println!("== serving: {} x{} groves, backend={} ==", name, fog.n_groves(), args.get_or("backend", "native"));
+    // Host ISA the quantized kernels would dispatch to (the FoG ring's
+    // per-sample grove walk itself is scalar by design).
+    println!(
+        "host simd  : {} (gather {})",
+        fog::exec::SimdLevel::detect().label(),
+        fog::exec::GatherMode::detect().label()
+    );
     println!("requests   : {}", snap.requests);
     println!("accuracy   : {:.1}%", acc * 100.0);
     println!("avg hops   : {:.2}", snap.avg_hops());
@@ -565,6 +574,11 @@ fn cmd_serve_model(args: &Args, model_name: &str, seed: u64) {
     let snap = server.metrics().snapshot();
     let lat = FogServer::latency_summary(&responses);
     println!("== serving: {model_name} on {} via ModelServer ==", profile.name);
+    println!(
+        "simd       : {} (gather {})",
+        model.simd_level().label(),
+        model.gather_level().label()
+    );
     println!("requests   : {}", snap.requests);
     println!("accuracy   : {:.1}%", acc * 100.0);
     println!("batch size : {:.1} avg", snap.avg_batch_size());
@@ -644,13 +658,14 @@ fn cmd_serve_sharded(args: &Args, model_name: &str, seed: u64) {
 
     println!(
         "== serving: {model_name} on {} via ShardedServer x{} ({}, backend={}, quant={}, \
-         simd={}) ==",
+         simd={}, gather={}) ==",
         profile.name,
         server.n_replicas(),
         cfg.router.label(),
         backend.label(),
         quant.label(),
-        snap.simd_label()
+        snap.simd_label(),
+        snap.gather_label()
     );
     println!("requests   : {} ({} per round x {rounds})", snap.requests, responses.len());
     println!("accuracy   : {:.1}%", acc * 100.0);
@@ -685,7 +700,7 @@ fn cmd_serve_sharded(args: &Args, model_name: &str, seed: u64) {
     println!(
         "BENCH_JSON {{\"bench\":\"serve_sharded\",\"model\":\"{model_name}\",\
          \"dataset\":\"{}\",\"replicas\":{},\"router\":\"{}\",\"backend\":\"{}\",\
-         \"quant\":\"{}\",\"simd\":\"{}\",\"prob_checksum\":{},\
+         \"quant\":\"{}\",\"simd\":\"{}\",\"gather\":\"{}\",\"prob_checksum\":{},\
          \"rounds\":{rounds},\"requests\":{},\"throughput_per_s\":{:.1},\
          \"cache_hit_rate\":{:.4},\"cache_quant\":{:.6},\"accuracy\":{:.4},\
          \"energy_per_class_nj\":{:.6},\"energy_per_response_nj\":{:.6},\
@@ -698,6 +713,7 @@ fn cmd_serve_sharded(args: &Args, model_name: &str, seed: u64) {
         backend.label(),
         quant.label(),
         snap.simd_label(),
+        snap.gather_label(),
         prob_checksum(&responses),
         snap.requests,
         n_total as f64 / wall,
@@ -869,14 +885,15 @@ fn cmd_serve_fleet(args: &Args, fleet_spec: &str, seed: u64) {
         None => "unlimited".to_string(),
     };
     println!(
-        "== serving: fleet [{}] on {} x{} replicas ({}, backend={}, simd={}, policy={}, \
-         budget={}) ==",
+        "== serving: fleet [{}] on {} x{} replicas ({}, backend={}, simd={}, gather={}, \
+         policy={}, budget={}) ==",
         names.join(", "),
         profile.name,
         (0..fleet.n_models()).map(|m| fleet.server(m).n_replicas()).sum::<usize>(),
         cfg.router.label(),
         backend.label(),
         snap.total.simd_label(),
+        snap.total.gather_label(),
         fleet.policy_label(),
         budget_label
     );
@@ -921,7 +938,8 @@ fn cmd_serve_fleet(args: &Args, fleet_spec: &str, seed: u64) {
 
     println!(
         "BENCH_JSON {{\"bench\":\"serve_fleet\",\"model\":\"{}\",\"dataset\":\"{}\",\
-         \"replicas\":{},\"router\":\"{}\",\"backend\":\"{}\",\"simd\":\"{}\",\"policy\":\"{}\",\
+         \"replicas\":{},\"router\":\"{}\",\"backend\":\"{}\",\"simd\":\"{}\",\
+         \"gather\":\"{}\",\"policy\":\"{}\",\
          \"energy_budget_nj\":{:.6},\"loadgen_seed\":{},\"offered\":{},\"served\":{},\
          \"downgraded\":{},\"shed\":{},\"shed_rate\":{:.4},\"throughput_per_s\":{:.1},\
          \"energy_per_class_nj\":{:.6},\"adaptive_conf\":{:.4}}}",
@@ -931,6 +949,7 @@ fn cmd_serve_fleet(args: &Args, fleet_spec: &str, seed: u64) {
         cfg.router.label(),
         backend.label(),
         snap.total.simd_label(),
+        snap.total.gather_label(),
         fleet.policy_label(),
         budget.energy_per_class_nj.unwrap_or(-1.0),
         lg.seed,
@@ -947,8 +966,8 @@ fn cmd_serve_fleet(args: &Args, fleet_spec: &str, seed: u64) {
         let stats = &snap.per_model[m];
         println!(
             "BENCH_JSON {{\"bench\":\"serve_fleet_model\",\"model\":\"{}\",\"fleet\":\"{}\",\
-             \"backend\":\"{}\",\"simd\":\"{}\",\"requested\":{},\"served\":{},\
-             \"downgraded_away\":{},\
+             \"backend\":\"{}\",\"simd\":\"{}\",\"gather\":\"{}\",\"requested\":{},\
+             \"served\":{},\"downgraded_away\":{},\
              \"downgraded_into\":{},\"shed\":{},\"shed_rate\":{:.4},\
              \"req_p50_us\":{:.1},\"req_p99_us\":{:.1},\"batch_p50_us\":{:.1},\
              \"batch_p99_us\":{:.1},\"energy_per_class_nj\":{:.6},\"cycles_per_class\":{:.2},\
@@ -957,6 +976,7 @@ fn cmd_serve_fleet(args: &Args, fleet_spec: &str, seed: u64) {
             names.join("+"),
             backend.label(),
             stats.snapshot.simd_label(),
+            stats.snapshot.gather_label(),
             pm.requested,
             pm.served,
             pm.downgraded_away,

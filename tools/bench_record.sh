@@ -11,7 +11,10 @@
 #       take the per-metric median for every (bench, model, batch) key,
 #       and append one trajectory point to BENCH_PALLAS.json (or --out).
 #       --fast sets FOG_BENCH_FAST=1 (CI-sized batches; points are
-#       tagged so gate runs only compare like with like).
+#       tagged so gate runs only compare like with like). A measured
+#       point supersedes any '"estimated": true' placeholder with the
+#       same fast tag: the placeholders are dropped from the trajectory
+#       when the first real point of their kind lands.
 #
 #   tools/bench_record.sh gate [--runs N] [--max-regress 0.15] [--out FILE]
 #       Smoke-run (FOG_BENCH_FAST=1) the inference bench N times, fold
@@ -24,9 +27,13 @@
 #       the ragged floor, the live median quant_speedup_x (exact
 #       u8/u16 tiles vs f32) above the quant floor, and the live median
 #       simd_speedup_x (vector dispatch vs forced-scalar quant tiles)
-#       above the simd floor — the simd floor only arms when the host
-#       actually dispatched a vector kernel (simd != "scalar"), so
-#       scalar-only runners stay green. Passes with a notice
+#       above the simd floor, the live median gather_speedup_x (vector
+#       index gather vs the scalar gather stage) above the gather floor,
+#       and the live median coding_speedup_x (vectorized lossy affine
+#       coding vs the per-value closure) above the coding floor — the
+#       simd/gather/coding floors only arm when the host actually
+#       dispatched the corresponding vector kernel (label != "scalar"),
+#       so scalar-only runners stay green. Passes with a notice
 #       when the trajectory has no comparable baseline yet; baseline
 #       points tagged "estimated" (seeded off-toolchain) are skipped for
 #       the throughput diff.
@@ -123,8 +130,9 @@ with open(os.environ["LINES"]) as fh:
             if isinstance(value, (int, float)) and metric not in ("batch",):
                 bucket.setdefault(metric, []).append(float(value))
         # Dispatch labels ride along so recorded points say which lane /
-        # vector ISA produced their numbers (host-comparability).
-        for metric in ("lanes", "simd"):
+        # vector ISA / gather+coding stage produced their numbers
+        # (host-comparability).
+        for metric in ("lanes", "simd", "gather", "coding"):
             if isinstance(rec.get(metric), str):
                 bucket.setdefault(metric, []).append(rec[metric])
 folded = {
@@ -151,13 +159,31 @@ if fast:
     speedup_floor = float(gate_cfg.get("ragged_speedup_floor_fast", 0.95))
     quant_floor = float(gate_cfg.get("quant_speedup_floor_fast", 0.8))
     simd_floor = float(gate_cfg.get("simd_speedup_floor_fast", 0.9))
+    gather_floor = float(gate_cfg.get("gather_speedup_floor_fast", 0.85))
+    coding_floor = float(gate_cfg.get("coding_speedup_floor_fast", 0.9))
 else:
     speedup_floor = float(gate_cfg.get("ragged_speedup_floor", 1.1))
     quant_floor = float(gate_cfg.get("quant_speedup_floor", 2.0))
     simd_floor = float(gate_cfg.get("simd_speedup_floor", 1.5))
+    gather_floor = float(gate_cfg.get("gather_speedup_floor", 1.1))
+    coding_floor = float(gate_cfg.get("coding_speedup_floor", 1.2))
 
 if mode == "record":
-    trajectory.setdefault("points", []).append(
+    # A measured point makes same-tagged estimated placeholders obsolete:
+    # drop them so the gate's "most recent comparable point" scan can
+    # never pick a placeholder over real data, and future floors diff
+    # against measurements only.
+    points = trajectory.setdefault("points", [])
+    stale = [
+        p for p in points
+        if p.get("estimated") and bool(p.get("fast")) == fast
+    ]
+    if stale:
+        trajectory["points"] = points = [p for p in points if p not in stale]
+        names = ", ".join(p.get("id", "?") for p in stale)
+        print(f"[bench_record] dropping {len(stale)} estimated placeholder "
+              f"point(s) superseded by this measured run: {names}")
+    points.append(
         {
             "id": f"{os.environ['DATE_UTC']}-{os.environ['GIT_REV']}",
             "date": os.environ["DATE_UTC"],
@@ -210,6 +236,28 @@ for key, metrics in folded.items():
         failures.append(
             f"{key}: simd_speedup_x {metrics['simd_speedup_x']:.3f} "
             f"({metrics['simd']}) < floor {simd_floor:.2f}"
+        )
+    # Same arming rule for the gather and coding floors: each speedup is
+    # 1.0 by construction when its vector form did not dispatch
+    # (scalar/SSE2 hosts, FOG_FORCE_SCALAR_GATHER=1), so the floors only
+    # bite where the kernels actually ran.
+    if (
+        "gather_speedup_x" in metrics
+        and metrics.get("gather", "scalar") != "scalar"
+        and metrics["gather_speedup_x"] < gather_floor
+    ):
+        failures.append(
+            f"{key}: gather_speedup_x {metrics['gather_speedup_x']:.3f} "
+            f"({metrics['gather']}) < floor {gather_floor:.2f}"
+        )
+    if (
+        "coding_speedup_x" in metrics
+        and metrics.get("coding", "scalar") != "scalar"
+        and metrics["coding_speedup_x"] < coding_floor
+    ):
+        failures.append(
+            f"{key}: coding_speedup_x {metrics['coding_speedup_x']:.3f} "
+            f"({metrics['coding']}) < floor {coding_floor:.2f}"
         )
 
 if baseline is None:
